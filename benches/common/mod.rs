@@ -1,0 +1,21 @@
+//! Shared helpers for the bench binaries.
+#![allow(dead_code)] // each bench binary uses a subset
+
+use lonestar_lb::graph::generators::SuiteScale;
+
+/// `LONESTAR_SCALE=tiny|small|paper` (default small).
+pub fn scale_from_env() -> SuiteScale {
+    match std::env::var("LONESTAR_SCALE").as_deref() {
+        Ok("tiny") => SuiteScale::Tiny,
+        Ok("paper") => SuiteScale::Paper,
+        _ => SuiteScale::Small,
+    }
+}
+
+/// `LONESTAR_BENCH_ITERS=N` (default 3).
+pub fn iters_from_env() -> u32 {
+    std::env::var("LONESTAR_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}

@@ -1,0 +1,65 @@
+//! Bench: regenerate **Figure 10** — degree distributions before/after node
+//! splitting with the auto-MDT heuristic, timing the split transform
+//! itself (NS's one-time preprocessing cost).
+
+use lonestar_lb::figures::{fig10, FigureOpts};
+use lonestar_lb::graph::generators::paper_suite;
+use lonestar_lb::strategies::mdt::auto_mdt;
+use lonestar_lb::strategies::node_split::split_graph;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let iters = common::iters_from_env();
+    let opts = FigureOpts {
+        scale,
+        ..Default::default()
+    };
+
+    let mut stdout = std::io::stdout().lock();
+    let rows = fig10(&opts, &mut stdout).expect("fig10");
+    drop(stdout);
+
+    let mut suite = BenchSuite::new("fig10: split-transform cost");
+    for entry in paper_suite(scale) {
+        let g = entry.spec.generate(opts.seed).expect("generate");
+        suite.case(&format!("mdt/{}", entry.name), 1, iters, || {
+            let d = auto_mdt(&g, 10);
+            black_box(d);
+            format!("mdt={}", d.mdt)
+        });
+        let d = auto_mdt(&g, 10);
+        suite.case(&format!("split/{}", entry.name), 1, iters, || {
+            let s = split_graph(&g, d);
+            let msg = format!("{} splits, +{} nodes", s.split_nodes, s.map.total_children());
+            black_box(s);
+            msg
+        });
+    }
+    suite.finish();
+
+    // Shape assertions mirrored from the paper's text.
+    for r in &rows {
+        assert!(
+            r.max_after <= r.mdt,
+            "{}: post-split max degree {} exceeds MDT {}",
+            r.graph,
+            r.max_after,
+            r.mdt
+        );
+        // Splitting must tighten the distribution on the skewed graphs
+        // (Figure 10's green-vs-red curves); road networks are already
+        // near-uniform and may shift slightly.
+        if r.max_before > 4 * r.mdt {
+            assert!(
+                r.sigma_after < r.sigma_before,
+                "{}: splitting must reduce degree variance on skewed graphs",
+                r.graph
+            );
+        }
+    }
+    println!("all {} graphs: max degree bounded by MDT after splitting", rows.len());
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate **Figure 11** — EP work-chunking speedup over per-edge
+//! append atomics (paper: 1.11–3.125×, average 1.82×).
+
+use lonestar_lb::figures::{fig11, FigureOpts};
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let opts = FigureOpts {
+        scale: common::scale_from_env(),
+        ..Default::default()
+    };
+    let mut stdout = std::io::stdout().lock();
+    let rows = fig11(&opts, &mut stdout).expect("fig11");
+    drop(stdout);
+
+    if rows.is_empty() {
+        println!("no EP-runnable graphs at this scale");
+        return;
+    }
+    let avg: f64 = rows.iter().map(|r| r.speedup).sum::<f64>() / rows.len() as f64;
+    for r in &rows {
+        assert!(
+            r.speedup >= 1.0,
+            "{}: chunking must never slow EP down (got {:.2}x)",
+            r.graph,
+            r.speedup
+        );
+    }
+    println!(
+        "work chunking: avg {avg:.2}x over {} graphs (paper: 1.11-3.125x, avg 1.82x)",
+        rows.len()
+    );
+}

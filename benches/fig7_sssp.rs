@@ -1,0 +1,67 @@
+//! Bench: regenerate **Figure 7** — SSSP execution time (kernel + overhead)
+//! for BS/EP/WD/NS/HP over the paper suite, plus host-time statistics per
+//! (graph, strategy) cell.
+//!
+//! Env knobs: `LONESTAR_SCALE=tiny|small|paper`, `LONESTAR_BENCH_ITERS=N`.
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::figures::{fig7, FigureOpts};
+use lonestar_lb::graph::generators::paper_suite;
+use lonestar_lb::graph::traversal::hub_source;
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+use std::sync::Arc;
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let iters = common::iters_from_env();
+    let opts = FigureOpts {
+        scale,
+        ..Default::default()
+    };
+
+    // The paper table itself (one full sweep through the shared harness).
+    let mut stdout = std::io::stdout().lock();
+    let figure = fig7(&opts, &mut stdout).expect("fig7");
+    drop(stdout);
+
+    // Host-timing statistics per cell (the L3 perf surface).
+    let mut suite = BenchSuite::new("fig7: SSSP per-strategy runs (host time)");
+    for entry in paper_suite(scale) {
+        let g = Arc::new(entry.spec.generate(opts.seed).expect("generate"));
+        let dev = opts.device_for(&entry, &g);
+        let source = hub_source(&g);
+        for k in StrategyKind::ALL {
+            let cfg = RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: k,
+                source,
+                device: dev.clone(),
+                enforce_budget: opts.enforce_budget,
+                ..Default::default()
+            };
+            let name = format!("{}/{}", entry.name, k.label());
+            suite.case(&name, 1, iters, || match run(&g, &cfg) {
+                Ok(r) => {
+                    let ms = r.metrics.total_ms(&dev);
+                    black_box(&r.dist);
+                    format!("sim {ms:.2} ms, {:.1} MTEPS", r.metrics.mteps(&dev))
+                }
+                Err(e) if e.is_oom() => "OOM".to_string(),
+                Err(e) => panic!("{name}: {e}"),
+            });
+        }
+    }
+    suite.finish();
+
+    // Paper headline: EP reduces SSSP time 60-80% vs BS.
+    for row in &figure.rows {
+        if let Some(red) = row.reduction_vs_bs(StrategyKind::EP) {
+            println!("{}: EP cuts SSSP time by {red:.0}% vs BS (paper: 60-80%)", row.graph);
+        }
+    }
+}

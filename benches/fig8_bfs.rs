@@ -1,0 +1,65 @@
+//! Bench: regenerate **Figure 8** — BFS execution time for BS/EP/WD/NS/HP
+//! over the paper suite. Same knobs as fig7_sssp.
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::figures::{fig8, FigureOpts};
+use lonestar_lb::graph::generators::paper_suite;
+use lonestar_lb::graph::traversal::hub_source;
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+use std::sync::Arc;
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let iters = common::iters_from_env();
+    let opts = FigureOpts {
+        scale,
+        ..Default::default()
+    };
+
+    let mut stdout = std::io::stdout().lock();
+    let figure = fig8(&opts, &mut stdout).expect("fig8");
+    drop(stdout);
+
+    let mut suite = BenchSuite::new("fig8: BFS per-strategy runs (host time)");
+    for entry in paper_suite(scale) {
+        let g = Arc::new(entry.spec.generate(opts.seed).expect("generate"));
+        let dev = opts.device_for(&entry, &g);
+        let source = hub_source(&g);
+        for k in StrategyKind::ALL {
+            let cfg = RunConfig {
+                algo: AlgoKind::Bfs,
+                strategy: k,
+                source,
+                device: dev.clone(),
+                enforce_budget: opts.enforce_budget,
+                ..Default::default()
+            };
+            let name = format!("{}/{}", entry.name, k.label());
+            suite.case(&name, 1, iters, || match run(&g, &cfg) {
+                Ok(r) => {
+                    let ms = r.metrics.total_ms(&dev);
+                    black_box(&r.dist);
+                    format!("sim {ms:.2} ms, {:.1} MTEPS", r.metrics.mteps(&dev))
+                }
+                Err(e) if e.is_oom() => "OOM".to_string(),
+                Err(e) => panic!("{name}: {e}"),
+            });
+        }
+    }
+    suite.finish();
+
+    // Paper headline: EP ~10% better on road BFS, 48-68% on small-diameter.
+    for row in &figure.rows {
+        if let Some(red) = row.reduction_vs_bs(StrategyKind::EP) {
+            println!(
+                "{} ({}): EP cuts BFS time by {red:.0}% vs BS",
+                row.graph, row.skew_class
+            );
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Bench: micro-benchmarks of the L3 hot paths — the targets of the
+//! performance pass recorded in EXPERIMENTS.md §Perf.
+//!
+//! Covers: frontier flattening, kernel interpretation (the launch inner
+//! loop), WD offset computation, worklist condensing, NS split transform,
+//! and the XLA relaxer batch path (skipped when artifacts are missing).
+
+use lonestar_lb::algorithms::{AlgoKind, NativeRelaxer, Relaxer};
+use lonestar_lb::coordinator::exec::flatten_frontier;
+use lonestar_lb::coordinator::{Assignment, ExecCtx, KernelWork, PushTarget};
+use lonestar_lb::graph::generators::{rmat, RmatParams};
+use lonestar_lb::sim::{AccessPattern, DeviceSpec};
+use lonestar_lb::strategies::workload_decomp::block_offsets;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+use lonestar_lb::worklist::NodeWorklist;
+use lonestar_lb::INF;
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let iters = common::iters_from_env().max(5);
+    let g = rmat(16, 8 << 16, RmatParams::default(), 7).expect("rmat16");
+    let dev = DeviceSpec::k20c();
+    let nodes: Vec<u32> = (0..65_536u32).collect();
+
+    let mut suite = BenchSuite::new("L3 hot paths (rmat16 frontier = all nodes)");
+
+    suite.case("flatten_frontier/524k-edges", 1, iters, || {
+        let (src, eid) = flatten_frontier(&g, &nodes);
+        let n = src.len();
+        black_box((src, eid));
+        format!("{n} positions")
+    });
+
+    let (src, eid) = flatten_frontier(&g, &nodes);
+    let total = src.len();
+
+    suite.case("block_offsets/524k-edges", 1, iters, || {
+        let off = block_offsets(total, dev.max_resident_threads);
+        let n = off.len();
+        black_box(off);
+        format!("{n} lanes")
+    });
+
+    suite.case("native_relax/524k-batch", 1, iters, || {
+        let ds = vec![5u32; total];
+        let w = vec![3u32; total];
+        let c = NativeRelaxer.candidates(&ds, &w).unwrap();
+        black_box(c);
+        format!("{total} candidates")
+    });
+
+    suite.case("launch_interpret/bs-kernel", 1, iters, || {
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        ctx.dist = vec![INF; g.num_nodes_pub()];
+        ctx.dist[0] = 0;
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &n in &nodes {
+            acc += g.degree(n);
+            offsets.push(acc);
+        }
+        let work = KernelWork {
+            name: "bench",
+            src: src.clone(),
+            eid: eid.clone(),
+            assignment: Assignment::Blocked(offsets),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let r = ctx.launch(&g, &work, None).unwrap();
+        let n = r.updated.len();
+        black_box(r);
+        format!("{n} updates")
+    });
+
+    suite.case("condense/524k-dupes", 1, iters, || {
+        let mut wl = NodeWorklist::new();
+        for e in 0..total as u32 {
+            wl.push(e % 65_536, 8);
+        }
+        let removed = wl.condense();
+        black_box(wl);
+        format!("{removed} removed")
+    });
+
+    suite.case("ns_split/rmat16", 1, iters, || {
+        let d = lonestar_lb::strategies::mdt::auto_mdt(&g, 10);
+        let s = lonestar_lb::strategies::node_split::split_graph(&g, d);
+        let msg = format!("{} splits", s.split_nodes);
+        black_box(s);
+        msg
+    });
+
+    // XLA relaxer (the production backend) — skipped without artifacts.
+    match lonestar_lb::runtime::XlaRelaxer::load("artifacts") {
+        Ok(mut xla) => {
+            suite.case("xla_relax/524k-batch", 1, iters, || {
+                let ds = vec![5u32; total];
+                let w = vec![3u32; total];
+                let c = xla.candidates(&ds, &w).unwrap();
+                black_box(c);
+                format!("{total} candidates via PJRT")
+            });
+        }
+        Err(e) => println!("(xla_relax skipped: {e})"),
+    }
+
+    suite.finish();
+}
+
+/// Extension trait shim: Graph::num_nodes without importing the trait in
+/// the closure above.
+trait NumNodes {
+    fn num_nodes_pub(&self) -> usize;
+}
+impl NumNodes for lonestar_lb::graph::Csr {
+    fn num_nodes_pub(&self) -> usize {
+        use lonestar_lb::graph::Graph;
+        self.num_nodes()
+    }
+}

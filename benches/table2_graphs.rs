@@ -1,0 +1,56 @@
+//! Bench: regenerate **Table II** — the graph suite with degree statistics,
+//! timing generation and stats computation per graph (the substrate cost).
+
+use lonestar_lb::figures::{table2, FigureOpts};
+use lonestar_lb::graph::generators::paper_suite;
+use lonestar_lb::graph::stats::DegreeStats;
+use lonestar_lb::graph::Graph;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let iters = common::iters_from_env();
+    let opts = FigureOpts {
+        scale,
+        ..Default::default()
+    };
+
+    let mut stdout = std::io::stdout().lock();
+    let rows = table2(&opts, &mut stdout).expect("table2");
+    drop(stdout);
+
+    let mut suite = BenchSuite::new("table2: generation + stats cost");
+    for entry in paper_suite(scale) {
+        suite.case(&format!("generate/{}", entry.name), 0, iters, || {
+            let g = entry.spec.generate(opts.seed).expect("generate");
+            let msg = format!("{} edges", g.num_edges());
+            black_box(g);
+            msg
+        });
+        let g = entry.spec.generate(opts.seed).expect("generate");
+        suite.case(&format!("stats/{}", entry.name), 1, iters, || {
+            let st = DegreeStats::of(&g);
+            black_box(st);
+            format!("max={} sigma={:.1}", st.max, st.stddev)
+        });
+    }
+    suite.finish();
+
+    // Shape: the skew ordering of Table II (road << ER << rmat <= Graph500).
+    let sigma = |name: &str| {
+        rows.iter()
+            .find(|r| r.graph.contains(name))
+            .map(|r| r.sigma)
+            .unwrap_or(0.0)
+    };
+    assert!(sigma("road") < sigma("ER"), "road must be flatter than ER");
+    assert!(sigma("ER") < sigma("rmat"), "ER must be flatter than rmat");
+    assert!(
+        sigma("rmat") < sigma("Graph500"),
+        "rmat must be flatter than Graph500"
+    );
+    println!("Table II skew ordering holds: road < ER < rmat < Graph500");
+}

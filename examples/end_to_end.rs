@@ -1,0 +1,100 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//!   L1  Pallas relax kernel (interpret-lowered at build time)
+//!   L2  JAX relax_step, AOT-compiled to artifacts/*.hlo.txt
+//!   L3  this Rust coordinator, loading the artifacts via PJRT and driving
+//!       every load-balancing strategy over the paper's workload classes
+//!
+//! For each (graph class, algorithm, strategy) the run executes its numeric
+//! hot path on the **XLA runtime** (not the native fallback), validates the
+//! result against the serial oracle, and reports simulated device time,
+//! MTEPS and host-side throughput. The run is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::engine::Backend;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
+use lonestar_lb::graph::{traversal, Csr, Graph};
+use lonestar_lb::strategies::StrategyKind;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> lonestar_lb::Result<()> {
+    let artifacts = std::env::var("LONESTAR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // Verify the AOT artifacts load before anything else.
+    let relaxer = lonestar_lb::runtime::XlaRelaxer::load(&artifacts)?;
+    println!(
+        "PJRT platform: {} — artifacts loaded from {artifacts}/",
+        relaxer.platform()
+    );
+    drop(relaxer);
+
+    // Three real workload classes from the paper's intro.
+    let workloads: Vec<(&str, Csr)> = vec![
+        ("social (rmat14)", rmat(14, 8 << 14, RmatParams::default(), 99)?),
+        ("road (128x128)", road_grid(128, 128, 100, 17)?),
+        ("random (ER14)", erdos_renyi(1 << 14, 4 << 14, 100, 55)?),
+    ];
+
+    let wall = Instant::now();
+    let mut total_relaxations = 0u64;
+    let mut runs = 0u32;
+
+    for (name, graph) in workloads {
+        let graph = Arc::new(graph);
+        let source = traversal::hub_source(&graph);
+        println!(
+            "\n=== {name}: {} nodes, {} edges, source {source} ===",
+            graph.num_nodes(),
+            graph.num_edges()
+        );
+        for algo in [AlgoKind::Bfs, AlgoKind::Sssp] {
+            let oracle = algo.reference(&graph, source);
+            for strategy in StrategyKind::ALL {
+                let cfg = RunConfig {
+                    algo,
+                    strategy,
+                    source,
+                    backend: Backend::Xla {
+                        dir: Some(artifacts.clone()),
+                    },
+                    ..Default::default()
+                };
+                let t0 = Instant::now();
+                let r = run(&graph, &cfg)?;
+                let host = t0.elapsed();
+                assert_eq!(
+                    r.dist, oracle,
+                    "{name}/{algo:?}/{strategy}: XLA-backed run diverged from oracle"
+                );
+                let dev = &cfg.device;
+                println!(
+                    "{:<5} {:<4} sim {:>8.2} ms  {:>8.1} MTEPS  {:>9} relaxations  host {:>6.0} ms  ✓oracle",
+                    algo.name(),
+                    strategy.label(),
+                    r.metrics.total_ms(dev),
+                    r.metrics.mteps(dev),
+                    r.metrics.edge_relaxations,
+                    host.as_secs_f64() * 1e3,
+                );
+                total_relaxations += r.metrics.edge_relaxations;
+                runs += 1;
+            }
+        }
+    }
+
+    let elapsed = wall.elapsed();
+    println!(
+        "\nend-to-end: {runs} XLA-backed runs, {total_relaxations} edge relaxations \
+         in {:.1} s ({:.2} M relax/s host throughput), every result oracle-validated",
+        elapsed.as_secs_f64(),
+        total_relaxations as f64 / elapsed.as_secs_f64() / 1e6
+    );
+    println!("record: EXPERIMENTS.md §End-to-end");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Road-network SSSP: the large-diameter regime where node splitting (NS)
+//! shines and per-iteration overheads (WD/HP) bite (§IV-A).
+//!
+//! Loads a DIMACS `.gr` file when given one, otherwise generates a
+//! road-grid with the paper's degree profile. Demonstrates the automatic
+//! MDT determination and the NS transform on a real routing workload.
+//!
+//! ```bash
+//! cargo run --release --example road_network_sssp [-- path/to/road.gr]
+//! ```
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::graph::generators::road_grid;
+use lonestar_lb::graph::stats::DegreeStats;
+use lonestar_lb::graph::{io, traversal, Csr, Graph};
+use lonestar_lb::strategies::mdt::auto_mdt;
+use lonestar_lb::strategies::node_split::split_graph;
+use lonestar_lb::strategies::StrategyKind;
+use std::sync::Arc;
+
+fn main() -> lonestar_lb::Result<()> {
+    let graph: Csr = match std::env::args().nth(1) {
+        Some(path) => {
+            println!("loading {path}");
+            io::load(&path)?
+        }
+        None => road_grid(192, 192, 1000, 7)?,
+    };
+    let graph = Arc::new(graph);
+    let stats = DegreeStats::of(&graph);
+    println!(
+        "road network: {} intersections, {} segments, degrees {}..{} (avg {:.1})",
+        graph.num_nodes(),
+        graph.num_edges(),
+        stats.min,
+        stats.max,
+        stats.avg
+    );
+    let diam = traversal::diameter_lower_bound(&graph, 0);
+    println!("diameter >= {diam} (the long-iteration regime)\n");
+
+    // The automatic MDT and its effect (§III-B / Figure 10).
+    let decision = auto_mdt(&graph, 10);
+    let split = split_graph(&graph, decision);
+    println!(
+        "auto MDT = {} (paper band for road networks: 2-4); NS splits {} nodes ({:.1}%)",
+        decision.mdt,
+        split.split_nodes,
+        100.0 * split.split_nodes as f64 / graph.num_nodes() as f64
+    );
+    let after = DegreeStats::of(&split.graph);
+    println!(
+        "degree sigma {:.2} -> {:.2} after splitting\n",
+        stats.stddev, after.stddev
+    );
+
+    // Route from one corner (classic point-to-all query).
+    let oracle = traversal::dijkstra(&graph, 0);
+    println!(
+        "{:<4} {:>10} {:>12} {:>10} {:>8}",
+        "", "kernel(ms)", "overhead(ms)", "total(ms)", "iters"
+    );
+    let mut best: Option<(StrategyKind, f64)> = None;
+    for kind in StrategyKind::ALL {
+        let cfg = RunConfig {
+            algo: AlgoKind::Sssp,
+            strategy: kind,
+            ..Default::default()
+        };
+        let r = run(&graph, &cfg)?;
+        assert_eq!(r.dist, oracle, "{kind} SSSP mismatch");
+        let dev = &cfg.device;
+        let total = r.metrics.total_ms(dev);
+        println!(
+            "{:<4} {:>10.2} {:>12.2} {:>10.2} {:>8}",
+            kind.label(),
+            r.metrics.kernel_ms(dev),
+            r.metrics.overhead_ms(dev),
+            total,
+            r.metrics.iterations
+        );
+        if kind != StrategyKind::EP {
+            // among node-based strategies (the paper's road comparison)
+            if best.map_or(true, |(_, t)| total < t) {
+                best = Some((kind, total));
+            }
+        }
+    }
+    if let Some((k, _)) = best {
+        println!(
+            "\nbest node-based strategy on this road network: {} (paper: NS for large diameters)",
+            k.label()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""AOT lowering: jax -> HLO text -> artifacts/.
+
+Run once by ``make artifacts``; Python never executes at request time.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--batches 1024,8192,65536]
+                          [--block 1024]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kernel(name, fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batches",
+        default="1024,8192,65536",
+        help="comma-separated static batch sizes to compile",
+    )
+    ap.add_argument(
+        "--block",
+        type=int,
+        default=1024,
+        help="Pallas VMEM tile size (must divide every batch)",
+    )
+    args = ap.parse_args()
+
+    batches = [int(b) for b in args.batches.split(",")]
+    for b in batches:
+        if b % args.block != 0:
+            ap.error(f"batch {b} not a multiple of block {args.block}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"jax_version": jax.__version__, "artifacts": []}
+
+    for batch in batches:
+        block = min(args.block, batch)
+        for name, fn, specs in [
+            (
+                "relax",
+                lambda ds, w, blk=block: model.relax_step(ds, w, block=blk),
+                model.relax_step_spec(batch),
+            ),
+            (
+                "scan",
+                lambda x, blk=block: model.scan_step(x, block=blk),
+                model.scan_step_spec(batch),
+            ),
+        ]:
+            text = lower_kernel(name, fn, specs)
+            fname = f"{name}_b{batch}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {"name": name, "batch": batch, "file": fname}
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the specification: pytest asserts the Pallas implementations in
+``relax.py`` match them exactly (int32 arithmetic is exact, so equality —
+not allclose — is the right check)."""
+
+import jax.numpy as jnp
+
+INF = jnp.iinfo(jnp.int32).max
+
+
+def relax_ref(dist_src, w):
+    """cand = min(dist_src + w, INF); INF inputs stay INF.
+
+    Computed in numpy int64 (host-side, exact) then clamped — deliberately
+    a *different* formulation than the kernel's wrap-free int32 identity,
+    so the test is a genuine cross-check."""
+    import numpy as np
+
+    wide = np.asarray(dist_src, dtype=np.int64) + np.asarray(w, dtype=np.int64)
+    sat = np.minimum(wide, np.int64(INF)).astype(np.int32)
+    return jnp.where(jnp.asarray(dist_src) == INF, INF, jnp.asarray(sat))
+
+
+def scan_block_ref(x, block):
+    """Per-tile inclusive prefix sums."""
+    tiles = x.reshape(-1, block)
+    return jnp.cumsum(tiles, axis=1, dtype=jnp.int32).reshape(-1)

@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: batched edge relaxation.
+
+The numeric hot spot of BFS/SSSP is the candidate computation
+
+    cand[i] = sat_add(dist_src[i], w[i])        (INF stays INF)
+
+over a fixed-size batch of frontier edges. On the paper's GPU this is the
+per-thread body of the ``sssp_kernel``; on TPU we re-think it as a tiled
+VPU kernel (DESIGN.md section "Hardware-Adaptation"):
+
+* the batch is partitioned into ``block`` -sized tiles that stream through
+  VMEM (``BlockSpec`` expresses the HBM->VMEM schedule that CUDA expressed
+  with thread blocks);
+* each tile is a vectorized saturating add with an INF guard — elementwise,
+  so it maps onto the VPU's 8x128 lanes; there is no matmul, hence no MXU
+  use, and the roofline is HBM bandwidth (see DESIGN.md §Perf);
+* saturation stays in int32: for non-negative inputs,
+  ``ds + min(w, INF - ds)`` can never wrap and maps ``INF -> INF``
+  (``INF - INF = 0``), so no widening (and no x64 mode) is needed.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+(and any PJRT backend) can run. Real-TPU performance is *estimated* from
+the VMEM footprint in DESIGN.md, not measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# i32 infinity sentinel — must match rust/src/runtime/relaxer.rs::INF_I32.
+INF = jnp.iinfo(jnp.int32).max
+
+# Default VMEM tile: 8 * 128 lanes * 4 B * 3 streams = 12 KiB per tile,
+# far under the ~16 MiB VMEM budget; chosen to align with the VPU lane
+# shape (see python/compile/aot.py --block to sweep).
+DEFAULT_BLOCK = 1024
+
+
+def _relax_tile(dist_src_ref, w_ref, cand_ref):
+    """One VMEM tile: cand = min(dist_src + w, INF), INF-preserving.
+
+    Precondition (enforced by the Rust boundary): ``0 <= ds, w <= INF``.
+    ``ds + min(w, INF - ds)`` never exceeds INF, so the int32 add cannot
+    wrap; ``ds == INF`` gives ``INF - ds == 0`` and stays INF.
+    """
+    ds = dist_src_ref[...]
+    w = w_ref[...]
+    cand_ref[...] = ds + jnp.minimum(w, INF - ds)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def relax(dist_src, w, *, block=DEFAULT_BLOCK):
+    """Batched relaxation candidates.
+
+    Args:
+      dist_src: int32[B] — source distances (INF sentinel for unreached).
+      w:        int32[B] — effective edge weights (1 for BFS).
+      block:    VMEM tile size; must divide B.
+
+    Returns:
+      int32[B] candidates, saturated at INF.
+    """
+    (b,) = dist_src.shape
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _relax_tile,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,  # CPU-PJRT executable; see module docstring
+    )(dist_src, w)
+
+
+def _scan_tile(x_ref, out_ref):
+    """Inclusive prefix sum of one tile (used by the WD offsets path)."""
+    out_ref[...] = jnp.cumsum(x_ref[...], dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scan_block(x, *, block=DEFAULT_BLOCK):
+    """Per-tile inclusive scan: int32[B] -> int32[B].
+
+    The host combines tile totals (carry propagation), mirroring how the
+    paper offloads the WD prefix sums to Thrust's device scan while the
+    host orchestrates.
+    """
+    (b,) = x.shape
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _scan_tile,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes_per_tile(block: int) -> int:
+    """VMEM footprint of one relax tile: 3 int32 streams (2 in + 1 out)."""
+    return 3 * 4 * block

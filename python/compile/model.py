@@ -1,0 +1,45 @@
+"""Layer-2 JAX step functions — the compute graphs the Rust coordinator
+executes through PJRT.
+
+Each function here is a *pure*, fixed-shape jax function that calls the
+Layer-1 Pallas kernels from ``kernels/``. ``aot.py`` lowers them once per
+batch size to HLO text; at runtime the Rust side gathers the inputs,
+executes the compiled artifact, and applies the results under its own
+scheduling (the paper's contribution lives there, not here).
+
+The relax step is deliberately the *whole* numeric content of a processing
+kernel launch: candidates for every edge of the batch. Scatter-min folding
+into the distance array happens host-side under atomic-cost accounting, as
+on the paper's GPU.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import relax as relax_kernels
+
+
+def relax_step(dist_src, w, *, block=relax_kernels.DEFAULT_BLOCK):
+    """The SSSP/BFS relaxation candidates for one batch of frontier edges.
+
+    Wraps the L1 Pallas kernel so that the lowered HLO contains the tiled
+    computation; returns a 1-tuple for the text-HLO calling convention
+    (``to_tuple1`` on the Rust side).
+    """
+    return (relax_kernels.relax(dist_src, w, block=block),)
+
+
+def scan_step(x, *, block=relax_kernels.DEFAULT_BLOCK):
+    """Blocked inclusive scan used by the WD offsets path (1-tuple)."""
+    return (relax_kernels.scan_block(x, block=block),)
+
+
+def relax_step_spec(batch):
+    """Example-argument specs for lowering ``relax_step`` at ``batch``."""
+    s = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return (s, s)
+
+
+def scan_step_spec(batch):
+    """Example-argument specs for lowering ``scan_step`` at ``batch``."""
+    return (jax.ShapeDtypeStruct((batch,), jnp.int32),)

@@ -1,0 +1,109 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; int32 arithmetic is exact so the
+assertion is equality, with assert_allclose kept for API parity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.relax import (
+    DEFAULT_BLOCK,
+    INF,
+    relax,
+    scan_block,
+    vmem_bytes_per_tile,
+)
+
+
+def np_i32(xs):
+    return np.asarray(xs, dtype=np.int32)
+
+
+class TestRelaxBasics:
+    def test_simple_add(self):
+        out = relax(np_i32([0, 5, 10] + [0] * 1021), np_i32([7, 3, 1] + [0] * 1021))
+        assert out[0] == 7 and out[1] == 8 and out[2] == 11
+
+    def test_inf_is_preserved(self):
+        ds = np_i32([INF] * DEFAULT_BLOCK)
+        w = np_i32([100] * DEFAULT_BLOCK)
+        out = np.asarray(relax(ds, w))
+        assert (out == INF).all()
+
+    def test_saturates_instead_of_wrapping(self):
+        ds = np_i32([INF - 1] * DEFAULT_BLOCK)
+        w = np_i32([100] * DEFAULT_BLOCK)
+        out = np.asarray(relax(ds, w))
+        assert (out == INF).all(), "must clamp at INF, not wrap negative"
+
+    def test_rejects_unaligned_batch(self):
+        with pytest.raises(AssertionError):
+            relax(np_i32([1, 2, 3]), np_i32([1, 2, 3]))
+
+    @pytest.mark.parametrize("block", [128, 256, 1024])
+    @pytest.mark.parametrize("tiles", [1, 2, 4])
+    def test_matches_ref_across_blockings(self, block, tiles):
+        rng = np.random.default_rng(block * 31 + tiles)
+        b = block * tiles
+        ds = rng.integers(0, 2**30, size=b, dtype=np.int32)
+        ds[rng.random(b) < 0.1] = INF
+        w = rng.integers(0, 100, size=b, dtype=np.int32)
+        got = np.asarray(relax(ds, w, block=block))
+        want = np.asarray(ref.relax_ref(ds, w))
+        assert_allclose(got, want)
+
+    def test_vmem_footprint_fits_budget(self):
+        # 16 MiB VMEM with generous headroom — DESIGN.md §Perf.
+        assert vmem_bytes_per_tile(DEFAULT_BLOCK) < 1 << 20
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    block_pow=st.integers(min_value=5, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    inf_frac=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_relax_hypothesis_sweep(tiles, block_pow, seed, inf_frac):
+    """Property: Pallas relax == oracle for arbitrary shapes/values."""
+    block = 1 << block_pow
+    b = tiles * block
+    rng = np.random.default_rng(seed)
+    ds = rng.integers(0, 2**31 - 1, size=b, dtype=np.int32)
+    ds[rng.random(b) < inf_frac] = INF
+    w = rng.integers(0, 2**16, size=b, dtype=np.int32)
+    got = np.asarray(relax(ds, w, block=block))
+    want = np.asarray(ref.relax_ref(ds, w))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scan_hypothesis_sweep(tiles, seed):
+    """Property: per-tile inclusive scan == oracle."""
+    block = 256
+    b = tiles * block
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1000, size=b, dtype=np.int32)
+    got = np.asarray(scan_block(x, block=block))
+    want = np.asarray(ref.scan_block_ref(x, block))
+    np.testing.assert_array_equal(got, want)
+
+
+class TestScanBasics:
+    def test_single_tile(self):
+        x = np_i32(list(range(256)))
+        got = np.asarray(scan_block(x, block=256))
+        assert got[0] == 0 and got[255] == sum(range(256))
+
+    def test_tiles_are_independent(self):
+        x = np_i32([1] * 512)
+        got = np.asarray(scan_block(x, block=256))
+        # each tile restarts: position 256 is 1, not 257
+        assert got[255] == 256 and got[256] == 1

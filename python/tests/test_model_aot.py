@@ -1,0 +1,130 @@
+"""L2/AOT tests: model step functions, HLO lowering, manifest shape."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import lower_kernel, to_hlo_text
+from compile.kernels.relax import INF
+
+import jax
+
+
+def np_i32(xs):
+    return np.asarray(xs, dtype=np.int32)
+
+
+class TestModelSteps:
+    def test_relax_step_returns_tuple1(self):
+        b = 1024
+        out = model.relax_step(np_i32([3] * b), np_i32([4] * b))
+        assert isinstance(out, tuple) and len(out) == 1
+        assert np.asarray(out[0])[0] == 7
+
+    def test_scan_step_returns_tuple1(self):
+        out = model.scan_step(np_i32([2] * 1024))
+        assert isinstance(out, tuple) and len(out) == 1
+        assert np.asarray(out[0])[1023] == 2048
+
+    def test_specs_match_function_signature(self):
+        specs = model.relax_step_spec(2048)
+        lowered = jax.jit(lambda a, b: model.relax_step(a, b)).lower(*specs)
+        assert lowered is not None
+
+
+class TestHloLowering:
+    def test_relax_lowers_to_parseable_hlo_text(self):
+        text = lower_kernel(
+            "relax",
+            lambda a, b: model.relax_step(a, b),
+            model.relax_step_spec(1024),
+        )
+        assert "HloModule" in text
+        # the tuple return convention the rust loader expects
+        assert "ROOT" in text
+
+    def test_lowered_hlo_contains_no_custom_calls(self):
+        # interpret=True must lower to plain HLO; a Mosaic custom-call would
+        # be unloadable by the CPU PJRT client.
+        text = lower_kernel(
+            "relax",
+            lambda a, b: model.relax_step(a, b),
+            model.relax_step_spec(1024),
+        )
+        assert "custom-call" not in text, "Mosaic leak: kernel not interpretable"
+
+    def test_fixed_shapes_in_hlo(self):
+        text = lower_kernel(
+            "relax",
+            lambda a, b: model.relax_step(a, b),
+            model.relax_step_spec(2048),
+        )
+        assert "s32[2048]" in text
+
+
+class TestAotCli:
+    def test_aot_writes_artifacts_and_manifest(self, tmp_path):
+        out = tmp_path / "artifacts"
+        r = subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                str(out),
+                "--batches",
+                "1024",
+                "--block",
+                "256",
+            ],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+        )
+        assert r.returncode == 0, r.stderr
+        manifest = json.loads((out / "manifest.json").read_text())
+        names = {(a["name"], a["batch"]) for a in manifest["artifacts"]}
+        assert ("relax", 1024) in names
+        assert ("scan", 1024) in names
+        for a in manifest["artifacts"]:
+            assert (out / a["file"]).exists()
+            assert "HloModule" in (out / a["file"]).read_text()[:200]
+
+    def test_aot_rejects_misaligned_block(self, tmp_path):
+        r = subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                str(tmp_path),
+                "--batches",
+                "1000",
+                "--block",
+                "256",
+            ],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+        )
+        assert r.returncode != 0
+
+
+class TestNumericBoundary:
+    """The i32 sentinel contract shared with rust/src/runtime/relaxer.rs."""
+
+    def test_inf_is_i32_max(self):
+        assert INF == 2**31 - 1
+
+    def test_relax_step_honours_sentinel(self):
+        b = 1024
+        ds = np_i32([0, 5, INF] + [INF] * (b - 3))
+        w = np_i32([7, 3, 1] + [0] * (b - 3))
+        (out,) = model.relax_step(ds, w)
+        out = np.asarray(out)
+        assert out[0] == 7 and out[1] == 8 and out[2] == INF

@@ -1,0 +1,62 @@
+//! Processing kernels: BFS and SSSP as min-propagation algorithms, plus the
+//! batched relaxation abstraction shared by the native and XLA backends.
+//!
+//! Both algorithms are instances of the same *distributive* propagation
+//! (§II-B): a candidate value is computed from the source attribute and the
+//! edge (`dist[src] + w` for SSSP, `level[src] + 1` for BFS) and folded into
+//! the destination with `min`. The distributivity of `min` over `+` is what
+//! legitimizes edge-based task distribution for these kernels.
+
+pub mod relax;
+
+pub use relax::{NativeRelaxer, Relaxer};
+
+/// Which propagation algorithm runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Breadth-first search: level computation, unit edge weights. A
+    /// memory-bound kernel — "performs only a little computation" (§IV-A),
+    /// so strategy overheads dominate on small graphs.
+    Bfs,
+    /// Single-source shortest paths: weighted relaxation with re-expansion
+    /// when a distance improves. Computation-heavy relative to BFS.
+    Sssp,
+}
+
+impl AlgoKind {
+    /// The weight the relaxation actually uses: BFS ignores stored weights.
+    #[inline]
+    pub fn effective_weight(&self, stored: u32) -> u32 {
+        match self {
+            AlgoKind::Bfs => 1,
+            AlgoKind::Sssp => stored,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Bfs => "bfs",
+            AlgoKind::Sssp => "sssp",
+        }
+    }
+
+    /// Serial oracle for validation.
+    pub fn reference(&self, g: &crate::graph::Csr, source: crate::graph::NodeId) -> Vec<u32> {
+        match self {
+            AlgoKind::Bfs => crate::graph::traversal::bfs_levels(g, source),
+            AlgoKind::Sssp => crate::graph::traversal::dijkstra(g, source),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bfs_ignores_weights() {
+        assert_eq!(AlgoKind::Bfs.effective_weight(99), 1);
+        assert_eq!(AlgoKind::Sssp.effective_weight(99), 99);
+    }
+}

@@ -1,0 +1,67 @@
+//! Batched candidate computation — the numeric hot path.
+//!
+//! A kernel launch relaxes a batch of edges. The candidate values
+//! `cand[i] = sat_add(dist_src[i], w[i])` are computed for the whole batch
+//! up front from a snapshot of the distance array (GPU threads read
+//! possibly-stale values; the worklist re-push makes this safe), then the
+//! launcher folds them in with `min` under the simulator's atomic
+//! accounting.
+//!
+//! Two implementations exist:
+//! * [`NativeRelaxer`] — pure Rust (simulation and oracle runs).
+//! * [`crate::runtime::XlaRelaxer`] — executes the AOT-compiled
+//!   Pallas/JAX artifact on the XLA CPU runtime (the production path).
+//!
+//! Both must agree bit-for-bit; `rust/tests/backend_parity.rs` enforces it.
+
+use crate::error::Result;
+use crate::INF;
+
+/// Batched edge-relaxation candidate computation.
+pub trait Relaxer {
+    /// `cand[i] = dist_src[i] + w[i]`, saturating at [`INF`]; `INF` inputs
+    /// stay `INF`.
+    fn candidates(&mut self, dist_src: &[u32], w: &[u32]) -> Result<Vec<u32>>;
+
+    /// Backend name for reporting.
+    fn backend(&self) -> &'static str;
+}
+
+/// Pure-Rust relaxer.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeRelaxer;
+
+impl Relaxer for NativeRelaxer {
+    fn candidates(&mut self, dist_src: &[u32], w: &[u32]) -> Result<Vec<u32>> {
+        debug_assert_eq!(dist_src.len(), w.len());
+        Ok(dist_src
+            .iter()
+            .zip(w)
+            .map(|(&d, &w)| if d == INF { INF } else { d.saturating_add(w) })
+            .collect())
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturates_at_inf() {
+        let mut r = NativeRelaxer;
+        let c = r
+            .candidates(&[0, 5, INF, INF - 1], &[3, 7, 10, 10])
+            .unwrap();
+        assert_eq!(c, vec![3, 12, INF, INF]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let mut r = NativeRelaxer;
+        assert!(r.candidates(&[], &[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,369 @@
+//! Experiment configuration files for the launcher.
+//!
+//! The format is a minimal `key = value` dialect (INI-like, `#` comments)
+//! parsed in-repo — the offline build carries no TOML dependency. See
+//! `configs/*.conf` for shipped examples:
+//!
+//! ```text
+//! # sssp strategy sweep over the small rmat graph
+//! name       = rmat-sweep
+//! graph      = suite:rmat16            # or file:PATH, rmat:10x8, er:10x4, road:64x64, g500:10
+//! scale      = small                   # tiny | small | paper (suite graphs)
+//! seed       = 20170101
+//! algos      = sssp,bfs
+//! strategies = BS,EP,WD,NS,HP
+//! source     = 0
+//! push_policy = chunked                # chunked | per-edge
+//! enforce_budget = false
+//! backend    = native                  # native | xla | xla:DIR
+//! histogram_bins = 10
+//! ```
+
+use crate::algorithms::AlgoKind;
+use crate::coordinator::engine::Backend;
+use crate::coordinator::RunConfig;
+use crate::error::{Error, Result};
+use crate::graph::generators::{paper_suite, GraphSpec, SuiteScale};
+use crate::strategies::{StrategyKind, StrategyParams};
+use crate::worklist::chunking::PushPolicy;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Where the input graph comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSource {
+    /// Load from a file (`.gr`, `.bin`, edge list).
+    File(String),
+    /// A named entry of the paper suite.
+    Suite(String),
+    /// An explicit recipe.
+    Spec(GraphSpec),
+}
+
+impl GraphSource {
+    /// Parse `file:PATH`, `suite:NAME`, `rmat:SxE`, `er:SxE`, `road:RxC`,
+    /// `g500:S`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let (kind, arg) = text
+            .split_once(':')
+            .ok_or_else(|| Error::Config(format!("graph spec {text:?} needs kind:arg")))?;
+        let dims = |s: &str| -> Result<(usize, usize)> {
+            let (a, b) = s
+                .split_once('x')
+                .ok_or_else(|| Error::Config(format!("expected AxB in {s:?}")))?;
+            Ok((
+                a.parse().map_err(|_| Error::Config(format!("bad number {a:?}")))?,
+                b.parse().map_err(|_| Error::Config(format!("bad number {b:?}")))?,
+            ))
+        };
+        match kind {
+            "file" => Ok(GraphSource::File(arg.to_string())),
+            "suite" => Ok(GraphSource::Suite(arg.to_string())),
+            "rmat" => {
+                let (s, e) = dims(arg)?;
+                Ok(GraphSource::Spec(GraphSpec::Rmat {
+                    scale: s as u32,
+                    edge_factor: e,
+                }))
+            }
+            "er" => {
+                let (s, e) = dims(arg)?;
+                Ok(GraphSource::Spec(GraphSpec::ErdosRenyi {
+                    scale: s as u32,
+                    edge_factor: e,
+                }))
+            }
+            "road" => {
+                let (r, c) = dims(arg)?;
+                Ok(GraphSource::Spec(GraphSpec::Road { rows: r, cols: c }))
+            }
+            "g500" => Ok(GraphSource::Spec(GraphSpec::Graph500 {
+                scale: arg
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad scale {arg:?}")))?,
+                seed_offset: 0,
+            })),
+            other => Err(Error::Config(format!("unknown graph kind {other:?}"))),
+        }
+    }
+
+    /// Materialize the graph.
+    pub fn load(&self, scale: SuiteScale, seed: u64) -> Result<crate::graph::Csr> {
+        match self {
+            GraphSource::File(path) => crate::graph::io::load(path),
+            GraphSource::Spec(spec) => spec.generate(seed),
+            GraphSource::Suite(name) => {
+                let suite = paper_suite(scale);
+                let entry = suite
+                    .iter()
+                    .find(|e| e.name == *name)
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "no suite graph named {name:?}; available: {}",
+                            suite
+                                .iter()
+                                .map(|e| e.name.as_str())
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        ))
+                    })?;
+                entry.spec.generate(seed)
+            }
+        }
+    }
+}
+
+/// Parse a suite-scale name.
+pub fn parse_scale(s: &str) -> Result<SuiteScale> {
+    match s {
+        "tiny" => Ok(SuiteScale::Tiny),
+        "small" => Ok(SuiteScale::Small),
+        "paper" => Ok(SuiteScale::Paper),
+        other => Err(Error::Config(format!("unknown scale {other:?}"))),
+    }
+}
+
+/// Parse an algorithm name.
+pub fn parse_algo(s: &str) -> Result<AlgoKind> {
+    match s {
+        "bfs" => Ok(AlgoKind::Bfs),
+        "sssp" => Ok(AlgoKind::Sssp),
+        other => Err(Error::Config(format!("unknown algo {other:?}"))),
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub graph: GraphSource,
+    pub scale: SuiteScale,
+    pub seed: u64,
+    pub algos: Vec<AlgoKind>,
+    pub strategies: Vec<StrategyKind>,
+    pub source: u32,
+    pub push_policy: PushPolicy,
+    pub enforce_budget: bool,
+    pub backend: Backend,
+    pub params: StrategyParams,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            graph: GraphSource::Suite("rmat16".into()),
+            scale: SuiteScale::Small,
+            seed: crate::graph::generators::suite::DEFAULT_SEED,
+            algos: vec![AlgoKind::Sssp],
+            strategies: StrategyKind::ALL.to_vec(),
+            source: 0,
+            push_policy: PushPolicy::Chunked,
+            enforce_budget: false,
+            backend: Backend::Native,
+            params: StrategyParams::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse the `key = value` config dialect.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: BTreeMap<String, String> = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            kv.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in kv {
+            match k.as_str() {
+                "name" => cfg.name = v,
+                "graph" => cfg.graph = GraphSource::parse(&v)?,
+                "scale" => cfg.scale = parse_scale(&v)?,
+                "seed" => {
+                    cfg.seed = v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad seed {v:?}")))?
+                }
+                "algos" | "algo" => {
+                    cfg.algos = v
+                        .split(',')
+                        .map(|s| parse_algo(s.trim()))
+                        .collect::<Result<_>>()?
+                }
+                "strategies" | "strategy" => {
+                    cfg.strategies = if v == "all" {
+                        StrategyKind::ALL.to_vec()
+                    } else {
+                        v.split(',')
+                            .map(|s| s.trim().parse())
+                            .collect::<Result<_>>()?
+                    }
+                }
+                "source" => {
+                    cfg.source = v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad source {v:?}")))?
+                }
+                "push_policy" => {
+                    cfg.push_policy = match v.as_str() {
+                        "chunked" => PushPolicy::Chunked,
+                        "per-edge" => PushPolicy::PerEdge,
+                        other => {
+                            return Err(Error::Config(format!("bad push_policy {other:?}")))
+                        }
+                    }
+                }
+                "enforce_budget" => {
+                    cfg.enforce_budget = v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad bool {v:?}")))?
+                }
+                "backend" => {
+                    cfg.backend = match v.as_str() {
+                        "native" => Backend::Native,
+                        "xla" => Backend::Xla { dir: None },
+                        other => match other.split_once(':') {
+                            Some(("xla", dir)) => Backend::Xla {
+                                dir: Some(dir.to_string()),
+                            },
+                            _ => return Err(Error::Config(format!("bad backend {other:?}"))),
+                        },
+                    }
+                }
+                "histogram_bins" => {
+                    cfg.params.histogram_bins = v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad histogram_bins {v:?}")))?
+                }
+                "mdt" => {
+                    cfg.params.mdt_override = Some(
+                        v.parse()
+                            .map_err(|_| Error::Config(format!("bad mdt {v:?}")))?,
+                    )
+                }
+                "max_threads" => {
+                    cfg.params.max_threads = Some(
+                        v.parse()
+                            .map_err(|_| Error::Config(format!("bad max_threads {v:?}")))?,
+                    )
+                }
+                other => return Err(Error::Config(format!("unknown config key {other:?}"))),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from a file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Expand into the individual runs.
+    pub fn run_configs(&self) -> Vec<RunConfig> {
+        let mut out = Vec::new();
+        for &algo in &self.algos {
+            for &strategy in &self.strategies {
+                out.push(RunConfig {
+                    algo,
+                    strategy,
+                    source: self.source,
+                    push_policy: self.push_policy,
+                    enforce_budget: self.enforce_budget,
+                    backend: self.backend.clone(),
+                    params: self.params.clone(),
+                    ..Default::default()
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            # comment
+            name = demo
+            graph = rmat:10x8
+            seed = 42
+            algos = bfs,sssp
+            strategies = BS,EP
+            source = 3
+            push_policy = per-edge
+            enforce_budget = true
+            backend = xla:my-artifacts
+            histogram_bins = 16
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "demo");
+        assert_eq!(cfg.algos, vec![AlgoKind::Bfs, AlgoKind::Sssp]);
+        assert_eq!(cfg.strategies, vec![StrategyKind::BS, StrategyKind::EP]);
+        assert_eq!(cfg.source, 3);
+        assert_eq!(cfg.push_policy, PushPolicy::PerEdge);
+        assert!(cfg.enforce_budget);
+        assert_eq!(
+            cfg.backend,
+            Backend::Xla {
+                dir: Some("my-artifacts".into())
+            }
+        );
+        assert_eq!(cfg.params.histogram_bins, 16);
+        assert_eq!(cfg.run_configs().len(), 4);
+        use crate::graph::Graph;
+        let g = cfg.graph.load(cfg.scale, cfg.seed).unwrap();
+        assert_eq!(g.num_nodes(), 1024);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(ExperimentConfig::parse("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn graph_source_variants() {
+        assert_eq!(
+            GraphSource::parse("file:/tmp/x.gr").unwrap(),
+            GraphSource::File("/tmp/x.gr".into())
+        );
+        assert!(matches!(
+            GraphSource::parse("road:8x9").unwrap(),
+            GraphSource::Spec(GraphSpec::Road { rows: 8, cols: 9 })
+        ));
+        assert!(matches!(
+            GraphSource::parse("g500:12").unwrap(),
+            GraphSource::Spec(GraphSpec::Graph500 { scale: 12, .. })
+        ));
+        assert!(GraphSource::parse("nope").is_err());
+        assert!(GraphSource::parse("rmat:banana").is_err());
+    }
+
+    #[test]
+    fn suite_source_resolves_names() {
+        let src = GraphSource::Suite("rmat10".into());
+        assert!(src.load(SuiteScale::Tiny, 3).is_ok());
+        let bad = GraphSource::Suite("nope".into());
+        assert!(bad.load(SuiteScale::Tiny, 3).is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ExperimentConfig::parse("").unwrap();
+        assert_eq!(cfg.strategies.len(), 5);
+        assert_eq!(cfg.algos, vec![AlgoKind::Sssp]);
+        assert!(!cfg.enforce_budget);
+    }
+}

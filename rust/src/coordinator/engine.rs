@@ -1,0 +1,199 @@
+//! The run driver: the paper's outer `while inputWl.size() > 0` loop,
+//! wrapped with configuration, backend selection and metric finalization.
+
+use crate::algorithms::{AlgoKind, NativeRelaxer, Relaxer};
+use crate::error::{Error, Result};
+use crate::graph::{Csr, Graph, NodeId};
+use crate::metrics::RunMetrics;
+use crate::sim::DeviceSpec;
+use crate::strategies::{build_strategy, StrategyKind, StrategyParams};
+use crate::worklist::chunking::PushPolicy;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::ExecCtx;
+
+/// Which relaxation backend computes the numeric hot path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum Backend {
+    /// Pure-Rust candidates (simulation + oracle).
+    #[default]
+    Native,
+    /// AOT-compiled Pallas/JAX artifact executed on the XLA CPU runtime.
+    Xla {
+        /// Artifact directory (default `artifacts/`).
+        dir: Option<String>,
+    },
+}
+
+/// Everything needed to run one strategy × algorithm × graph computation.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub algo: AlgoKind,
+    pub strategy: StrategyKind,
+    /// Source node.
+    pub source: NodeId,
+    pub push_policy: PushPolicy,
+    pub device: DeviceSpec,
+    /// Enforce the device memory budget (off for correctness runs).
+    pub enforce_budget: bool,
+    pub backend: Backend,
+    pub params: StrategyParams,
+    /// Safety valve on outer iterations.
+    pub max_iterations: u32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algo: AlgoKind::Sssp,
+            strategy: StrategyKind::BS,
+            source: 0,
+            push_policy: PushPolicy::default(),
+            device: DeviceSpec::k20c(),
+            enforce_budget: false,
+            backend: Backend::Native,
+            params: StrategyParams::default(),
+            max_iterations: 1_000_000,
+        }
+    }
+}
+
+/// Outcome of a run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Final distances/levels for the original node ids.
+    pub dist: Vec<u32>,
+    pub metrics: RunMetrics,
+}
+
+/// Drive `cfg` over `graph` to convergence.
+pub fn run(graph: &Arc<Csr>, cfg: &RunConfig) -> Result<RunResult> {
+    if graph.num_nodes() == 0 {
+        return Err(Error::InvalidGraph("empty graph".into()));
+    }
+    if cfg.source as usize >= graph.num_nodes() {
+        return Err(Error::Config(format!(
+            "source {} out of range (n = {})",
+            cfg.source,
+            graph.num_nodes()
+        )));
+    }
+
+    let relaxer: Box<dyn Relaxer> = match &cfg.backend {
+        Backend::Native => Box::new(NativeRelaxer),
+        Backend::Xla { dir } => Box::new(crate::runtime::XlaRelaxer::load(
+            dir.as_deref().unwrap_or("artifacts"),
+        )?),
+    };
+
+    let host_start = Instant::now();
+    let mut ctx = ExecCtx::new(&cfg.device, cfg.algo, relaxer);
+    ctx.push_policy = cfg.push_policy;
+    if cfg.enforce_budget {
+        ctx = ctx.with_budget(cfg.device.memory_budget);
+    }
+
+    let mut strategy = build_strategy(cfg.strategy, graph.clone(), cfg.params.clone());
+    strategy.init(&mut ctx, cfg.source)?;
+
+    let mut outer = 0u32;
+    while strategy.pending() > 0 {
+        strategy.run_iteration(&mut ctx)?;
+        outer += 1;
+        if outer >= cfg.max_iterations {
+            return Err(Error::Config(format!(
+                "exceeded max_iterations = {} (non-convergence?)",
+                cfg.max_iterations
+            )));
+        }
+    }
+
+    let dist = strategy.finalize(&ctx);
+    ctx.finalize_metrics();
+    let mut metrics = ctx.metrics;
+    metrics.host_ns = host_start.elapsed().as_nanos() as u64;
+    Ok(RunResult { dist, metrics })
+}
+
+/// Convenience: run every strategy on the same problem, returning
+/// `(kind, Result)` pairs — the inner loop of the figure harness. OOM
+/// failures are data, not errors (the paper's missing bars).
+pub fn run_all_strategies(
+    graph: &Arc<Csr>,
+    base: &RunConfig,
+) -> Vec<(StrategyKind, Result<RunResult>)> {
+    StrategyKind::ALL
+        .iter()
+        .map(|&k| {
+            let cfg = RunConfig {
+                strategy: k,
+                ..base.clone()
+            };
+            (k, run(graph, &cfg))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal;
+
+    fn small_graph() -> Arc<Csr> {
+        Arc::new(crate::graph::generators::erdos_renyi(128, 512, 10, 77).unwrap())
+    }
+
+    #[test]
+    fn all_strategies_agree_with_oracle_sssp() {
+        let g = small_graph();
+        let oracle = traversal::dijkstra(&g, 0);
+        for (kind, res) in run_all_strategies(&g, &RunConfig::default()) {
+            let r = res.unwrap_or_else(|e| panic!("{kind} failed: {e}"));
+            assert_eq!(r.dist, oracle, "{kind} SSSP mismatch");
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree_with_oracle_bfs() {
+        let g = small_graph();
+        let oracle = traversal::bfs_levels(&g, 0);
+        let cfg = RunConfig {
+            algo: AlgoKind::Bfs,
+            ..Default::default()
+        };
+        for (kind, res) in run_all_strategies(&g, &cfg) {
+            let r = res.unwrap_or_else(|e| panic!("{kind} failed: {e}"));
+            assert_eq!(r.dist, oracle, "{kind} BFS mismatch");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_source() {
+        let g = small_graph();
+        let cfg = RunConfig {
+            source: 10_000,
+            ..Default::default()
+        };
+        assert!(run(&g, &cfg).is_err());
+    }
+
+    #[test]
+    fn metrics_are_populated() {
+        let g = small_graph();
+        let r = run(&g, &RunConfig::default()).unwrap();
+        assert!(r.metrics.kernel_cycles > 0);
+        assert!(r.metrics.overhead_cycles > 0);
+        assert!(r.metrics.iterations > 0);
+        assert!(r.metrics.edge_relaxations > 0);
+        assert!(r.metrics.host_ns > 0);
+    }
+
+    #[test]
+    fn unreachable_nodes_stay_inf() {
+        use crate::graph::Edge;
+        let g = Arc::new(Csr::from_edges(4, &[Edge::new(0, 1, 2)]).unwrap());
+        let r = run(&g, &RunConfig::default()).unwrap();
+        assert_eq!(r.dist, vec![0, 2, crate::INF, crate::INF]);
+    }
+}

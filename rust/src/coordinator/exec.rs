@@ -1,0 +1,479 @@
+//! Kernel execution: SIMT interpretation of a strategy's thread assignment
+//! with exact cycle accounting.
+//!
+//! A strategy expresses each GPU kernel as a [`KernelWork`]: a flat batch of
+//! edges plus a per-lane [`Assignment`]. [`ExecCtx::launch`] interprets the
+//! kernel warp-by-warp in lockstep — computing real distance updates (this
+//! is also the correctness path) while charging cycles to the
+//! [`crate::sim::KernelSim`] model. Candidates come from the pluggable
+//! [`Relaxer`] backend, so the identical scheduling code runs against the
+//! native Rust implementation or the AOT-compiled XLA artifact.
+
+use crate::algorithms::{AlgoKind, Relaxer};
+use crate::error::Result;
+use crate::graph::{Csr, NodeId};
+use crate::metrics::RunMetrics;
+use crate::sim::{AccessPattern, DeviceSpec, KernelSim, MemoryTracker};
+use crate::worklist::chunking::PushPolicy;
+
+/// How batch positions are distributed over lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Assignment {
+    /// Lane `l` processes positions `offsets[l] .. offsets[l+1]`
+    /// (contiguous spans: BS, WD, NS, HP).
+    Blocked(Vec<u32>),
+    /// `num_threads` lanes; lane `l` processes positions
+    /// `l, l + T, l + 2T, …` (EP's round-robin, which coalesces accesses —
+    /// §II-B).
+    Strided { num_threads: u32 },
+}
+
+impl Assignment {
+    /// Number of lanes the kernel launches.
+    pub fn lanes(&self) -> usize {
+        match self {
+            Assignment::Blocked(offsets) => offsets.len().saturating_sub(1),
+            Assignment::Strided { num_threads } => *num_threads as usize,
+        }
+    }
+
+    /// Items assigned to `lane` given `total` batch positions.
+    #[inline]
+    fn lane_count(&self, lane: usize, total: usize) -> u32 {
+        match self {
+            Assignment::Blocked(offsets) => offsets[lane + 1] - offsets[lane],
+            Assignment::Strided { num_threads } => {
+                let t = *num_threads as usize;
+                if lane < total {
+                    ((total - lane - 1) / t + 1) as u32
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// Batch position of `lane`'s `step`-th item.
+    #[inline]
+    fn position(&self, lane: usize, step: u32) -> usize {
+        match self {
+            Assignment::Blocked(offsets) => offsets[lane] as usize + step as usize,
+            Assignment::Strided { num_threads } => lane + step as usize * *num_threads as usize,
+        }
+    }
+}
+
+/// What a successful update appends to the output worklist — determines the
+/// element count for chunked-append atomic accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushTarget {
+    /// Node-based worklists push one `(node, degree)` entry.
+    Node,
+    /// EP pushes all outgoing edges of the updated node.
+    Edges,
+}
+
+/// One kernel launch, fully described.
+#[derive(Debug, Clone)]
+pub struct KernelWork {
+    /// Kernel label for tracing.
+    pub name: &'static str,
+    /// Source node of each batch position.
+    pub src: Vec<NodeId>,
+    /// Global CSR edge index of each batch position.
+    pub eid: Vec<u32>,
+    /// Lane distribution.
+    pub assignment: Assignment,
+    /// Warp-level access pattern of the edge reads.
+    pub access: AccessPattern,
+    /// Per-edge bookkeeping cycles (WD offset walking, HP cursor checks).
+    pub extra_cycles_per_edge: u64,
+    /// Worklist element pushed on successful update.
+    pub push: PushTarget,
+}
+
+/// Parent → children map produced by node splitting (NS). Children ids are
+/// `>= first_child`; `children(p)` yields the child clones whose attributes
+/// mirror parent `p`.
+#[derive(Debug, Clone, Default)]
+pub struct SplitMap {
+    /// For each original node, the contiguous range of its child ids
+    /// (empty range when unsplit).
+    ranges: Vec<(u32, u32)>,
+}
+
+impl SplitMap {
+    /// Build from per-parent child ranges (children occupy ids `>= n`).
+    pub fn new(ranges: Vec<(u32, u32)>) -> Self {
+        SplitMap { ranges }
+    }
+
+    /// Child ids of `parent` (empty for unsplit nodes or child ids).
+    #[inline]
+    pub fn children(&self, parent: NodeId) -> std::ops::Range<u32> {
+        match self.ranges.get(parent as usize) {
+            Some(&(a, b)) => a..b,
+            None => 0..0,
+        }
+    }
+
+    /// Total child nodes created.
+    pub fn total_children(&self) -> u64 {
+        self.ranges.iter().map(|&(a, b)| (b - a) as u64).sum()
+    }
+
+    /// True if no node was split.
+    pub fn is_trivial(&self) -> bool {
+        self.ranges.iter().all(|&(a, b)| a == b)
+    }
+}
+
+/// Result of one launch: the nodes whose distance improved, in update order
+/// (duplicates possible — worklist condensing handles them later).
+#[derive(Debug, Default)]
+pub struct LaunchResult {
+    pub updated: Vec<NodeId>,
+}
+
+/// Mutable run state threaded through a strategy's kernel launches.
+pub struct ExecCtx<'d> {
+    pub dev: &'d DeviceSpec,
+    pub mem: MemoryTracker,
+    pub metrics: RunMetrics,
+    pub algo: AlgoKind,
+    pub push_policy: PushPolicy,
+    pub relaxer: Box<dyn Relaxer + 'd>,
+    /// Distance / level array. Node-splitting strategies size it to the
+    /// transformed node count; entries `0..original_n` hold the answer.
+    pub dist: Vec<u32>,
+}
+
+impl<'d> ExecCtx<'d> {
+    /// Fresh context with an unlimited memory budget.
+    pub fn new(dev: &'d DeviceSpec, algo: AlgoKind, relaxer: Box<dyn Relaxer + 'd>) -> Self {
+        ExecCtx {
+            dev,
+            mem: MemoryTracker::unlimited(),
+            metrics: RunMetrics::default(),
+            algo,
+            push_policy: PushPolicy::default(),
+            relaxer,
+            dist: Vec::new(),
+        }
+    }
+
+    /// Use the device's memory budget (simulation runs).
+    pub fn with_budget(mut self, budget: u64) -> Self {
+        self.mem = MemoryTracker::new(budget);
+        self
+    }
+
+    /// Interpret one processing kernel: compute updates, charge cycles.
+    ///
+    /// `graph` is whatever graph the strategy runs on (possibly its split
+    /// version); `mirror` carries NS's parent→children map so parent
+    /// updates propagate to child clones (extra atomics, §III-B).
+    pub fn launch(
+        &mut self,
+        graph: &Csr,
+        work: &KernelWork,
+        mirror: Option<&SplitMap>,
+    ) -> Result<LaunchResult> {
+        let total = work.src.len();
+        debug_assert_eq!(total, work.eid.len());
+
+        // Batch candidate computation from a snapshot of `dist` (threads
+        // read global memory without ordering guarantees; min-fold below
+        // keeps monotonicity).
+        let mut dist_src = Vec::with_capacity(total);
+        let mut wts = Vec::with_capacity(total);
+        for p in 0..total {
+            dist_src.push(self.dist[work.src[p] as usize]);
+            wts.push(self.algo.effective_weight(graph.edge_wt(work.eid[p])));
+        }
+        let cand = self.relaxer.candidates(&dist_src, &wts)?;
+
+        let lanes = work.assignment.lanes();
+        let warp = self.dev.warp_size as usize;
+        let mut ksim = KernelSim::new(self.dev);
+        let mut result = LaunchResult::default();
+        let mut dsts_buf: Vec<u32> = Vec::with_capacity(warp);
+
+        let mut lane_counts: Vec<u32> = Vec::with_capacity(warp);
+        for warp_start in (0..lanes).step_by(warp) {
+            let warp_end = (warp_start + warp).min(lanes);
+            lane_counts.clear();
+            lane_counts.extend(
+                (warp_start..warp_end).map(|l| work.assignment.lane_count(l, total)),
+            );
+            let max_steps = lane_counts.iter().copied().max().unwrap_or(0);
+            if max_steps == 0 {
+                continue;
+            }
+            let mut wsim = ksim.warp();
+            for step in 0..max_steps {
+                let mut active = 0u32;
+                let mut append_atomics = 0u64;
+                dsts_buf.clear();
+                for (i, lane) in (warp_start..warp_end).enumerate() {
+                    if lane_counts[i] <= step {
+                        continue;
+                    }
+                    active += 1;
+                    let pos = work.assignment.position(lane, step);
+                    let dst = graph.edge_dst(work.eid[pos]);
+                    let c = cand[pos];
+                    if c < self.dist[dst as usize] {
+                        self.dist[dst as usize] = c;
+                        dsts_buf.push(dst);
+                        result.updated.push(dst);
+                        self.metrics.updates += 1;
+                        let elements = match work.push {
+                            PushTarget::Node => 1,
+                            PushTarget::Edges => graph.degree(dst) as u64,
+                        };
+                        append_atomics += self.push_policy.append_atomics(elements);
+                        if let Some(m) = mirror {
+                            for child in m.children(dst) {
+                                // Mirror the parent's attribute onto the
+                                // child clone (§III-B): one extra atomic
+                                // per child, and the child re-enters the
+                                // worklist so its edges get reprocessed.
+                                if c < self.dist[child as usize] {
+                                    self.dist[child as usize] = c;
+                                    result.updated.push(child);
+                                    append_atomics +=
+                                        self.push_policy.append_atomics(1);
+                                    dsts_buf.push(child);
+                                }
+                            }
+                        }
+                    }
+                }
+                if active == 0 {
+                    continue;
+                }
+                wsim.step(active, work.access);
+                wsim.atomics(&mut dsts_buf);
+                wsim.append_atomics(append_atomics);
+                if work.extra_cycles_per_edge > 0 {
+                    wsim.extra(work.extra_cycles_per_edge * active as u64);
+                }
+            }
+            ksim.commit(wsim);
+        }
+
+        let t = ksim.finish();
+        self.metrics
+            .charge_processing(t, self.dev.launch_overhead);
+        Ok(result)
+    }
+
+    /// Charge an auxiliary (overhead) kernel touching `items` elements
+    /// coalesced with `per_item` extra ALU cycles — scan, `find_offsets`,
+    /// worklist condensing, split preprocessing.
+    pub fn charge_aux_kernel(&mut self, items: u64, per_item: u64) {
+        let dev = self.dev;
+        // items spread over the device: warps of 32, coalesced streaming
+        let warps = (items + dev.warp_size as u64 - 1) / dev.warp_size as u64;
+        let per_warp = dev.coalesced_tx + dev.alu_relax + per_item;
+        let parallel = dev.num_sm as u64 * dev.warp_throughput();
+        let busy = (warps * per_warp + parallel - 1) / parallel.max(1);
+        let t = crate::sim::KernelTime {
+            cycles: dev.launch_overhead + busy.max(if warps > 0 { per_warp } else { 0 }),
+            warps,
+            edge_steps: 0,
+            atomics: 0,
+            atomic_conflicts: 0,
+            mem_transactions: warps,
+        };
+        self.metrics.charge_aux(t);
+    }
+
+    /// Flat overhead cycles attributed to the device timeline (host-side
+    /// preprocessing such as histogramming or graph rebuilding).
+    pub fn charge_overhead(&mut self, cycles: u64) {
+        self.metrics.charge_overhead(cycles);
+    }
+
+    /// Snapshot peak memory into the metrics (call before reporting).
+    pub fn finalize_metrics(&mut self) {
+        self.metrics.peak_memory_bytes = self.mem.peak();
+    }
+}
+
+/// Flatten a node frontier into the parallel `(src, eid)` arrays every
+/// node-based kernel consumes: the concatenated adjacencies of the active
+/// nodes, in worklist order. Shared by BS, WD, NS and HP.
+pub fn flatten_frontier(g: &Csr, nodes: &[NodeId]) -> (Vec<NodeId>, Vec<u32>) {
+    let total: usize = nodes.iter().map(|&n| g.degree(n) as usize).sum();
+    let mut src = Vec::with_capacity(total);
+    let mut eid = Vec::with_capacity(total);
+    for &n in nodes {
+        let first = g.first_edge(n);
+        for e in first..first + g.degree(n) {
+            src.push(n);
+            eid.push(e);
+        }
+    }
+    (src, eid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::NativeRelaxer;
+    use crate::graph::Graph;
+    use crate::graph::Edge;
+    use crate::INF;
+
+    fn ctx<'d>(dev: &'d DeviceSpec) -> ExecCtx<'d> {
+        ExecCtx::new(dev, AlgoKind::Sssp, Box::new(NativeRelaxer))
+    }
+
+    fn diamond() -> Csr {
+        Csr::from_edges(
+            4,
+            &[
+                Edge::new(0, 1, 1),
+                Edge::new(0, 2, 4),
+                Edge::new(1, 3, 2),
+                Edge::new(2, 3, 1),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn blocked_assignment_positions() {
+        let a = Assignment::Blocked(vec![0, 2, 5]);
+        assert_eq!(a.lanes(), 2);
+        assert_eq!(a.lane_count(0, 5), 2);
+        assert_eq!(a.lane_count(1, 5), 3);
+        assert_eq!(a.position(1, 2), 4);
+    }
+
+    #[test]
+    fn strided_assignment_positions() {
+        let a = Assignment::Strided { num_threads: 4 };
+        assert_eq!(a.lanes(), 4);
+        // 10 items over 4 threads round robin: lane 0 gets 0,4,8 (3 items)
+        assert_eq!(a.lane_count(0, 10), 3);
+        assert_eq!(a.lane_count(2, 10), 2);
+        assert_eq!(a.position(1, 2), 9);
+    }
+
+    #[test]
+    fn strided_covers_all_positions_once() {
+        let a = Assignment::Strided { num_threads: 7 };
+        let total = 23;
+        let mut seen = vec![false; total];
+        for lane in 0..a.lanes() {
+            for s in 0..a.lane_count(lane, total) {
+                let p = a.position(lane, s);
+                assert!(!seen[p]);
+                seen[p] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn launch_relaxes_frontier() {
+        let g = diamond();
+        let dev = DeviceSpec::k20c();
+        let mut ex = ctx(&dev);
+        ex.dist = vec![INF; 4];
+        ex.dist[0] = 0;
+        let (src, eid) = flatten_frontier(&g, &[0]);
+        let work = KernelWork {
+            name: "test",
+            assignment: Assignment::Blocked(vec![0, src.len() as u32]),
+            src,
+            eid,
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let r = ex.launch(&g, &work, None).unwrap();
+        assert_eq!(ex.dist, vec![0, 1, 4, INF]);
+        assert_eq!(r.updated, vec![1, 2]);
+        assert!(ex.metrics.kernel_cycles > 0);
+        assert_eq!(ex.metrics.updates, 2);
+    }
+
+    #[test]
+    fn bfs_uses_unit_weights() {
+        let g = diamond();
+        let dev = DeviceSpec::k20c();
+        let mut ex = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        ex.dist = vec![INF; 4];
+        ex.dist[0] = 0;
+        let (src, eid) = flatten_frontier(&g, &[0]);
+        let n = src.len() as u32;
+        let work = KernelWork {
+            name: "test",
+            src,
+            eid,
+            assignment: Assignment::Blocked(vec![0, n]),
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        ex.launch(&g, &work, None).unwrap();
+        assert_eq!(ex.dist[1], 1);
+        assert_eq!(ex.dist[2], 1, "BFS must ignore the weight 4");
+    }
+
+    #[test]
+    fn mirror_propagates_to_children() {
+        // graph: 0 -> 1; node 1 has child 2 (clone)
+        let g = Csr::from_edges(3, &[Edge::new(0, 1, 5)]).unwrap();
+        let dev = DeviceSpec::k20c();
+        let mut ex = ctx(&dev);
+        ex.dist = vec![0, INF, INF];
+        let split = SplitMap::new(vec![(0, 0), (2, 3), (0, 0)]);
+        let work = KernelWork {
+            name: "test",
+            src: vec![0],
+            eid: vec![0],
+            assignment: Assignment::Blocked(vec![0, 1]),
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let r = ex.launch(&g, &work, Some(&split)).unwrap();
+        assert_eq!(ex.dist, vec![0, 5, 5]);
+        assert_eq!(r.updated, vec![1, 2]);
+    }
+
+    #[test]
+    fn stale_candidates_never_regress() {
+        // Two positions updating the same dst: the second, worse candidate
+        // must not overwrite the better one (min-fold with live dist).
+        let g = Csr::from_edges(3, &[Edge::new(0, 2, 1), Edge::new(1, 2, 9)]).unwrap();
+        let dev = DeviceSpec::k20c();
+        let mut ex = ctx(&dev);
+        ex.dist = vec![0, 0, INF];
+        let work = KernelWork {
+            name: "test",
+            src: vec![0, 1],
+            eid: vec![0, 1],
+            assignment: Assignment::Blocked(vec![0, 1, 2]),
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        ex.launch(&g, &work, None).unwrap();
+        assert_eq!(ex.dist[2], 1);
+    }
+
+    #[test]
+    fn aux_kernel_charges_overhead_only() {
+        let dev = DeviceSpec::k20c();
+        let mut ex = ctx(&dev);
+        ex.charge_aux_kernel(1000, 2);
+        assert_eq!(ex.metrics.kernel_cycles, 0);
+        assert!(ex.metrics.overhead_cycles >= dev.launch_overhead);
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator: the execution context strategies launch kernels
+//! through, and the runner that drives a full BFS/SSSP computation.
+//!
+//! This module is the paper's host-side code: the `while inputWl.size() > 0`
+//! loops of Figures 2 and 4 live in [`engine`], and the per-kernel SIMT
+//! interpretation + cycle accounting lives in [`exec`].
+
+pub mod engine;
+pub mod exec;
+
+pub use engine::{run, RunConfig, RunResult};
+pub use exec::{Assignment, ExecCtx, KernelWork, LaunchResult, PushTarget, SplitMap};

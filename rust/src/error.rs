@@ -1,0 +1,77 @@
+//! Error type shared across the crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the library.
+///
+/// `OutOfMemory` is a first-class citizen: the paper's evaluation hinges on
+/// strategies *failing to run* when their storage (COO arrays, exploded
+/// worklists) exceeds the device budget, so the simulator reports budget
+/// violations through this variant and the figure harness renders them as
+/// "OOM" cells, exactly like the paper's missing bars.
+#[derive(Debug)]
+pub enum Error {
+    /// Device memory budget exceeded: `(what, requested_bytes, budget_bytes)`.
+    OutOfMemory {
+        what: String,
+        requested: u64,
+        budget: u64,
+    },
+    /// Malformed graph input (parser or validation failure).
+    InvalidGraph(String),
+    /// Bad configuration value.
+    Config(String),
+    /// Underlying IO failure.
+    Io(std::io::Error),
+    /// XLA / PJRT runtime failure.
+    Xla(String),
+    /// An AOT artifact is missing (run `make artifacts`).
+    MissingArtifact(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::OutOfMemory {
+                what,
+                requested,
+                budget,
+            } => write!(
+                f,
+                "out of device memory: {what} needs {requested} B but budget is {budget} B"
+            ),
+            Error::InvalidGraph(m) => write!(f, "invalid graph: {m}"),
+            Error::Config(m) => write!(f, "bad config: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::MissingArtifact(p) => {
+                write!(f, "missing AOT artifact {p}; run `make artifacts`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// True when the error is a device-memory budget violation.
+    pub fn is_oom(&self) -> bool {
+        matches!(self, Error::OutOfMemory { .. })
+    }
+}

@@ -1,0 +1,540 @@
+//! Figure harness: regenerates every table and figure of the paper's
+//! evaluation section (the experiment index of DESIGN.md §5).
+//!
+//! Each `figN` function returns structured results *and* renders the
+//! paper-style rows to a writer, so the CLI, the criterion benches and the
+//! integration tests share one implementation.
+
+pub mod tradeoff;
+
+use crate::algorithms::AlgoKind;
+use crate::coordinator::{run, RunConfig, RunResult};
+use crate::error::Result;
+use crate::graph::generators::{paper_suite, suite::SuiteEntry, SuiteScale};
+use crate::graph::stats::{degree_frequency, DegreeStats};
+use crate::graph::{Csr, Graph};
+use crate::sim::DeviceSpec;
+use crate::strategies::node_split::split_graph;
+use crate::strategies::{mdt::auto_mdt, StrategyKind, StrategyParams};
+use crate::util::Json;
+use crate::worklist::chunking::PushPolicy;
+use std::io::Write;
+use std::sync::Arc;
+
+pub use tradeoff::{fig9, Fig9Row};
+
+/// Common options of the figure harness.
+#[derive(Debug, Clone)]
+pub struct FigureOpts {
+    /// Suite scale (small by default; `paper` for full Table II sizes).
+    pub scale: SuiteScale,
+    /// Generator seed.
+    pub seed: u64,
+    /// Enforce per-graph scaled memory budgets (reproduces the paper's OOM
+    /// cells).
+    pub enforce_budget: bool,
+    /// Device model.
+    pub device: DeviceSpec,
+}
+
+impl Default for FigureOpts {
+    fn default() -> Self {
+        FigureOpts {
+            scale: SuiteScale::Small,
+            seed: crate::graph::generators::suite::DEFAULT_SEED,
+            enforce_budget: true,
+            device: DeviceSpec::k20c(),
+        }
+    }
+}
+
+impl FigureOpts {
+    /// Per-graph device: budget scaled so reduced-size graphs face the
+    /// paper-equivalent memory pressure (DESIGN.md §6).
+    pub fn device_for(&self, entry: &SuiteEntry, g: &Csr) -> DeviceSpec {
+        self.device
+            .clone()
+            .scaled_budget(entry.paper_edges, g.num_edges() as u64)
+    }
+}
+
+/// One strategy's outcome on one graph.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Ok {
+        kernel_ms: f64,
+        overhead_ms: f64,
+        total_ms: f64,
+        mteps: f64,
+        peak_memory: u64,
+    },
+    /// The strategy could not run within the memory budget — rendered like
+    /// the paper's missing bars.
+    Oom,
+}
+
+impl Outcome {
+    /// Total time if the run succeeded.
+    pub fn total_ms(&self) -> Option<f64> {
+        match self {
+            Outcome::Ok { total_ms, .. } => Some(*total_ms),
+            Outcome::Oom => None,
+        }
+    }
+
+    /// Peak memory if the run succeeded.
+    pub fn peak_memory(&self) -> Option<u64> {
+        match self {
+            Outcome::Ok { peak_memory, .. } => Some(*peak_memory),
+            Outcome::Oom => None,
+        }
+    }
+
+    fn from_run(res: Result<RunResult>, dev: &DeviceSpec) -> Result<Outcome> {
+        match res {
+            Ok(r) => Ok(Outcome::Ok {
+                kernel_ms: r.metrics.kernel_ms(dev),
+                overhead_ms: r.metrics.overhead_ms(dev),
+                total_ms: r.metrics.total_ms(dev),
+                mteps: r.metrics.mteps(dev),
+                peak_memory: r.metrics.peak_memory_bytes,
+            }),
+            Err(e) if e.is_oom() => Ok(Outcome::Oom),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Results of Figure 7 (SSSP) or Figure 8 (BFS): per graph, per strategy.
+#[derive(Debug, Clone)]
+pub struct ComparisonFigure {
+    pub algo: AlgoKind,
+    pub rows: Vec<ComparisonRow>,
+}
+
+/// One graph's row.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub graph: String,
+    pub skew_class: String,
+    pub nodes: usize,
+    pub edges: usize,
+    pub outcomes: Vec<(StrategyKind, Outcome)>,
+}
+
+impl ComparisonRow {
+    /// Outcome of one strategy.
+    pub fn outcome(&self, k: StrategyKind) -> &Outcome {
+        &self
+            .outcomes
+            .iter()
+            .find(|(s, _)| *s == k)
+            .expect("all strategies present")
+            .1
+    }
+
+    /// `1 - t(k)/t(BS)` as a percentage, if both ran.
+    pub fn reduction_vs_bs(&self, k: StrategyKind) -> Option<f64> {
+        let bs = self.outcome(StrategyKind::BS).total_ms()?;
+        let t = self.outcome(k).total_ms()?;
+        Some(100.0 * (1.0 - t / bs))
+    }
+}
+
+/// Run the Figure 7/8 comparison: every strategy × every suite graph.
+pub fn comparison_figure(
+    algo: AlgoKind,
+    opts: &FigureOpts,
+    out: &mut impl Write,
+) -> Result<ComparisonFigure> {
+    let mut rows = Vec::new();
+    writeln!(
+        out,
+        "\n== Figure {} — {} execution time (ms, simulated K20c), kernel+overhead ==",
+        if algo == AlgoKind::Sssp { 7 } else { 8 },
+        algo.name().to_uppercase()
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:>10} {:>10}  {}",
+        "graph",
+        "nodes",
+        "edges",
+        StrategyKind::ALL
+            .iter()
+            .map(|k| format!("{:>16}", k.label()))
+            .collect::<String>()
+    )?;
+
+    for entry in paper_suite(opts.scale) {
+        let g = Arc::new(entry.spec.generate(opts.seed)?);
+        let dev = opts.device_for(&entry, &g);
+        // Source: the top hub — label permutation can make node 0
+        // isolated on Graph500 inputs (see traversal::hub_source).
+        let source = crate::graph::traversal::hub_source(&g);
+        let mut outcomes = Vec::new();
+        for k in StrategyKind::ALL {
+            let cfg = RunConfig {
+                algo,
+                strategy: k,
+                source,
+                device: dev.clone(),
+                enforce_budget: opts.enforce_budget,
+                ..Default::default()
+            };
+            let outcome = Outcome::from_run(run(&g, &cfg), &dev)?;
+            outcomes.push((k, outcome));
+        }
+        let cells: String = outcomes
+            .iter()
+            .map(|(_, o)| match o {
+                Outcome::Ok {
+                    kernel_ms,
+                    overhead_ms,
+                    ..
+                } => format!("{:>8.2}+{:<7.2}", kernel_ms, overhead_ms),
+                Outcome::Oom => format!("{:>16}", "OOM"),
+            })
+            .collect();
+        writeln!(
+            out,
+            "{:<12} {:>10} {:>10}  {}",
+            entry.name,
+            g.num_nodes(),
+            g.num_edges(),
+            cells
+        )?;
+        rows.push(ComparisonRow {
+            graph: entry.name.clone(),
+            skew_class: entry.spec.skew_class().to_string(),
+            nodes: g.num_nodes(),
+            edges: g.num_edges(),
+            outcomes,
+        });
+    }
+    Ok(ComparisonFigure { algo, rows })
+}
+
+/// Figure 7: SSSP strategy comparison.
+pub fn fig7(opts: &FigureOpts, out: &mut impl Write) -> Result<ComparisonFigure> {
+    comparison_figure(AlgoKind::Sssp, opts, out)
+}
+
+/// Figure 8: BFS strategy comparison.
+pub fn fig8(opts: &FigureOpts, out: &mut impl Write) -> Result<ComparisonFigure> {
+    comparison_figure(AlgoKind::Bfs, opts, out)
+}
+
+/// Table II row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub graph: String,
+    pub nodes: usize,
+    pub edges: usize,
+    pub max_deg: u32,
+    pub avg_deg: f64,
+    pub sigma: f64,
+}
+
+/// Table II: the graph suite with degree statistics.
+pub fn table2(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Table2Row>> {
+    writeln!(out, "\n== Table II — graphs used in the experiments ==")?;
+    writeln!(
+        out,
+        "{:<12} {:>10} {:>10} {:>8} {:>6} {:>10}",
+        "graph", "nodes", "edges", "maxdeg", "avg", "sigma"
+    )?;
+    let mut rows = Vec::new();
+    for entry in paper_suite(opts.scale) {
+        let g = entry.spec.generate(opts.seed)?;
+        let st = DegreeStats::of(&g);
+        writeln!(
+            out,
+            "{:<12} {:>10} {:>10} {:>8} {:>6.1} {:>10.2}",
+            entry.name,
+            g.num_nodes(),
+            g.num_edges(),
+            st.max,
+            st.avg,
+            st.stddev
+        )?;
+        rows.push(Table2Row {
+            graph: entry.name,
+            nodes: g.num_nodes(),
+            edges: g.num_edges(),
+            max_deg: st.max,
+            avg_deg: st.avg,
+            sigma: st.stddev,
+        });
+    }
+    Ok(rows)
+}
+
+/// Figure 1: degree distributions of a road network vs. a skewed graph.
+pub fn fig1(opts: &FigureOpts, out: &mut impl Write) -> Result<()> {
+    writeln!(out, "\n== Figure 1 — outdegree distributions ==")?;
+    for entry in paper_suite(opts.scale) {
+        let class = entry.spec.skew_class();
+        if class != "road" && class != "skewed" {
+            continue;
+        }
+        let g = entry.spec.generate(opts.seed)?;
+        let freq = degree_frequency(&g);
+        let st = DegreeStats::of(&g);
+        writeln!(
+            out,
+            "\n{} ({}): min={} max={} avg={:.1}",
+            entry.name, class, st.min, st.max, st.avg
+        )?;
+        // log-binned sparkline of the distribution
+        let mut shown = 0;
+        for (d, c) in &freq {
+            if shown >= 12 {
+                writeln!(out, "  ... ({} more degree values)", freq.len() - shown)?;
+                break;
+            }
+            let bar = "#".repeat(((*c as f64).log10().max(0.0) * 6.0) as usize + 1);
+            writeln!(out, "  deg {:>6}: {:>9} {}", d, c, bar)?;
+            shown += 1;
+        }
+        if class == "road" {
+            // paper: road networks have max degree ≤ 9
+            debug_assert!(st.max <= 9);
+        }
+    }
+    Ok(())
+}
+
+/// Figure 10 result for one graph: degree distribution before/after NS.
+#[derive(Debug, Clone)]
+pub struct Fig10Row {
+    pub graph: String,
+    pub mdt: u32,
+    pub max_before: u32,
+    pub max_after: u32,
+    pub sigma_before: f64,
+    pub sigma_after: f64,
+    pub split_nodes: u64,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+}
+
+/// Figure 10: degree distributions before/after node splitting + auto-MDT.
+pub fn fig10(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Fig10Row>> {
+    writeln!(
+        out,
+        "\n== Figure 10 — degree distribution before/after node splitting =="
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:>6} {:>10} {:>10} {:>9} {:>9} {:>8}",
+        "graph", "MDT", "max-before", "max-after", "σ-before", "σ-after", "splits"
+    )?;
+    let mut rows = Vec::new();
+    for entry in paper_suite(opts.scale) {
+        let g = entry.spec.generate(opts.seed)?;
+        let before = DegreeStats::of(&g);
+        let decision = auto_mdt(&g, 10);
+        let split = split_graph(&g, decision);
+        let after = DegreeStats::of(&split.graph);
+        writeln!(
+            out,
+            "{:<12} {:>6} {:>10} {:>10} {:>9.2} {:>9.2} {:>8}",
+            entry.name, decision.mdt, before.max, after.max, before.stddev, after.stddev,
+            split.split_nodes
+        )?;
+        rows.push(Fig10Row {
+            graph: entry.name,
+            mdt: decision.mdt,
+            max_before: before.max,
+            max_after: after.max,
+            sigma_before: before.stddev,
+            sigma_after: after.stddev,
+            split_nodes: split.split_nodes,
+            nodes_before: g.num_nodes(),
+            nodes_after: split.graph.num_nodes(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Figure 11 row: work-chunking speedup for one graph.
+#[derive(Debug, Clone)]
+pub struct Fig11Row {
+    pub graph: String,
+    pub chunked_ms: f64,
+    pub per_edge_ms: f64,
+    pub speedup: f64,
+}
+
+/// Figure 11: EP with work chunking vs. per-edge append atomics (SSSP, as
+/// in the paper's EP experiments).
+pub fn fig11(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Fig11Row>> {
+    writeln!(
+        out,
+        "\n== Figure 11 — work-chunking speedup in edge-based processing =="
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:>12} {:>12} {:>9}",
+        "graph", "chunked(ms)", "per-edge(ms)", "speedup"
+    )?;
+    let mut rows = Vec::new();
+    for entry in paper_suite(opts.scale) {
+        let g = Arc::new(entry.spec.generate(opts.seed)?);
+        // Chunking is an EP ablation: skip graphs EP cannot hold (paper
+        // measures chunking only where EP runs).
+        let dev = opts.device_for(&entry, &g);
+        let source = crate::graph::traversal::hub_source(&g);
+        let mut times = Vec::new();
+        let mut oom = false;
+        for policy in [PushPolicy::Chunked, PushPolicy::PerEdge] {
+            let cfg = RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: StrategyKind::EP,
+                push_policy: policy,
+                source,
+                device: dev.clone(),
+                enforce_budget: opts.enforce_budget,
+                ..Default::default()
+            };
+            match Outcome::from_run(run(&g, &cfg), &dev)? {
+                Outcome::Ok { total_ms, .. } => times.push(total_ms),
+                Outcome::Oom => {
+                    oom = true;
+                    break;
+                }
+            }
+        }
+        if oom {
+            writeln!(out, "{:<12} {:>12} {:>12} {:>9}", entry.name, "OOM", "OOM", "-")?;
+            continue;
+        }
+        let speedup = times[1] / times[0];
+        writeln!(
+            out,
+            "{:<12} {:>12.2} {:>12.2} {:>8.2}x",
+            entry.name, times[0], times[1], speedup
+        )?;
+        rows.push(Fig11Row {
+            graph: entry.name,
+            chunked_ms: times[0],
+            per_edge_ms: times[1],
+            speedup,
+        });
+    }
+    if !rows.is_empty() {
+        let avg = rows.iter().map(|r| r.speedup).sum::<f64>() / rows.len() as f64;
+        writeln!(out, "{:<12} {:>37.2}x  (paper: avg 1.82x)", "average", avg)?;
+    }
+    Ok(rows)
+}
+
+/// Default strategy params shared by the harness.
+pub fn default_params() -> StrategyParams {
+    StrategyParams::default()
+}
+
+impl Outcome {
+    /// JSON rendering for the CLI's `--json` output.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Outcome::Ok {
+                kernel_ms,
+                overhead_ms,
+                total_ms,
+                mteps,
+                peak_memory,
+            } => Json::obj(vec![
+                ("kernel_ms", (*kernel_ms).into()),
+                ("overhead_ms", (*overhead_ms).into()),
+                ("total_ms", (*total_ms).into()),
+                ("mteps", (*mteps).into()),
+                ("peak_memory", (*peak_memory).into()),
+            ]),
+            Outcome::Oom => Json::obj(vec![("oom", true.into())]),
+        }
+    }
+}
+
+impl ComparisonRow {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.as_str().into()),
+            ("skew_class", self.skew_class.as_str().into()),
+            ("nodes", self.nodes.into()),
+            ("edges", self.edges.into()),
+            (
+                "outcomes",
+                Json::Arr(
+                    self.outcomes
+                        .iter()
+                        .map(|(k, o)| {
+                            Json::obj(vec![
+                                ("strategy", k.label().into()),
+                                ("outcome", o.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl ComparisonFigure {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", self.algo.name().into()),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(ComparisonRow::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+impl Table2Row {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.as_str().into()),
+            ("nodes", self.nodes.into()),
+            ("edges", self.edges.into()),
+            ("max_deg", self.max_deg.into()),
+            ("avg_deg", self.avg_deg.into()),
+            ("sigma", self.sigma.into()),
+        ])
+    }
+}
+
+impl Fig10Row {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.as_str().into()),
+            ("mdt", self.mdt.into()),
+            ("max_before", self.max_before.into()),
+            ("max_after", self.max_after.into()),
+            ("sigma_before", self.sigma_before.into()),
+            ("sigma_after", self.sigma_after.into()),
+            ("split_nodes", self.split_nodes.into()),
+            ("nodes_before", self.nodes_before.into()),
+            ("nodes_after", self.nodes_after.into()),
+        ])
+    }
+}
+
+impl Fig11Row {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.as_str().into()),
+            ("chunked_ms", self.chunked_ms.into()),
+            ("per_edge_ms", self.per_edge_ms.into()),
+            ("speedup", self.speedup.into()),
+        ])
+    }
+}

@@ -1,0 +1,172 @@
+//! Figure 9: the three-axis trade-off ranking (execution time, memory
+//! requirement, implementation complexity).
+//!
+//! Time and memory ranks are *measured* (averaged over the Figure 7 + 8
+//! runs); implementation complexity is the paper's qualitative assessment
+//! (§IV-B): a strategy closer to the origin ranks better.
+
+use super::{ComparisonFigure, FigureOpts};
+use crate::error::Result;
+use crate::strategies::StrategyKind;
+use crate::util::Json;
+use std::collections::HashMap;
+use std::io::Write;
+
+/// One strategy's position on the three axes (1 = best).
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub strategy: StrategyKind,
+    pub time_rank: usize,
+    pub memory_rank: usize,
+    pub impl_rank: usize,
+    /// Mean total ms across graphs where the strategy ran.
+    pub mean_time_ms: f64,
+    /// Mean peak memory across graphs where the strategy ran.
+    pub mean_peak_mem: f64,
+    /// Graphs the strategy failed on (OOM) — worsens its memory rank.
+    pub ooms: usize,
+}
+
+/// The paper's qualitative implementation-complexity ordering (§IV-B,
+/// Table I): BS and EP are "simple to implement (static)", HP is moderate,
+/// WD needs offset machinery, NS rewrites the graph.
+pub fn impl_complexity_rank(k: StrategyKind) -> usize {
+    match k {
+        StrategyKind::BS => 1,
+        StrategyKind::EP => 2,
+        StrategyKind::HP => 3,
+        StrategyKind::WD => 4,
+        StrategyKind::NS => 5,
+    }
+}
+
+/// Build Figure 9 from the Figure 7 and Figure 8 results.
+pub fn fig9(
+    _opts: &FigureOpts,
+    sssp: &ComparisonFigure,
+    bfs: &ComparisonFigure,
+    out: &mut impl Write,
+) -> Result<Vec<Fig9Row>> {
+    let mut time_sum: HashMap<StrategyKind, (f64, usize)> = HashMap::new();
+    let mut mem_sum: HashMap<StrategyKind, (f64, usize)> = HashMap::new();
+    let mut ooms: HashMap<StrategyKind, usize> = HashMap::new();
+
+    // The execution-time axis follows the SSSP comparison: the paper ranks
+    // strategies by where load balancing matters ("load balancing becomes
+    // very essential for computationally-intensive graph applications",
+    // SVI), while BFS's overhead domination is reported separately.
+    // Memory and OOM accounting cover both figures.
+    for (fig, is_time_axis) in [(sssp, true), (bfs, false)] {
+        for row in &fig.rows {
+            // Normalize per graph against BS so large graphs don't dominate.
+            let bs_ms = row.outcome(StrategyKind::BS).total_ms().unwrap_or(1.0);
+            for (k, o) in &row.outcomes {
+                match (o.total_ms(), o.peak_memory()) {
+                    (Some(t), Some(m)) => {
+                        if is_time_axis {
+                            let e = time_sum.entry(*k).or_insert((0.0, 0));
+                            e.0 += t / bs_ms;
+                            e.1 += 1;
+                        }
+                        let e = mem_sum.entry(*k).or_insert((0.0, 0));
+                        e.0 += m as f64;
+                        e.1 += 1;
+                    }
+                    _ => *ooms.entry(*k).or_insert(0) += 1,
+                }
+            }
+        }
+    }
+
+    let mean =
+        |m: &HashMap<StrategyKind, (f64, usize)>, k: StrategyKind| -> f64 {
+            m.get(&k).map_or(f64::INFINITY, |(s, n)| {
+                if *n > 0 {
+                    s / *n as f64
+                } else {
+                    f64::INFINITY
+                }
+            })
+        };
+
+    // Rank by mean normalized time; memory rank additionally penalizes OOMs
+    // (a strategy that cannot fit is the worst memory citizen).
+    let rank_of = |scores: Vec<(StrategyKind, f64)>| -> HashMap<StrategyKind, usize> {
+        let mut sorted = scores;
+        sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        sorted
+            .into_iter()
+            .enumerate()
+            .map(|(i, (k, _))| (k, i + 1))
+            .collect()
+    };
+
+    let time_ranks = rank_of(
+        StrategyKind::ALL
+            .iter()
+            .map(|&k| (k, mean(&time_sum, k)))
+            .collect(),
+    );
+    let mem_ranks = rank_of(
+        StrategyKind::ALL
+            .iter()
+            .map(|&k| {
+                let oom_penalty = *ooms.get(&k).unwrap_or(&0) as f64 * 1e12;
+                (k, mean(&mem_sum, k) + oom_penalty)
+            })
+            .collect(),
+    );
+
+    writeln!(
+        out,
+        "\n== Figure 9 — strategy rankings (1 = closest to origin = best) =="
+    )?;
+    writeln!(
+        out,
+        "{:<4} {:>10} {:>12} {:>12} {:>14} {:>6}",
+        "", "time-rank", "memory-rank", "impl-rank", "mean-peak-MB", "OOMs"
+    )?;
+    let mut rows = Vec::new();
+    for k in StrategyKind::ALL {
+        let row = Fig9Row {
+            strategy: k,
+            time_rank: time_ranks[&k],
+            memory_rank: mem_ranks[&k],
+            impl_rank: impl_complexity_rank(k),
+            mean_time_ms: mean(&time_sum, k),
+            mean_peak_mem: mean(&mem_sum, k),
+            ooms: *ooms.get(&k).unwrap_or(&0),
+        };
+        writeln!(
+            out,
+            "{:<4} {:>10} {:>12} {:>12} {:>14.1} {:>6}",
+            k.label(),
+            row.time_rank,
+            row.memory_rank,
+            row.impl_rank,
+            row.mean_peak_mem / (1024.0 * 1024.0),
+            row.ooms
+        )?;
+        rows.push(row);
+    }
+    writeln!(
+        out,
+        "(paper: EP best on time+impl axes; BS easy+lean but slowest; no overall winner)"
+    )?;
+    Ok(rows)
+}
+
+impl Fig9Row {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", self.strategy.label().into()),
+            ("time_rank", self.time_rank.into()),
+            ("memory_rank", self.memory_rank.into()),
+            ("impl_rank", self.impl_rank.into()),
+            ("mean_time_ms", self.mean_time_ms.into()),
+            ("mean_peak_mem", self.mean_peak_mem.into()),
+            ("ooms", self.ooms.into()),
+        ])
+    }
+}

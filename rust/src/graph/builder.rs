@@ -1,0 +1,160 @@
+//! Incremental graph construction with de-duplication and weight policies.
+//!
+//! Generators and file loaders accumulate edges here; [`GraphBuilder::build`]
+//! produces a validated [`Csr`].
+
+use super::{Csr, Edge, NodeId};
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// What to do when the same `(src, dst)` pair is inserted twice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DuplicatePolicy {
+    /// Keep every parallel edge (multigraph). GTgraph's RMAT output keeps
+    /// duplicates; the Graph500 generator does too.
+    #[default]
+    Keep,
+    /// Keep the first weight seen for the pair.
+    First,
+    /// Keep the minimum weight (useful for shortest-path inputs).
+    MinWeight,
+}
+
+/// Accumulates edges and produces a CSR graph.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    num_nodes: usize,
+    edges: Vec<Edge>,
+    policy: DuplicatePolicy,
+    drop_self_loops: bool,
+    symmetric: bool,
+}
+
+impl GraphBuilder {
+    /// Builder over `num_nodes` nodes with default policies.
+    pub fn new(num_nodes: usize) -> Self {
+        GraphBuilder {
+            num_nodes,
+            ..Default::default()
+        }
+    }
+
+    /// Set duplicate-edge handling.
+    pub fn duplicates(mut self, policy: DuplicatePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Drop `u -> u` edges on insert.
+    pub fn drop_self_loops(mut self, yes: bool) -> Self {
+        self.drop_self_loops = yes;
+        self
+    }
+
+    /// Insert the reverse of every edge too (road networks are symmetric).
+    pub fn symmetric(mut self, yes: bool) -> Self {
+        self.symmetric = yes;
+        self
+    }
+
+    /// Number of edges accumulated so far (before dedup).
+    pub fn pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Grow the node count if needed to include `node`.
+    pub fn ensure_node(&mut self, node: NodeId) {
+        if node as usize >= self.num_nodes {
+            self.num_nodes = node as usize + 1;
+        }
+    }
+
+    /// Add one directed edge (and its reverse when symmetric).
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, wt: u32) {
+        self.ensure_node(src);
+        self.ensure_node(dst);
+        if self.drop_self_loops && src == dst {
+            return;
+        }
+        self.edges.push(Edge::new(src, dst, wt));
+        if self.symmetric && src != dst {
+            self.edges.push(Edge::new(dst, src, wt));
+        }
+    }
+
+    /// Finalize into CSR, applying the duplicate policy.
+    pub fn build(mut self) -> Result<Csr> {
+        match self.policy {
+            DuplicatePolicy::Keep => {}
+            DuplicatePolicy::First | DuplicatePolicy::MinWeight => {
+                let mut seen: HashMap<(NodeId, NodeId), u32> = HashMap::new();
+                for e in &self.edges {
+                    seen.entry((e.src, e.dst))
+                        .and_modify(|w| {
+                            if self.policy == DuplicatePolicy::MinWeight {
+                                *w = (*w).min(e.wt);
+                            }
+                        })
+                        .or_insert(e.wt);
+                }
+                self.edges = seen
+                    .into_iter()
+                    .map(|((s, d), w)| Edge::new(s, d, w))
+                    .collect();
+            }
+        }
+        Csr::from_edges(self.num_nodes, &self.edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn keeps_parallel_edges_by_default() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 5);
+        b.add_edge(0, 1, 7);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn min_weight_policy_dedups() {
+        let mut b = GraphBuilder::new(2).duplicates(DuplicatePolicy::MinWeight);
+        b.add_edge(0, 1, 5);
+        b.add_edge(0, 1, 7);
+        b.add_edge(0, 1, 3);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.edge_weights(0), &[3]);
+    }
+
+    #[test]
+    fn symmetric_inserts_reverse() {
+        let mut b = GraphBuilder::new(2).symmetric(true);
+        b.add_edge(0, 1, 2);
+        let g = b.build().unwrap();
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn self_loops_dropped_when_requested() {
+        let mut b = GraphBuilder::new(2).drop_self_loops(true);
+        b.add_edge(0, 0, 1);
+        b.add_edge(0, 1, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn node_count_grows_on_demand() {
+        let mut b = GraphBuilder::new(0);
+        b.add_edge(3, 7, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_nodes(), 8);
+    }
+}

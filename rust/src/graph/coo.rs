@@ -1,0 +1,147 @@
+//! Coordinate-list storage — the less-normalized format required by
+//! edge-based task distribution (EP).
+
+use super::{Csr, Edge, Graph, NodeId};
+use crate::error::{Error, Result};
+
+/// COO graph: a sequence of `⟨src, dst, wt⟩` tuples stored as three parallel
+/// arrays. Source endpoints are duplicated across the outgoing edges of a
+/// node, which is what lets a thread own an edge without consulting row
+/// offsets — and what doubles the storage versus CSR (§II-B).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Coo {
+    num_nodes: usize,
+    src: Vec<NodeId>,
+    dst: Vec<NodeId>,
+    wt: Vec<u32>,
+}
+
+impl Coo {
+    /// Build from raw parallel arrays.
+    pub fn from_raw(num_nodes: usize, src: Vec<NodeId>, dst: Vec<NodeId>, wt: Vec<u32>) -> Result<Self> {
+        if src.len() != dst.len() || src.len() != wt.len() {
+            return Err(Error::InvalidGraph("COO arrays must be equal length".into()));
+        }
+        if let Some(&bad) = src.iter().chain(dst.iter()).find(|&&v| v as usize >= num_nodes) {
+            return Err(Error::InvalidGraph(format!(
+                "endpoint {bad} out of range (n = {num_nodes})"
+            )));
+        }
+        Ok(Coo {
+            num_nodes,
+            src,
+            dst,
+            wt,
+        })
+    }
+
+    /// Build from an edge list.
+    pub fn from_edges(num_nodes: usize, edges: &[Edge]) -> Result<Self> {
+        Coo::from_raw(
+            num_nodes,
+            edges.iter().map(|e| e.src).collect(),
+            edges.iter().map(|e| e.dst).collect(),
+            edges.iter().map(|e| e.wt).collect(),
+        )
+    }
+
+    /// The edge stored at index `i`.
+    #[inline]
+    pub fn edge(&self, i: usize) -> Edge {
+        Edge::new(self.src[i], self.dst[i], self.wt[i])
+    }
+
+    /// Source endpoints array.
+    pub fn srcs(&self) -> &[NodeId] {
+        &self.src
+    }
+
+    /// Destination endpoints array.
+    pub fn dsts(&self) -> &[NodeId] {
+        &self.dst
+    }
+
+    /// Weight array.
+    pub fn wts(&self) -> &[u32] {
+        &self.wt
+    }
+
+    /// Iterate over edges in storage order.
+    pub fn edges(&self) -> impl Iterator<Item = Edge> + '_ {
+        (0..self.src.len()).map(move |i| self.edge(i))
+    }
+
+    /// Normalize back to CSR (counting sort by source).
+    pub fn to_csr(&self) -> Csr {
+        let edges: Vec<Edge> = self.edges().collect();
+        Csr::from_edges(self.num_nodes, &edges).expect("valid COO converts to CSR")
+    }
+}
+
+impl Graph for Coo {
+    fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// `2E` endpoints + `E` weights, 4 B each — the paper's "2E elements"
+    /// accounting plus weights for SSSP (§II-B).
+    fn memory_bytes(&self) -> u64 {
+        4 * 3 * self.src.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_csr_coo_csr() {
+        let edges = vec![
+            Edge::new(0, 1, 3),
+            Edge::new(1, 2, 1),
+            Edge::new(2, 0, 7),
+            Edge::new(0, 2, 2),
+        ];
+        let csr = Csr::from_edges(3, &edges).unwrap();
+        let coo = csr.to_coo();
+        let back = coo.to_csr();
+        assert_eq!(csr, back);
+    }
+
+    #[test]
+    fn coo_memory_is_about_three_e() {
+        let coo = Coo::from_edges(3, &[Edge::new(0, 1, 1), Edge::new(1, 2, 1)]).unwrap();
+        assert_eq!(coo.memory_bytes(), 4 * 3 * 2);
+    }
+
+    #[test]
+    fn coo_uses_more_memory_than_csr_for_dense_graphs() {
+        // Average degree > 1 makes COO strictly bigger — the paper's EP
+        // memory argument.
+        let mut edges = Vec::new();
+        for u in 0..16u32 {
+            for v in 0..16u32 {
+                if u != v {
+                    edges.push(Edge::new(u, v, 1));
+                }
+            }
+        }
+        let csr = Csr::from_edges(16, &edges).unwrap();
+        let coo = Coo::from_edges(16, &edges).unwrap();
+        assert!(coo.memory_bytes() > csr.memory_bytes());
+    }
+
+    #[test]
+    fn rejects_mismatched_arrays() {
+        assert!(Coo::from_raw(2, vec![0], vec![1, 0], vec![1]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_endpoint() {
+        assert!(Coo::from_raw(2, vec![0], vec![9], vec![1]).is_err());
+    }
+}

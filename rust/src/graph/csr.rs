@@ -1,0 +1,280 @@
+//! Compressed sparse row storage — the space-efficient format used by all
+//! node-based strategies (BS, WD, NS, HP).
+
+use super::{Coo, Edge, Graph, NodeId};
+use crate::error::{Error, Result};
+
+/// CSR graph: adjacencies of each node concatenated into one monolithic
+/// list, with per-node start offsets (§I of the paper).
+///
+/// Weights are always materialized; BFS simply ignores them (LonestarGPU
+/// style, where BFS is level computation over unit weights).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    /// `num_nodes + 1` offsets into `col_idx`/`weights`.
+    row_offsets: Vec<u32>,
+    /// Destination node of each edge, grouped by source.
+    col_idx: Vec<NodeId>,
+    /// Weight of each edge (parallel to `col_idx`).
+    weights: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from raw arrays, validating the CSR invariants.
+    pub fn from_raw(row_offsets: Vec<u32>, col_idx: Vec<NodeId>, weights: Vec<u32>) -> Result<Self> {
+        if row_offsets.is_empty() {
+            return Err(Error::InvalidGraph("row_offsets must have >= 1 entry".into()));
+        }
+        if *row_offsets.last().unwrap() as usize != col_idx.len() {
+            return Err(Error::InvalidGraph(format!(
+                "last row offset {} != edge count {}",
+                row_offsets.last().unwrap(),
+                col_idx.len()
+            )));
+        }
+        if col_idx.len() != weights.len() {
+            return Err(Error::InvalidGraph("weights length != edge count".into()));
+        }
+        if row_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err(Error::InvalidGraph("row offsets not monotonic".into()));
+        }
+        let n = (row_offsets.len() - 1) as u32;
+        if let Some(&bad) = col_idx.iter().find(|&&d| d >= n) {
+            return Err(Error::InvalidGraph(format!(
+                "edge destination {bad} out of range (n = {n})"
+            )));
+        }
+        Ok(Csr {
+            row_offsets,
+            col_idx,
+            weights,
+        })
+    }
+
+    /// Build from an unsorted edge list using counting sort (O(N + E)).
+    pub fn from_edges(num_nodes: usize, edges: &[Edge]) -> Result<Self> {
+        for e in edges {
+            if e.src as usize >= num_nodes || e.dst as usize >= num_nodes {
+                return Err(Error::InvalidGraph(format!(
+                    "edge ({}, {}) out of range (n = {num_nodes})",
+                    e.src, e.dst
+                )));
+            }
+        }
+        let mut counts = vec![0u32; num_nodes + 1];
+        for e in edges {
+            counts[e.src as usize + 1] += 1;
+        }
+        for i in 0..num_nodes {
+            counts[i + 1] += counts[i];
+        }
+        let row_offsets = counts.clone();
+        let mut col_idx = vec![0u32; edges.len()];
+        let mut weights = vec![0u32; edges.len()];
+        let mut cursor = row_offsets.clone();
+        for e in edges {
+            let slot = cursor[e.src as usize] as usize;
+            col_idx[slot] = e.dst;
+            weights[slot] = e.wt;
+            cursor[e.src as usize] += 1;
+        }
+        Ok(Csr {
+            row_offsets,
+            col_idx,
+            weights,
+        })
+    }
+
+    /// Out-degree of `node`.
+    #[inline]
+    pub fn degree(&self, node: NodeId) -> u32 {
+        self.row_offsets[node as usize + 1] - self.row_offsets[node as usize]
+    }
+
+    /// Index of `node`'s first edge in the monolithic adjacency list.
+    #[inline]
+    pub fn first_edge(&self, node: NodeId) -> u32 {
+        self.row_offsets[node as usize]
+    }
+
+    /// Neighbors (destinations) of `node`.
+    #[inline]
+    pub fn neighbors(&self, node: NodeId) -> &[NodeId] {
+        let s = self.row_offsets[node as usize] as usize;
+        let e = self.row_offsets[node as usize + 1] as usize;
+        &self.col_idx[s..e]
+    }
+
+    /// Edge weights of `node`'s outgoing edges (parallel to [`neighbors`]).
+    ///
+    /// [`neighbors`]: Csr::neighbors
+    #[inline]
+    pub fn edge_weights(&self, node: NodeId) -> &[u32] {
+        let s = self.row_offsets[node as usize] as usize;
+        let e = self.row_offsets[node as usize + 1] as usize;
+        &self.weights[s..e]
+    }
+
+    /// Destination of the edge with monolithic index `eid`.
+    #[inline]
+    pub fn edge_dst(&self, eid: u32) -> NodeId {
+        self.col_idx[eid as usize]
+    }
+
+    /// Weight of the edge with monolithic index `eid`.
+    #[inline]
+    pub fn edge_wt(&self, eid: u32) -> u32 {
+        self.weights[eid as usize]
+    }
+
+    /// Raw row-offset array (length `num_nodes + 1`).
+    pub fn row_offsets(&self) -> &[u32] {
+        &self.row_offsets
+    }
+
+    /// Raw destination array (length `num_edges`).
+    pub fn col_indices(&self) -> &[NodeId] {
+        &self.col_idx
+    }
+
+    /// Raw weight array (length `num_edges`).
+    pub fn weights(&self) -> &[u32] {
+        &self.weights
+    }
+
+    /// Iterate over all edges in monolithic order.
+    pub fn edges(&self) -> impl Iterator<Item = Edge> + '_ {
+        (0..self.num_nodes() as u32).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .zip(self.edge_weights(u))
+                .map(move |(&v, &w)| Edge::new(u, v, w))
+        })
+    }
+
+    /// Convert to COO, duplicating source endpoints (the memory cost the
+    /// paper charges EP for — §II-B).
+    pub fn to_coo(&self) -> Coo {
+        let m = self.num_edges();
+        let mut src = Vec::with_capacity(m);
+        let mut dst = Vec::with_capacity(m);
+        let mut wt = Vec::with_capacity(m);
+        for e in self.edges() {
+            src.push(e.src);
+            dst.push(e.dst);
+            wt.push(e.wt);
+        }
+        Coo::from_raw(self.num_nodes(), src, dst, wt).expect("CSR produces valid COO")
+    }
+
+    /// Maximum out-degree (0 for an empty graph).
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_nodes() as u32)
+            .map(|u| self.degree(u))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl Graph for Csr {
+    fn num_nodes(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+
+    fn num_edges(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// `N+1` offsets + `E` destinations + `E` weights, 4 B each.
+    fn memory_bytes(&self) -> u64 {
+        4 * (self.row_offsets.len() as u64 + 2 * self.col_idx.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0 -> 1 (w1), 0 -> 2 (w4), 1 -> 3 (w2), 2 -> 3 (w1)
+        Csr::from_edges(
+            4,
+            &[
+                Edge::new(0, 1, 1),
+                Edge::new(0, 2, 4),
+                Edge::new(1, 3, 2),
+                Edge::new(2, 3, 1),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_edges_builds_expected_offsets() {
+        let g = diamond();
+        assert_eq!(g.row_offsets(), &[0, 2, 3, 4, 4]);
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn neighbors_and_weights_align() {
+        let g = diamond();
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.edge_weights(0), &[1, 4]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+    }
+
+    #[test]
+    fn degree_matches_offsets() {
+        let g = diamond();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.degree(3), 0);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn edges_iterator_roundtrips() {
+        let g = diamond();
+        let edges: Vec<Edge> = g.edges().collect();
+        let g2 = Csr::from_edges(4, &edges).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn coo_conversion_preserves_edges() {
+        let g = diamond();
+        let coo = g.to_coo();
+        assert_eq!(coo.num_edges(), 4);
+        assert_eq!(coo.edge(0), Edge::new(0, 1, 1));
+        assert_eq!(coo.edge(3), Edge::new(2, 3, 1));
+    }
+
+    #[test]
+    fn memory_accounting_matches_paper_formula() {
+        let g = diamond();
+        // (N+1 + 2E) * 4 bytes
+        assert_eq!(g.memory_bytes(), 4 * (5 + 8));
+    }
+
+    #[test]
+    fn rejects_nonmonotonic_offsets() {
+        let r = Csr::from_raw(vec![0, 3, 2, 4], vec![0, 1, 2, 0], vec![1; 4]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_destination() {
+        let r = Csr::from_edges(2, &[Edge::new(0, 5, 1)]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_graph_is_valid() {
+        let g = Csr::from_edges(0, &[]).unwrap();
+        assert_eq!(g.num_nodes(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

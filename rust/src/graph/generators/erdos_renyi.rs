@@ -1,0 +1,69 @@
+//! Erdős–Rényi `G(n, m)` generator — the paper's `ER20` / `ER23` inputs
+//! (uniform random edges; moderate max degree, no small-world structure).
+
+use super::draw_weight;
+use crate::error::Result;
+use crate::graph::{Csr, Edge};
+use crate::util::Rng;
+
+/// Generate a `G(n, m)` random directed graph: `num_edges` edges drawn
+/// uniformly over all ordered pairs (self loops excluded, parallels kept —
+/// GTgraph's random-graph model).
+pub fn erdos_renyi(num_nodes: usize, num_edges: usize, max_wt: u32, seed: u64) -> Result<Csr> {
+    assert!(num_nodes >= 2, "ER graph needs >= 2 nodes");
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = num_nodes as u32;
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        let u = rng.gen_range_u32(0, n);
+        let mut v = rng.gen_range_u32(0, n - 1);
+        if v >= u {
+            v += 1; // skip self loop without rejection sampling
+        }
+        let wt = draw_weight(&mut rng, max_wt);
+        edges.push(Edge::new(u, v, wt));
+    }
+    Csr::from_edges(num_nodes, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::DegreeStats;
+    use crate::graph::Graph;
+
+    #[test]
+    fn counts_match() {
+        let g = erdos_renyi(1000, 4000, 100, 11).unwrap();
+        assert_eq!(g.num_nodes(), 1000);
+        assert_eq!(g.num_edges(), 4000);
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let g = erdos_renyi(100, 1000, 10, 5).unwrap();
+        assert!(g.edges().all(|e| e.src != e.dst));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            erdos_renyi(64, 256, 10, 3).unwrap(),
+            erdos_renyi(64, 256, 10, 3).unwrap()
+        );
+    }
+
+    #[test]
+    fn degree_distribution_is_mild() {
+        // Table II: ER graphs have small max degree relative to RMAT —
+        // Poisson-ish tails, max ≈ avg + a few sigma.
+        let g = erdos_renyi(1 << 14, 4 << 14, 100, 9).unwrap();
+        let st = DegreeStats::of(&g);
+        assert!(
+            (st.max as f64) < 8.0 * st.avg.max(1.0),
+            "ER max degree {} too skewed vs avg {}",
+            st.max,
+            st.avg
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! The paper's experimental graph suite (Table II) with a scale knob.
+//!
+//! `SuiteScale::Paper` regenerates the Table II sizes exactly (tens to
+//! hundreds of millions of edges — minutes of generation, gigabytes of
+//! RAM); `SuiteScale::Small` keeps the same generative models, degree-skew
+//! classes and edge factors at CI-friendly sizes; `SuiteScale::Tiny` is for
+//! unit tests. Relative strategy behaviour (who wins where) is preserved
+//! because it depends on skew class and diameter class, not absolute size —
+//! the device memory budget scales along with the graphs (see
+//! [`crate::sim::DeviceSpec::scaled_budget`]).
+
+use crate::error::Result;
+use crate::graph::generators::{erdos_renyi, graph500_kronecker, rmat, road_grid, RmatParams};
+use crate::graph::Csr;
+
+/// How large to instantiate the paper suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SuiteScale {
+    /// Unit-test sizes (thousands of edges).
+    Tiny,
+    /// CI-friendly sizes (hundreds of thousands of edges) — default.
+    #[default]
+    Small,
+    /// The paper's Table II sizes.
+    Paper,
+}
+
+/// A named graph recipe from Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphSpec {
+    /// RMAT (GTgraph defaults): `rmat20` in the paper.
+    Rmat { scale: u32, edge_factor: usize },
+    /// Erdős–Rényi `G(n, m)`: `ER20`, `ER23`.
+    ErdosRenyi { scale: u32, edge_factor: usize },
+    /// Road grid: `road-FLA`, `road-W`, `road-USA`.
+    Road { rows: usize, cols: usize },
+    /// Graph500 Kronecker (three seeds in the paper).
+    Graph500 { scale: u32, seed_offset: u64 },
+}
+
+impl GraphSpec {
+    /// Instantiate the recipe deterministically.
+    pub fn generate(&self, seed: u64) -> Result<Csr> {
+        match *self {
+            GraphSpec::Rmat { scale, edge_factor } => rmat(
+                scale,
+                edge_factor << scale,
+                RmatParams::default(),
+                seed,
+            ),
+            GraphSpec::ErdosRenyi { scale, edge_factor } => {
+                erdos_renyi(1 << scale, edge_factor << scale, 100, seed)
+            }
+            GraphSpec::Road { rows, cols } => road_grid(rows, cols, 100, seed),
+            GraphSpec::Graph500 { scale, seed_offset } => {
+                graph500_kronecker(scale, seed + seed_offset)
+            }
+        }
+    }
+
+    /// Skew class for reporting ("skewed", "uniform", "road").
+    pub fn skew_class(&self) -> &'static str {
+        match self {
+            GraphSpec::Rmat { .. } | GraphSpec::Graph500 { .. } => "skewed",
+            GraphSpec::ErdosRenyi { .. } => "uniform",
+            GraphSpec::Road { .. } => "road",
+        }
+    }
+}
+
+/// One (name, recipe) entry of the experiment suite.
+#[derive(Debug, Clone)]
+pub struct SuiteEntry {
+    pub name: String,
+    pub spec: GraphSpec,
+    /// Edge count of the paper's Table II counterpart — used to scale the
+    /// simulated device memory budget proportionally when running reduced
+    /// sizes (DESIGN.md §6), so EP/WD/NS hit the same memory wall the paper
+    /// reports.
+    pub paper_edges: u64,
+}
+
+/// The Table II suite at the requested scale, in the paper's row order:
+/// rmat, road-FLA, road-W, road-USA, ER20, ER23, Graph500 × 3.
+pub fn paper_suite(scale: SuiteScale) -> Vec<SuiteEntry> {
+    const M: u64 = 1_000_000;
+    let e = |name: &str, spec: GraphSpec, paper_edges: u64| SuiteEntry {
+        name: name.to_string(),
+        spec,
+        paper_edges,
+    };
+    match scale {
+        SuiteScale::Paper => vec![
+            e("rmat20", GraphSpec::Rmat { scale: 20, edge_factor: 8 }, 8_260_000),
+            e("road-FLA", GraphSpec::Road { rows: 1035, cols: 1035 }, 2_710_000),
+            e("road-W", GraphSpec::Road { rows: 2502, cols: 2502 }, 15_120_000),
+            e("road-USA", GraphSpec::Road { rows: 4895, cols: 4895 }, 57_710_000),
+            e("ER20", GraphSpec::ErdosRenyi { scale: 20, edge_factor: 4 }, 4_190_000),
+            e("ER23", GraphSpec::ErdosRenyi { scale: 23, edge_factor: 4 }, 33_550_000),
+            e("Graph500-a", GraphSpec::Graph500 { scale: 24, seed_offset: 0 }, 335 * M),
+            e("Graph500-b", GraphSpec::Graph500 { scale: 24, seed_offset: 1 }, 335 * M),
+            e("Graph500-c", GraphSpec::Graph500 { scale: 24, seed_offset: 2 }, 335 * M),
+        ],
+        SuiteScale::Small => vec![
+            e("rmat16", GraphSpec::Rmat { scale: 16, edge_factor: 8 }, 8_260_000),
+            e("road-FLA", GraphSpec::Road { rows: 128, cols: 128 }, 2_710_000),
+            e("road-W", GraphSpec::Road { rows: 256, cols: 256 }, 15_120_000),
+            e("road-USA", GraphSpec::Road { rows: 512, cols: 512 }, 57_710_000),
+            e("ER16", GraphSpec::ErdosRenyi { scale: 16, edge_factor: 4 }, 4_190_000),
+            e("ER18", GraphSpec::ErdosRenyi { scale: 18, edge_factor: 4 }, 33_550_000),
+            e("Graph500-a", GraphSpec::Graph500 { scale: 16, seed_offset: 0 }, 335 * M),
+            e("Graph500-b", GraphSpec::Graph500 { scale: 16, seed_offset: 1 }, 335 * M),
+            e("Graph500-c", GraphSpec::Graph500 { scale: 16, seed_offset: 2 }, 335 * M),
+        ],
+        SuiteScale::Tiny => vec![
+            e("rmat10", GraphSpec::Rmat { scale: 10, edge_factor: 8 }, 8_260_000),
+            e("road-tiny", GraphSpec::Road { rows: 24, cols: 24 }, 2_710_000),
+            e("ER10", GraphSpec::ErdosRenyi { scale: 10, edge_factor: 4 }, 4_190_000),
+            e("Graph500-t", GraphSpec::Graph500 { scale: 10, seed_offset: 0 }, 335 * M),
+        ],
+    }
+}
+
+/// Default seed used by the CLI and benches.
+pub const DEFAULT_SEED: u64 = 20170101;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::DegreeStats;
+    use crate::graph::Graph;
+
+    #[test]
+    fn tiny_suite_generates() {
+        for entry in paper_suite(SuiteScale::Tiny) {
+            let g = entry.spec.generate(DEFAULT_SEED).unwrap();
+            assert!(g.num_nodes() > 0, "{} empty", entry.name);
+            assert!(g.num_edges() > 0, "{} no edges", entry.name);
+        }
+    }
+
+    #[test]
+    fn skew_classes_hold_at_tiny_scale() {
+        for entry in paper_suite(SuiteScale::Tiny) {
+            let g = entry.spec.generate(DEFAULT_SEED).unwrap();
+            let st = DegreeStats::of(&g);
+            match entry.spec.skew_class() {
+                "skewed" => assert!(
+                    st.stddev > st.avg,
+                    "{}: sigma {} <= avg {}",
+                    entry.name,
+                    st.stddev,
+                    st.avg
+                ),
+                "road" => assert!(st.max <= 8, "{}: max {}", entry.name, st.max),
+                _ => assert!(st.max < 10 * (st.avg.ceil() as u32 + 1)),
+            }
+        }
+    }
+
+    #[test]
+    fn suite_names_are_unique() {
+        let suite = paper_suite(SuiteScale::Small);
+        let mut names: Vec<&str> = suite.iter().map(|e| e.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), suite.len());
+    }
+}

@@ -1,0 +1,121 @@
+//! Compact binary CSR snapshots for fast reload of large generated graphs.
+//!
+//! Layout (little-endian):
+//! `magic "LLBG" | version u32 | num_nodes u64 | num_edges u64 |
+//!  row_offsets [u32; n+1] | col_idx [u32; m] | weights [u32; m]`
+
+use crate::error::{Error, Result};
+use crate::graph::{Csr, Graph};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LLBG";
+const VERSION: u32 = 1;
+
+/// Write a binary CSR snapshot.
+pub fn write_csr<P: AsRef<Path>>(g: &Csr, path: P) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    write_u32s(&mut w, g.row_offsets())?;
+    write_u32s(&mut w, g.col_indices())?;
+    write_u32s(&mut w, g.weights())?;
+    Ok(())
+}
+
+/// Read a binary CSR snapshot.
+pub fn read_csr<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let f = File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::InvalidGraph("bad magic (not a LLBG file)".into()));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(Error::InvalidGraph(format!(
+            "unsupported snapshot version {version}"
+        )));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let row_offsets = read_u32s(&mut r, n + 1)?;
+    let col_idx = read_u32s(&mut r, m)?;
+    let weights = read_u32s(&mut r, m)?;
+    Csr::from_raw(row_offsets, col_idx, weights)
+}
+
+fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
+    // bulk little-endian write
+    for chunk in xs.chunks(4096) {
+        let mut buf = Vec::with_capacity(chunk.len() * 4);
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32s(r: &mut impl Read, count: usize) -> Result<Vec<u32>> {
+    let mut buf = vec![0u8; count * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let g = crate::graph::generators::rmat(
+            8,
+            2048,
+            crate::graph::generators::RmatParams::default(),
+            9,
+        )
+        .unwrap();
+        let f = crate::util::tmp::TempPath::file(".bin");
+        write_csr(&g, f.path()).unwrap();
+        let g2 = read_csr(f.path()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let f = crate::util::tmp::TempPath::file(".bin");
+        std::fs::write(f.path(), b"NOPE....").unwrap();
+        assert!(read_csr(f.path()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let g = crate::graph::generators::erdos_renyi(16, 64, 5, 1).unwrap();
+        let f = crate::util::tmp::TempPath::file(".bin");
+        write_csr(&g, f.path()).unwrap();
+        let bytes = std::fs::read(f.path()).unwrap();
+        std::fs::write(f.path(), &bytes[..bytes.len() / 2]).unwrap();
+        assert!(read_csr(f.path()).is_err());
+    }
+}

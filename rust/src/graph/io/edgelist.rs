@@ -1,0 +1,83 @@
+//! Whitespace-separated edge lists: `src dst [weight]` per line, `#`
+//! comments, 0-based ids (SNAP-style). Missing weights default to 1.
+
+use crate::error::{Error, Result};
+use crate::graph::{Csr, Graph, GraphBuilder};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read an edge list file.
+pub fn read_edgelist<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let f = File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut b = GraphBuilder::new(0);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let src: u32 = parse(it.next(), lineno)?;
+        let dst: u32 = parse(it.next(), lineno)?;
+        let wt: u32 = match it.next() {
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::InvalidGraph(format!("line {}: bad weight", lineno + 1)))?,
+            None => 1,
+        };
+        b.add_edge(src, dst, wt);
+    }
+    b.build()
+}
+
+/// Write an edge list file (always includes weights).
+pub fn write_edgelist<P: AsRef<Path>>(g: &Csr, path: P) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
+    for e in g.edges() {
+        writeln!(w, "{} {} {}", e.src, e.dst, e.wt)?;
+    }
+    Ok(())
+}
+
+fn parse(field: Option<&str>, lineno: usize) -> Result<u32> {
+    field
+        .ok_or_else(|| Error::InvalidGraph(format!("line {}: missing field", lineno + 1)))?
+        .parse()
+        .map_err(|_| Error::InvalidGraph(format!("line {}: bad node id", lineno + 1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempPath;
+
+    #[test]
+    fn parses_with_and_without_weights() {
+        let f = TempPath::file(".el");
+        std::fs::write(f.path(), b"# comment\n0 1 9\n1 2\n").unwrap();
+        let g = read_edgelist(f.path()).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.edge_weights(0), &[9]);
+        assert_eq!(g.edge_weights(1), &[1]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = crate::graph::generators::erdos_renyi(32, 128, 10, 4).unwrap();
+        let f = TempPath::file(".el");
+        write_edgelist(&g, f.path()).unwrap();
+        let g2 = read_edgelist(f.path()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let f = TempPath::file(".el");
+        std::fs::write(f.path(), b"0 not_a_number\n").unwrap();
+        assert!(read_edgelist(f.path()).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Graph file formats: DIMACS `.gr` (the 9th-DIMACS road-network format the
+//! paper's real inputs ship in), whitespace edge lists, and a compact
+//! binary CSR snapshot for fast reloads.
+
+pub mod binary;
+pub mod dimacs;
+pub mod edgelist;
+
+use crate::error::{Error, Result};
+use crate::graph::Csr;
+use std::path::Path;
+
+/// Load a graph, dispatching on extension: `.gr` → DIMACS, `.bin` →
+/// binary CSR, anything else → edge list.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let p = path.as_ref();
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("gr") => dimacs::read_gr(p),
+        Some("bin") => binary::read_csr(p),
+        Some(_) | None => edgelist::read_edgelist(p),
+    }
+}
+
+/// Save a graph, dispatching on extension like [`load`].
+pub fn save<P: AsRef<Path>>(g: &Csr, path: P) -> Result<()> {
+    let p = path.as_ref();
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("gr") => dimacs::write_gr(g, p),
+        Some("bin") => binary::write_csr(g, p),
+        Some("txt") | Some("el") => edgelist::write_edgelist(g, p),
+        other => Err(Error::Config(format!(
+            "don't know how to write extension {other:?}"
+        ))),
+    }
+}

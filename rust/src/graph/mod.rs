@@ -1,0 +1,58 @@
+//! Graph substrate: storage formats, construction, generation, IO and
+//! statistics.
+//!
+//! The paper contrasts two storage formats whose memory footprints drive its
+//! evaluation:
+//!
+//! * **CSR** ([`Csr`]) — `N+1` row offsets + `E` column indices (+ `E`
+//!   weights). Used by the node-based strategies (BS, WD, NS, HP).
+//! * **COO** ([`Coo`]) — `2E` endpoint arrays (+ `E` weights). Required by
+//!   edge-based processing (EP); the duplication of source endpoints is why
+//!   EP runs out of memory on the Graph500 graphs (§II-B).
+//!
+//! All formats use `u32` node ids and `u32` integer weights (DIMACS
+//! convention). The largest paper graph (335 M edges) fits comfortably in
+//! `u32` index space.
+
+pub mod builder;
+pub mod coo;
+pub mod csr;
+pub mod generators;
+pub mod io;
+pub mod stats;
+pub mod traversal;
+
+pub use builder::GraphBuilder;
+pub use coo::Coo;
+pub use csr::Csr;
+pub use stats::DegreeStats;
+
+/// Node identifier. `u32` keeps CSR/COO arrays compact, matching the paper's
+/// 4-byte-integer memory accounting (§II-B).
+pub type NodeId = u32;
+
+/// Common read interface over graph storages.
+pub trait Graph {
+    /// Number of nodes.
+    fn num_nodes(&self) -> usize;
+    /// Number of (directed) edges.
+    fn num_edges(&self) -> usize;
+    /// Device-memory footprint in bytes under the paper's accounting
+    /// (4-byte elements; §II-B).
+    fn memory_bytes(&self) -> u64;
+}
+
+/// A single weighted directed edge. The unit of work for edge-based (EP)
+/// task distribution, and the tuple stored by the COO format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub wt: u32,
+}
+
+impl Edge {
+    pub fn new(src: NodeId, dst: NodeId, wt: u32) -> Self {
+        Edge { src, dst, wt }
+    }
+}

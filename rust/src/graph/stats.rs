@@ -1,0 +1,185 @@
+//! Degree statistics and histograms — the inputs to Table II, Figure 1,
+//! Figure 10 and the histogram-based MDT heuristic (§III-B).
+
+use crate::graph::Csr;
+
+/// Summary out-degree statistics of a graph, as reported per row of
+/// Table II (max / avg / σ).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegreeStats {
+    pub min: u32,
+    pub max: u32,
+    pub avg: f64,
+    /// Population standard deviation of the out-degrees.
+    pub stddev: f64,
+}
+
+impl DegreeStats {
+    /// Compute stats over all nodes of `g`.
+    pub fn of(g: &Csr) -> Self {
+        use crate::graph::Graph;
+        let n = g.num_nodes();
+        if n == 0 {
+            return DegreeStats {
+                min: 0,
+                max: 0,
+                avg: 0.0,
+                stddev: 0.0,
+            };
+        }
+        let mut min = u32::MAX;
+        let mut max = 0u32;
+        let mut sum = 0u64;
+        let mut sumsq = 0u128;
+        for u in 0..n as u32 {
+            let d = g.degree(u);
+            min = min.min(d);
+            max = max.max(d);
+            sum += d as u64;
+            sumsq += (d as u128) * (d as u128);
+        }
+        let avg = sum as f64 / n as f64;
+        let var = (sumsq as f64 / n as f64) - avg * avg;
+        DegreeStats {
+            min,
+            max,
+            avg,
+            stddev: var.max(0.0).sqrt(),
+        }
+    }
+
+    /// Imbalance factor `max / avg` — the first-order predictor of
+    /// node-based (BS) slowdown.
+    pub fn imbalance(&self) -> f64 {
+        if self.avg > 0.0 {
+            self.max as f64 / self.avg
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A fixed-bin-count histogram over node out-degrees.
+///
+/// Bin `i` covers degrees in `[i * bin_width, (i+1) * bin_width)` with
+/// `bin_width = ceil((max_degree + 1) / bins)`. This is the structure the
+/// MDT heuristic (§III-B) peaks over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DegreeHistogram {
+    pub bin_width: u32,
+    pub counts: Vec<u64>,
+    pub max_degree: u32,
+}
+
+impl DegreeHistogram {
+    /// Histogram the out-degrees of `g` into `bins` bins.
+    pub fn of(g: &Csr, bins: usize) -> Self {
+        use crate::graph::Graph;
+        assert!(bins > 0, "need at least one bin");
+        let max_degree = g.max_degree();
+        let bin_width = (max_degree / bins as u32) + 1;
+        let mut counts = vec![0u64; bins];
+        for u in 0..g.num_nodes() as u32 {
+            let b = (g.degree(u) / bin_width) as usize;
+            counts[b.min(bins - 1)] += 1;
+        }
+        DegreeHistogram {
+            bin_width,
+            counts,
+            max_degree,
+        }
+    }
+
+    /// Index of the tallest bin (ties broken toward lower degrees — less
+    /// splitting, per the heuristic's minimality goal).
+    pub fn peak_bin(&self) -> usize {
+        let mut best = 0usize;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > self.counts[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Number of nodes with degree in bin `i`.
+    pub fn count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+}
+
+/// Full degree-frequency table `degree -> node count` (Figures 1 and 10 plot
+/// this directly).
+pub fn degree_frequency(g: &Csr) -> Vec<(u32, u64)> {
+    use crate::graph::Graph;
+    use std::collections::BTreeMap;
+    let mut freq: BTreeMap<u32, u64> = BTreeMap::new();
+    for u in 0..g.num_nodes() as u32 {
+        *freq.entry(g.degree(u)).or_insert(0) += 1;
+    }
+    freq.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Csr, Edge};
+
+    fn star(n: u32) -> Csr {
+        // node 0 points at everyone else: max skew
+        let edges: Vec<Edge> = (1..n).map(|v| Edge::new(0, v, 1)).collect();
+        Csr::from_edges(n as usize, &edges).unwrap()
+    }
+
+    #[test]
+    fn star_stats() {
+        let g = star(11);
+        let st = DegreeStats::of(&g);
+        assert_eq!(st.max, 10);
+        assert_eq!(st.min, 0);
+        assert!((st.avg - 10.0 / 11.0).abs() < 1e-9);
+        assert!(st.imbalance() > 10.0);
+    }
+
+    #[test]
+    fn uniform_stats_have_zero_sigma() {
+        // ring: every node degree 1
+        let edges: Vec<Edge> = (0..8u32).map(|u| Edge::new(u, (u + 1) % 8, 1)).collect();
+        let g = Csr::from_edges(8, &edges).unwrap();
+        let st = DegreeStats::of(&g);
+        assert_eq!(st.min, 1);
+        assert_eq!(st.max, 1);
+        assert_eq!(st.stddev, 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_sum_to_n() {
+        let g = star(50);
+        let h = DegreeHistogram::of(&g, 8);
+        assert_eq!(h.counts.iter().sum::<u64>(), 50);
+    }
+
+    #[test]
+    fn histogram_peak_is_low_degree_for_star() {
+        let g = star(50);
+        let h = DegreeHistogram::of(&g, 8);
+        assert_eq!(h.peak_bin(), 0, "49 zero-degree nodes dominate");
+    }
+
+    #[test]
+    fn degree_frequency_matches_histogram_total() {
+        let g = star(20);
+        let freq = degree_frequency(&g);
+        let total: u64 = freq.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 20);
+        assert_eq!(freq.iter().find(|(d, _)| *d == 19).unwrap().1, 1);
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let g = Csr::from_edges(0, &[]).unwrap();
+        let st = DegreeStats::of(&g);
+        assert_eq!(st.max, 0);
+        assert_eq!(st.avg, 0.0);
+    }
+}

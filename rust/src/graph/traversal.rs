@@ -1,0 +1,149 @@
+//! Serial reference traversals — the correctness oracles every strategy is
+//! validated against, plus diameter-class probes used by the generators'
+//! tests and graph inspection.
+
+use crate::graph::{Csr, Graph, NodeId};
+use crate::INF;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Serial BFS levels from `source` (`INF` for unreachable nodes).
+pub fn bfs_levels(g: &Csr, source: NodeId) -> Vec<u32> {
+    let mut level = vec![INF; g.num_nodes()];
+    if g.num_nodes() == 0 {
+        return level;
+    }
+    let mut q = VecDeque::new();
+    level[source as usize] = 0;
+    q.push_back(source);
+    while let Some(u) = q.pop_front() {
+        let next = level[u as usize] + 1;
+        for &v in g.neighbors(u) {
+            if level[v as usize] == INF {
+                level[v as usize] = next;
+                q.push_back(v);
+            }
+        }
+    }
+    level
+}
+
+/// Serial Dijkstra distances from `source` (`INF` for unreachable nodes).
+pub fn dijkstra(g: &Csr, source: NodeId) -> Vec<u32> {
+    use std::cmp::Reverse;
+    let mut dist = vec![INF; g.num_nodes()];
+    if g.num_nodes() == 0 {
+        return dist;
+    }
+    let mut heap = BinaryHeap::new();
+    dist[source as usize] = 0;
+    heap.push(Reverse((0u32, source)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d > dist[u as usize] {
+            continue; // stale entry
+        }
+        for (&v, &w) in g.neighbors(u).iter().zip(g.edge_weights(u)) {
+            let nd = d.saturating_add(w);
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd, v)));
+            }
+        }
+    }
+    dist
+}
+
+/// Number of nodes reachable from `source` (including itself).
+pub fn bfs_reachable(g: &Csr, source: NodeId) -> usize {
+    bfs_levels(g, source).iter().filter(|&&l| l != INF).count()
+}
+
+/// Eccentricity of `source`: max finite BFS level.
+pub fn bfs_eccentricity(g: &Csr, source: NodeId) -> u32 {
+    bfs_levels(g, source)
+        .iter()
+        .filter(|&&l| l != INF)
+        .copied()
+        .max()
+        .unwrap_or(0)
+}
+
+/// A deterministic "interesting" source: the maximum out-degree node.
+/// Graph500-style generators permute vertex labels, so a fixed id (e.g. 0)
+/// can be isolated; BFS/SSSP evaluations conventionally start from a node
+/// inside the giant component, which the top hub almost surely is.
+pub fn hub_source(g: &Csr) -> NodeId {
+    (0..g.num_nodes() as u32)
+        .max_by_key(|&u| g.degree(u))
+        .unwrap_or(0)
+}
+
+/// Double-sweep lower bound on the diameter (exact on trees; a good
+/// diameter-class probe for road vs. small-world graphs).
+pub fn diameter_lower_bound(g: &Csr, start: NodeId) -> u32 {
+    let levels = bfs_levels(g, start);
+    let far = levels
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| l != INF)
+        .max_by_key(|(_, &l)| l)
+        .map(|(i, _)| i as u32)
+        .unwrap_or(start);
+    bfs_eccentricity(g, far)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn weighted_diamond() -> Csr {
+        // 0 ->1 (1), 0->2 (4), 1->3 (2), 2->3 (1): shortest 0->3 = 3 via 1
+        Csr::from_edges(
+            4,
+            &[
+                Edge::new(0, 1, 1),
+                Edge::new(0, 2, 4),
+                Edge::new(1, 3, 2),
+                Edge::new(2, 3, 1),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dijkstra_picks_cheaper_path() {
+        let d = dijkstra(&weighted_diamond(), 0);
+        assert_eq!(d, vec![0, 1, 4, 3]);
+    }
+
+    #[test]
+    fn bfs_counts_hops_not_weights() {
+        let l = bfs_levels(&weighted_diamond(), 0);
+        assert_eq!(l, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn unreachable_is_inf() {
+        let g = Csr::from_edges(3, &[Edge::new(0, 1, 1)]).unwrap();
+        let l = bfs_levels(&g, 0);
+        assert_eq!(l[2], INF);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d[2], INF);
+    }
+
+    #[test]
+    fn path_graph_diameter() {
+        let edges: Vec<Edge> = (0..9u32)
+            .flat_map(|u| [Edge::new(u, u + 1, 1), Edge::new(u + 1, u, 1)])
+            .collect();
+        let g = Csr::from_edges(10, &edges).unwrap();
+        assert_eq!(diameter_lower_bound(&g, 5), 9);
+    }
+
+    #[test]
+    fn saturating_add_never_wraps() {
+        let g = Csr::from_edges(2, &[Edge::new(0, 1, u32::MAX - 1)]).unwrap();
+        let d = dijkstra(&g, 0);
+        assert_eq!(d[1], u32::MAX - 1);
+    }
+}

@@ -1,0 +1,48 @@
+//! `lonestar-lb` — a reproduction of *"Dynamic Load Balancing Strategies for
+//! Graph Applications on GPUs"* (Raval, Nasre, Kumar, Vasudevan, Vadhiyar,
+//! Pingali; CS.DC 2017) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — five task-distribution strategies for
+//! data-driven graph algorithms (node-based `BS`, edge-based `EP`, workload
+//! decomposition `WD`, node splitting `NS`, hierarchical processing `HP`) —
+//! lives in [`strategies`]. Strategies plan per-kernel thread assignments;
+//! the [`coordinator`] engine executes those plans against one of three
+//! interchangeable backends:
+//!
+//! * `sim`    — a deterministic SIMT cost model ([`sim`]) reproducing the
+//!   paper's Kepler K20c testbed (warps, SMX scheduling, coalescing, atomic
+//!   serialization, memory budget). All paper figures are regenerated in
+//!   this mode.
+//! * `xla`    — the numeric hot loop (batched edge relaxation) executes on
+//!   the real XLA CPU runtime through AOT-compiled artifacts produced by
+//!   the Python build path (L2 JAX model calling an L1 Pallas kernel). See
+//!   [`runtime`].
+//! * `native` — a pure-Rust interpreter of the same plans (correctness
+//!   oracle and performance baseline).
+//!
+//! Substrates built for the reproduction: a graph library ([`graph`]) with
+//! CSR/COO storage, RMAT / Erdős–Rényi / Kronecker(Graph500) / road-network
+//! generators and DIMACS IO; worklist machinery ([`worklist`]) including the
+//! paper's work-chunking optimization; and the metrics / reporting layer
+//! ([`metrics`], [`figures`]) that regenerates every table and figure of the
+//! evaluation section.
+
+pub mod algorithms;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod figures;
+pub mod graph;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod strategies;
+pub mod util;
+pub mod worklist;
+
+pub use error::{Error, Result};
+pub use graph::{Csr, Graph, NodeId};
+
+/// Sentinel "infinite" distance used by BFS / SSSP (`u32::MAX` is reserved
+/// so saturating adds cannot wrap).
+pub const INF: u32 = u32::MAX;

@@ -1,0 +1,366 @@
+//! `lonestar-lb` — CLI launcher for the load-balancing reproduction.
+//!
+//! ```text
+//! lonestar-lb run      [--config F] [--suite NAME | --graph FILE | --gen SPEC]
+//!                      [--algo bfs|sssp] [--strategy BS|EP|WD|NS|HP|all]
+//!                      [--scale tiny|small|paper] [--seed N] [--source N]
+//!                      [--xla [--artifacts DIR]] [--enforce-budget]
+//!                      [--no-chunking] [--json]
+//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|all]
+//!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
+//! lonestar-lb generate NAME OUT [--scale S] [--seed N]
+//! lonestar-lb inspect  FILE
+//! lonestar-lb runtime-info [--artifacts DIR]
+//! ```
+//!
+//! Argument parsing is hand-rolled (`Args`) — the offline build carries no
+//! CLI dependency.
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::config::{parse_algo, parse_scale, ExperimentConfig, GraphSource};
+use lonestar_lb::coordinator::engine::Backend;
+use lonestar_lb::coordinator::run;
+use lonestar_lb::figures::{self, FigureOpts};
+use lonestar_lb::graph::generators::paper_suite;
+use lonestar_lb::graph::stats::DegreeStats;
+use lonestar_lb::graph::{self, Graph};
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::util::Json;
+use lonestar_lb::worklist::chunking::PushPolicy;
+use lonestar_lb::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::Arc;
+
+/// Tiny flag parser: positionals + `--key value` + `--switch`.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+const SWITCHES: &[&str] = &[
+    "xla",
+    "enforce-budget",
+    "no-chunking",
+    "json",
+    "no-budget",
+    "help",
+];
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Config(format!("flag --{name} needs a value"))
+                    })?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn switch(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got {v:?}"))),
+        }
+    }
+}
+
+const USAGE: &str = "usage: lonestar-lb <run|figures|generate|inspect|runtime-info> [options]
+  run          --suite NAME | --graph FILE | --gen SPEC | --config FILE
+               --algo bfs|sssp --strategy BS|EP|WD|NS|HP|all --source N
+               --scale tiny|small|paper --seed N
+               --xla --artifacts DIR --enforce-budget --no-chunking --json
+  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|all] --scale S --seed N
+               --out FILE.json --no-budget
+  generate     NAME OUT --scale S --seed N
+  inspect      FILE
+  runtime-info --artifacts DIR";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = real_main(&argv) {
+        eprintln!("error: {e}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main(argv: &[String]) -> Result<()> {
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    let mut out = std::io::stdout().lock();
+
+    match cmd {
+        "run" => cmd_run(&args, &mut out),
+        "figures" => cmd_figures(&args, &mut out),
+        "generate" => cmd_generate(&args, &mut out),
+        "inspect" => cmd_inspect(&args, &mut out),
+        "runtime-info" => cmd_runtime_info(&args, &mut out),
+        other => Err(Error::Config(format!("unknown command {other:?}"))),
+    }
+}
+
+fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
+    let cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(path)?
+    } else {
+        let mut cfg = ExperimentConfig {
+            scale: parse_scale(args.get("scale").unwrap_or("small"))?,
+            seed: args.get_u64("seed", lonestar_lb::graph::generators::suite::DEFAULT_SEED)?,
+            source: args.get_u64("source", 0)? as u32,
+            enforce_budget: args.switch("enforce-budget"),
+            push_policy: if args.switch("no-chunking") {
+                PushPolicy::PerEdge
+            } else {
+                PushPolicy::Chunked
+            },
+            backend: if args.switch("xla") {
+                Backend::Xla {
+                    dir: args.get("artifacts").map(str::to_string),
+                }
+            } else {
+                Backend::Native
+            },
+            ..Default::default()
+        };
+        cfg.algos = vec![parse_algo(args.get("algo").unwrap_or("sssp"))?];
+        let strat = args.get("strategy").unwrap_or("all");
+        cfg.strategies = if strat == "all" {
+            StrategyKind::ALL.to_vec()
+        } else {
+            vec![strat.parse()?]
+        };
+        cfg.graph = if let Some(f) = args.get("graph") {
+            GraphSource::File(f.to_string())
+        } else if let Some(s) = args.get("suite") {
+            GraphSource::Suite(s.to_string())
+        } else if let Some(g) = args.get("gen") {
+            GraphSource::parse(g)?
+        } else {
+            GraphSource::Suite("rmat16".into())
+        };
+        cfg
+    };
+
+    let g = Arc::new(cfg.graph.load(cfg.scale, cfg.seed)?);
+    writeln!(out, "graph: {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
+
+    let mut json_rows = Vec::new();
+    for rc in cfg.run_configs() {
+        let dev = rc.device.clone();
+        match run(&g, &rc) {
+            Ok(r) => {
+                writeln!(
+                    out,
+                    "{:<5} {:<4} kernel {:>10.3} ms  overhead {:>10.3} ms  total {:>10.3} ms  \
+                     {:>8.2} MTEPS  iters {:>5}  launches {:>6}  host {:>7.1} ms",
+                    rc.algo.name(),
+                    rc.strategy.label(),
+                    r.metrics.kernel_ms(&dev),
+                    r.metrics.overhead_ms(&dev),
+                    r.metrics.total_ms(&dev),
+                    r.metrics.mteps(&dev),
+                    r.metrics.iterations,
+                    r.metrics.kernel_launches,
+                    r.metrics.host_ns as f64 / 1e6,
+                )?;
+                json_rows.push(Json::obj(vec![
+                    ("algo", rc.algo.name().into()),
+                    ("strategy", rc.strategy.label().into()),
+                    ("kernel_ms", r.metrics.kernel_ms(&dev).into()),
+                    ("overhead_ms", r.metrics.overhead_ms(&dev).into()),
+                    ("total_ms", r.metrics.total_ms(&dev).into()),
+                    ("mteps", r.metrics.mteps(&dev).into()),
+                    ("iterations", r.metrics.iterations.into()),
+                    ("kernel_launches", r.metrics.kernel_launches.into()),
+                    ("edge_relaxations", r.metrics.edge_relaxations.into()),
+                    ("peak_memory", r.metrics.peak_memory_bytes.into()),
+                ]));
+            }
+            Err(e) if e.is_oom() => {
+                writeln!(out, "{:<5} {:<4} OOM ({e})", rc.algo.name(), rc.strategy.label())?;
+                json_rows.push(Json::obj(vec![
+                    ("algo", rc.algo.name().into()),
+                    ("strategy", rc.strategy.label().into()),
+                    ("oom", true.into()),
+                ]));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if args.switch("json") {
+        writeln!(out, "{}", Json::Arr(json_rows))?;
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = FigureOpts {
+        scale: parse_scale(args.get("scale").unwrap_or("small"))?,
+        seed: args.get_u64("seed", lonestar_lb::graph::generators::suite::DEFAULT_SEED)?,
+        enforce_budget: !args.switch("no-budget"),
+        ..Default::default()
+    };
+    let mut payload: BTreeMap<String, Json> = BTreeMap::new();
+    let all = which == "all";
+
+    if all || which == "table2" {
+        let rows = figures::table2(&opts, out)?;
+        payload.insert(
+            "table2".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "fig1" {
+        figures::fig1(&opts, out)?;
+    }
+    let mut sssp = None;
+    let mut bfs = None;
+    if all || which == "fig7" || which == "fig9" {
+        let f = figures::fig7(&opts, out)?;
+        payload.insert("fig7".into(), f.to_json());
+        sssp = Some(f);
+    }
+    if all || which == "fig8" || which == "fig9" {
+        let f = figures::fig8(&opts, out)?;
+        payload.insert("fig8".into(), f.to_json());
+        bfs = Some(f);
+    }
+    if all || which == "fig9" {
+        let rows = figures::fig9(&opts, sssp.as_ref().unwrap(), bfs.as_ref().unwrap(), out)?;
+        payload.insert(
+            "fig9".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "fig10" {
+        let rows = figures::fig10(&opts, out)?;
+        payload.insert(
+            "fig10".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "fig11" {
+        let rows = figures::fig11(&opts, out)?;
+        payload.insert(
+            "fig11".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if payload.is_empty() && !all {
+        return Err(Error::Config(format!("unknown figure {which:?}")));
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, Json::Obj(payload).to_string())?;
+        writeln!(out, "\nwrote {path}")?;
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args, out: &mut impl Write) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("generate needs NAME and OUT".into()))?;
+    let out_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("generate needs NAME and OUT".into()))?;
+    let scale = parse_scale(args.get("scale").unwrap_or("small"))?;
+    let seed = args.get_u64("seed", lonestar_lb::graph::generators::suite::DEFAULT_SEED)?;
+    let suite = paper_suite(scale);
+    let entry = suite.iter().find(|e| e.name == *name).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown graph {name:?}; available: {}",
+            suite
+                .iter()
+                .map(|e| e.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))
+    })?;
+    let g = entry.spec.generate(seed)?;
+    graph::io::save(&g, out_path)?;
+    writeln!(
+        out,
+        "wrote {} ({} nodes, {} edges)",
+        out_path,
+        g.num_nodes(),
+        g.num_edges()
+    )?;
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args, out: &mut impl Write) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("inspect needs FILE".into()))?;
+    let g = graph::io::load(path)?;
+    let st = DegreeStats::of(&g);
+    let diam = graph::traversal::diameter_lower_bound(&g, 0);
+    writeln!(out, "nodes:          {}", g.num_nodes())?;
+    writeln!(out, "edges:          {}", g.num_edges())?;
+    writeln!(
+        out,
+        "out-degree:     min {} max {} avg {:.2} sigma {:.2}",
+        st.min, st.max, st.avg, st.stddev
+    )?;
+    writeln!(out, "imbalance:      {:.1}x (max/avg)", st.imbalance())?;
+    writeln!(out, "diameter >=     {}", diam)?;
+    writeln!(out, "csr bytes:      {}", g.memory_bytes())?;
+    writeln!(out, "coo bytes:      {}", 12 * g.num_edges())?;
+    let d = lonestar_lb::strategies::mdt::auto_mdt(&g, 10);
+    writeln!(
+        out,
+        "auto MDT:       {} (peak bin {} of {})",
+        d.mdt, d.peak_bin, d.bins
+    )?;
+    Ok(())
+}
+
+fn cmd_runtime_info(args: &Args, out: &mut impl Write) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let mut r = lonestar_lb::runtime::XlaRelaxer::load(dir)?;
+    writeln!(out, "platform: {}", r.platform())?;
+    use lonestar_lb::algorithms::Relaxer;
+    let cand = r.candidates(&[0, 5, lonestar_lb::INF], &[7, 3, 1])?;
+    writeln!(out, "relax([0,5,INF] + [7,3,1]) = {cand:?}")?;
+    if cand != vec![7, 8, lonestar_lb::INF] {
+        return Err(Error::Xla(format!("unexpected candidates {cand:?}")));
+    }
+    writeln!(out, "artifacts OK ({} executions)", r.executions)?;
+    let _ = AlgoKind::Sssp;
+    Ok(())
+}

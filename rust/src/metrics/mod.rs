@@ -1,0 +1,151 @@
+//! Run metrics: the kernel-time / overhead-time split of Figures 7 and 8,
+//! plus counters that feed the trade-off analysis (Figure 9) and
+//! EXPERIMENTS.md.
+
+use crate::sim::{DeviceSpec, KernelTime};
+
+/// Accumulated metrics of one strategy × algorithm × graph run.
+///
+/// The paper splits execution time into "useful kernel time" and "the
+/// overhead associated with implementing a strategy … initializations,
+/// extra kernel invocations and bookkeeping" (§IV-A). Processing kernels
+/// charge their body to `kernel_cycles` and their launch cost to
+/// `overhead_cycles` (BS too — "Note that BS also has an overhead
+/// component"); auxiliary kernels (scan, `find_offsets`, condensing,
+/// splitting) charge wholly to `overhead_cycles`.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Useful processing-kernel cycles.
+    pub kernel_cycles: u64,
+    /// Strategy-implementation overhead cycles.
+    pub overhead_cycles: u64,
+    /// Outer worklist iterations.
+    pub iterations: u32,
+    /// Kernel launches (processing + auxiliary); HP's sub-iterations show
+    /// up here.
+    pub kernel_launches: u32,
+    /// Edge relaxation steps executed (the paper's TEPS numerator).
+    pub edge_relaxations: u64,
+    /// Successful distance updates.
+    pub updates: u64,
+    /// Atomic operations issued.
+    pub atomics: u64,
+    /// Atomics that conflicted within a warp.
+    pub atomic_conflicts: u64,
+    /// Memory transactions issued.
+    pub mem_transactions: u64,
+    /// Peak raw worklist entries observed (pre-condensing).
+    pub peak_worklist_entries: u64,
+    /// Worklist entries removed by condensing.
+    pub condensed_away: u64,
+    /// Peak simulated device memory (bytes).
+    pub peak_memory_bytes: u64,
+    /// Host wall-clock spent in the coordinator itself (ns) — the L3 perf
+    /// figure tracked in EXPERIMENTS.md §Perf.
+    pub host_ns: u64,
+}
+
+impl RunMetrics {
+    /// Fold one *processing* kernel: body → kernel, launch → overhead.
+    pub fn charge_processing(&mut self, t: KernelTime, launch_overhead: u64) {
+        let body = t.cycles.saturating_sub(launch_overhead);
+        self.kernel_cycles += body;
+        self.overhead_cycles += launch_overhead;
+        self.kernel_launches += 1;
+        self.absorb_counters(&t);
+    }
+
+    /// Fold one *auxiliary* kernel wholly into overhead.
+    pub fn charge_aux(&mut self, t: KernelTime) {
+        self.overhead_cycles += t.cycles;
+        self.kernel_launches += 1;
+        self.absorb_counters(&t);
+    }
+
+    /// Flat overhead cycles (host-side prep attributed to the device
+    /// timeline, e.g. graph splitting, histogramming).
+    pub fn charge_overhead(&mut self, cycles: u64) {
+        self.overhead_cycles += cycles;
+    }
+
+    fn absorb_counters(&mut self, t: &KernelTime) {
+        self.edge_relaxations += t.edge_steps;
+        self.atomics += t.atomics;
+        self.atomic_conflicts += t.atomic_conflicts;
+        self.mem_transactions += t.mem_transactions;
+    }
+
+    /// Total simulated cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.kernel_cycles + self.overhead_cycles
+    }
+
+    /// Total simulated milliseconds on `dev`.
+    pub fn total_ms(&self, dev: &DeviceSpec) -> f64 {
+        dev.cycles_to_ms(self.total_cycles())
+    }
+
+    /// Kernel-only milliseconds.
+    pub fn kernel_ms(&self, dev: &DeviceSpec) -> f64 {
+        dev.cycles_to_ms(self.kernel_cycles)
+    }
+
+    /// Overhead-only milliseconds.
+    pub fn overhead_ms(&self, dev: &DeviceSpec) -> f64 {
+        dev.cycles_to_ms(self.overhead_cycles)
+    }
+
+    /// Millions of traversed edges per (simulated) second — the paper's
+    /// MTEPS metric (§IV-A quotes 0.17 vs 0.54 MTEPS for rmat20 BFS).
+    pub fn mteps(&self, dev: &DeviceSpec) -> f64 {
+        let ms = self.total_ms(dev);
+        if ms > 0.0 {
+            self.edge_relaxations as f64 / (ms * 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(cycles: u64) -> KernelTime {
+        KernelTime {
+            cycles,
+            warps: 1,
+            edge_steps: 10,
+            atomics: 2,
+            atomic_conflicts: 1,
+            mem_transactions: 5,
+        }
+    }
+
+    #[test]
+    fn processing_splits_launch_overhead() {
+        let mut m = RunMetrics::default();
+        m.charge_processing(t(10_000), 8_000);
+        assert_eq!(m.kernel_cycles, 2_000);
+        assert_eq!(m.overhead_cycles, 8_000);
+        assert_eq!(m.kernel_launches, 1);
+        assert_eq!(m.edge_relaxations, 10);
+    }
+
+    #[test]
+    fn aux_is_all_overhead() {
+        let mut m = RunMetrics::default();
+        m.charge_aux(t(9_000));
+        assert_eq!(m.kernel_cycles, 0);
+        assert_eq!(m.overhead_cycles, 9_000);
+    }
+
+    #[test]
+    fn mteps_uses_total_time() {
+        let dev = DeviceSpec::k20c();
+        let mut m = RunMetrics::default();
+        m.charge_processing(t(706_000 + 8_000), 8_000); // 1 ms kernel + overhead
+        let mteps = m.mteps(&dev);
+        assert!(mteps > 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact registry: `artifacts/manifest.json` + compiled executables.
+//!
+//! The Python AOT path writes one HLO-text file per (kernel, batch size)
+//! and a manifest describing them. The registry compiles each on first use
+//! and caches the `PjRtLoadedExecutable`.
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry of `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Kernel name (e.g. `"relax"`).
+    pub name: String,
+    /// Static batch size the HLO was lowered for.
+    pub batch: usize,
+    /// File name within the artifact directory.
+    pub file: String,
+}
+
+/// The manifest the AOT pass emits.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Producing jax version (informational).
+    pub jax_version: String,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Read `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path)
+            .map_err(|_| Error::MissingArtifact(path.display().to_string()))?;
+        let v = Json::parse(&data)
+            .map_err(|e| Error::Xla(format!("bad manifest {}: {e}", path.display())))?;
+        let bad = |m: &str| Error::Xla(format!("bad manifest {}: {m}", path.display()));
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing artifacts array"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad("entry missing name"))?
+                        .to_string(),
+                    batch: a
+                        .get("batch")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| bad("entry missing batch"))?,
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad("entry missing file"))?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactManifest {
+            jax_version: v
+                .get("jax_version")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            artifacts,
+        })
+    }
+
+    /// Batch sizes available for `name`, ascending.
+    pub fn batches_for(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name == name)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Lazily-compiled executables over a PJRT CPU client.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    compiled: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactRegistry {
+    /// Open `dir`, read the manifest and create the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(ArtifactRegistry {
+            dir,
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest available batch ≥ `len` for kernel `name`, or the largest
+    /// batch if `len` exceeds all (callers chunk).
+    pub fn pick_batch(&self, name: &str, len: usize) -> Result<usize> {
+        let batches = self.manifest.batches_for(name);
+        if batches.is_empty() {
+            return Err(Error::MissingArtifact(format!(
+                "kernel {name:?} not in manifest"
+            )));
+        }
+        Ok(batches
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .unwrap_or(*batches.last().unwrap()))
+    }
+
+    /// Get (compiling on first use) the executable for `(name, batch)`.
+    pub fn executable(
+        &mut self,
+        name: &str,
+        batch: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (name.to_string(), batch);
+        if !self.compiled.contains_key(&key) {
+            let entry = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name && a.batch == batch)
+                .ok_or_else(|| {
+                    Error::MissingArtifact(format!("{name} @ batch {batch} not in manifest"))
+                })?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Xla("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))?;
+            self.compiled.insert(key.clone(), exe);
+        }
+        Ok(self.compiled.get(&key).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_and_batch_pick() {
+        let dir = crate::util::tmp::TempPath::dir();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"jax_version":"0.8.2","artifacts":[
+                {"name":"relax","batch":1024,"file":"relax_b1024.hlo.txt"},
+                {"name":"relax","batch":8192,"file":"relax_b8192.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(dir.path()).unwrap();
+        assert_eq!(m.batches_for("relax"), vec![1024, 8192]);
+        assert!(m.batches_for("nope").is_empty());
+    }
+
+    #[test]
+    fn missing_manifest_is_missing_artifact_error() {
+        let dir = crate::util::tmp::TempPath::dir();
+        let err = ArtifactManifest::load(dir.path()).unwrap_err();
+        assert!(matches!(err, Error::MissingArtifact(_)));
+    }
+}

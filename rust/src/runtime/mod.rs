@@ -1,0 +1,14 @@
+//! L3 ⇄ XLA bridge: loads the AOT-compiled artifacts produced by the
+//! Python build path (`python/compile/aot.py`) and executes them on the
+//! PJRT CPU client from the coordinator's hot loop.
+//!
+//! Interchange format is **HLO text** — jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Python never runs
+//! at request time: `make artifacts` is the only compile step.
+
+pub mod artifact;
+pub mod relaxer;
+
+pub use artifact::{ArtifactManifest, ArtifactRegistry};
+pub use relaxer::XlaRelaxer;

@@ -1,0 +1,137 @@
+//! [`XlaRelaxer`] — the production relaxation backend: batched candidate
+//! computation on the XLA CPU runtime through the AOT Pallas/JAX artifact.
+//!
+//! Distances travel as `i32` with `i32::MAX` as the infinity sentinel (the
+//! kernel saturates there); the coordinator's `u32::MAX` infinity maps
+//! to/from it at the boundary. Batches are padded up to the artifact's
+//! static shape with `(INF, 0)` lanes, which are inert (INF stays INF).
+
+use crate::algorithms::Relaxer;
+use crate::error::{Error, Result};
+use crate::INF;
+
+use super::ArtifactRegistry;
+
+/// i32 infinity sentinel used inside the artifacts.
+pub const INF_I32: i32 = i32::MAX;
+
+/// Relaxer executing the `relax` artifact.
+pub struct XlaRelaxer {
+    registry: ArtifactRegistry,
+    /// Scratch buffers reused across calls (hot-path allocation hygiene).
+    src_buf: Vec<i32>,
+    w_buf: Vec<i32>,
+    /// Batches executed (diagnostics).
+    pub executions: u64,
+}
+
+impl XlaRelaxer {
+    /// Load artifacts from `dir` (expects `manifest.json` + HLO text files
+    /// produced by `make artifacts`).
+    pub fn load(dir: &str) -> Result<Self> {
+        Ok(XlaRelaxer {
+            registry: ArtifactRegistry::open(dir)?,
+            src_buf: Vec::new(),
+            w_buf: Vec::new(),
+            executions: 0,
+        })
+    }
+
+    /// PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        self.registry.platform()
+    }
+
+    fn to_i32(v: u32) -> i32 {
+        if v == INF {
+            INF_I32
+        } else {
+            v.min(INF_I32 as u32 - 1) as i32
+        }
+    }
+
+    fn to_u32(v: i32) -> u32 {
+        if v >= INF_I32 {
+            INF
+        } else {
+            v.max(0) as u32
+        }
+    }
+
+    /// Run one padded batch of exactly `batch` lanes; returns `take`
+    /// candidates.
+    fn run_batch(&mut self, batch: usize, take: usize, out: &mut Vec<u32>) -> Result<()> {
+        debug_assert_eq!(self.src_buf.len(), batch);
+        let exe = self.registry.executable("relax", batch)?;
+        let x = xla::Literal::vec1(&self.src_buf);
+        let y = xla::Literal::vec1(&self.w_buf);
+        let result = exe
+            .execute::<xla::Literal>(&[x, y])
+            .map_err(|e| Error::Xla(format!("execute relax@{batch}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let cand = result
+            .to_tuple1()
+            .map_err(|e| Error::Xla(e.to_string()))?
+            .to_vec::<i32>()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        if cand.len() != batch {
+            return Err(Error::Xla(format!(
+                "relax@{batch} returned {} lanes",
+                cand.len()
+            )));
+        }
+        out.extend(cand[..take].iter().map(|&c| Self::to_u32(c)));
+        self.executions += 1;
+        Ok(())
+    }
+}
+
+impl Relaxer for XlaRelaxer {
+    fn candidates(&mut self, dist_src: &[u32], w: &[u32]) -> Result<Vec<u32>> {
+        debug_assert_eq!(dist_src.len(), w.len());
+        let total = dist_src.len();
+        let mut out = Vec::with_capacity(total);
+        let mut at = 0usize;
+        while at < total {
+            let remaining = total - at;
+            let batch = self.registry.pick_batch("relax", remaining)?;
+            let take = remaining.min(batch);
+            self.src_buf.clear();
+            self.w_buf.clear();
+            self.src_buf
+                .extend(dist_src[at..at + take].iter().map(|&d| Self::to_i32(d)));
+            self.w_buf
+                .extend(w[at..at + take].iter().map(|&x| x.min(INF_I32 as u32) as i32));
+            // Pad inert lanes.
+            self.src_buf.resize(batch, INF_I32);
+            self.w_buf.resize(batch, 0);
+            self.run_batch(batch, take, &mut out)?;
+            at += take;
+        }
+        Ok(out)
+    }
+
+    fn backend(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentinel_mapping_roundtrips() {
+        assert_eq!(XlaRelaxer::to_i32(INF), INF_I32);
+        assert_eq!(XlaRelaxer::to_u32(INF_I32), INF);
+        assert_eq!(XlaRelaxer::to_i32(5), 5);
+        assert_eq!(XlaRelaxer::to_u32(5), 5);
+        // negative garbage clamps to 0 rather than wrapping
+        assert_eq!(XlaRelaxer::to_u32(-3), 0);
+    }
+
+    // End-to-end XLA tests live in rust/tests/backend_parity.rs and are
+    // skipped when `make artifacts` hasn't run.
+}

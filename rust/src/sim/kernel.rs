@@ -1,0 +1,321 @@
+//! Per-kernel cycle accounting: warps in lockstep, blocks scheduled
+//! round-robin over SMs, per-SM throughput limits.
+
+use super::DeviceSpec;
+
+/// Warp-level memory access pattern of a kernel's edge reads.
+///
+/// * `Coalesced` — lanes of a warp touch consecutive addresses each step
+///   (EP's round-robin assignment; BS/NS reading a node's contiguous
+///   adjacency when lanes advance together).
+/// * `Scattered` — lanes touch unrelated addresses (WD's block
+///   decomposition separates a node's edges across threads, §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    Coalesced,
+    Scattered,
+}
+
+/// Accumulated cycle cost and counters for one simulated kernel launch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelTime {
+    /// Simulated wall-clock cycles for the launch (including launch
+    /// overhead).
+    pub cycles: u64,
+    /// Number of warps that executed.
+    pub warps: u64,
+    /// Total edge-relaxation steps executed (work measure).
+    pub edge_steps: u64,
+    /// Total atomic operations issued.
+    pub atomics: u64,
+    /// Atomic operations that conflicted within their warp.
+    pub atomic_conflicts: u64,
+    /// Memory transactions issued.
+    pub mem_transactions: u64,
+}
+
+/// Accounts one kernel launch. Create with [`KernelSim::new`], feed warps
+/// via [`KernelSim::warp`] / [`WarpSim::commit`], and finish with
+/// [`KernelSim::finish`].
+///
+/// Scheduling model: warps belong to blocks of `block_size / warp_size`
+/// warps; blocks are assigned round-robin to SMs. An SM with `k` resident
+/// warps and throughput `t` (warps retired in parallel) takes
+/// `max(Σ warp_cycles / t, max warp_cycles)` — the standard
+/// "throughput-bound or latency-bound, whichever is worse" approximation.
+#[derive(Debug)]
+pub struct KernelSim<'d> {
+    dev: &'d DeviceSpec,
+    warps_per_block: u64,
+    sm_total: Vec<u64>,
+    sm_max: Vec<u64>,
+    warp_count: u64,
+    stats: KernelTime,
+}
+
+impl<'d> KernelSim<'d> {
+    /// Start accounting a kernel on `dev`.
+    pub fn new(dev: &'d DeviceSpec) -> Self {
+        KernelSim {
+            dev,
+            warps_per_block: dev.warps_per_block() as u64,
+            sm_total: vec![0; dev.num_sm as usize],
+            sm_max: vec![0; dev.num_sm as usize],
+            warp_count: 0,
+            stats: KernelTime::default(),
+        }
+    }
+
+    /// Begin accounting the next warp (warps must be committed in launch
+    /// order).
+    pub fn warp(&mut self) -> WarpSim<'d> {
+        WarpSim {
+            dev: self.dev,
+            cycles: 0,
+            edge_steps: 0,
+            atomics: 0,
+            atomic_conflicts: 0,
+            mem_transactions: 0,
+        }
+    }
+
+    /// Commit a finished warp to its SM.
+    pub fn commit(&mut self, w: WarpSim<'_>) {
+        let block = self.warp_count / self.warps_per_block;
+        let sm = (block % self.dev.num_sm as u64) as usize;
+        self.sm_total[sm] += w.cycles;
+        self.sm_max[sm] = self.sm_max[sm].max(w.cycles);
+        self.warp_count += 1;
+        self.stats.edge_steps += w.edge_steps;
+        self.stats.atomics += w.atomics;
+        self.stats.atomic_conflicts += w.atomic_conflicts;
+        self.stats.mem_transactions += w.mem_transactions;
+    }
+
+    /// Close the launch and return its cost.
+    pub fn finish(mut self) -> KernelTime {
+        let t = self.dev.warp_throughput();
+        let busiest = self
+            .sm_total
+            .iter()
+            .zip(&self.sm_max)
+            .map(|(&total, &mx)| (total / t).max(mx))
+            .max()
+            .unwrap_or(0);
+        self.stats.cycles = self.dev.launch_overhead + busiest;
+        self.stats.warps = self.warp_count;
+        self.stats
+    }
+}
+
+/// Accounts one warp executing in SIMT lockstep.
+#[derive(Debug)]
+pub struct WarpSim<'d> {
+    dev: &'d DeviceSpec,
+    cycles: u64,
+    edge_steps: u64,
+    atomics: u64,
+    atomic_conflicts: u64,
+    mem_transactions: u64,
+}
+
+impl WarpSim<'_> {
+    /// One lockstep step where `active` lanes each read one edge and do the
+    /// relaxation ALU work. Inactive lanes idle (divergence) but the warp
+    /// still pays the step.
+    ///
+    /// Memory cost is latency + transactions: every step stalls for the
+    /// (partially hidden) global-load latency, then pays per transaction —
+    /// one for a coalesced warp, one per active lane when scattered. This
+    /// is what makes SIMT imbalance expensive: a warp with one straggler
+    /// lane re-pays the latency every extra step.
+    pub fn step(&mut self, active: u32, access: AccessPattern) {
+        debug_assert!(active > 0 && active <= self.dev.warp_size);
+        let mem = match access {
+            AccessPattern::Coalesced => {
+                self.mem_transactions += 1;
+                self.dev.mem_latency + self.dev.coalesced_tx
+            }
+            AccessPattern::Scattered => {
+                self.mem_transactions += active as u64;
+                self.dev.mem_latency + self.dev.scattered_tx * active as u64
+            }
+        };
+        self.cycles += mem + self.dev.alu_relax;
+        self.edge_steps += active as u64;
+    }
+
+    /// Successful distance updates this step, identified by destination
+    /// node. The warp issues them as one wide atomic instruction:
+    /// distinct addresses pipeline behind a single base latency
+    /// (~1 address/4 cycles on Kepler's L2 atomic units), while conflicting
+    /// destinations serialize (`atomicMin` read-modify-write semantics).
+    ///
+    /// `dsts` is reordered (sorted) in place.
+    pub fn atomics(&mut self, dsts: &mut [u32]) {
+        if dsts.is_empty() {
+            return;
+        }
+        dsts.sort_unstable();
+        let mut groups = 0u64;
+        let mut conflicts = 0u64;
+        let mut i = 0;
+        while i < dsts.len() {
+            let mut j = i + 1;
+            while j < dsts.len() && dsts[j] == dsts[i] {
+                j += 1;
+            }
+            groups += 1;
+            conflicts += (j - i - 1) as u64;
+            i = j;
+        }
+        self.atomics += dsts.len() as u64;
+        self.atomic_conflicts += conflicts;
+        self.cycles +=
+            self.dev.atomic_base + (groups - 1) * 4 + conflicts * self.dev.atomic_conflict;
+    }
+
+    /// `count` worklist-append reservations (atomicAdd on the shared tail
+    /// counter). Pipelined fire-and-forget read-modify-writes — much
+    /// cheaper than the dependent `atomicMin`s of [`WarpSim::atomics`];
+    /// work chunking (§IV-D) reduces `count` from per-edge to per-node.
+    pub fn append_atomics(&mut self, count: u64) {
+        self.atomics += count;
+        self.cycles += count * self.dev.atomic_append;
+    }
+
+    /// Flat bookkeeping cycles (offset binary search, child mirroring walk,
+    /// etc.).
+    pub fn extra(&mut self, cycles: u64) {
+        self.cycles += cycles;
+    }
+
+    /// Cycles accumulated so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::k20c()
+    }
+
+    #[test]
+    fn empty_kernel_costs_launch_overhead() {
+        let d = dev();
+        let k = KernelSim::new(&d);
+        let t = k.finish();
+        assert_eq!(t.cycles, d.launch_overhead);
+        assert_eq!(t.warps, 0);
+    }
+
+    #[test]
+    fn imbalanced_warp_costs_max_lane() {
+        // one warp where a single lane does 100 steps vs. a warp where all
+        // 32 lanes do 100 steps: same cycle count (lockstep) — the paper's
+        // core load-imbalance observation.
+        let d = dev();
+        let mut k1 = KernelSim::new(&d);
+        let mut w = k1.warp();
+        for _ in 0..100 {
+            w.step(1, AccessPattern::Coalesced);
+        }
+        k1.commit(w);
+        let lone = k1.finish();
+
+        let mut k2 = KernelSim::new(&d);
+        let mut w = k2.warp();
+        for _ in 0..100 {
+            w.step(32, AccessPattern::Coalesced);
+        }
+        k2.commit(w);
+        let full = k2.finish();
+        assert_eq!(lone.cycles, full.cycles);
+        assert_eq!(full.edge_steps, 3200);
+    }
+
+    #[test]
+    fn scattered_costs_more_than_coalesced() {
+        let d = dev();
+        let mut co = d.clone();
+        co.launch_overhead = 0;
+        let mut k1 = KernelSim::new(&co);
+        let mut w = k1.warp();
+        w.step(32, AccessPattern::Coalesced);
+        k1.commit(w);
+        let c = k1.finish().cycles;
+
+        let mut k2 = KernelSim::new(&co);
+        let mut w = k2.warp();
+        w.step(32, AccessPattern::Scattered);
+        k2.commit(w);
+        let s = k2.finish().cycles;
+        assert!(s > 2 * c, "scattered {s} should dwarf coalesced {c}");
+    }
+
+    #[test]
+    fn atomic_conflicts_serialize() {
+        let d = dev();
+        let mut k = KernelSim::new(&d);
+        let mut w = k.warp();
+        let mut no_conflict = [1u32, 2, 3, 4];
+        w.atomics(&mut no_conflict);
+        let base = w.cycles();
+        let mut w2 = k.warp();
+        let mut all_same = [7u32, 7, 7, 7];
+        w2.atomics(&mut all_same);
+        assert!(w2.cycles() > base, "conflicting atomics must cost more");
+        assert_eq!(w2.cycles() - d.atomic_base, 3 * d.atomic_conflict + 0);
+        k.commit(w);
+        k.commit(w2);
+        let t = k.finish();
+        assert_eq!(t.atomics, 8);
+        assert_eq!(t.atomic_conflicts, 3);
+    }
+
+    #[test]
+    fn sm_parallelism_speeds_up_many_warps() {
+        // 13*6 = 78 warps of equal work should take ~1 warp-time, not 78.
+        let d = dev();
+        let mut k = KernelSim::new(&d);
+        // one warp per block so blocks spread over SMs
+        let mut small = d.clone();
+        small.block_size = 32;
+        let mut k2 = KernelSim::new(&small);
+        for _ in 0..78 {
+            let mut w = k2.warp();
+            for _ in 0..10 {
+                w.step(32, AccessPattern::Coalesced);
+            }
+            k2.commit(w);
+        }
+        let many = k2.finish();
+        let mut w = k.warp();
+        for _ in 0..10 {
+            w.step(32, AccessPattern::Coalesced);
+        }
+        k.commit(w);
+        let one = k.finish();
+        assert_eq!(many.cycles, one.cycles, "78 equal warps fill the device exactly");
+    }
+
+    #[test]
+    fn blocks_round_robin_over_sms() {
+        let d = dev();
+        let mut k = KernelSim::new(&d);
+        // 2 full blocks = 64 warps; block 0 -> SM0, block 1 -> SM1
+        for _ in 0..64 {
+            let mut w = k.warp();
+            w.step(32, AccessPattern::Coalesced);
+            k.commit(w);
+        }
+        let t = k.finish();
+        assert_eq!(t.warps, 64);
+        // per-SM: 32 warps, throughput 6 → ceil-ish total/6 ≥ max
+        assert!(t.cycles > d.launch_overhead);
+    }
+}

@@ -1,0 +1,129 @@
+//! Device-memory budget tracking.
+//!
+//! Every strategy declares its allocations (graph storage, worklists,
+//! offset arrays, prefix sums) against the tracker; exceeding the budget
+//! aborts the run with [`Error::OutOfMemory`] — this is how the simulator
+//! reproduces "EP could not be executed for these large graphs" (§IV-A).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Tracks current and peak simulated device-memory usage by label.
+#[derive(Debug, Clone)]
+pub struct MemoryTracker {
+    budget: u64,
+    current: u64,
+    peak: u64,
+    by_label: BTreeMap<String, u64>,
+}
+
+impl MemoryTracker {
+    /// Tracker with the given budget in bytes.
+    pub fn new(budget: u64) -> Self {
+        MemoryTracker {
+            budget,
+            current: 0,
+            peak: 0,
+            by_label: BTreeMap::new(),
+        }
+    }
+
+    /// Unlimited tracker (native/xla correctness runs).
+    pub fn unlimited() -> Self {
+        MemoryTracker::new(u64::MAX)
+    }
+
+    /// Allocate `bytes` under `label`; errors if the budget is exceeded.
+    pub fn charge(&mut self, label: &str, bytes: u64) -> Result<()> {
+        let next = self.current.saturating_add(bytes);
+        if next > self.budget {
+            return Err(Error::OutOfMemory {
+                what: label.to_string(),
+                requested: bytes,
+                budget: self.budget,
+            });
+        }
+        self.current = next;
+        self.peak = self.peak.max(self.current);
+        *self.by_label.entry(label.to_string()).or_insert(0) += bytes;
+        Ok(())
+    }
+
+    /// Release `bytes` previously charged under `label`.
+    pub fn release(&mut self, label: &str, bytes: u64) {
+        self.current = self.current.saturating_sub(bytes);
+        if let Some(v) = self.by_label.get_mut(label) {
+            *v = v.saturating_sub(bytes);
+        }
+    }
+
+    /// Grow/shrink a label to a new size (worklists resize per iteration);
+    /// peak accounting sees the high-water mark.
+    pub fn resize(&mut self, label: &str, old_bytes: u64, new_bytes: u64) -> Result<()> {
+        self.release(label, old_bytes);
+        self.charge(label, new_bytes)
+    }
+
+    /// Current usage in bytes.
+    pub fn current(&self) -> u64 {
+        self.current
+    }
+
+    /// Peak usage in bytes.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Budget in bytes.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Cumulative bytes charged per label (diagnostics / Figure 9 memory
+    /// axis).
+    pub fn by_label(&self) -> &BTreeMap<String, u64> {
+        &self.by_label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_release() {
+        let mut t = MemoryTracker::new(100);
+        t.charge("a", 60).unwrap();
+        assert_eq!(t.current(), 60);
+        t.release("a", 60);
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.peak(), 60);
+    }
+
+    #[test]
+    fn oom_on_budget_violation() {
+        let mut t = MemoryTracker::new(100);
+        t.charge("graph", 80).unwrap();
+        let err = t.charge("worklist", 30).unwrap_err();
+        assert!(err.is_oom());
+        // failed charge does not count
+        assert_eq!(t.current(), 80);
+    }
+
+    #[test]
+    fn resize_tracks_peak() {
+        let mut t = MemoryTracker::new(1000);
+        t.charge("wl", 100).unwrap();
+        t.resize("wl", 100, 700).unwrap();
+        t.resize("wl", 700, 50).unwrap();
+        assert_eq!(t.peak(), 700);
+        assert_eq!(t.current(), 50);
+    }
+
+    #[test]
+    fn unlimited_never_fails() {
+        let mut t = MemoryTracker::unlimited();
+        t.charge("x", u64::MAX / 2).unwrap();
+        assert!(t.charge("y", u64::MAX / 4).is_ok());
+    }
+}

@@ -1,0 +1,33 @@
+//! Deterministic SIMT cost-model simulator of the paper's testbed (Tesla
+//! K20c, Kepler).
+//!
+//! The paper's measurements are *relative* comparisons of load-balancing
+//! strategies. Four first-order effects determine those comparisons, and the
+//! simulator models exactly these (DESIGN.md §2):
+//!
+//! 1. **Warp-level load imbalance** — a warp retires when its slowest lane
+//!    does (SIMT lockstep), so kernel time tracks the *maximum* per-lane
+//!    work. This is what makes node-based (BS) slow on skewed graphs.
+//! 2. **Memory coalescing** — a warp whose lanes touch consecutive edges
+//!    issues one wide transaction per step; scattered lanes pay one
+//!    transaction each. This is WD's documented weakness (§III-A) and EP's
+//!    round-robin strength (§II-B).
+//! 3. **Atomic serialization** — conflicting atomics to the same address
+//!    serialize within a warp; work chunking (§IV-D) reduces worklist-append
+//!    atomics from per-edge to per-node.
+//! 4. **Kernel launch overhead** — HP's sub-iterations and WD's auxiliary
+//!    scan / `find_offsets` kernels pay per-launch costs; this is the
+//!    "overhead" component of Figures 7 and 8.
+//!
+//! A fifth modelled constraint is the **device memory budget**: EP's COO
+//! arrays and exploded worklists must fit in device memory, or the run
+//! aborts with [`crate::Error::OutOfMemory`] — reproducing the paper's
+//! missing EP/WD/NS bars on the Graph500 graphs.
+
+pub mod device;
+pub mod kernel;
+pub mod memory;
+
+pub use device::DeviceSpec;
+pub use kernel::{AccessPattern, KernelSim, KernelTime, WarpSim};
+pub use memory::MemoryTracker;

@@ -1,0 +1,182 @@
+//! Shared node-frontier bookkeeping for the node-based strategies
+//! (BS, WD, NS, HP): double-buffered worklists, memory charging, and the
+//! condensing pass.
+
+use crate::coordinator::ExecCtx;
+use crate::error::Result;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::worklist::NodeWorklist;
+
+/// Double-buffered node frontier with device-memory accounting.
+///
+/// `entry_bytes` differs by strategy: BS/NS/HP keep only node ids (4 B),
+/// WD additionally keeps the cached out-degree array for its prefix sums
+/// (8 B) — this is part of why WD exhausts memory on Graph500-scale inputs
+/// where BS squeaks by (DESIGN.md §5).
+#[derive(Debug)]
+pub struct NodeFrontier {
+    label: &'static str,
+    entry_bytes: u64,
+    charged: u64,
+    wl: NodeWorklist,
+    /// Reusable dedup bitset (one bit per node): turns the host-side
+    /// condensing pass from `O(n log n)` sort into `O(n)` — see
+    /// EXPERIMENTS.md §Perf (the simulated *device* cost of condensing is
+    /// charged separately and unchanged).
+    seen: Vec<u64>,
+}
+
+impl NodeFrontier {
+    /// Frontier seeded with `source`, charging its initial allocation.
+    pub fn seeded(
+        ctx: &mut ExecCtx,
+        g: &Csr,
+        source: NodeId,
+        label: &'static str,
+        entry_bytes: u64,
+    ) -> Result<Self> {
+        let wl = NodeWorklist::seeded(g, source);
+        let charged = entry_bytes * wl.len() as u64;
+        ctx.mem.charge(label, charged)?;
+        Ok(NodeFrontier {
+            label,
+            entry_bytes,
+            charged,
+            wl,
+            seen: vec![0u64; g.num_nodes().div_ceil(64)],
+        })
+    }
+
+    /// Current worklist.
+    pub fn worklist(&self) -> &NodeWorklist {
+        &self.wl
+    }
+
+    /// Entries pending.
+    pub fn len(&self) -> usize {
+        self.wl.len()
+    }
+
+    /// True when converged.
+    pub fn is_empty(&self) -> bool {
+        self.wl.is_empty()
+    }
+
+    /// Swap in the next iteration's frontier built from the raw update
+    /// stream: charge the raw (duplicate-laden) output buffer alongside
+    /// the input buffer (double buffering), run the condensing pass
+    /// (charged as an auxiliary kernel), then release the old buffer.
+    pub fn advance(&mut self, ctx: &mut ExecCtx, g: &Csr, updated: &[NodeId]) -> Result<()> {
+        let raw_entries = updated.len() as u64;
+        ctx.metrics.peak_worklist_entries =
+            ctx.metrics.peak_worklist_entries.max(raw_entries);
+
+        // Double buffer: input stays allocated while the raw output fills.
+        let raw_bytes = self.entry_bytes * raw_entries;
+        ctx.mem.charge(self.label, raw_bytes)?;
+
+        // Host-side: O(n) bitset dedup (the simulated device still pays the
+        // condensing kernel below).
+        let mut next = NodeWorklist::new();
+        if self.seen.len() * 64 < g.num_nodes() {
+            self.seen.resize(g.num_nodes().div_ceil(64), 0);
+        }
+        for &n in updated {
+            let (w, b) = (n as usize / 64, n as usize % 64);
+            if self.seen[w] & (1 << b) == 0 {
+                self.seen[w] |= 1 << b;
+                next.push(n, g.degree(n));
+            }
+        }
+        for &n in next.nodes() {
+            self.seen[n as usize / 64] = 0; // clear only touched words
+        }
+        let removed = updated.len() - next.len();
+        ctx.metrics.condensed_away += removed as u64;
+        if raw_entries > 0 {
+            // Condensing = sort + dedup over the raw buffer.
+            ctx.charge_aux_kernel(raw_entries, 2);
+        }
+
+        // Old input buffer + the duplicate tail are released; the condensed
+        // buffer remains charged.
+        let keep = self.entry_bytes * next.len() as u64;
+        ctx.mem.release(self.label, self.charged + raw_bytes - keep);
+        self.charged = keep;
+        self.wl = next;
+        Ok(())
+    }
+
+    /// Release everything (end of run).
+    pub fn release(&mut self, ctx: &mut ExecCtx) {
+        ctx.mem.release(self.label, self.charged);
+        self.charged = 0;
+        self.wl.clear();
+    }
+}
+
+/// Charge the CSR graph storage and the distance array at `init` time.
+pub fn charge_graph_and_dist(ctx: &mut ExecCtx, g: &Csr, label: &'static str) -> Result<()> {
+    use crate::graph::Graph;
+    ctx.mem.charge(label, g.memory_bytes())?;
+    ctx.mem.charge("dist", 4 * g.num_nodes() as u64)?;
+    Ok(())
+}
+
+/// Initialize `ctx.dist` to INF except the source.
+pub fn init_dist(ctx: &mut ExecCtx, n: usize, source: NodeId) {
+    ctx.dist = vec![crate::INF; n];
+    if (source as usize) < n {
+        ctx.dist[source as usize] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::Edge;
+    use crate::sim::DeviceSpec;
+
+    fn chain() -> Csr {
+        Csr::from_edges(3, &[Edge::new(0, 1, 1), Edge::new(1, 2, 1)]).unwrap()
+    }
+
+    #[test]
+    fn advance_condenses_duplicates() {
+        let g = chain();
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        let mut f = NodeFrontier::seeded(&mut ctx, &g, 0, "wl", 4).unwrap();
+        f.advance(&mut ctx, &g, &[1, 1, 2, 1]).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(ctx.metrics.condensed_away, 2);
+        assert_eq!(ctx.metrics.peak_worklist_entries, 4);
+    }
+
+    #[test]
+    fn memory_tracks_peak_raw_buffer() {
+        let g = chain();
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        let mut f = NodeFrontier::seeded(&mut ctx, &g, 0, "wl", 8).unwrap();
+        f.advance(&mut ctx, &g, &[1, 1, 1, 1, 1]).unwrap();
+        // peak = input (1 entry) + raw output (5 entries) at 8 B
+        assert_eq!(ctx.mem.peak(), 8 * 6);
+        // after condensing only 1 entry remains charged
+        assert_eq!(ctx.mem.current(), 8);
+        f.release(&mut ctx);
+        assert_eq!(ctx.mem.current(), 0);
+    }
+
+    #[test]
+    fn budget_violation_surfaces_as_oom() {
+        let g = chain();
+        let dev = DeviceSpec::k20c();
+        let mut ctx =
+            ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer)).with_budget(16);
+        let mut f = NodeFrontier::seeded(&mut ctx, &g, 0, "wl", 4).unwrap();
+        let err = f.advance(&mut ctx, &g, &[1; 100]).unwrap_err();
+        assert!(err.is_oom());
+    }
+}

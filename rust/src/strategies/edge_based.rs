@@ -1,0 +1,175 @@
+//! EP — edge-based task distribution (§II-B, Figure 2).
+//!
+//! The worklist holds *edges*; the kernel launches the maximum number of
+//! resident threads and assigns edges round-robin, which both balances load
+//! (each thread gets ⌈W/T⌉ edges) and coalesces memory access (consecutive
+//! threads read consecutive worklist slots). Requires the COO-denormalized
+//! form: 3·E·4 bytes of device memory versus CSR's (N+2E)·4 — the reason
+//! EP cannot run the Graph500 graphs (§IV-A).
+
+use super::common::init_dist;
+use super::{Strategy, StrategyKind, StrategyParams};
+use crate::coordinator::{Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::error::Result;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::sim::AccessPattern;
+use crate::worklist::EdgeWorklist;
+use std::sync::Arc;
+
+/// The edge-based parallelism strategy.
+pub struct EdgeParallel {
+    graph: Arc<Csr>,
+    params: StrategyParams,
+    input: EdgeWorklist,
+    charged: u64,
+}
+
+impl EdgeParallel {
+    /// New EP instance over `graph`.
+    pub fn new(graph: Arc<Csr>, params: StrategyParams) -> Self {
+        EdgeParallel {
+            graph,
+            params,
+            input: EdgeWorklist::new(),
+            charged: 0,
+        }
+    }
+
+    fn num_threads(&self, ctx: &ExecCtx) -> u32 {
+        self.params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads)
+    }
+}
+
+impl Strategy for EdgeParallel {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::EP
+    }
+
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()> {
+        // EP stores the graph in COO: source endpoints duplicated per edge.
+        // This is the allocation that OOMs on Graph500-scale graphs.
+        let coo_bytes = 4 * 3 * self.graph.num_edges() as u64;
+        ctx.mem.charge("coo", coo_bytes)?;
+        ctx.mem.charge("dist", 4 * self.graph.num_nodes() as u64)?;
+        // Converting CSR → COO is a one-time streaming pass (overhead).
+        ctx.charge_aux_kernel(self.graph.num_edges() as u64, 1);
+
+        init_dist(ctx, self.graph.num_nodes(), source);
+        self.input = EdgeWorklist::seeded(&self.graph, source);
+        self.charged = self.input.memory_bytes();
+        ctx.mem.charge("ep-wl", self.charged)?;
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.input.len()
+    }
+
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let total = self.input.len();
+        let threads = (self.num_threads(ctx) as usize).min(total).max(1) as u32;
+
+        let work = KernelWork {
+            name: "ep_relax",
+            src: self.input.srcs().to_vec(),
+            eid: self.input.edges().to_vec(),
+            assignment: Assignment::Strided {
+                num_threads: threads,
+            },
+            // Round-robin assignment: consecutive lanes touch consecutive
+            // worklist slots — coalesced (§II-B).
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Edges,
+        };
+        let result = ctx.launch(&self.graph, &work, None)?;
+
+        // Build the next edge worklist: all outgoing edges of every updated
+        // node (duplicates included — the worklist explosion of §II-B).
+        let mut next = EdgeWorklist::new();
+        for &n in &result.updated {
+            next.push_node_edges(&self.graph, n);
+        }
+        let raw_entries = next.len() as u64;
+        ctx.metrics.peak_worklist_entries =
+            ctx.metrics.peak_worklist_entries.max(raw_entries);
+
+        // Double buffer: input + raw output simultaneously resident.
+        ctx.mem.charge("ep-wl", next.memory_bytes())?;
+
+        // Condense when the worklist outgrows the edge count (§II-B's
+        // condensing overhead).
+        if next.len() > self.graph.num_edges() {
+            let removed = next.condense();
+            ctx.metrics.condensed_away += removed as u64;
+            ctx.charge_aux_kernel(raw_entries, 2);
+        }
+
+        let keep = next.memory_bytes();
+        ctx.mem
+            .release("ep-wl", self.charged + 8 * raw_entries - keep);
+        self.charged = keep;
+        self.input = next;
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32> {
+        ctx.dist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    fn run_ep(g: &Arc<Csr>, algo: AlgoKind) -> Vec<u32> {
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, algo, Box::new(NativeRelaxer));
+        let mut s = EdgeParallel::new(g.clone(), StrategyParams::default());
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        s.finalize(&ctx)
+    }
+
+    #[test]
+    fn ep_sssp_matches_dijkstra() {
+        let g = Arc::new(
+            crate::graph::generators::rmat(
+                8,
+                2048,
+                crate::graph::generators::RmatParams::default(),
+                5,
+            )
+            .unwrap(),
+        );
+        assert_eq!(run_ep(&g, AlgoKind::Sssp), traversal::dijkstra(&g, 0));
+    }
+
+    #[test]
+    fn ep_bfs_matches_reference() {
+        let g = Arc::new(crate::graph::generators::erdos_renyi(200, 800, 10, 2).unwrap());
+        assert_eq!(run_ep(&g, AlgoKind::Bfs), traversal::bfs_levels(&g, 0));
+    }
+
+    #[test]
+    fn ep_ooms_when_coo_exceeds_budget() {
+        let g = Arc::new(crate::graph::generators::erdos_renyi(200, 800, 10, 2).unwrap());
+        let dev = DeviceSpec::k20c();
+        // budget big enough for CSR but not COO
+        let budget = g.memory_bytes() + 100;
+        assert!(3 * 4 * g.num_edges() as u64 > budget);
+        let mut ctx =
+            ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer)).with_budget(budget);
+        let mut s = EdgeParallel::new(g.clone(), StrategyParams::default());
+        let err = s.init(&mut ctx, 0).unwrap_err();
+        assert!(err.is_oom());
+    }
+}

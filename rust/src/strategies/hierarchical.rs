@@ -1,0 +1,290 @@
+//! HP — hierarchical processing (§III-C, Figure 6).
+//!
+//! Time-decomposition of the workload: each outer iteration over the super
+//! worklist runs *sub-iterations*, each a kernel where every remaining node
+//! relaxes at most MDT of its unprocessed edges. Threads are thus
+//! load-balanced within MDT per kernel without creating child nodes (NS)
+//! or separating a node's edges across threads mid-kernel (WD).
+//!
+//! When the (sub-)worklist shrinks below the block size the strategy
+//! switches to workload decomposition to keep occupancy up — the hybrid
+//! described in §III-C ("twenty more sub-iterations would spawn one GPU
+//! thread each").
+
+use super::common::{charge_graph_and_dist, init_dist, NodeFrontier};
+use super::mdt::{auto_mdt, MdtDecision};
+use super::workload_decomp::block_offsets;
+use super::{Strategy, StrategyKind, StrategyParams};
+use crate::coordinator::{Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::error::Result;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::sim::AccessPattern;
+use crate::worklist::hierarchy::SubList;
+use std::sync::Arc;
+
+/// The hierarchical-processing strategy.
+pub struct Hierarchical {
+    graph: Arc<Csr>,
+    params: StrategyParams,
+    frontier: Option<NodeFrontier>,
+    decision: Option<MdtDecision>,
+    /// Sub-iteration kernels launched (reported in EXPERIMENTS.md).
+    pub sub_iterations: u64,
+    /// Times the WD fallback engaged.
+    pub wd_switches: u64,
+}
+
+impl Hierarchical {
+    /// New HP instance over `graph`.
+    pub fn new(graph: Arc<Csr>, params: StrategyParams) -> Self {
+        Hierarchical {
+            graph,
+            params,
+            frontier: None,
+            decision: None,
+            sub_iterations: 0,
+            wd_switches: 0,
+        }
+    }
+
+    /// The MDT in use (after `init`).
+    pub fn mdt(&self) -> Option<u32> {
+        self.decision.map(|d| d.mdt)
+    }
+
+    /// WD-style fallback kernel over an explicit edge batch.
+    fn launch_wd_style(
+        &mut self,
+        ctx: &mut ExecCtx,
+        src: Vec<NodeId>,
+        eid: Vec<u32>,
+        wl_len: u64,
+    ) -> Result<Vec<NodeId>> {
+        self.wd_switches += 1;
+        let total = src.len();
+        // WD's scan + find_offsets overheads apply to the fallback too.
+        ctx.mem.charge("hp-prefix", 4 * wl_len)?;
+        ctx.charge_aux_kernel(wl_len, 1);
+        let threads = ctx.dev.max_resident_threads;
+        let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
+        ctx.charge_aux_kernel((threads as u64).min(total as u64), 4 * log_wl);
+        let work = KernelWork {
+            name: "hp_wd_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(block_offsets(total, threads)),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 4,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&self.graph, &work, None)?;
+        ctx.mem.release("hp-prefix", 4 * wl_len);
+        Ok(result.updated)
+    }
+}
+
+impl Strategy for Hierarchical {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::HP
+    }
+
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()> {
+        charge_graph_and_dist(ctx, &self.graph, "csr")?;
+        init_dist(ctx, self.graph.num_nodes(), source);
+        let decision = match self.params.mdt_override {
+            Some(mdt) => MdtDecision {
+                mdt,
+                peak_bin: 0,
+                bins: self.params.histogram_bins,
+                max_degree: self.graph.max_degree(),
+            },
+            None => auto_mdt(&self.graph, self.params.histogram_bins),
+        };
+        // Histogram pass (overhead), as in NS.
+        ctx.charge_aux_kernel(self.graph.num_nodes() as u64, 2);
+        self.decision = Some(decision);
+        // HP super-worklist entries are node ids: 4 B.
+        self.frontier = Some(NodeFrontier::seeded(ctx, &self.graph, source, "hp-wl", 4)?);
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.frontier.as_ref().map_or(0, |f| f.len())
+    }
+
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let decision = self.decision.expect("init first");
+        let mdt = decision.mdt.max(1);
+        let block = ctx.dev.block_size as usize;
+        let frontier_nodes = {
+            let f = self.frontier.as_ref().expect("init first");
+            f.worklist().nodes().to_vec()
+        };
+        let g = self.graph.clone();
+        let mut all_updates: Vec<NodeId> = Vec::new();
+
+        if frontier_nodes.len() < block {
+            // Small super list → straight to workload decomposition.
+            let (src, eid) = crate::coordinator::exec::flatten_frontier(&g, &frontier_nodes);
+            if !src.is_empty() {
+                let ups =
+                    self.launch_wd_style(ctx, src, eid, frontier_nodes.len() as u64)?;
+                all_updates.extend(ups);
+            }
+        } else {
+            // Sub-iterations over the shrinking sub-list.
+            let degrees: Vec<u32> = frontier_nodes.iter().map(|&n| g.degree(n)).collect();
+            let mut sub = SubList::from_super(&frontier_nodes, &degrees);
+            let sub_bytes = sub.memory_bytes();
+            ctx.mem.charge("hp-sublist", sub_bytes)?;
+
+            while !sub.is_empty() {
+                if sub.len() < block {
+                    // Residual tail → WD fallback over the remaining edges.
+                    let mut src = Vec::new();
+                    let mut eid = Vec::new();
+                    for c in sub.cursors() {
+                        let first = g.first_edge(c.node) + c.processed;
+                        for e in first..first + c.remaining() {
+                            src.push(c.node);
+                            eid.push(e);
+                        }
+                    }
+                    let wl_len = sub.len() as u64;
+                    let ups = self.launch_wd_style(ctx, src, eid, wl_len)?;
+                    all_updates.extend(ups);
+                    break;
+                }
+
+                // One sub-iteration: lane per node, ≤ MDT edges each.
+                self.sub_iterations += 1;
+                let mut src = Vec::new();
+                let mut eid = Vec::new();
+                let mut offsets = Vec::with_capacity(sub.len() + 1);
+                offsets.push(0u32);
+                let mut acc = 0u32;
+                for c in sub.cursors() {
+                    let take = c.remaining().min(mdt);
+                    let first = g.first_edge(c.node) + c.processed;
+                    for e in first..first + take {
+                        src.push(c.node);
+                        eid.push(e);
+                    }
+                    acc += take;
+                    offsets.push(acc);
+                }
+                let work = KernelWork {
+                    name: "hp_relax",
+                    src,
+                    eid,
+                    assignment: Assignment::Blocked(offsets),
+                    access: AccessPattern::Scattered,
+                    // cursor bookkeeping per edge
+                    extra_cycles_per_edge: 2,
+                    push: PushTarget::Node,
+                };
+                let result = ctx.launch(&g, &work, None)?;
+                all_updates.extend(result.updated);
+                sub.advance(mdt);
+                // Sub-list compaction between sub-iterations (overhead).
+                ctx.charge_aux_kernel(sub.len() as u64 + 1, 1);
+            }
+            ctx.mem.release("hp-sublist", sub_bytes);
+        }
+
+        let frontier = self.frontier.as_mut().expect("init first");
+        frontier.advance(ctx, &g, &all_updates)?;
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32> {
+        ctx.dist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    fn run_hp(g: &Arc<Csr>, algo: AlgoKind, params: StrategyParams) -> (Vec<u32>, Hierarchical) {
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, algo, Box::new(NativeRelaxer));
+        let mut s = Hierarchical::new(g.clone(), params);
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        let dist = s.finalize(&ctx);
+        (dist, s)
+    }
+
+    #[test]
+    fn hp_sssp_matches_dijkstra() {
+        let g = Arc::new(
+            crate::graph::generators::rmat(
+                9,
+                4096,
+                crate::graph::generators::RmatParams::default(),
+                23,
+            )
+            .unwrap(),
+        );
+        let (dist, _) = run_hp(&g, AlgoKind::Sssp, StrategyParams::default());
+        assert_eq!(dist, traversal::dijkstra(&g, 0));
+    }
+
+    #[test]
+    fn hp_bfs_matches_reference() {
+        let g = Arc::new(crate::graph::generators::erdos_renyi(300, 1200, 10, 6).unwrap());
+        let (dist, _) = run_hp(&g, AlgoKind::Bfs, StrategyParams::default());
+        assert_eq!(dist, traversal::bfs_levels(&g, 0));
+    }
+
+    #[test]
+    fn small_frontiers_use_wd_fallback() {
+        // A tiny graph never reaches block_size nodes → every iteration
+        // falls back to WD.
+        let g = Arc::new(crate::graph::generators::road_grid(8, 8, 5, 9).unwrap());
+        let (dist, s) = run_hp(&g, AlgoKind::Bfs, StrategyParams::default());
+        assert_eq!(dist, traversal::bfs_levels(&g, 0));
+        assert!(s.wd_switches > 0);
+        assert_eq!(s.sub_iterations, 0);
+    }
+
+    #[test]
+    fn large_frontiers_run_sub_iterations() {
+        // Frontier > 1024 nodes with degree > MDT forces sub-iterations.
+        use crate::graph::Edge;
+        let mut edges = Vec::new();
+        // source fans out to 2000 hubs; each hub fans out to 8 leaves
+        for h in 1..=2000u32 {
+            edges.push(Edge::new(0, h, 1));
+        }
+        let mut next = 2001u32;
+        for h in 1..=2000u32 {
+            for _ in 0..8 {
+                edges.push(Edge::new(h, next, 1));
+                next += 1;
+            }
+        }
+        let g = Arc::new(Csr::from_edges(next as usize, &edges).unwrap());
+        let (dist, s) = run_hp(
+            &g,
+            AlgoKind::Bfs,
+            StrategyParams {
+                mdt_override: Some(3),
+                ..Default::default()
+            },
+        );
+        assert_eq!(dist, traversal::bfs_levels(&g, 0));
+        assert!(
+            s.sub_iterations >= 2,
+            "8-degree hubs at MDT 3 need ≥3 sub-iterations, got {}",
+            s.sub_iterations
+        );
+    }
+}

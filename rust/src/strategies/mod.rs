@@ -1,0 +1,176 @@
+//! The five load-balancing strategies (Table I).
+//!
+//! | Kind | Name                    | Origin   | Module |
+//! |------|-------------------------|----------|--------|
+//! | `BS` | node-based baseline     | existing (LonestarGPU) | [`node_based`] |
+//! | `EP` | edge-based              | existing | [`edge_based`] |
+//! | `WD` | workload decomposition  | proposed | [`workload_decomp`] |
+//! | `NS` | node splitting          | proposed | [`node_split`] |
+//! | `HP` | hierarchical processing | proposed | [`hierarchical`] |
+//!
+//! A [`Strategy`] owns its worklists and (for NS) its transformed graph; the
+//! engine drives `init` → `run_iteration` until [`Strategy::pending`] hits
+//! zero, then reads the answer back via [`Strategy::finalize`].
+
+pub mod common;
+pub mod edge_based;
+pub mod hierarchical;
+pub mod mdt;
+pub mod node_based;
+pub mod node_split;
+pub mod workload_decomp;
+
+pub use edge_based::EdgeParallel;
+pub use hierarchical::Hierarchical;
+pub use node_based::NodeBaseline;
+pub use node_split::NodeSplitting;
+pub use workload_decomp::WorkloadDecomposition;
+
+use crate::coordinator::ExecCtx;
+use crate::error::Result;
+use crate::graph::{Csr, NodeId};
+use std::sync::Arc;
+
+/// Strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Node-based baseline (LonestarGPU style).
+    BS,
+    /// Edge-based parallelism.
+    EP,
+    /// Workload decomposition.
+    WD,
+    /// Node splitting.
+    NS,
+    /// Hierarchical processing.
+    HP,
+}
+
+impl StrategyKind {
+    /// All strategies in the paper's reporting order.
+    pub const ALL: [StrategyKind; 5] = [
+        StrategyKind::BS,
+        StrategyKind::EP,
+        StrategyKind::WD,
+        StrategyKind::NS,
+        StrategyKind::HP,
+    ];
+
+    /// Short label used in figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StrategyKind::BS => "BS",
+            StrategyKind::EP => "EP",
+            StrategyKind::WD => "WD",
+            StrategyKind::NS => "NS",
+            StrategyKind::HP => "HP",
+        }
+    }
+
+    /// Whether the paper classifies it as one of the proposed dynamic
+    /// strategies.
+    pub fn is_proposed(&self) -> bool {
+        matches!(self, StrategyKind::WD | StrategyKind::NS | StrategyKind::HP)
+    }
+}
+
+impl std::str::FromStr for StrategyKind {
+    type Err = crate::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "BS" => Ok(StrategyKind::BS),
+            "EP" => Ok(StrategyKind::EP),
+            "WD" => Ok(StrategyKind::WD),
+            "NS" => Ok(StrategyKind::NS),
+            "HP" => Ok(StrategyKind::HP),
+            other => Err(crate::Error::Config(format!("unknown strategy {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Tunables shared across strategies.
+#[derive(Debug, Clone)]
+pub struct StrategyParams {
+    /// `HistogramBinCount` of the MDT heuristic (§III-B).
+    pub histogram_bins: usize,
+    /// Cap on simultaneously launched threads (defaults to the device's
+    /// maximum resident threads; EP always launches this many).
+    pub max_threads: Option<u32>,
+    /// Explicit MDT override (bypasses the histogram heuristic).
+    pub mdt_override: Option<u32>,
+}
+
+impl Default for StrategyParams {
+    fn default() -> Self {
+        StrategyParams {
+            histogram_bins: 10,
+            max_threads: None,
+            mdt_override: None,
+        }
+    }
+}
+
+/// A load-balancing strategy driving one BFS/SSSP computation.
+pub trait Strategy {
+    /// Which strategy this is.
+    fn kind(&self) -> StrategyKind;
+
+    /// One-time preparation and worklist seeding. Graph storage and any
+    /// transformation (NS's split, EP's COO build) is charged to memory and
+    /// overhead here. Sizes `ctx.dist` and sets `dist[source] = 0`.
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()>;
+
+    /// Entries remaining in the input worklist (0 ⇒ converged).
+    fn pending(&self) -> usize;
+
+    /// One outer-loop iteration: process the input worklist, produce the
+    /// next one.
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()>;
+
+    /// Distances for the *original* node ids (NS truncates its clones).
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32>;
+}
+
+/// Instantiate a strategy over `graph`.
+pub fn build_strategy(
+    kind: StrategyKind,
+    graph: Arc<Csr>,
+    params: StrategyParams,
+) -> Box<dyn Strategy> {
+    match kind {
+        StrategyKind::BS => Box::new(NodeBaseline::new(graph)),
+        StrategyKind::EP => Box::new(EdgeParallel::new(graph, params)),
+        StrategyKind::WD => Box::new(WorkloadDecomposition::new(graph, params)),
+        StrategyKind::NS => Box::new(NodeSplitting::new(graph, params)),
+        StrategyKind::HP => Box::new(Hierarchical::new(graph, params)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_str() {
+        for k in StrategyKind::ALL {
+            let parsed: StrategyKind = k.label().parse().unwrap();
+            assert_eq!(parsed, k);
+        }
+        assert!("XX".parse::<StrategyKind>().is_err());
+    }
+
+    #[test]
+    fn proposed_classification() {
+        assert!(!StrategyKind::BS.is_proposed());
+        assert!(!StrategyKind::EP.is_proposed());
+        assert!(StrategyKind::WD.is_proposed());
+        assert!(StrategyKind::NS.is_proposed());
+        assert!(StrategyKind::HP.is_proposed());
+    }
+}

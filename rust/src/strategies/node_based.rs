@@ -1,0 +1,119 @@
+//! BS — the node-based baseline (§II-A), modelling LonestarGPU-1.02's
+//! data-driven BFS/SSSP.
+//!
+//! One thread per active worklist node; the thread walks the node's entire
+//! adjacency list. Work per thread is proportional to out-degree, so warps
+//! containing a high-degree node stall all 32 lanes — the load imbalance
+//! that motivates the paper. Strengths: CSR format (low memory), trivially
+//! simple. Weakness: high load-imbalance on skewed graphs (Table I).
+
+use super::common::{charge_graph_and_dist, init_dist, NodeFrontier};
+use super::{Strategy, StrategyKind};
+use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::error::Result;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::sim::AccessPattern;
+use std::sync::Arc;
+
+/// The node-based baseline strategy.
+pub struct NodeBaseline {
+    graph: Arc<Csr>,
+    frontier: Option<NodeFrontier>,
+}
+
+impl NodeBaseline {
+    /// New baseline over `graph`.
+    pub fn new(graph: Arc<Csr>) -> Self {
+        NodeBaseline {
+            graph,
+            frontier: None,
+        }
+    }
+}
+
+impl Strategy for NodeBaseline {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::BS
+    }
+
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()> {
+        charge_graph_and_dist(ctx, &self.graph, "csr")?;
+        init_dist(ctx, self.graph.num_nodes(), source);
+        // BS worklists hold node ids only: 4 B per entry.
+        self.frontier = Some(NodeFrontier::seeded(ctx, &self.graph, source, "bs-wl", 4)?);
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.frontier.as_ref().map_or(0, |f| f.len())
+    }
+
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let frontier = self.frontier.as_mut().expect("init first");
+        let nodes = frontier.worklist().nodes().to_vec();
+        let (src, eid) = flatten_frontier(&self.graph, &nodes);
+
+        // One lane per node: lane l owns the contiguous span of node l's
+        // edges — per-lane offsets are the prefix sums of the degrees.
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &n in &nodes {
+            acc += self.graph.degree(n);
+            offsets.push(acc);
+        }
+
+        let work = KernelWork {
+            name: "bs_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            // Lanes walk disjoint adjacency lists: uncoalesced.
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&self.graph, &work, None)?;
+        frontier.advance(ctx, &self.graph, &result.updated)?;
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32> {
+        ctx.dist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    #[test]
+    fn bs_sssp_matches_dijkstra_on_random_graph() {
+        let g = Arc::new(crate::graph::generators::erdos_renyi(128, 512, 10, 3).unwrap());
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        let mut s = NodeBaseline::new(g.clone());
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        assert_eq!(s.finalize(&ctx), traversal::dijkstra(&g, 0));
+    }
+
+    #[test]
+    fn bs_bfs_matches_reference() {
+        let g = Arc::new(crate::graph::generators::road_grid(12, 12, 9, 5).unwrap());
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        let mut s = NodeBaseline::new(g.clone());
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        assert_eq!(s.finalize(&ctx), traversal::bfs_levels(&g, 0));
+    }
+}

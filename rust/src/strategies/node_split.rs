@@ -1,0 +1,321 @@
+//! NS — node splitting (§III-B, Figure 5).
+//!
+//! A preprocessing pass splits every node with out-degree > MDT into a
+//! parent plus ⌈degree/MDT⌉−1 child clones, distributing the outgoing
+//! edges evenly; MDT comes from the histogram heuristic ([`super::mdt`]).
+//! Incoming edges stay on the parent, which mirrors attribute updates onto
+//! its children (extra atomics in the processing kernel). The graph stays
+//! in CSR and the kernel is plain node-based processing — but no thread
+//! ever walks more than MDT edges.
+//!
+//! Charged costs: the histogram pass, the split rebuild (which transiently
+//! holds *two* CSRs on the device — the allocation that breaks NS on
+//! Graph500-scale graphs), the parent→child map, and the per-update child
+//! mirroring atomics.
+
+use super::common::{init_dist, NodeFrontier};
+use super::mdt::{auto_mdt, MdtDecision};
+use super::{Strategy, StrategyKind, StrategyParams};
+use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget, SplitMap};
+use crate::error::Result;
+use crate::graph::{Csr, Edge, Graph, NodeId};
+use crate::sim::AccessPattern;
+use std::sync::Arc;
+
+/// Result of the split transform.
+#[derive(Debug, Clone)]
+pub struct SplitGraph {
+    /// The rebuilt graph: original ids `0..n` (parents keep their id),
+    /// children appended at `n..n'`.
+    pub graph: Csr,
+    /// Parent → children ranges.
+    pub map: SplitMap,
+    /// The MDT decision used.
+    pub decision: MdtDecision,
+    /// Number of nodes that were split.
+    pub split_nodes: u64,
+}
+
+/// Split every node of `g` with out-degree > `mdt`, distributing its edges
+/// evenly over parent + children (each ending with ≤ `mdt` edges).
+pub fn split_graph(g: &Csr, decision: MdtDecision) -> SplitGraph {
+    let n = g.num_nodes();
+    let mdt = decision.mdt.max(1);
+    let mut next_id = n as u32;
+    let mut ranges = vec![(0u32, 0u32); n];
+    let mut split_nodes = 0u64;
+    let mut edges: Vec<Edge> = Vec::with_capacity(g.num_edges());
+
+    for u in 0..n as u32 {
+        let deg = g.degree(u);
+        let nbrs = g.neighbors(u);
+        let wts = g.edge_weights(u);
+        if deg <= mdt {
+            for i in 0..deg as usize {
+                edges.push(Edge::new(u, nbrs[i], wts[i]));
+            }
+            continue;
+        }
+        split_nodes += 1;
+        let pieces = ((deg + mdt - 1) / mdt) as usize;
+        let children = pieces - 1;
+        let first_child = next_id;
+        next_id += children as u32;
+        ranges[u as usize] = (first_child, next_id);
+        // Distribute edges evenly: piece i gets deg/pieces (+1 for the
+        // first deg%pieces pieces) — every piece ends ≤ MDT.
+        let base = deg as usize / pieces;
+        let extra = deg as usize % pieces;
+        let mut at = 0usize;
+        for piece in 0..pieces {
+            let take = base + usize::from(piece < extra);
+            let owner = if piece == 0 {
+                u
+            } else {
+                first_child + (piece as u32 - 1)
+            };
+            for i in at..at + take {
+                edges.push(Edge::new(owner, nbrs[i], wts[i]));
+            }
+            at += take;
+        }
+        debug_assert_eq!(at, deg as usize);
+    }
+
+    let graph = Csr::from_edges(next_id as usize, &edges).expect("split preserves validity");
+    SplitGraph {
+        graph,
+        map: SplitMap::new(ranges),
+        decision,
+        split_nodes,
+    }
+}
+
+/// The node-splitting strategy.
+pub struct NodeSplitting {
+    original: Arc<Csr>,
+    params: StrategyParams,
+    split: Option<SplitGraph>,
+    frontier: Option<NodeFrontier>,
+}
+
+impl NodeSplitting {
+    /// New NS instance over `graph`.
+    pub fn new(graph: Arc<Csr>, params: StrategyParams) -> Self {
+        NodeSplitting {
+            original: graph,
+            params,
+            split: None,
+            frontier: None,
+        }
+    }
+
+    /// The split result (after `init`), for Figure 10 reporting.
+    pub fn split_result(&self) -> Option<&SplitGraph> {
+        self.split.as_ref()
+    }
+}
+
+impl Strategy for NodeSplitting {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::NS
+    }
+
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()> {
+        let g = &self.original;
+        let n = g.num_nodes();
+
+        // Histogram + MDT determination (overhead, §III-B).
+        let decision = match self.params.mdt_override {
+            Some(mdt) => MdtDecision {
+                mdt,
+                peak_bin: 0,
+                bins: self.params.histogram_bins,
+                max_degree: g.max_degree(),
+            },
+            None => auto_mdt(g, self.params.histogram_bins),
+        };
+        ctx.charge_aux_kernel(n as u64, 2);
+
+        // The split rebuild: old and new CSR transiently coexist on the
+        // device. Charge both, then release the old one.
+        ctx.mem.charge("csr-old", g.memory_bytes())?;
+        let split = split_graph(g, decision);
+        ctx.mem.charge("csr", split.graph.memory_bytes())?;
+        ctx.mem.release("csr-old", g.memory_bytes());
+        // Rebuild pass streams every edge once (overhead kernel).
+        ctx.charge_aux_kernel(g.num_edges() as u64 + n as u64, 2);
+
+        let n_split = split.graph.num_nodes();
+        // Parent→child map: 8 B per original node.
+        ctx.mem.charge("ns-map", 8 * n as u64)?;
+        ctx.mem.charge("dist", 4 * n_split as u64)?;
+        init_dist(ctx, n_split, source);
+
+        // Seed: the source parent and its children (their dist mirrors 0).
+        let mut seeds = vec![source];
+        for child in split.map.children(source) {
+            ctx.dist[child as usize] = 0;
+            seeds.push(child);
+        }
+        let mut frontier = NodeFrontier::seeded(ctx, &split.graph, seeds[0], "ns-wl", 4)?;
+        if seeds.len() > 1 {
+            frontier.advance(ctx, &split.graph, &seeds)?;
+        }
+        self.split = Some(split);
+        self.frontier = Some(frontier);
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.frontier.as_ref().map_or(0, |f| f.len())
+    }
+
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let split = self.split.as_ref().expect("init first");
+        let frontier = self.frontier.as_mut().expect("init first");
+        let g = &split.graph;
+        let nodes = frontier.worklist().nodes().to_vec();
+        let (src, eid) = flatten_frontier(g, &nodes);
+
+        // One lane per (possibly child) node — bounded by MDT edges.
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &nd in &nodes {
+            acc += g.degree(nd);
+            offsets.push(acc);
+        }
+
+        let work = KernelWork {
+            name: "ns_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(g, &work, Some(&split.map))?;
+        frontier.advance(ctx, g, &result.updated)?;
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32> {
+        // Children are clones; the original ids hold the answer.
+        ctx.dist[..self.original.num_nodes()].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::stats::DegreeStats;
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    fn decision(mdt: u32, max_degree: u32) -> MdtDecision {
+        MdtDecision {
+            mdt,
+            peak_bin: 0,
+            bins: 10,
+            max_degree,
+        }
+    }
+
+    #[test]
+    fn paper_figure5_example() {
+        // A node with 7 outgoing edges, MDT = 4 → parent keeps 4, one child
+        // gets 3 (even distribution: 4+3).
+        let edges: Vec<Edge> = (1..8u32).map(|v| Edge::new(0, v, 1)).collect();
+        let g = Csr::from_edges(8, &edges).unwrap();
+        let s = split_graph(&g, decision(4, 7));
+        assert_eq!(s.split_nodes, 1);
+        assert_eq!(s.graph.num_nodes(), 9);
+        assert_eq!(s.graph.degree(0), 4);
+        assert_eq!(s.graph.degree(8), 3);
+        assert_eq!(s.map.children(0).collect::<Vec<_>>(), vec![8]);
+        assert_eq!(s.graph.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn split_bounds_max_degree_by_mdt() {
+        let g = crate::graph::generators::rmat(
+            10,
+            8 << 10,
+            crate::graph::generators::RmatParams::default(),
+            3,
+        )
+        .unwrap();
+        let d = auto_mdt(&g, 10);
+        let s = split_graph(&g, d);
+        let st = DegreeStats::of(&s.graph);
+        assert!(
+            st.max <= d.mdt,
+            "post-split max degree {} exceeds MDT {}",
+            st.max,
+            d.mdt
+        );
+        assert_eq!(s.graph.num_edges(), g.num_edges(), "no edges added/lost");
+    }
+
+    #[test]
+    fn few_nodes_split_in_practice() {
+        // Paper: "less than 5% of the nodes undergo split".
+        let g = crate::graph::generators::rmat(
+            12,
+            8 << 12,
+            crate::graph::generators::RmatParams::default(),
+            4,
+        )
+        .unwrap();
+        let d = auto_mdt(&g, 10);
+        let s = split_graph(&g, d);
+        let frac = s.split_nodes as f64 / g.num_nodes() as f64;
+        assert!(frac < 0.05, "{:.1}% of nodes split", frac * 100.0);
+    }
+
+    #[test]
+    fn unsplit_graph_is_identity() {
+        let g = crate::graph::generators::road_grid(8, 8, 5, 2).unwrap();
+        let s = split_graph(&g, decision(100, 8));
+        assert_eq!(s.graph, g);
+        assert!(s.map.is_trivial());
+    }
+
+    fn run_ns(g: &Arc<Csr>, algo: AlgoKind, source: NodeId) -> Vec<u32> {
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, algo, Box::new(NativeRelaxer));
+        let mut s = NodeSplitting::new(g.clone(), StrategyParams::default());
+        s.init(&mut ctx, source).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        s.finalize(&ctx)
+    }
+
+    #[test]
+    fn ns_sssp_matches_dijkstra_on_skewed_graph() {
+        let g = Arc::new(
+            crate::graph::generators::rmat(
+                9,
+                4096,
+                crate::graph::generators::RmatParams::default(),
+                17,
+            )
+            .unwrap(),
+        );
+        assert_eq!(run_ns(&g, AlgoKind::Sssp, 0), traversal::dijkstra(&g, 0));
+    }
+
+    #[test]
+    fn ns_bfs_matches_reference_with_split_source() {
+        // Source is itself a high-degree (split) node.
+        let mut edges: Vec<Edge> = (1..64u32).map(|v| Edge::new(0, v, 1)).collect();
+        edges.extend((1..63u32).map(|v| Edge::new(v, v + 1, 1)));
+        let g = Arc::new(Csr::from_edges(64, &edges).unwrap());
+        assert_eq!(run_ns(&g, AlgoKind::Bfs, 0), traversal::bfs_levels(&g, 0));
+    }
+}

@@ -1,0 +1,226 @@
+//! WD — workload decomposition (§III-A, Figures 3 and 4).
+//!
+//! The worklist still holds nodes (CSR format survives), but the frontier's
+//! edges are block-partitioned: with `W` frontier edges and `T` threads,
+//! each thread takes a contiguous chunk of `⌈W/T⌉` edges, which may span
+//! node boundaries. The per-thread starting (node, edge) offsets are found
+//! by a `find_offsets` kernel that binary-searches the prefix sums of the
+//! active nodes' out-degrees (the paper uses Thrust's inclusive scan).
+//!
+//! Costs charged per iteration, as the paper describes: the scan kernel,
+//! the `find_offsets` kernel, the offsets array (8 B × T), the degree
+//! array in the worklist (8 B entries), per-edge node-boundary bookkeeping
+//! in the main kernel, and uncoalesced access (a node's edges split across
+//! threads).
+
+use super::common::{charge_graph_and_dist, init_dist, NodeFrontier};
+use super::{Strategy, StrategyKind, StrategyParams};
+use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::error::Result;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::sim::AccessPattern;
+use std::sync::Arc;
+
+/// The workload-decomposition strategy.
+pub struct WorkloadDecomposition {
+    graph: Arc<Csr>,
+    params: StrategyParams,
+    frontier: Option<NodeFrontier>,
+    offsets_charged: u64,
+}
+
+impl WorkloadDecomposition {
+    /// New WD instance over `graph`.
+    pub fn new(graph: Arc<Csr>, params: StrategyParams) -> Self {
+        WorkloadDecomposition {
+            graph,
+            params,
+            frontier: None,
+            offsets_charged: 0,
+        }
+    }
+
+    fn num_threads(&self, ctx: &ExecCtx) -> u32 {
+        self.params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads)
+    }
+}
+
+/// Compute the blocked per-lane offsets for `total` edges over at most
+/// `max_threads` lanes: `⌈total/T⌉` edges per lane (the last lane may get
+/// fewer).
+pub fn block_offsets(total: usize, max_threads: u32) -> Vec<u32> {
+    if total == 0 {
+        return vec![0];
+    }
+    let threads = (max_threads as usize).min(total).max(1);
+    let per = (total + threads - 1) / threads;
+    let mut offsets = Vec::with_capacity(threads + 1);
+    let mut at = 0usize;
+    offsets.push(0);
+    while at < total {
+        at = (at + per).min(total);
+        offsets.push(at as u32);
+    }
+    offsets
+}
+
+impl Strategy for WorkloadDecomposition {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::WD
+    }
+
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()> {
+        charge_graph_and_dist(ctx, &self.graph, "csr")?;
+        init_dist(ctx, self.graph.num_nodes(), source);
+        // WD worklists carry (node, outdegree): 8 B per entry (§III-A's
+        // "two associative arrays").
+        self.frontier = Some(NodeFrontier::seeded(ctx, &self.graph, source, "wd-wl", 8)?);
+        // Persistent offsets array-of-struct: 8 B per thread.
+        let t = self.num_threads(ctx) as u64;
+        ctx.mem.charge("wd-offsets", 8 * t)?;
+        self.offsets_charged = 8 * t;
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.frontier.as_ref().map_or(0, |f| f.len())
+    }
+
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let max_threads = self.num_threads(ctx);
+        let frontier = self.frontier.as_mut().expect("init first");
+        let nodes = frontier.worklist().nodes().to_vec();
+        let wl_len = nodes.len() as u64;
+        let (src, eid) = flatten_frontier(&self.graph, &nodes);
+        let total = src.len();
+
+        // Overhead kernel 1: inclusive scan of the worklist's degree array
+        // (Thrust API in the paper, Line 10 of Fig. 4). The prefix-sum
+        // array is a transient allocation of 4 B per worklist entry.
+        ctx.mem.charge("wd-prefix", 4 * wl_len)?;
+        ctx.charge_aux_kernel(wl_len, 1);
+
+        // Overhead kernel 2: find_offsets — each of T threads binary
+        // searches the prefix sums for its starting (node, edge) pair.
+        let threads = (max_threads as usize).min(total.max(1)) as u64;
+        let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
+        ctx.charge_aux_kernel(threads, 4 * log_wl);
+
+        let offsets = block_offsets(total, max_threads);
+        let work = KernelWork {
+            name: "wd_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            // A node's edges are separated across threads; lanes read
+            // disjoint chunk starts — uncoalesced (§III-A).
+            access: AccessPattern::Scattered,
+            // The while-loop checking node boundaries (Fig. 4, line 18).
+            extra_cycles_per_edge: 4,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&self.graph, &work, None)?;
+
+        ctx.mem.release("wd-prefix", 4 * wl_len);
+        frontier.advance(ctx, &self.graph, &result.updated)?;
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32> {
+        ctx.dist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    #[test]
+    fn block_offsets_cover_everything_contiguously() {
+        for total in [0usize, 1, 7, 100, 1000] {
+            for t in [1u32, 3, 32, 1024] {
+                let off = block_offsets(total, t);
+                assert_eq!(*off.first().unwrap(), 0);
+                assert_eq!(*off.last().unwrap() as usize, total);
+                assert!(off.windows(2).all(|w| w[0] <= w[1]));
+                // chunk sizes differ by at most per
+                if total > 0 {
+                    let per = (total + (t as usize).min(total) - 1) / (t as usize).min(total);
+                    assert!(off.windows(2).all(|w| (w[1] - w[0]) as usize <= per));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wd_sssp_matches_dijkstra_on_skewed_graph() {
+        let g = Arc::new(
+            crate::graph::generators::rmat(
+                9,
+                4096,
+                crate::graph::generators::RmatParams::default(),
+                13,
+            )
+            .unwrap(),
+        );
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        let mut s = WorkloadDecomposition::new(g.clone(), StrategyParams::default());
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        assert_eq!(s.finalize(&ctx), traversal::dijkstra(&g, 0));
+        // WD must have paid scan + find_offsets overheads
+        assert!(ctx.metrics.overhead_cycles > 0);
+    }
+
+    #[test]
+    fn wd_bfs_matches_reference() {
+        let g = Arc::new(crate::graph::generators::road_grid(10, 10, 5, 8).unwrap());
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        let mut s = WorkloadDecomposition::new(g.clone(), StrategyParams::default());
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        assert_eq!(s.finalize(&ctx), traversal::bfs_levels(&g, 0));
+    }
+
+    #[test]
+    fn wd_balances_better_than_bs_on_star() {
+        // a star graph: BS puts all edges on one lane; WD spreads them.
+        use crate::graph::Edge;
+        let edges: Vec<Edge> = (1..257u32).map(|v| Edge::new(0, v, 1)).collect();
+        let g = Arc::new(Csr::from_edges(257, &edges).unwrap());
+        let dev = DeviceSpec::k20c();
+
+        let mut ctx_bs = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        let mut bs = crate::strategies::NodeBaseline::new(g.clone());
+        bs.init(&mut ctx_bs, 0).unwrap();
+        while bs.pending() > 0 {
+            bs.run_iteration(&mut ctx_bs).unwrap();
+        }
+
+        let mut ctx_wd = ExecCtx::new(&dev, AlgoKind::Bfs, Box::new(NativeRelaxer));
+        let mut wd = WorkloadDecomposition::new(g.clone(), StrategyParams::default());
+        wd.init(&mut ctx_wd, 0).unwrap();
+        while wd.pending() > 0 {
+            wd.run_iteration(&mut ctx_wd).unwrap();
+        }
+
+        assert!(
+            ctx_wd.metrics.kernel_cycles < ctx_bs.metrics.kernel_cycles,
+            "WD kernel {} should beat BS kernel {} on a star",
+            ctx_wd.metrics.kernel_cycles,
+            ctx_bs.metrics.kernel_cycles
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Plain-binary bench harness (a `criterion` stand-in): warmup + timed
+//! iterations with mean / stddev / min reporting and optional JSON output.
+//!
+//! `cargo bench` runs each `benches/*.rs` binary; they call
+//! [`BenchSuite::case`] per measurement and [`BenchSuite::finish`] to render
+//! the table.
+
+use std::time::Instant;
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// Free-form extra column (e.g. simulated ms, MTEPS).
+    pub note: String,
+}
+
+/// Collects and prints bench cases.
+#[derive(Debug, Default)]
+pub struct BenchSuite {
+    title: String,
+    results: Vec<CaseResult>,
+}
+
+impl BenchSuite {
+    /// New suite with a title line.
+    pub fn new(title: &str) -> Self {
+        println!("== bench: {title} ==");
+        BenchSuite {
+            title: title.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `body` (returning an optional note for the row): `warmup`
+    /// unmeasured runs, then `iters` timed runs.
+    pub fn case<F>(&mut self, name: &str, warmup: u32, iters: u32, mut body: F)
+    where
+        F: FnMut() -> String,
+    {
+        assert!(iters > 0);
+        let mut note = String::new();
+        for _ in 0..warmup {
+            note = body();
+        }
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            note = body();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / samples.len() as f64;
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let r = CaseResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            min_ns: min,
+            note,
+        };
+        println!(
+            "{:<40} {:>12} {:>12} {:>12}  {}",
+            r.name,
+            fmt_ns(r.mean_ns),
+            format!("±{}", fmt_ns(r.stddev_ns)),
+            fmt_ns(r.min_ns),
+            r.note
+        );
+        self.results.push(r);
+    }
+
+    /// Render the footer; returns the results for programmatic use.
+    pub fn finish(self) -> Vec<CaseResult> {
+        println!("== {} cases in {:?} ==", self.results.len(), self.title);
+        self.results
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_collects_stats() {
+        let mut s = BenchSuite::new("test");
+        s.case("noop", 1, 5, || {
+            black_box(1 + 1);
+            "ok".into()
+        });
+        let rs = s.finish();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].iters, 5);
+        assert!(rs[0].mean_ns >= 0.0);
+        assert!(rs[0].min_ns <= rs[0].mean_ns);
+        assert_eq!(rs[0].note, "ok");
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("us"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

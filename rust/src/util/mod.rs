@@ -1,0 +1,15 @@
+//! Zero-dependency utility substrates: deterministic RNG, JSON emission,
+//! a mini property-testing harness, a bench timer, and temp-file helpers.
+//!
+//! The build environment is fully offline, so instead of pulling `rand`,
+//! `serde`, `proptest`, `criterion` and `tempfile`, the repo carries small,
+//! well-tested equivalents tailored to its needs.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod tmp;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,74 @@
+//! Mini property-testing harness: run a predicate over many seeded random
+//! cases, reporting the failing seed for reproduction. A purpose-built
+//! stand-in for `proptest` in this offline build.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the libxla rpath in this environment
+//! use lonestar_lb::util::proptest::forall;
+//! forall("addition commutes", 100, |rng| {
+//!     let a = rng.next_u32() as u64;
+//!     let b = rng.next_u32() as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `body` for `cases` deterministic seeds. Panics (with the seed) on
+/// the first failing case so `FORALL_SEED=<n>` reproduces it directly.
+pub fn forall(name: &str, cases: u64, mut body: impl FnMut(&mut Rng)) {
+    let single: Option<u64> = std::env::var("FORALL_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let seeds: Vec<u64> = match single {
+        Some(s) => vec![s],
+        None => (0..cases).collect(),
+    };
+    for seed in seeds {
+        let mut rng = Rng::seed_from_u64(0x5eed_0000 ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property {name:?} failed at seed {seed} (rerun with FORALL_SEED={seed})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Random small graph parameters commonly used by properties:
+/// `(num_nodes in [2, max_n], num_edges in [1, max_m])`.
+pub fn graph_dims(rng: &mut Rng, max_n: u32, max_m: u32) -> (usize, usize) {
+    let n = rng.gen_range_u32(2, max_n + 1) as usize;
+    let m = rng.gen_range_u32(1, max_m + 1) as usize;
+    (n, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counting", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        let mut a = Vec::new();
+        forall("collect-a", 5, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        forall("collect-b", 5, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall("fails", 10, |rng| {
+            assert!(rng.next_u64() % 2 == 0, "half the cases fail");
+        });
+    }
+}

@@ -1,0 +1,103 @@
+//! Self-cleaning temp files/dirs for tests (a `tempfile` stand-in).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A file path removed on drop.
+#[derive(Debug)]
+pub struct TempPath {
+    path: PathBuf,
+    is_dir: bool,
+}
+
+impl TempPath {
+    /// Unique path (not yet created) under the system temp dir with the
+    /// given suffix.
+    pub fn file(suffix: &str) -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "lonestar-lb-{}-{}-{}{}",
+            std::process::id(),
+            n,
+            nanos(),
+            suffix
+        ));
+        TempPath {
+            path,
+            is_dir: false,
+        }
+    }
+
+    /// Unique created directory under the system temp dir.
+    pub fn dir() -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "lonestar-lb-dir-{}-{}-{}",
+            std::process::id(),
+            n,
+            nanos()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempPath { path, is_dir: true }
+    }
+
+    /// The path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+fn nanos() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0)
+}
+
+impl Drop for TempPath {
+    fn drop(&mut self) {
+        if self.is_dir {
+            let _ = std::fs::remove_dir_all(&self.path);
+        } else {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_paths_are_unique() {
+        let a = TempPath::file(".txt");
+        let b = TempPath::file(".txt");
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn dir_exists_and_cleans_up() {
+        let p;
+        {
+            let d = TempPath::dir();
+            p = d.path().to_path_buf();
+            assert!(p.is_dir());
+            std::fs::write(p.join("x"), b"hi").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn file_cleanup_on_drop() {
+        let p;
+        {
+            let f = TempPath::file(".bin");
+            p = f.path().to_path_buf();
+            std::fs::write(&p, b"data").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+}

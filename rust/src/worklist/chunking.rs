@@ -1,0 +1,59 @@
+//! Work chunking (§IV-D): reserving worklist space with one atomic per
+//! node's edge block instead of one atomic per edge.
+//!
+//! The paper measures 1.11–3.125× (avg 1.82×) speedups for EP from this
+//! optimization (Figure 11). The policy only changes *atomic accounting*,
+//! not the resulting worklist contents — captured by [`PushPolicy::append_atomics`].
+
+/// Worklist-append reservation policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PushPolicy {
+    /// One atomic reservation per appended element (naïve).
+    PerEdge,
+    /// One atomic reservation per node's block of appended elements
+    /// (work chunking, the default — used by all paper results except the
+    /// Figure 11 ablation).
+    #[default]
+    Chunked,
+}
+
+impl PushPolicy {
+    /// Atomic operations needed to append `elements` entries that belong to
+    /// one node's chunk.
+    #[inline]
+    pub fn append_atomics(&self, elements: u64) -> u64 {
+        match self {
+            PushPolicy::PerEdge => elements,
+            PushPolicy::Chunked => {
+                if elements > 0 {
+                    1
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunked_is_one_atomic_per_block() {
+        assert_eq!(PushPolicy::Chunked.append_atomics(17), 1);
+        assert_eq!(PushPolicy::Chunked.append_atomics(0), 0);
+    }
+
+    #[test]
+    fn per_edge_is_linear() {
+        assert_eq!(PushPolicy::PerEdge.append_atomics(17), 17);
+    }
+
+    #[test]
+    fn chunked_never_exceeds_per_edge() {
+        for n in 0..100u64 {
+            assert!(PushPolicy::Chunked.append_atomics(n) <= PushPolicy::PerEdge.append_atomics(n));
+        }
+    }
+}

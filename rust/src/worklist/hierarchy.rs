@@ -1,0 +1,142 @@
+//! Sub-list cursors for hierarchical processing (§III-C).
+//!
+//! HP partitions an iteration over the super-worklist into sub-iterations:
+//! each sub-iteration processes at most `MDT` *unprocessed* outgoing edges
+//! of every remaining node; nodes whose adjacency is exhausted leave the
+//! sub-list. [`SubList`] tracks the per-node progress cursor.
+
+use crate::graph::NodeId;
+
+/// One node's residual work inside an HP iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCursor {
+    pub node: NodeId,
+    /// Edges of this node already processed in earlier sub-iterations.
+    pub processed: u32,
+    /// Total out-degree of the node.
+    pub degree: u32,
+}
+
+impl NodeCursor {
+    /// Edges still unprocessed.
+    #[inline]
+    pub fn remaining(&self) -> u32 {
+        self.degree - self.processed
+    }
+}
+
+/// The shrinking sub-list of an HP iteration.
+#[derive(Debug, Clone, Default)]
+pub struct SubList {
+    cursors: Vec<NodeCursor>,
+}
+
+impl SubList {
+    /// Build the initial sub-list from the super-worklist's (node, degree)
+    /// pairs, dropping zero-degree nodes.
+    pub fn from_super(nodes: &[NodeId], degrees: &[u32]) -> Self {
+        let cursors = nodes
+            .iter()
+            .zip(degrees)
+            .filter(|(_, &d)| d > 0)
+            .map(|(&node, &degree)| NodeCursor {
+                node,
+                processed: 0,
+                degree,
+            })
+            .collect();
+        SubList { cursors }
+    }
+
+    /// Nodes still holding unprocessed edges.
+    pub fn len(&self) -> usize {
+        self.cursors.len()
+    }
+
+    /// True when the iteration's work is complete.
+    pub fn is_empty(&self) -> bool {
+        self.cursors.is_empty()
+    }
+
+    /// Current cursors.
+    pub fn cursors(&self) -> &[NodeCursor] {
+        &self.cursors
+    }
+
+    /// Advance every node by up to `mdt` edges and drop the exhausted ones
+    /// (one sub-iteration's bookkeeping). Returns the number of edges
+    /// consumed.
+    pub fn advance(&mut self, mdt: u32) -> u64 {
+        debug_assert!(mdt > 0);
+        let mut consumed = 0u64;
+        self.cursors.retain_mut(|c| {
+            let take = c.remaining().min(mdt);
+            c.processed += take;
+            consumed += take as u64;
+            c.remaining() > 0
+        });
+        consumed
+    }
+
+    /// Total unprocessed edges across the sub-list.
+    pub fn remaining_edges(&self) -> u64 {
+        self.cursors.iter().map(|c| c.remaining() as u64).sum()
+    }
+
+    /// Simulated device bytes for the sub-list structures (node id,
+    /// processed, degree — 3 × 4 B per entry).
+    pub fn memory_bytes(&self) -> u64 {
+        3 * 4 * self.cursors.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_figure6_walkthrough() {
+        // Fig. 6: nodes 1 (deg 5) and 8 (deg 7), MDT = 3.
+        let mut sub = SubList::from_super(&[1, 8], &[5, 7]);
+        assert_eq!(sub.len(), 2);
+        // sub-iteration 1: both relax 3 edges
+        assert_eq!(sub.advance(3), 6);
+        assert_eq!(sub.len(), 2); // 1 has 2 left, 8 has 4 left
+        // sub-iteration 2: node 1 finishes (2), node 8 relaxes 3
+        assert_eq!(sub.advance(3), 5);
+        assert_eq!(sub.len(), 1);
+        // sub-iteration 3: node 8 finishes its last edge
+        assert_eq!(sub.advance(3), 1);
+        assert!(sub.is_empty());
+    }
+
+    #[test]
+    fn zero_degree_nodes_never_enter() {
+        let sub = SubList::from_super(&[3, 4], &[0, 2]);
+        assert_eq!(sub.len(), 1);
+        assert_eq!(sub.cursors()[0].node, 4);
+    }
+
+    #[test]
+    fn remaining_edges_decreases_monotonically() {
+        let mut sub = SubList::from_super(&[0, 1, 2], &[10, 1, 5]);
+        let mut prev = sub.remaining_edges();
+        while !sub.is_empty() {
+            sub.advance(4);
+            let now = sub.remaining_edges();
+            assert!(now < prev);
+            prev = now;
+        }
+        assert_eq!(prev, 0);
+    }
+
+    #[test]
+    fn total_consumed_equals_total_degree() {
+        let mut sub = SubList::from_super(&[0, 1], &[7, 9]);
+        let mut total = 0;
+        while !sub.is_empty() {
+            total += sub.advance(2);
+        }
+        assert_eq!(total, 16);
+    }
+}

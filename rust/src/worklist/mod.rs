@@ -1,0 +1,283 @@
+//! Worklist machinery for data-driven execution (§III, [9]).
+//!
+//! All strategies are *data-driven*: only active elements are processed,
+//! tracked in worklists that are double-buffered per iteration (`inputWl` /
+//! `outputWl` in the paper's pseudocode).
+//!
+//! * [`NodeWorklist`] — the node-based strategies' worklist: two associative
+//!   arrays (node id, out-degree), exactly as WD maintains them (§III-A).
+//! * [`EdgeWorklist`] — EP's worklist of edge ids; subject to the size
+//!   explosion and condensing overhead described in §II-B.
+//! * [`chunking`] — the work-chunking optimization (§IV-D): one append
+//!   reservation per node instead of per edge.
+//! * [`hierarchy`] — HP's sub-list cursors (§III-C).
+
+pub mod chunking;
+pub mod hierarchy;
+
+use crate::graph::{Csr, NodeId};
+
+/// Double-buffered worklist of active nodes with cached out-degrees.
+///
+/// The degree array is what WD's prefix-sum pass scans; caching it at push
+/// time (rather than re-reading CSR offsets) matches the paper's
+/// description of the worklist "maintaining the nodes to be processed and
+/// each node's outdegree as two associative arrays".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeWorklist {
+    nodes: Vec<NodeId>,
+    degrees: Vec<u32>,
+}
+
+impl NodeWorklist {
+    /// Empty worklist.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Worklist seeded with one source node.
+    pub fn seeded(g: &Csr, source: NodeId) -> Self {
+        let mut wl = Self::new();
+        wl.push(source, g.degree(source));
+        wl
+    }
+
+    /// Append an active node.
+    #[inline]
+    pub fn push(&mut self, node: NodeId, degree: u32) {
+        self.nodes.push(node);
+        self.degrees.push(degree);
+    }
+
+    /// Number of entries (duplicates included).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when no work remains.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Active node ids.
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// Cached out-degrees (parallel to [`nodes`]).
+    ///
+    /// [`nodes`]: NodeWorklist::nodes
+    pub fn degrees(&self) -> &[u32] {
+        &self.degrees
+    }
+
+    /// Total edges carried by the worklist (Σ degrees).
+    pub fn total_edges(&self) -> u64 {
+        self.degrees.iter().map(|&d| d as u64).sum()
+    }
+
+    /// Simulated device bytes: two 4-byte arrays.
+    pub fn memory_bytes(&self) -> u64 {
+        2 * 4 * self.nodes.len() as u64
+    }
+
+    /// Remove duplicate node entries in place (worklist condensing, §II-B),
+    /// keeping first occurrence order-independently (sort + dedup).
+    /// Returns the number of entries removed.
+    pub fn condense(&mut self) -> usize {
+        let before = self.nodes.len();
+        let mut pairs: Vec<(NodeId, u32)> = self
+            .nodes
+            .iter()
+            .copied()
+            .zip(self.degrees.iter().copied())
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup_by_key(|p| p.0);
+        self.nodes = pairs.iter().map(|p| p.0).collect();
+        self.degrees = pairs.iter().map(|p| p.1).collect();
+        before - self.nodes.len()
+    }
+
+    /// Clear, retaining capacity (double-buffer reuse).
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+        self.degrees.clear();
+    }
+}
+
+/// EP's worklist: global edge ids awaiting relaxation.
+///
+/// A node's successful update pushes *all* its outgoing edges, possibly
+/// redundantly from multiple threads — the "size explosion" of §II-B. The
+/// engine watches [`EdgeWorklist::len`] against the memory budget.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EdgeWorklist {
+    /// Global CSR edge indices.
+    edges: Vec<u32>,
+    /// Source endpoint of each pending edge — duplicated per edge, the COO
+    /// denormalization EP depends on (§II-B).
+    srcs: Vec<NodeId>,
+}
+
+impl EdgeWorklist {
+    /// Empty worklist.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Worklist seeded with all outgoing edges of `source`.
+    pub fn seeded(g: &Csr, source: NodeId) -> Self {
+        let mut wl = Self::new();
+        wl.push_node_edges(g, source);
+        wl
+    }
+
+    /// Append one edge.
+    #[inline]
+    pub fn push(&mut self, src: NodeId, eid: u32) {
+        self.edges.push(eid);
+        self.srcs.push(src);
+    }
+
+    /// Append every outgoing edge of `node` (`outputWl.push(n.edges)` in
+    /// the paper's pseudocode).
+    pub fn push_node_edges(&mut self, g: &Csr, node: NodeId) {
+        let start = g.first_edge(node);
+        let end = start + g.degree(node);
+        self.edges.extend(start..end);
+        self.srcs.extend(std::iter::repeat(node).take((end - start) as usize));
+    }
+
+    /// Number of pending edges (duplicates included).
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// True when no work remains.
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Pending global edge ids.
+    pub fn edges(&self) -> &[u32] {
+        &self.edges
+    }
+
+    /// Source endpoints (parallel to [`edges`]).
+    ///
+    /// [`edges`]: EdgeWorklist::edges
+    pub fn srcs(&self) -> &[NodeId] {
+        &self.srcs
+    }
+
+    /// Simulated device bytes: two 4-byte arrays (edge id + duplicated
+    /// source endpoint).
+    pub fn memory_bytes(&self) -> u64 {
+        2 * 4 * self.edges.len() as u64
+    }
+
+    /// Sort + dedup by edge id (condensing). Returns entries removed.
+    pub fn condense(&mut self) -> usize {
+        let before = self.edges.len();
+        let mut pairs: Vec<(u32, NodeId)> = self
+            .edges
+            .iter()
+            .copied()
+            .zip(self.srcs.iter().copied())
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup_by_key(|p| p.0);
+        self.edges = pairs.iter().map(|p| p.0).collect();
+        self.srcs = pairs.iter().map(|p| p.1).collect();
+        before - self.edges.len()
+    }
+
+    /// Clear, retaining capacity.
+    pub fn clear(&mut self) {
+        self.edges.clear();
+        self.srcs.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::graph::Edge;
+
+    fn star() -> Csr {
+        Csr::from_edges(
+            5,
+            &[
+                Edge::new(0, 1, 1),
+                Edge::new(0, 2, 1),
+                Edge::new(0, 3, 1),
+                Edge::new(1, 4, 1),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn node_worklist_tracks_degrees() {
+        let g = star();
+        let wl = NodeWorklist::seeded(&g, 0);
+        assert_eq!(wl.nodes(), &[0]);
+        assert_eq!(wl.degrees(), &[3]);
+        assert_eq!(wl.total_edges(), 3);
+    }
+
+    #[test]
+    fn node_condense_removes_duplicates() {
+        let g = star();
+        let mut wl = NodeWorklist::new();
+        wl.push(1, g.degree(1));
+        wl.push(2, g.degree(2));
+        wl.push(1, g.degree(1));
+        let removed = wl.condense();
+        assert_eq!(removed, 1);
+        assert_eq!(wl.len(), 2);
+    }
+
+    #[test]
+    fn edge_worklist_pushes_whole_adjacency() {
+        let g = star();
+        let wl = EdgeWorklist::seeded(&g, 0);
+        assert_eq!(wl.edges(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn edge_worklist_can_explode_past_e() {
+        // redundant pushes from "multiple threads": size > E is legal
+        let g = star();
+        let mut wl = EdgeWorklist::new();
+        for _ in 0..3 {
+            wl.push_node_edges(&g, 0);
+        }
+        assert!(wl.len() > g.num_edges() as usize - 1);
+        let removed = wl.condense();
+        assert_eq!(removed, 6);
+        assert_eq!(wl.len(), 3);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let g = star();
+        let nwl = NodeWorklist::seeded(&g, 0);
+        assert_eq!(nwl.memory_bytes(), 8);
+        let ewl = EdgeWorklist::seeded(&g, 0);
+        assert_eq!(ewl.memory_bytes(), 24);
+    }
+
+    #[test]
+    fn edge_worklist_tracks_srcs() {
+        let g = star();
+        let ewl = EdgeWorklist::seeded(&g, 0);
+        assert_eq!(ewl.srcs(), &[0, 0, 0]);
+        let mut ewl2 = ewl.clone();
+        ewl2.push_node_edges(&g, 1);
+        assert_eq!(ewl2.srcs(), &[0, 0, 0, 1]);
+        assert_eq!(ewl2.edges(), &[0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Backend parity: the XLA (AOT Pallas/JAX artifact) relaxer must agree
+//! bit-for-bit with the native Rust relaxer — same distances, same update
+//! counts, same simulated cycles (scheduling is backend-independent).
+//!
+//! Skipped gracefully when `make artifacts` has not run.
+
+use lonestar_lb::algorithms::{AlgoKind, NativeRelaxer, Relaxer};
+use lonestar_lb::coordinator::engine::Backend;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
+use lonestar_lb::runtime::XlaRelaxer;
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::util::Rng;
+use lonestar_lb::INF;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("LONESTAR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir}/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn relaxer_candidates_bitwise_equal() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaRelaxer::load(&dir).unwrap();
+    let mut native = NativeRelaxer;
+    let mut rng = Rng::seed_from_u64(7);
+    for len in [0usize, 1, 31, 1024, 1025, 9000, 70_000] {
+        let mut ds = Vec::with_capacity(len);
+        let mut w = Vec::with_capacity(len);
+        for _ in 0..len {
+            ds.push(if rng.gen_f64() < 0.1 {
+                INF
+            } else {
+                rng.gen_range_u32(0, 1 << 30)
+            });
+            w.push(rng.gen_range_u32(0, 1000));
+        }
+        let a = native.candidates(&ds, &w).unwrap();
+        let b = xla.candidates(&ds, &w).unwrap();
+        assert_eq!(a, b, "parity broke at batch len {len}");
+    }
+}
+
+#[test]
+fn xla_pads_and_chunks_across_batch_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaRelaxer::load(&dir).unwrap();
+    // 200k entries forces chunking at the largest artifact batch (65536).
+    let n = 200_000;
+    let ds: Vec<u32> = (0..n).map(|i| i as u32 % 1_000_003).collect();
+    let w: Vec<u32> = (0..n).map(|i| (i as u32 * 7) % 100).collect();
+    let got = xla.candidates(&ds, &w).unwrap();
+    let want = NativeRelaxer.candidates(&ds, &w).unwrap();
+    assert_eq!(got, want);
+    assert!(xla.executions >= 4, "expected multiple chunked executions");
+}
+
+#[test]
+fn full_runs_identical_across_backends() {
+    let Some(dir) = artifacts_dir() else { return };
+    let graphs = vec![
+        Arc::new(rmat(10, 8 << 10, RmatParams::default(), 3).unwrap()),
+        Arc::new(road_grid(24, 24, 100, 9).unwrap()),
+        Arc::new(erdos_renyi(512, 2048, 50, 4).unwrap()),
+    ];
+    for g in &graphs {
+        for algo in [AlgoKind::Bfs, AlgoKind::Sssp] {
+            for strategy in StrategyKind::ALL {
+                let native = run(
+                    g,
+                    &RunConfig {
+                        algo,
+                        strategy,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let xla = run(
+                    g,
+                    &RunConfig {
+                        algo,
+                        strategy,
+                        backend: Backend::Xla {
+                            dir: Some(dir.clone()),
+                        },
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                assert_eq!(native.dist, xla.dist, "{strategy}/{algo:?}: dist diverged");
+                assert_eq!(
+                    native.metrics.total_cycles(),
+                    xla.metrics.total_cycles(),
+                    "{strategy}/{algo:?}: simulated timing must be backend-independent"
+                );
+                assert_eq!(native.metrics.updates, xla.metrics.updates);
+                assert_eq!(native.metrics.iterations, xla.metrics.iterations);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! CLI smoke tests: run the built binary end-to-end over its subcommands.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_lonestar-lb"))
+}
+
+fn temp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lonestar-cli-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("usage:"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
+}
+
+#[test]
+fn run_all_strategies_tiny() {
+    let out = bin()
+        .args(["run", "--suite", "rmat10", "--scale", "tiny", "--algo", "bfs"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for k in ["BS", "EP", "WD", "NS", "HP"] {
+        assert!(text.contains(k), "missing {k} row:\n{text}");
+    }
+    assert!(text.contains("MTEPS"));
+}
+
+#[test]
+fn run_emits_json() {
+    let out = bin()
+        .args([
+            "run", "--suite", "ER10", "--scale", "tiny", "--strategy", "EP", "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let json_line = text.lines().find(|l| l.starts_with('[')).expect("json array");
+    let v = lonestar_lb::util::Json::parse(json_line).expect("valid json");
+    assert_eq!(
+        v.as_arr().unwrap()[0].get("strategy").unwrap().as_str(),
+        Some("EP")
+    );
+}
+
+#[test]
+fn generate_inspect_roundtrip() {
+    let path = temp("road.gr");
+    let out = bin()
+        .args(["generate", "road-tiny", path.to_str().unwrap(), "--scale", "tiny"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin().args(["inspect", path.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("auto MDT"));
+    assert!(text.contains("diameter"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn run_from_generated_file_and_config() {
+    let gpath = temp("er.el");
+    assert!(bin()
+        .args(["generate", "ER10", gpath.to_str().unwrap(), "--scale", "tiny"])
+        .output()
+        .unwrap()
+        .status
+        .success());
+
+    // config file driving the same graph
+    let cpath = temp("exp.conf");
+    std::fs::write(
+        &cpath,
+        format!(
+            "name = smoke\ngraph = file:{}\nalgos = bfs\nstrategies = BS,WD\n",
+            gpath.display()
+        ),
+    )
+    .unwrap();
+    let out = bin()
+        .args(["run", "--config", cpath.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("WD"));
+    std::fs::remove_file(&gpath).ok();
+    std::fs::remove_file(&cpath).ok();
+}
+
+#[test]
+fn figures_tiny_table2() {
+    let out = bin()
+        .args(["figures", "table2", "--scale", "tiny"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Table II"));
+}
+
+#[test]
+fn runtime_info_works_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let out = bin().arg("runtime-info").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("artifacts OK"));
+}

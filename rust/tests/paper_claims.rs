@@ -1,0 +1,274 @@
+//! Integration tests asserting the paper's §IV claims — the *shape* of the
+//! evaluation (who wins, roughly by what factor, where crossovers fall) on
+//! the reduced-scale suite. Absolute numbers are not compared (DESIGN.md §2).
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::figures::{fig10, fig11, fig7, fig8, FigureOpts, Outcome};
+use lonestar_lb::graph::generators::SuiteScale;
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::worklist::chunking::PushPolicy;
+use std::sync::Arc;
+
+fn opts() -> FigureOpts {
+    FigureOpts {
+        scale: SuiteScale::Small,
+        ..Default::default()
+    }
+}
+
+fn sink() -> std::io::Sink {
+    std::io::sink()
+}
+
+/// The comparison figures are expensive (full suite x 5 strategies); run
+/// each once per test binary and share.
+fn fig7_cached() -> &'static lonestar_lb::figures::ComparisonFigure {
+    static FIG: std::sync::OnceLock<lonestar_lb::figures::ComparisonFigure> =
+        std::sync::OnceLock::new();
+    FIG.get_or_init(|| fig7(&opts(), &mut sink()).unwrap())
+}
+
+fn fig8_cached() -> &'static lonestar_lb::figures::ComparisonFigure {
+    static FIG: std::sync::OnceLock<lonestar_lb::figures::ComparisonFigure> =
+        std::sync::OnceLock::new();
+    FIG.get_or_init(|| fig8(&opts(), &mut sink()).unwrap())
+}
+
+/// §IV-A: "The edge-based parallelism (EP) method performs the best, giving
+/// 60-80% smaller execution times than the baseline" (SSSP), and EP cannot
+/// run the Graph500 graphs.
+#[test]
+fn ep_dominates_sssp_where_it_fits() {
+    let fig = fig7_cached();
+    for row in &fig.rows {
+        match row.outcome(StrategyKind::EP) {
+            Outcome::Oom => {
+                assert!(
+                    row.graph.contains("Graph500"),
+                    "{}: EP must only OOM on Graph500-class graphs",
+                    row.graph
+                );
+            }
+            Outcome::Ok { .. } => {
+                let red = row.reduction_vs_bs(StrategyKind::EP).unwrap();
+                assert!(
+                    red >= 50.0,
+                    "{}: EP reduction {red:.0}% below the paper's 60-80% band",
+                    row.graph
+                );
+            }
+        }
+    }
+    // EP fails on every Graph500 instance (§IV-A).
+    let oom_count = fig
+        .rows
+        .iter()
+        .filter(|r| matches!(r.outcome(StrategyKind::EP), Outcome::Oom))
+        .count();
+    assert_eq!(oom_count, 3, "EP must OOM on all three Graph500 graphs");
+}
+
+/// §IV-A: "workload decomposition (WD) performs the best [among node-based
+/// strategies] for graphs with highly skewed or random degree distribution.
+/// For such graphs (RMAT and ER), the node splitting (NS) performs the
+/// worst."
+#[test]
+fn wd_best_and_ns_worst_node_based_on_skewed_graphs() {
+    let fig = fig7_cached();
+    for row in fig.rows.iter().filter(|r| {
+        (r.skew_class == "skewed" || r.skew_class == "uniform")
+            && !r.graph.contains("Graph500")
+    }) {
+        let t = |k| row.outcome(k).total_ms().unwrap();
+        let node_based = [
+            StrategyKind::BS,
+            StrategyKind::WD,
+            StrategyKind::NS,
+            StrategyKind::HP,
+        ];
+        let wd = t(StrategyKind::WD);
+        // Strict ordering on the power-law graphs; the milder ER class
+        // allows a 15% tolerance (at reduced scale NS's one-time cost is
+        // small enough to tie WD there).
+        let slack = if row.skew_class == "skewed" { 1.0 } else { 1.15 };
+        for k in node_based {
+            assert!(
+                wd <= t(k) * slack,
+                "{}: WD ({wd:.2}ms) must be the fastest node-based strategy (vs {k}: {:.2}ms)",
+                row.graph,
+                t(k)
+            );
+        }
+        if row.skew_class == "skewed" {
+            // NS pays its node-creation overhead on skewed graphs: worst of
+            // the *proposed* strategies (5% tolerance: NS and HP are nearly
+            // tied at reduced scale, where HP's sub-iteration overhead and
+            // NS's split cost shrink together).
+            let ns = t(StrategyKind::NS);
+            assert!(
+                ns * 1.05 >= t(StrategyKind::WD) && ns * 1.05 >= t(StrategyKind::HP),
+                "{}: NS must be the slowest proposed strategy on skewed graphs \
+                 (NS {ns:.2} vs WD {:.2} / HP {:.2})",
+                row.graph,
+                t(StrategyKind::WD),
+                t(StrategyKind::HP)
+            );
+        }
+    }
+}
+
+/// §IV-A: "the main advantage of HP is seen in dealing with larger graphs…
+/// we were able to execute only the HP strategy of the three load balancing
+/// strategies [WD, NS, HP] for these large graphs… 48-75% reduction"
+/// (our WD also completes — a documented deviation, EXPERIMENTS.md §Deviations —
+/// but NS and EP hit the wall exactly as reported).
+#[test]
+fn hp_scales_to_graph500_with_large_gains() {
+    for algo in [AlgoKind::Sssp, AlgoKind::Bfs] {
+        let fig = if algo == AlgoKind::Sssp {
+            fig7_cached()
+        } else {
+            fig8_cached()
+        };
+        for row in fig.rows.iter().filter(|r| r.graph.contains("Graph500")) {
+            assert!(
+                matches!(row.outcome(StrategyKind::NS), Outcome::Oom),
+                "{}: NS must OOM (transient double-CSR rebuild)",
+                row.graph
+            );
+            let red = row
+                .reduction_vs_bs(StrategyKind::HP)
+                .expect("HP must complete on Graph500");
+            assert!(
+                red >= 40.0,
+                "{} {:?}: HP reduction {red:.0}% below the paper's 48-75% band",
+                row.graph,
+                algo
+            );
+        }
+    }
+}
+
+/// §IV-A (BFS): "BFS is a memory-bound kernel… the associated overheads are
+/// large in general" — on the road networks the proposed node-based
+/// strategies lose to BS, unlike in SSSP.
+#[test]
+fn bfs_overheads_dominate_on_road_networks() {
+    let fig = fig8_cached();
+    for row in fig.rows.iter().filter(|r| r.skew_class == "road") {
+        let bs = row.outcome(StrategyKind::BS).total_ms().unwrap();
+        let wd = row.outcome(StrategyKind::WD).total_ms().unwrap();
+        assert!(
+            wd > bs,
+            "{}: road BFS should be overhead-bound, making WD ({wd:.2}) lose to BS ({bs:.2})",
+            row.graph
+        );
+    }
+}
+
+/// §IV-A (BFS, small diameter): "the execution time with EP is 48-68%
+/// lesser than that of BS" on RMAT/ER.
+#[test]
+fn ep_bfs_gains_on_small_diameter_graphs() {
+    let fig = fig8_cached();
+    for row in fig.rows.iter().filter(|r| {
+        (r.skew_class == "skewed" || r.skew_class == "uniform")
+            && !r.graph.contains("Graph500")
+    }) {
+        let red = row.reduction_vs_bs(StrategyKind::EP).unwrap();
+        assert!(
+            red >= 48.0,
+            "{}: EP BFS reduction {red:.0}% below the paper's 48-68% band",
+            row.graph
+        );
+    }
+}
+
+/// §IV-C: node splitting bounds every degree by MDT, and the histogram
+/// heuristic lands in the paper's reported ranges (road/ER: 2-4; RMAT:
+/// ≈ maxDegree/10, i.e. 118 for max 1181).
+#[test]
+fn fig10_mdt_bands_and_degree_bounding() {
+    let rows = fig10(&opts(), &mut sink()).unwrap();
+    for r in &rows {
+        assert!(r.max_after <= r.mdt, "{}: split must bound degrees", r.graph);
+        if r.graph.starts_with("road") {
+            assert!(
+                (2..=5).contains(&r.mdt),
+                "{}: road MDT {} outside the paper's band",
+                r.graph,
+                r.mdt
+            );
+        }
+        if r.graph.starts_with("rmat") {
+            let tenth = r.max_before / 10;
+            assert!(
+                r.mdt.abs_diff(tenth) <= tenth / 2 + 1,
+                "{}: rmat MDT {} should be ~max/10 = {}",
+                r.graph,
+                r.mdt,
+                tenth
+            );
+            // "less than 5% of the nodes undergo split"
+            let frac = r.split_nodes as f64 / r.nodes_before as f64;
+            assert!(frac < 0.05, "{}: {:.1}% of nodes split", r.graph, 100.0 * frac);
+        }
+    }
+}
+
+/// §IV-D: work chunking gives 1.11-3.125× (avg 1.82×) over per-edge appends.
+#[test]
+fn fig11_chunking_band() {
+    let rows = fig11(&opts(), &mut sink()).unwrap();
+    assert!(!rows.is_empty());
+    let avg: f64 = rows.iter().map(|r| r.speedup).sum::<f64>() / rows.len() as f64;
+    for r in &rows {
+        assert!(
+            (1.0..=4.5).contains(&r.speedup),
+            "{}: chunking speedup {:.2}x outside a plausible band",
+            r.graph,
+            r.speedup
+        );
+    }
+    assert!(
+        (1.4..=2.6).contains(&avg),
+        "average chunking speedup {avg:.2}x too far from the paper's 1.82x"
+    );
+}
+
+/// The per-edge push policy changes only *performance*, never the result.
+#[test]
+fn chunking_does_not_change_results() {
+    let g = Arc::new(
+        lonestar_lb::graph::generators::rmat(
+            10,
+            8 << 10,
+            lonestar_lb::graph::generators::RmatParams::default(),
+            5,
+        )
+        .unwrap(),
+    );
+    let base = RunConfig {
+        strategy: StrategyKind::EP,
+        ..Default::default()
+    };
+    let chunked = run(
+        &g,
+        &RunConfig {
+            push_policy: PushPolicy::Chunked,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let per_edge = run(
+        &g,
+        &RunConfig {
+            push_policy: PushPolicy::PerEdge,
+            ..base
+        },
+    )
+    .unwrap();
+    assert_eq!(chunked.dist, per_edge.dist);
+    assert!(per_edge.metrics.total_cycles() > chunked.metrics.total_cycles());
+}

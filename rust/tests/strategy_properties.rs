@@ -1,0 +1,186 @@
+//! Property-based integration tests: randomized graphs through every
+//! strategy and algorithm, checked against the serial oracles, plus
+//! structural invariants of the planning machinery.
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
+use lonestar_lb::graph::{Csr, Edge, Graph};
+use lonestar_lb::strategies::mdt::auto_mdt;
+use lonestar_lb::strategies::node_split::split_graph;
+use lonestar_lb::strategies::{StrategyKind, StrategyParams};
+use lonestar_lb::util::proptest::forall;
+use lonestar_lb::util::Rng;
+use std::sync::Arc;
+
+/// Random graph with arbitrary structure (not from the generators — raw
+/// edge soup, including self loops, parallels and isolated nodes).
+fn random_graph(rng: &mut Rng) -> Csr {
+    let n = rng.gen_range_u32(2, 120) as usize;
+    let m = rng.gen_range_u32(1, 600) as usize;
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        edges.push(Edge::new(
+            rng.gen_range_u32(0, n as u32),
+            rng.gen_range_u32(0, n as u32),
+            rng.gen_range_inclusive_u32(1, 50),
+        ));
+    }
+    Csr::from_edges(n, &edges).unwrap()
+}
+
+#[test]
+fn every_strategy_matches_oracle_on_random_graphs() {
+    forall("strategy-vs-oracle", 60, |rng| {
+        let g = Arc::new(random_graph(rng));
+        let source = rng.gen_range_u32(0, g.num_nodes() as u32);
+        let algo = if rng.gen_f64() < 0.5 {
+            AlgoKind::Bfs
+        } else {
+            AlgoKind::Sssp
+        };
+        let oracle = algo.reference(&g, source);
+        for strategy in StrategyKind::ALL {
+            let r = run(
+                &g,
+                &RunConfig {
+                    algo,
+                    strategy,
+                    source,
+                    ..Default::default()
+                },
+            )
+            .unwrap_or_else(|e| panic!("{strategy} failed: {e}"));
+            assert_eq!(r.dist, oracle, "{strategy}/{algo:?} diverged from oracle");
+        }
+    });
+}
+
+#[test]
+fn split_graph_preserves_reachability_costs() {
+    forall("split-preserves-sssp", 40, |rng| {
+        let g = random_graph(rng);
+        let bins = rng.gen_range_u32(2, 16) as usize;
+        let decision = auto_mdt(&g, bins);
+        let split = split_graph(&g, decision);
+
+        // Structural invariants.
+        assert_eq!(split.graph.num_edges(), g.num_edges(), "edges preserved");
+        assert!(split.graph.max_degree() <= decision.mdt.max(1));
+        assert_eq!(
+            split.map.total_children() as usize,
+            split.graph.num_nodes() - g.num_nodes()
+        );
+
+        // Semantic invariant: distances on original ids unchanged when the
+        // NS engine runs over the split graph (children mirror parents).
+        let source = rng.gen_range_u32(0, g.num_nodes() as u32);
+        let oracle = lonestar_lb::graph::traversal::dijkstra(&g, source);
+        let r = run(
+            &Arc::new(g),
+            &RunConfig {
+                strategy: StrategyKind::NS,
+                source,
+                params: StrategyParams {
+                    histogram_bins: bins,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(r.dist, oracle);
+    });
+}
+
+#[test]
+fn mdt_override_still_converges() {
+    forall("mdt-override", 25, |rng| {
+        let g = Arc::new(random_graph(rng));
+        let mdt = rng.gen_range_u32(1, 12);
+        let oracle = lonestar_lb::graph::traversal::bfs_levels(&g, 0);
+        for strategy in [StrategyKind::NS, StrategyKind::HP] {
+            let r = run(
+                &g,
+                &RunConfig {
+                    algo: AlgoKind::Bfs,
+                    strategy,
+                    params: StrategyParams {
+                        mdt_override: Some(mdt),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(r.dist, oracle, "{strategy} with MDT={mdt}");
+        }
+    });
+}
+
+#[test]
+fn metrics_counters_are_consistent() {
+    forall("metrics-consistency", 30, |rng| {
+        let g = Arc::new(random_graph(rng));
+        for strategy in StrategyKind::ALL {
+            let r = run(
+                &g,
+                &RunConfig {
+                    strategy,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let m = &r.metrics;
+            assert!(m.updates <= m.edge_relaxations + 1,
+                "{strategy}: more updates than relaxations");
+            assert!(m.atomic_conflicts <= m.atomics);
+            assert!(m.kernel_launches as u64 >= m.iterations as u64,
+                "{strategy}: every iteration launches at least one kernel");
+            assert_eq!(m.total_cycles(), m.kernel_cycles + m.overhead_cycles);
+        }
+    });
+}
+
+#[test]
+fn generated_classes_converge_from_any_source() {
+    let graphs: Vec<Arc<Csr>> = vec![
+        Arc::new(rmat(9, 8 << 9, RmatParams::default(), 11).unwrap()),
+        Arc::new(road_grid(20, 20, 30, 12).unwrap()),
+        Arc::new(erdos_renyi(400, 1600, 20, 13).unwrap()),
+    ];
+    forall("any-source", 20, |rng| {
+        let g = &graphs[rng.gen_index(graphs.len())];
+        let source = rng.gen_range_u32(0, g.num_nodes() as u32);
+        let oracle = lonestar_lb::graph::traversal::dijkstra(g, source);
+        for strategy in StrategyKind::ALL {
+            let r = run(
+                g,
+                &RunConfig {
+                    strategy,
+                    source,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(r.dist, oracle, "{strategy} from source {source}");
+        }
+    });
+}
+
+#[test]
+fn deterministic_metrics_across_repeat_runs() {
+    let g = Arc::new(rmat(10, 8 << 10, RmatParams::default(), 21).unwrap());
+    for strategy in StrategyKind::ALL {
+        let cfg = RunConfig {
+            strategy,
+            ..Default::default()
+        };
+        let a = run(&g, &cfg).unwrap();
+        let b = run(&g, &cfg).unwrap();
+        assert_eq!(a.dist, b.dist);
+        assert_eq!(a.metrics.total_cycles(), b.metrics.total_cycles());
+        assert_eq!(a.metrics.atomics, b.metrics.atomics);
+        assert_eq!(a.metrics.peak_memory_bytes, b.metrics.peak_memory_bytes);
+    }
+}
