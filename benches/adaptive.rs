@@ -1,0 +1,151 @@
+//! Bench: the **adaptive vs. best-static** comparison on the Table II graph
+//! suite (SSSP, budget enforced like the paper's runs).
+//!
+//! For every suite graph this runs the five static strategies and the
+//! adaptive selector, then checks the acceptance properties of the AD
+//! subsystem:
+//!
+//! * AD's distances equal the BS oracle (serial Dijkstra) on every graph;
+//! * AD never exceeds the device memory budget (it must complete where
+//!   only a subset of static strategies fit);
+//! * AD's simulated time is within 10% of the per-graph best static
+//!   strategy, and strictly better than the worst where the static spread
+//!   is meaningful.
+//!
+//! The decision-trace length and switch count are printed so regressions in
+//! switching overhead stay visible.
+//!
+//! Env knobs: `LONESTAR_SCALE=tiny|small|paper`, `LONESTAR_BENCH_ITERS=N`.
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::figures::FigureOpts;
+use lonestar_lb::graph::generators::paper_suite;
+use lonestar_lb::graph::traversal::{dijkstra, hub_source};
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+use std::sync::Arc;
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let iters = common::iters_from_env();
+    let opts = FigureOpts {
+        scale,
+        ..Default::default()
+    };
+
+    let mut suite = BenchSuite::new("adaptive (AD) vs. static strategies, SSSP");
+    let mut within_10 = 0usize;
+    let mut graphs = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+
+    for entry in paper_suite(scale) {
+        let g = Arc::new(entry.spec.generate(opts.seed).expect("generate"));
+        let dev = opts.device_for(&entry, &g);
+        let source = hub_source(&g);
+        let oracle = dijkstra(&g, source);
+
+        // Static field: per-graph best and worst completed times.
+        let mut static_times: Vec<(StrategyKind, f64)> = Vec::new();
+        for k in StrategyKind::ALL {
+            let cfg = RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: k,
+                source,
+                device: dev.clone(),
+                enforce_budget: true,
+                ..Default::default()
+            };
+            match run(&g, &cfg) {
+                Ok(r) => static_times.push((k, r.metrics.total_ms(&dev))),
+                Err(e) if e.is_oom() => {}
+                Err(e) => panic!("{}/{k}: {e}", entry.name),
+            }
+        }
+
+        // The adaptive run (host-timed via the bench harness).
+        let ad_cfg = RunConfig {
+            algo: AlgoKind::Sssp,
+            strategy: StrategyKind::AD,
+            source,
+            device: dev.clone(),
+            enforce_budget: true,
+            ..Default::default()
+        };
+        let mut last = None;
+        suite.case(&format!("{}/AD", entry.name), 0, iters.max(1), || {
+            let r = run(&g, &ad_cfg)
+                .unwrap_or_else(|e| panic!("{}: AD must fit the budget: {e}", entry.name));
+            let note = format!(
+                "sim {:.2} ms, {} iters, {} switches",
+                r.metrics.total_ms(&dev),
+                r.metrics.decisions.len(),
+                r.metrics.strategy_switches
+            );
+            last = Some(r);
+            note
+        });
+        let ad = last.expect("at least one iteration ran");
+        black_box(&ad.dist);
+
+        assert_eq!(
+            ad.dist, oracle,
+            "{}: AD distances must match the BS oracle",
+            entry.name
+        );
+
+        let ad_ms = ad.metrics.total_ms(&dev);
+        let best = static_times
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let worst = static_times
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        graphs += 1;
+        if let (Some((bk, bt)), Some((wk, wt))) = (best, worst) {
+            let vs_best = ad_ms / bt;
+            println!(
+                "{:<12} AD {ad_ms:>9.2} ms | best {} {bt:>9.2} ms ({:+.1}%) | worst {} {wt:>9.2} ms | \
+                 trace {} decisions, {} switches",
+                entry.name,
+                bk.label(),
+                100.0 * (vs_best - 1.0),
+                wk.label(),
+                ad.metrics.decisions.len(),
+                ad.metrics.strategy_switches,
+            );
+            if vs_best <= 1.10 {
+                within_10 += 1;
+            } else {
+                failures.push(format!(
+                    "{}: AD {ad_ms:.2} ms is {:.1}% above best static {} ({bt:.2} ms)",
+                    entry.name,
+                    100.0 * (vs_best - 1.0),
+                    bk.label()
+                ));
+            }
+            // Strictly better than the worst static strategy wherever the
+            // static spread is meaningful (>15%).
+            if wt > bt * 1.15 && ad_ms >= wt {
+                failures.push(format!(
+                    "{}: AD {ad_ms:.2} ms must beat the worst static {} ({wt:.2} ms)",
+                    entry.name,
+                    wk.label()
+                ));
+            }
+        }
+    }
+
+    suite.finish();
+    println!("AD within 10% of best-static on {within_10}/{graphs} graphs");
+    assert!(
+        failures.is_empty(),
+        "adaptive acceptance violations:\n  {}",
+        failures.join("\n  ")
+    );
+}

@@ -1,0 +1,285 @@
+//! KernelSim-backed per-iteration cost prediction.
+//!
+//! For each candidate strategy the predictor synthesizes the thread
+//! assignment that strategy would launch over the *actual* frontier degree
+//! list and accounts it with the same [`KernelSim`] warp model the
+//! execution path uses — so relative predictions track the simulator by
+//! construction. Deliberately unmodelled (identical or second-order across
+//! candidates): update atomics and worklist-append reservations. NS gets a
+//! flat surcharge for its child-mirroring atomics, which the kernel shape
+//! alone cannot see.
+
+use crate::sim::{AccessPattern, DeviceSpec, KernelSim};
+use crate::strategies::StrategyKind;
+
+use super::policy::{requires_migration, PolicyInput};
+
+/// Auxiliary-kernel cost for prediction without charging — delegates to
+/// the shared formula on [`DeviceSpec::aux_kernel_cycles`], the same one
+/// [`crate::coordinator::ExecCtx::charge_aux_kernel`] charges with.
+pub fn aux_kernel_cycles(dev: &DeviceSpec, items: u64, per_item: u64) -> u64 {
+    dev.aux_kernel_cycles(items, per_item)
+}
+
+/// Account one kernel whose lane `l` performs `lane_steps[l]` edge steps,
+/// warp by warp in launch order (exactly how [`KernelSim`] sees the real
+/// launch, minus atomics).
+fn sim_lanes(
+    dev: &DeviceSpec,
+    lane_steps: &[u32],
+    access: AccessPattern,
+    extra_per_edge: u64,
+) -> u64 {
+    let warp = dev.warp_size as usize;
+    let mut ks = KernelSim::new(dev);
+    for chunk in lane_steps.chunks(warp) {
+        let max_steps = chunk.iter().copied().max().unwrap_or(0);
+        if max_steps == 0 {
+            continue;
+        }
+        let mut w = ks.warp();
+        for step in 0..max_steps {
+            let active = chunk.iter().filter(|&&c| c > step).count() as u32;
+            w.step(active, access);
+            if extra_per_edge > 0 {
+                w.extra(extra_per_edge * active as u64);
+            }
+        }
+        ks.commit(w);
+    }
+    ks.finish().cycles
+}
+
+/// BS: one lane per node walking its whole adjacency (scattered).
+fn bs_cycles(dev: &DeviceSpec, degrees: &[u32]) -> u64 {
+    sim_lanes(dev, degrees, AccessPattern::Scattered, 0)
+}
+
+/// EP: `min(T, W)` lanes, round-robin edges, coalesced, plus the one-time
+/// CSR→COO conversion if the COO is not yet resident.
+fn ep_cycles(dev: &DeviceSpec, total_edges: u64, max_threads: u32) -> u64 {
+    if total_edges == 0 {
+        return dev.launch_overhead;
+    }
+    let t = (max_threads as u64).min(total_edges).max(1) as usize;
+    let total = total_edges as usize;
+    let mut steps = Vec::with_capacity(t);
+    for l in 0..t {
+        steps.push(((total - l - 1) / t + 1) as u32);
+    }
+    sim_lanes(dev, &steps, AccessPattern::Coalesced, 0)
+}
+
+/// WD: blocked chunks of `⌈W/T⌉` edges, scattered, node-boundary
+/// bookkeeping, plus the scan and `find_offsets` auxiliary kernels.
+fn wd_cycles(dev: &DeviceSpec, total_edges: u64, wl_len: u64, max_threads: u32) -> u64 {
+    if total_edges == 0 {
+        return dev.launch_overhead;
+    }
+    let t = (max_threads as u64).min(total_edges).max(1);
+    let per = (total_edges + t - 1) / t;
+    let lanes = ((total_edges + per - 1) / per) as usize;
+    let mut steps = vec![per as u32; lanes];
+    let rem = total_edges - per * (lanes as u64 - 1);
+    steps[lanes - 1] = rem as u32;
+    let kernel = sim_lanes(dev, &steps, AccessPattern::Scattered, 4);
+    let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
+    kernel + aux_kernel_cycles(dev, wl_len, 1) + aux_kernel_cycles(dev, t, 4 * log_wl)
+}
+
+/// NS: one lane per (parent or clone) node, every lane ≤ MDT edges.
+fn ns_cycles(dev: &DeviceSpec, degrees: &[u32], mdt: u32) -> u64 {
+    let mdt = mdt.max(1);
+    let mut lanes: Vec<u32> = Vec::with_capacity(degrees.len());
+    for &d in degrees {
+        if d <= mdt {
+            lanes.push(d);
+            continue;
+        }
+        let pieces = ((d + mdt - 1) / mdt) as usize;
+        let base = d / pieces as u32;
+        let extra = (d as usize) % pieces;
+        for p in 0..pieces {
+            lanes.push(base + u32::from(p < extra));
+        }
+    }
+    sim_lanes(dev, &lanes, AccessPattern::Scattered, 0)
+}
+
+/// HP: sub-iterations of ≤ MDT edges per remaining node, switching to a
+/// WD-style kernel once the sub-list drops below one block (§III-C).
+fn hp_cycles(dev: &DeviceSpec, degrees: &[u32], mdt: u32, max_threads: u32) -> u64 {
+    let mdt = mdt.max(1);
+    let block = dev.block_size as usize;
+    let total: u64 = degrees.iter().map(|&d| d as u64).sum();
+    if degrees.len() < block {
+        return wd_cycles(dev, total, degrees.len() as u64, max_threads);
+    }
+    let mut remaining: Vec<u32> = degrees.iter().copied().filter(|&d| d > 0).collect();
+    let mut cycles = 0u64;
+    while !remaining.is_empty() {
+        if remaining.len() < block {
+            let rem_edges: u64 = remaining.iter().map(|&d| d as u64).sum();
+            cycles += wd_cycles(dev, rem_edges, remaining.len() as u64, max_threads);
+            break;
+        }
+        let steps: Vec<u32> = remaining.iter().map(|&d| d.min(mdt)).collect();
+        cycles += sim_lanes(dev, &steps, AccessPattern::Scattered, 2);
+        remaining = remaining
+            .iter()
+            .filter_map(|&d| if d > mdt { Some(d - mdt) } else { None })
+            .collect();
+        cycles += aux_kernel_cycles(dev, remaining.len() as u64 + 1, 1);
+    }
+    cycles.max(dev.launch_overhead)
+}
+
+/// Predicted cycles for one iteration of `kind` over the frontier in
+/// `input`, including one-time setup the choice would trigger (COO
+/// materialization for EP, the split rebuild for NS).
+pub fn predict(kind: StrategyKind, input: &PolicyInput<'_>) -> u64 {
+    let dev = input.dev;
+    let degs = input.degrees;
+    let w = input.snapshot.edges;
+    let wl_len = degs.len() as u64;
+    let max_threads = input
+        .params
+        .max_threads
+        .unwrap_or(dev.max_resident_threads);
+    match kind {
+        StrategyKind::BS => bs_cycles(dev, degs),
+        StrategyKind::EP => {
+            let mut c = ep_cycles(dev, w, max_threads);
+            if !input.feasibility.coo_resident {
+                c = c.saturating_add(aux_kernel_cycles(dev, input.graph_edges, 1));
+            }
+            c
+        }
+        StrategyKind::WD => wd_cycles(dev, w, wl_len, max_threads),
+        StrategyKind::NS => {
+            let mut c = ns_cycles(dev, degs, input.mdt);
+            // Unmodelled child-mirroring atomics: flat ~15% surcharge.
+            c = c.saturating_add(c / 7);
+            if !input.feasibility.split_built {
+                c = c.saturating_add(aux_kernel_cycles(
+                    dev,
+                    input.graph_edges + input.graph_nodes,
+                    2,
+                ));
+            }
+            c
+        }
+        StrategyKind::HP => hp_cycles(dev, degs, input.mdt, max_threads),
+        // AD never predicts itself.
+        StrategyKind::AD => u64::MAX,
+    }
+}
+
+/// Penalty the cost model adds when choosing `to` would migrate the
+/// worklist out of the current representation: one conversion kernel over
+/// the frontier.
+pub fn migration_cycles(input: &PolicyInput<'_>, to: StrategyKind) -> u64 {
+    if requires_migration(input.current, to) {
+        aux_kernel_cycles(input.dev, input.snapshot.nodes.max(1), 2)
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::inspect::FrontierInspector;
+    use crate::adaptive::policy::Feasibility;
+    use crate::strategies::StrategyParams;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::k20c()
+    }
+
+    #[test]
+    fn aux_formula_matches_exec_charge() {
+        // Same numbers as ExecCtx::charge_aux_kernel for a known input.
+        let d = dev();
+        let mut ex = crate::coordinator::ExecCtx::new(
+            &d,
+            crate::algorithms::AlgoKind::Sssp,
+            Box::new(crate::algorithms::NativeRelaxer),
+        );
+        ex.charge_aux_kernel(1000, 2);
+        assert_eq!(ex.metrics.overhead_cycles, aux_kernel_cycles(&d, 1000, 2));
+    }
+
+    #[test]
+    fn bs_pays_for_the_straggler_lane() {
+        let d = dev();
+        let balanced = bs_cycles(&d, &[8u32; 32]);
+        let mut skewed = vec![1u32; 31];
+        skewed.push(8 * 32 - 31); // same total work, one hub lane
+        let imbalanced = bs_cycles(&d, &skewed);
+        assert!(
+            imbalanced > 2 * balanced,
+            "hub lane {imbalanced} must dwarf balanced {balanced}"
+        );
+    }
+
+    #[test]
+    fn ep_beats_bs_on_skewed_frontiers() {
+        let d = dev();
+        let mut degs = vec![2u32; 1000];
+        degs.push(20_000);
+        let total: u64 = degs.iter().map(|&x| x as u64).sum();
+        let bs = bs_cycles(&d, &degs);
+        let ep = ep_cycles(&d, total, d.max_resident_threads);
+        assert!(ep < bs, "EP {ep} must beat BS {bs} on a hub frontier");
+    }
+
+    #[test]
+    fn ns_clamps_the_hub() {
+        let d = dev();
+        let mut degs = vec![2u32; 1000];
+        degs.push(20_000);
+        let bs = bs_cycles(&d, &degs);
+        let ns = ns_cycles(&d, &degs, 16);
+        assert!(ns < bs, "NS {ns} must beat BS {bs} once the hub is split");
+    }
+
+    #[test]
+    fn empty_frontier_costs_one_launch() {
+        let d = dev();
+        assert_eq!(ep_cycles(&d, 0, 1024), d.launch_overhead);
+        assert_eq!(wd_cycles(&d, 0, 0, 1024), d.launch_overhead);
+        assert_eq!(bs_cycles(&d, &[]), d.launch_overhead);
+    }
+
+    #[test]
+    fn predict_covers_every_kind() {
+        let d = dev();
+        let params = StrategyParams::default();
+        let degs = vec![4u32; 2048];
+        let snap = FrontierInspector::inspect(&degs, &d);
+        let input = PolicyInput {
+            snapshot: &snap,
+            degrees: &degs,
+            current: StrategyKind::BS,
+            feasibility: Feasibility {
+                ep: true,
+                wd: true,
+                ns: true,
+                coo_resident: false,
+                split_built: false,
+            },
+            dev: &d,
+            params: &params,
+            mdt: 4,
+            graph_edges: 8192,
+            graph_nodes: 2048,
+        };
+        for kind in StrategyKind::ALL {
+            let c = predict(kind, &input);
+            assert!(c > 0, "{kind} predicted zero cycles");
+            assert!(c < u64::MAX);
+        }
+        assert_eq!(predict(StrategyKind::AD, &input), u64::MAX);
+    }
+}

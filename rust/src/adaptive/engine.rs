@@ -1,0 +1,783 @@
+//! The adaptive engine: a [`Strategy`] that re-selects the load-balancing
+//! scheme every outer iteration.
+//!
+//! Per iteration the engine (1) builds a canonical original-graph node view
+//! of the pending worklist, (2) inspects it ([`FrontierInspector`]),
+//! (3) asks its [`Policy`] which static strategy should run — restricted to
+//! the memory-feasible candidates — (4) migrates the worklist to that
+//! strategy's representation when it changed ([`super::migrate`]), and
+//! (5) executes one iteration in that strategy's exact kernel style
+//! (assignments, access patterns, auxiliary kernels and memory charges all
+//! mirror the static implementations). Every decision is recorded into
+//! [`crate::metrics::RunMetrics::decisions`].
+//!
+//! Memory accounting differs from running a static strategy in one honest
+//! way: the engine keeps the CSR resident at all times (every mode may need
+//! it next iteration), charges EP's COO only while the edge representation
+//! is live, and keeps NS's split graph resident once built (rebuilding per
+//! switch would be slower on a real device, and the policy only chooses NS
+//! when the headroom allows it).
+
+use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::error::Result;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::metrics::DecisionRecord;
+use crate::sim::AccessPattern;
+use crate::strategies::common::{charge_graph_and_dist, init_dist, NodeFrontier};
+use crate::strategies::mdt::{auto_mdt, MdtDecision};
+use crate::strategies::node_split::{split_graph, SplitGraph};
+use crate::strategies::workload_decomp::block_offsets;
+use crate::strategies::{Strategy, StrategyKind, StrategyParams};
+use crate::worklist::hierarchy::SubList;
+use crate::worklist::{EdgeWorklist, NodeWorklist};
+use std::sync::Arc;
+
+use super::inspect::{FrontierInspector, FrontierSnapshot};
+use super::migrate::{self, Space};
+use super::policy::{build_policy, requires_migration, Feasibility, Policy, PolicyInput};
+
+// Device-memory labels of the adaptive engine's allocations.
+const AD_WL: &str = "ad-wl";
+const AD_NS_WL: &str = "ad-ns-wl";
+const AD_EP_WL: &str = "ad-ep-wl";
+const AD_COO: &str = "ad-coo";
+const AD_NS_CSR: &str = "ad-ns-csr";
+const AD_NS_MAP: &str = "ad-ns-map";
+const AD_WD_PREFIX: &str = "ad-wd-prefix";
+const AD_WD_OFFSETS: &str = "ad-wd-offsets";
+const AD_HP_PREFIX: &str = "ad-hp-prefix";
+const AD_HP_SUBLIST: &str = "ad-hp-sublist";
+
+/// Flat host-side cycles charged per decision (the frontier statistics ride
+/// along with the worklist's cached degree array and are folded into the
+/// previous kernel's epilogue, so inspection needs no extra device kernel —
+/// cf. arXiv:1911.09135).
+const INSPECT_BASE_CYCLES: u64 = 100;
+
+/// The worklist representation currently held by the engine.
+enum Repr {
+    /// Original-graph node frontier (BS / WD / HP modes).
+    Nodes(NodeFrontier),
+    /// EP's exploded edge frontier plus its charged bytes.
+    Edges { wl: EdgeWorklist, charged: u64 },
+    /// Split-graph node frontier (NS mode).
+    Split(NodeFrontier),
+}
+
+/// Lazily-built node-splitting state.
+struct SplitState {
+    split: SplitGraph,
+    parent_of: Vec<NodeId>,
+}
+
+/// Worklist entry bytes per node-space mode: WD carries (node, degree)
+/// pairs (§III-A), BS/HP carry bare node ids.
+fn node_entry_bytes(kind: StrategyKind) -> u64 {
+    if kind == StrategyKind::WD {
+        8
+    } else {
+        4
+    }
+}
+
+/// The adaptive per-iteration strategy selector (`StrategyKind::AD`).
+pub struct Adaptive {
+    graph: Arc<Csr>,
+    params: StrategyParams,
+    policy: Box<dyn Policy>,
+    /// The static strategy the engine is currently shaped as.
+    mode: StrategyKind,
+    repr: Option<Repr>,
+    split: Option<SplitState>,
+    mdt: Option<MdtDecision>,
+    coo_charged: bool,
+    /// HP-mode sub-iteration kernels launched.
+    pub hp_sub_iterations: u64,
+    /// HP-mode switches to the WD fallback.
+    pub hp_wd_switches: u64,
+}
+
+impl Adaptive {
+    /// New adaptive engine over `graph`, with the policy selected by
+    /// `params.adaptive_policy`.
+    pub fn new(graph: Arc<Csr>, params: StrategyParams) -> Self {
+        let policy = build_policy(params.adaptive_policy);
+        Adaptive {
+            graph,
+            params,
+            policy,
+            mode: StrategyKind::BS,
+            repr: None,
+            split: None,
+            mdt: None,
+            coo_charged: false,
+            hp_sub_iterations: 0,
+            hp_wd_switches: 0,
+        }
+    }
+
+    /// The static strategy the engine is currently executing as.
+    pub fn current_mode(&self) -> StrategyKind {
+        self.mode
+    }
+
+    /// Canonical original-space node view of the pending worklist.
+    fn view_nodes(&self, g: &Csr) -> NodeWorklist {
+        match self.repr.as_ref().expect("init first") {
+            Repr::Nodes(f) => f.worklist().clone(),
+            Repr::Edges { wl, .. } => migrate::edges_to_nodes(g, wl),
+            Repr::Split(f) => {
+                let st = self.split.as_ref().expect("split state exists in NS mode");
+                migrate::split_to_nodes(g, &st.parent_of, f.worklist())
+            }
+        }
+    }
+
+    /// Memory feasibility of each candidate under the remaining budget,
+    /// using worst-case per-iteration allocation bounds.
+    fn feasibility(&self, ctx: &ExecCtx, snap: &FrontierSnapshot) -> Feasibility {
+        let headroom = ctx.mem.budget().saturating_sub(ctx.mem.current());
+        let e = self.graph.num_edges() as u64;
+        let n = self.graph.num_nodes() as u64;
+        let w = snap.edges;
+        let t = self
+            .params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads) as u64;
+        let coo_resident = self.coo_charged;
+        let split_built = self.split.is_some();
+        // EP: COO (unless resident) + input edge worklist + worst-case raw
+        // output (bounded by E after condensing).
+        let coo_extra = if coo_resident { 0 } else { 12 * e };
+        let ep = coo_extra + 8 * w + 8 * e <= headroom;
+        // WD: 8 B worklist entries (input + raw output double buffer) +
+        // prefix sums + the per-thread offsets array.
+        let wd = 12 * snap.nodes + 8 * w + 8 * t <= headroom;
+        // NS: the split CSR + parent map + extended dist (once), plus the
+        // frontier duplicated into split space.
+        let mdt = self.mdt.map(|d| d.mdt.max(1)).unwrap_or(1) as u64;
+        let ns_extra = if split_built {
+            4 * w
+        } else {
+            self.graph.memory_bytes() + 8 * n + 4 * (e / mdt + 1) + 4 * w
+        };
+        let ns = ns_extra <= headroom;
+        Feasibility {
+            ep,
+            wd,
+            ns,
+            coo_resident,
+            split_built,
+        }
+    }
+
+    /// Build the split graph (once) for NS mode.
+    fn ensure_split(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        if self.split.is_some() {
+            return Ok(());
+        }
+        let decision = self.mdt.expect("init first");
+        let n = self.graph.num_nodes();
+        let split = split_graph(&self.graph, decision);
+        // Unlike standalone NS, the original CSR stays resident: the other
+        // modes read it. Only the split CSR and the parent map are added.
+        ctx.mem.charge(AD_NS_CSR, split.graph.memory_bytes())?;
+        ctx.mem.charge(AD_NS_MAP, 8 * n as u64)?;
+        ctx.charge_aux_kernel(self.graph.num_edges() as u64 + n as u64, 2);
+        let n_split = split.graph.num_nodes();
+        if n_split > n {
+            ctx.mem.charge("dist", 4 * (n_split - n) as u64)?;
+            ctx.dist.resize(n_split, crate::INF);
+        }
+        let parent_of = migrate::parent_of_table(&split, n);
+        self.split = Some(SplitState { split, parent_of });
+        Ok(())
+    }
+
+    /// Switch to `to`, converting the worklist representation when the two
+    /// strategies disagree on it.
+    fn migrate_to(
+        &mut self,
+        ctx: &mut ExecCtx,
+        to: StrategyKind,
+        view: &NodeWorklist,
+    ) -> Result<()> {
+        if !requires_migration(self.mode, to) {
+            self.mode = to;
+            return Ok(());
+        }
+        // One conversion kernel over the frontier.
+        ctx.charge_aux_kernel(view.len() as u64 + 1, 2);
+
+        // Tear down the old representation's storage.
+        match self.repr.take().expect("init first") {
+            Repr::Nodes(mut f) | Repr::Split(mut f) => f.release(ctx),
+            Repr::Edges { charged, .. } => {
+                ctx.mem.release(AD_EP_WL, charged);
+                if self.coo_charged {
+                    ctx.mem.release(AD_COO, 12 * self.graph.num_edges() as u64);
+                    self.coo_charged = false;
+                }
+            }
+        }
+
+        // Build the new one from the canonical node view.
+        let repr = match migrate::space_of(to) {
+            Space::Node => Repr::Nodes(NodeFrontier::from_worklist(
+                ctx,
+                &self.graph,
+                view.clone(),
+                AD_WL,
+                node_entry_bytes(to),
+            )?),
+            Space::Edge => {
+                if !self.coo_charged {
+                    // Materialize the COO form (the allocation that makes
+                    // EP infeasible on Graph500-class graphs, §II-B).
+                    ctx.mem.charge(AD_COO, 12 * self.graph.num_edges() as u64)?;
+                    ctx.charge_aux_kernel(self.graph.num_edges() as u64, 1);
+                    self.coo_charged = true;
+                }
+                let wl = migrate::nodes_to_edges(&self.graph, view);
+                let charged = wl.memory_bytes();
+                ctx.mem.charge(AD_EP_WL, charged)?;
+                Repr::Edges { wl, charged }
+            }
+            Space::Split => {
+                self.ensure_split(ctx)?;
+                let st = self.split.as_ref().expect("just built");
+                // Refresh the clones' attributes from their parents so the
+                // mirror invariant holds when entering split space.
+                let mut children = 0u64;
+                for u in 0..self.graph.num_nodes() as u32 {
+                    let du = ctx.dist[u as usize];
+                    for c in st.split.map.children(u) {
+                        ctx.dist[c as usize] = du;
+                        children += 1;
+                    }
+                }
+                if children > 0 {
+                    ctx.charge_aux_kernel(children, 1);
+                }
+                let wl = migrate::nodes_to_split(&st.split, view);
+                Repr::Split(NodeFrontier::from_worklist(
+                    ctx,
+                    &st.split.graph,
+                    wl,
+                    AD_NS_WL,
+                    4,
+                )?)
+            }
+        };
+        self.repr = Some(repr);
+        self.mode = to;
+        Ok(())
+    }
+
+    /// One BS-style iteration (mirrors [`crate::strategies::NodeBaseline`]).
+    fn step_bs(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        let frontier = match self.repr.as_mut() {
+            Some(Repr::Nodes(f)) => f,
+            _ => unreachable!("BS mode runs on the node representation"),
+        };
+        let nodes = frontier.worklist().nodes().to_vec();
+        let (src, eid) = flatten_frontier(&g, &nodes);
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &n in &nodes {
+            acc += g.degree(n);
+            offsets.push(acc);
+        }
+        let work = KernelWork {
+            name: "ad_bs_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&g, &work, None)?;
+        frontier.advance(ctx, &g, &result.updated)
+    }
+
+    /// One WD-style iteration (mirrors
+    /// [`crate::strategies::WorkloadDecomposition`]).
+    fn step_wd(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        let max_threads = self
+            .params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads);
+        let frontier = match self.repr.as_mut() {
+            Some(Repr::Nodes(f)) => f,
+            _ => unreachable!("WD mode runs on the node representation"),
+        };
+        let nodes = frontier.worklist().nodes().to_vec();
+        let wl_len = nodes.len() as u64;
+        let (src, eid) = flatten_frontier(&g, &nodes);
+        let total = src.len();
+
+        // Scan of the worklist's degree array (transient prefix sums).
+        ctx.mem.charge(AD_WD_PREFIX, 4 * wl_len)?;
+        ctx.charge_aux_kernel(wl_len, 1);
+        // find_offsets: per-thread binary search over the prefix sums.
+        let threads = (max_threads as usize).min(total.max(1)) as u64;
+        let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
+        ctx.charge_aux_kernel(threads, 4 * log_wl);
+        // Transient per-thread offsets array.
+        let offsets_bytes = 8 * max_threads as u64;
+        ctx.mem.charge(AD_WD_OFFSETS, offsets_bytes)?;
+
+        let work = KernelWork {
+            name: "ad_wd_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(block_offsets(total, max_threads)),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 4,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&g, &work, None)?;
+        ctx.mem.release(AD_WD_OFFSETS, offsets_bytes);
+        ctx.mem.release(AD_WD_PREFIX, 4 * wl_len);
+        frontier.advance(ctx, &g, &result.updated)
+    }
+
+    /// One EP-style iteration (mirrors [`crate::strategies::EdgeParallel`]).
+    fn step_ep(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        let max_threads = self
+            .params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads);
+        let (wl, charged) = match self.repr.as_mut() {
+            Some(Repr::Edges { wl, charged }) => (wl, charged),
+            _ => unreachable!("EP mode runs on the edge representation"),
+        };
+        let total = wl.len();
+        let threads = (max_threads as usize).min(total).max(1) as u32;
+        let work = KernelWork {
+            name: "ad_ep_relax",
+            src: wl.srcs().to_vec(),
+            eid: wl.edges().to_vec(),
+            assignment: Assignment::Strided {
+                num_threads: threads,
+            },
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Edges,
+        };
+        let result = ctx.launch(&g, &work, None)?;
+
+        let mut next = EdgeWorklist::new();
+        for &n in &result.updated {
+            next.push_node_edges(&g, n);
+        }
+        let raw_entries = next.len() as u64;
+        ctx.metrics.peak_worklist_entries =
+            ctx.metrics.peak_worklist_entries.max(raw_entries);
+        let raw_bytes = next.memory_bytes();
+        let headroom = ctx.mem.budget().saturating_sub(ctx.mem.current());
+        if raw_bytes > headroom {
+            // Memory pressure: condense in place (streaming, chunk-wise)
+            // before materializing the raw buffer — the feasibility check
+            // that admitted EP only guarantees the *condensed* worklist
+            // (≤ E entries) fits, so the duplicate-laden raw form must
+            // never be charged whole. Static EP would OOM here; the
+            // adaptive engine's contract is to stay inside the budget.
+            let removed = next.condense();
+            ctx.metrics.condensed_away += removed as u64;
+            ctx.charge_aux_kernel(raw_entries, 2);
+            ctx.mem.charge(AD_EP_WL, next.memory_bytes())?;
+            ctx.mem.release(AD_EP_WL, *charged);
+        } else {
+            // Plenty of room: mirror static EP exactly (double buffer the
+            // raw output, condense only on the size-explosion rule).
+            ctx.mem.charge(AD_EP_WL, raw_bytes)?;
+            if next.len() > g.num_edges() {
+                let removed = next.condense();
+                ctx.metrics.condensed_away += removed as u64;
+                ctx.charge_aux_kernel(raw_entries, 2);
+            }
+            let keep = next.memory_bytes();
+            ctx.mem.release(AD_EP_WL, *charged + raw_bytes - keep);
+        }
+        *charged = next.memory_bytes();
+        *wl = next;
+        Ok(())
+    }
+
+    /// One NS-style iteration (mirrors [`crate::strategies::NodeSplitting`]).
+    fn step_ns(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let (st, frontier) = match (&self.split, &mut self.repr) {
+            (Some(st), Some(Repr::Split(f))) => (st, f),
+            _ => unreachable!("NS mode runs on the split representation"),
+        };
+        let g = &st.split.graph;
+        let nodes = frontier.worklist().nodes().to_vec();
+        let (src, eid) = flatten_frontier(g, &nodes);
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &nd in &nodes {
+            acc += g.degree(nd);
+            offsets.push(acc);
+        }
+        let work = KernelWork {
+            name: "ad_ns_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(g, &work, Some(&st.split.map))?;
+        frontier.advance(ctx, g, &result.updated)
+    }
+
+    /// One HP-style iteration (mirrors [`crate::strategies::Hierarchical`]).
+    fn step_hp(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        let mdt = self.mdt.expect("init first").mdt.max(1);
+        let block = ctx.dev.block_size as usize;
+        let frontier_nodes = match self.repr.as_ref() {
+            Some(Repr::Nodes(f)) => f.worklist().nodes().to_vec(),
+            _ => unreachable!("HP mode runs on the node representation"),
+        };
+        let mut all_updates: Vec<NodeId> = Vec::new();
+
+        if frontier_nodes.len() < block {
+            // Small super list → straight to workload decomposition.
+            let (src, eid) = flatten_frontier(&g, &frontier_nodes);
+            if !src.is_empty() {
+                self.hp_wd_switches += 1;
+                let ups =
+                    hp_wd_fallback(ctx, &g, src, eid, frontier_nodes.len() as u64)?;
+                all_updates.extend(ups);
+            }
+        } else {
+            let degrees: Vec<u32> = frontier_nodes.iter().map(|&n| g.degree(n)).collect();
+            let mut sub = SubList::from_super(&frontier_nodes, &degrees);
+            let sub_bytes = sub.memory_bytes();
+            ctx.mem.charge(AD_HP_SUBLIST, sub_bytes)?;
+
+            while !sub.is_empty() {
+                if sub.len() < block {
+                    // Residual tail → WD fallback over the remaining edges.
+                    let mut src = Vec::new();
+                    let mut eid = Vec::new();
+                    for c in sub.cursors() {
+                        let first = g.first_edge(c.node) + c.processed;
+                        for e in first..first + c.remaining() {
+                            src.push(c.node);
+                            eid.push(e);
+                        }
+                    }
+                    let wl_len = sub.len() as u64;
+                    self.hp_wd_switches += 1;
+                    let ups = hp_wd_fallback(ctx, &g, src, eid, wl_len)?;
+                    all_updates.extend(ups);
+                    break;
+                }
+
+                // One sub-iteration: lane per node, ≤ MDT edges each.
+                self.hp_sub_iterations += 1;
+                let mut src = Vec::new();
+                let mut eid = Vec::new();
+                let mut offsets = Vec::with_capacity(sub.len() + 1);
+                offsets.push(0u32);
+                let mut acc = 0u32;
+                for c in sub.cursors() {
+                    let take = c.remaining().min(mdt);
+                    let first = g.first_edge(c.node) + c.processed;
+                    for e in first..first + take {
+                        src.push(c.node);
+                        eid.push(e);
+                    }
+                    acc += take;
+                    offsets.push(acc);
+                }
+                let work = KernelWork {
+                    name: "ad_hp_relax",
+                    src,
+                    eid,
+                    assignment: Assignment::Blocked(offsets),
+                    access: AccessPattern::Scattered,
+                    extra_cycles_per_edge: 2,
+                    push: PushTarget::Node,
+                };
+                let result = ctx.launch(&g, &work, None)?;
+                all_updates.extend(result.updated);
+                sub.advance(mdt);
+                ctx.charge_aux_kernel(sub.len() as u64 + 1, 1);
+            }
+            ctx.mem.release(AD_HP_SUBLIST, sub_bytes);
+        }
+
+        let frontier = match self.repr.as_mut() {
+            Some(Repr::Nodes(f)) => f,
+            _ => unreachable!("HP mode runs on the node representation"),
+        };
+        frontier.advance(ctx, &g, &all_updates)
+    }
+}
+
+/// HP's WD-style fallback kernel over an explicit edge batch.
+fn hp_wd_fallback(
+    ctx: &mut ExecCtx,
+    g: &Csr,
+    src: Vec<NodeId>,
+    eid: Vec<u32>,
+    wl_len: u64,
+) -> Result<Vec<NodeId>> {
+    let total = src.len();
+    ctx.mem.charge(AD_HP_PREFIX, 4 * wl_len)?;
+    ctx.charge_aux_kernel(wl_len, 1);
+    let threads = ctx.dev.max_resident_threads;
+    let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
+    ctx.charge_aux_kernel((threads as u64).min(total as u64), 4 * log_wl);
+    let work = KernelWork {
+        name: "ad_hp_wd_relax",
+        src,
+        eid,
+        assignment: Assignment::Blocked(block_offsets(total, threads)),
+        access: AccessPattern::Scattered,
+        extra_cycles_per_edge: 4,
+        push: PushTarget::Node,
+    };
+    let result = ctx.launch(g, &work, None)?;
+    ctx.mem.release(AD_HP_PREFIX, 4 * wl_len);
+    Ok(result.updated)
+}
+
+impl Strategy for Adaptive {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::AD
+    }
+
+    fn init(&mut self, ctx: &mut ExecCtx, source: NodeId) -> Result<()> {
+        charge_graph_and_dist(ctx, &self.graph, "csr")?;
+        init_dist(ctx, self.graph.num_nodes(), source);
+        // Degree histogram + MDT once, up front: NS/HP executions and the
+        // cost model's predictions all consult it.
+        let decision = match self.params.mdt_override {
+            Some(mdt) => MdtDecision {
+                mdt,
+                peak_bin: 0,
+                bins: self.params.histogram_bins,
+                max_degree: self.graph.max_degree(),
+            },
+            None => auto_mdt(&self.graph, self.params.histogram_bins),
+        };
+        ctx.charge_aux_kernel(self.graph.num_nodes() as u64, 2);
+        self.mdt = Some(decision);
+        self.mode = StrategyKind::BS;
+        self.repr = Some(Repr::Nodes(NodeFrontier::seeded(
+            ctx,
+            &self.graph,
+            source,
+            AD_WL,
+            4,
+        )?));
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        match self.repr.as_ref() {
+            Some(Repr::Nodes(f)) | Some(Repr::Split(f)) => f.len(),
+            Some(Repr::Edges { wl, .. }) => wl.len(),
+            None => 0,
+        }
+    }
+
+    fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        // 1. Canonical view + online inspection (host-side, cheap).
+        let view = self.view_nodes(&g);
+        let snap = FrontierInspector::inspect(view.degrees(), ctx.dev);
+        ctx.charge_overhead(INSPECT_BASE_CYCLES + snap.nodes / 32);
+
+        // 2. Decide, restricted to what fits in the remaining budget.
+        let feas = self.feasibility(ctx, &snap);
+        let mdt = self.mdt.expect("init first").mdt;
+        let decision = {
+            let input = PolicyInput {
+                snapshot: &snap,
+                degrees: view.degrees(),
+                current: self.mode,
+                feasibility: feas,
+                dev: ctx.dev,
+                params: &self.params,
+                mdt,
+                graph_edges: g.num_edges() as u64,
+                graph_nodes: g.num_nodes() as u64,
+            };
+            self.policy.decide(&input)
+        };
+        let choice = if feas.allows(decision.choice) {
+            decision.choice
+        } else {
+            StrategyKind::BS
+        };
+
+        // 3. Migrate if the mode changed.
+        let migrated = choice != self.mode;
+        if migrated {
+            self.migrate_to(ctx, choice, &view)?;
+        }
+
+        // 4. Execute one iteration in the chosen style.
+        match self.mode {
+            StrategyKind::BS => self.step_bs(ctx)?,
+            StrategyKind::EP => self.step_ep(ctx)?,
+            StrategyKind::WD => self.step_wd(ctx)?,
+            StrategyKind::NS => self.step_ns(ctx)?,
+            StrategyKind::HP => self.step_hp(ctx)?,
+            StrategyKind::AD => unreachable!("AD never selects itself"),
+        }
+
+        // 5. Record the decision.
+        ctx.metrics.record_decision(DecisionRecord {
+            iteration: ctx.metrics.iterations,
+            strategy: choice.label(),
+            migrated,
+            frontier_nodes: snap.nodes,
+            frontier_edges: snap.edges,
+            degree_skew: snap.skew,
+            predicted_cycles: decision.predicted_cycles,
+        });
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    fn finalize(&self, ctx: &ExecCtx) -> Vec<u32> {
+        // If the run ever entered split space, dist is sized to the split
+        // graph; the original ids hold the answer either way.
+        ctx.dist[..self.graph.num_nodes()].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::AdaptivePolicyKind;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::coordinator::{run, RunConfig};
+    use crate::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    fn params(policy: AdaptivePolicyKind) -> StrategyParams {
+        StrategyParams {
+            adaptive_policy: policy,
+            ..Default::default()
+        }
+    }
+
+    fn run_ad(
+        g: &Arc<Csr>,
+        algo: AlgoKind,
+        policy: AdaptivePolicyKind,
+    ) -> crate::coordinator::RunResult {
+        run(
+            g,
+            &RunConfig {
+                algo,
+                strategy: StrategyKind::AD,
+                params: params(policy),
+                ..Default::default()
+            },
+        )
+        .expect("adaptive run")
+    }
+
+    #[test]
+    fn adaptive_sssp_matches_dijkstra_all_policies() {
+        let g = Arc::new(rmat(9, 4096, RmatParams::default(), 31).unwrap());
+        let oracle = traversal::dijkstra(&g, 0);
+        for policy in [
+            AdaptivePolicyKind::CostModel,
+            AdaptivePolicyKind::Heuristic,
+            AdaptivePolicyKind::RoundRobin,
+        ] {
+            let r = run_ad(&g, AlgoKind::Sssp, policy);
+            assert_eq!(r.dist, oracle, "{policy:?} diverged from Dijkstra");
+            assert!(
+                !r.metrics.decisions.is_empty(),
+                "{policy:?} recorded no decisions"
+            );
+            assert_eq!(
+                r.metrics.decisions.len() as u32,
+                r.metrics.iterations,
+                "{policy:?}: one decision per outer iteration"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_bfs_matches_reference_on_road() {
+        let g = Arc::new(road_grid(16, 16, 9, 7).unwrap());
+        let oracle = traversal::bfs_levels(&g, 0);
+        for policy in [AdaptivePolicyKind::CostModel, AdaptivePolicyKind::Heuristic] {
+            let r = run_ad(&g, AlgoKind::Bfs, policy);
+            assert_eq!(r.dist, oracle, "{policy:?} diverged from BFS");
+        }
+    }
+
+    #[test]
+    fn round_robin_migrates_and_stays_correct() {
+        let g = Arc::new(erdos_renyi(300, 1500, 15, 4).unwrap());
+        let oracle = traversal::dijkstra(&g, 0);
+        let r = run_ad(&g, AlgoKind::Sssp, AdaptivePolicyKind::RoundRobin);
+        assert_eq!(r.dist, oracle);
+        assert!(
+            r.metrics.strategy_switches > 0,
+            "round-robin must switch strategies"
+        );
+        // At least three distinct modes must have actually executed.
+        let mut modes: Vec<&str> = r.metrics.decisions.iter().map(|d| d.strategy).collect();
+        modes.sort_unstable();
+        modes.dedup();
+        assert!(modes.len() >= 3, "only modes {modes:?} were exercised");
+    }
+
+    #[test]
+    fn budget_keeps_adaptive_off_infeasible_strategies() {
+        // Budget large enough for CSR + dist + node worklists, far too
+        // small for EP's COO (plus its exploded worklists) or NS's second
+        // CSR: headroom after CSR+dist is 8E bytes, while EP needs 12E for
+        // the COO alone before any worklist.
+        let g = Arc::new(rmat(10, 8 << 10, RmatParams::default(), 9).unwrap());
+        let budget =
+            g.memory_bytes() + 4 * g.num_nodes() as u64 + 8 * g.num_edges() as u64;
+        let dev = DeviceSpec::k20c();
+        let mut ctx =
+            ExecCtx::new(&dev, AlgoKind::Sssp, Box::new(NativeRelaxer)).with_budget(budget);
+        let mut s = Adaptive::new(g.clone(), params(AdaptivePolicyKind::CostModel));
+        s.init(&mut ctx, 0).unwrap();
+        while s.pending() > 0 {
+            s.run_iteration(&mut ctx).unwrap();
+        }
+        assert_eq!(s.finalize(&ctx), traversal::dijkstra(&g, 0));
+        for d in &ctx.metrics.decisions {
+            assert!(
+                d.strategy != "EP" && d.strategy != "NS",
+                "chose {} despite the budget",
+                d.strategy
+            );
+        }
+        assert!(ctx.mem.peak() <= budget, "exceeded the device budget");
+    }
+
+    #[test]
+    fn unreachable_nodes_stay_inf_through_migration() {
+        use crate::graph::Edge;
+        let g = Arc::new(Csr::from_edges(5, &[Edge::new(0, 1, 2), Edge::new(1, 2, 3)]).unwrap());
+        let r = run_ad(&g, AlgoKind::Sssp, AdaptivePolicyKind::RoundRobin);
+        assert_eq!(r.dist, vec![0, 2, 5, crate::INF, crate::INF]);
+    }
+}

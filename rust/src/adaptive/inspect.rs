@@ -1,0 +1,96 @@
+//! Online frontier inspection: the cheap per-iteration statistics every
+//! adaptive decision is made from.
+//!
+//! The node worklists already cache out-degrees (the paper's "two
+//! associative arrays", §III-A), so inspection is a single host-side pass
+//! over the degree array — no extra device kernel. The simulated cost the
+//! engine charges for it is a small flat overhead
+//! ([`crate::adaptive::engine`]), mirroring Jatala et al.'s observation
+//! that frontier statistics can be collected almost for free alongside the
+//! previous kernel.
+
+use crate::graph::stats::DegreeStats;
+use crate::sim::DeviceSpec;
+
+/// Statistics of the current frontier, in original-graph node space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierSnapshot {
+    /// Active nodes in the frontier.
+    pub nodes: u64,
+    /// Total outgoing edges of the frontier (the iteration's work).
+    pub edges: u64,
+    /// Maximum out-degree in the frontier.
+    pub max_degree: u32,
+    /// Mean out-degree in the frontier.
+    pub mean_degree: f64,
+    /// Degree skew `max / mean` — the first-order predictor of node-based
+    /// (BS) warp imbalance. 0 when the frontier carries no edges.
+    pub skew: f64,
+    /// Fraction of the device's resident threads one-edge-per-thread work
+    /// would occupy (`edges / max_resident_threads`; may exceed 1).
+    pub occupancy: f64,
+}
+
+impl FrontierSnapshot {
+    /// True when the frontier is too small to fill even one block.
+    pub fn is_small(&self, dev: &DeviceSpec) -> bool {
+        self.edges < dev.block_size as u64
+    }
+}
+
+/// Computes [`FrontierSnapshot`]s from worklist degree arrays.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FrontierInspector;
+
+impl FrontierInspector {
+    /// Inspect a frontier given the active nodes' out-degrees.
+    pub fn inspect(degrees: &[u32], dev: &DeviceSpec) -> FrontierSnapshot {
+        let st = DegreeStats::of_degrees(degrees);
+        let edges: u64 = degrees.iter().map(|&d| d as u64).sum();
+        let skew = st.imbalance();
+        FrontierSnapshot {
+            nodes: degrees.len() as u64,
+            edges,
+            max_degree: st.max,
+            mean_degree: st.avg,
+            skew,
+            occupancy: edges as f64 / dev.max_resident_threads.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_of_skewed_frontier() {
+        let dev = DeviceSpec::k20c();
+        let degs = [1u32, 1, 1, 1, 96];
+        let s = FrontierInspector::inspect(&degs, &dev);
+        assert_eq!(s.nodes, 5);
+        assert_eq!(s.edges, 100);
+        assert_eq!(s.max_degree, 96);
+        assert!((s.mean_degree - 20.0).abs() < 1e-9);
+        assert!((s.skew - 96.0 / 20.0).abs() < 1e-9);
+        assert!(s.is_small(&dev));
+    }
+
+    #[test]
+    fn empty_frontier_is_degenerate() {
+        let dev = DeviceSpec::k20c();
+        let s = FrontierInspector::inspect(&[], &dev);
+        assert_eq!(s.nodes, 0);
+        assert_eq!(s.edges, 0);
+        assert_eq!(s.skew, 0.0);
+    }
+
+    #[test]
+    fn occupancy_scales_with_edges() {
+        let dev = DeviceSpec::k20c();
+        let degs = vec![2u32; dev.max_resident_threads as usize];
+        let s = FrontierInspector::inspect(&degs, &dev);
+        assert!((s.occupancy - 2.0).abs() < 1e-9);
+        assert!(!s.is_small(&dev));
+    }
+}

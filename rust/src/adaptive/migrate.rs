@@ -1,0 +1,203 @@
+//! Lossless worklist migration between strategy representations.
+//!
+//! The five static strategies disagree on what a worklist holds:
+//!
+//! * BS / WD / HP — active **node** ids (+ cached out-degrees) of the
+//!   original graph.
+//! * EP — the exploded **edge** frontier: every outgoing edge of every
+//!   active node, with duplicated source endpoints (§II-B).
+//! * NS — node ids of the **split graph**, where a high-degree parent's
+//!   work is shared with its child clones (§III-B).
+//!
+//! Switching strategies mid-run therefore converts the pending set between
+//! these spaces. All conversions round-trip: the set of pending nodes (and
+//! hence the final BFS/SSSP answer) is preserved, with one documented
+//! exception — the edge representation cannot carry zero-out-degree nodes,
+//! whose processing is a no-op, so `nodes → edges → nodes` drops exactly
+//! those. `rust/tests/strategy_properties.rs` asserts both properties.
+
+use crate::graph::{Csr, Graph, NodeId};
+use crate::strategies::node_split::SplitGraph;
+use crate::strategies::StrategyKind;
+use crate::worklist::{EdgeWorklist, NodeWorklist};
+
+/// The worklist space a strategy's kernels consume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    /// Original-graph node worklist (BS, WD, HP).
+    Node,
+    /// Exploded edge frontier over the COO form (EP).
+    Edge,
+    /// Split-graph node worklist (NS).
+    Split,
+}
+
+/// Which space a strategy's worklist lives in.
+pub fn space_of(kind: StrategyKind) -> Space {
+    match kind {
+        StrategyKind::EP => Space::Edge,
+        StrategyKind::NS => Space::Split,
+        // AD is the selector itself; its canonical view is node space.
+        StrategyKind::BS | StrategyKind::WD | StrategyKind::HP | StrategyKind::AD => Space::Node,
+    }
+}
+
+/// Node frontier → exploded edge frontier: all outgoing edges of every
+/// active node (`outputWl.push(n.edges)` in the paper's pseudocode).
+/// Zero-degree nodes contribute nothing.
+pub fn nodes_to_edges(g: &Csr, wl: &NodeWorklist) -> EdgeWorklist {
+    let mut out = EdgeWorklist::new();
+    for &n in wl.nodes() {
+        out.push_node_edges(g, n);
+    }
+    out
+}
+
+/// Exploded edge frontier → node frontier: the distinct source endpoints in
+/// first-seen order. Exact inverse of [`nodes_to_edges`] because EP's
+/// worklists always carry whole adjacencies per source.
+pub fn edges_to_nodes(g: &Csr, wl: &EdgeWorklist) -> NodeWorklist {
+    let mut seen = vec![0u64; g.num_nodes().div_ceil(64)];
+    let mut out = NodeWorklist::new();
+    for &s in wl.srcs() {
+        let (w, b) = (s as usize / 64, s as usize % 64);
+        if seen[w] & (1 << b) == 0 {
+            seen[w] |= 1 << b;
+            out.push(s, g.degree(s));
+        }
+    }
+    out
+}
+
+/// Original node frontier → split-graph frontier: each node plus all of its
+/// child clones (the clones own slices of the parent's adjacency, so the
+/// parent's pending work is exactly the union).
+pub fn nodes_to_split(split: &SplitGraph, wl: &NodeWorklist) -> NodeWorklist {
+    let g = &split.graph;
+    let mut out = NodeWorklist::new();
+    for &n in wl.nodes() {
+        out.push(n, g.degree(n));
+        for c in split.map.children(n) {
+            out.push(c, g.degree(c));
+        }
+    }
+    out
+}
+
+/// `parent_of[x]` for every split-graph id: identity for original ids,
+/// the owning parent for child clones.
+pub fn parent_of_table(split: &SplitGraph, original_nodes: usize) -> Vec<NodeId> {
+    let n_split = split.graph.num_nodes();
+    let mut parent: Vec<NodeId> = (0..n_split as u32).collect();
+    for u in 0..original_nodes as u32 {
+        for c in split.map.children(u) {
+            parent[c as usize] = u;
+        }
+    }
+    parent
+}
+
+/// Split-graph frontier → original node frontier: map every id to its
+/// parent and deduplicate (a parent and its clones collapse to one entry).
+pub fn split_to_nodes(
+    original: &Csr,
+    parent_of: &[NodeId],
+    wl: &NodeWorklist,
+) -> NodeWorklist {
+    let mut seen = vec![0u64; original.num_nodes().div_ceil(64)];
+    let mut out = NodeWorklist::new();
+    for &x in wl.nodes() {
+        let p = parent_of[x as usize];
+        let (w, b) = (p as usize / 64, p as usize % 64);
+        if seen[w] & (1 << b) == 0 {
+            seen[w] |= 1 << b;
+            out.push(p, original.degree(p));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+    use crate::strategies::mdt::MdtDecision;
+    use crate::strategies::node_split::split_graph;
+
+    fn hub_graph() -> Csr {
+        // node 0 fans out to 1..=7; node 8 is isolated (degree 0).
+        let edges: Vec<Edge> = (1..8u32).map(|v| Edge::new(0, v, 1)).collect();
+        Csr::from_edges(9, &edges).unwrap()
+    }
+
+    fn sorted_nodes(wl: &NodeWorklist) -> Vec<u32> {
+        let mut v = wl.nodes().to_vec();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn node_edge_roundtrip_drops_only_zero_degree() {
+        let g = hub_graph();
+        let mut wl = NodeWorklist::new();
+        wl.push(0, g.degree(0));
+        wl.push(8, g.degree(8)); // zero-degree: vanishes in edge space
+        wl.push(1, g.degree(1)); // zero-degree too (leaf)
+        let edges = nodes_to_edges(&g, &wl);
+        assert_eq!(edges.len(), 7);
+        let back = edges_to_nodes(&g, &edges);
+        assert_eq!(sorted_nodes(&back), vec![0]);
+    }
+
+    #[test]
+    fn split_roundtrip_is_exact() {
+        let g = hub_graph();
+        let decision = MdtDecision {
+            mdt: 3,
+            peak_bin: 0,
+            bins: 10,
+            max_degree: 7,
+        };
+        let split = split_graph(&g, decision);
+        assert!(split.split_nodes > 0, "hub must split at MDT 3");
+        let parent_of = parent_of_table(&split, g.num_nodes());
+
+        let mut wl = NodeWorklist::new();
+        wl.push(0, g.degree(0));
+        wl.push(5, g.degree(5));
+        let split_wl = nodes_to_split(&split, &wl);
+        // parent 0 plus its clones, plus node 5
+        assert_eq!(
+            split_wl.len(),
+            2 + split.map.children(0).len()
+        );
+        let back = split_to_nodes(&g, &parent_of, &split_wl);
+        assert_eq!(sorted_nodes(&back), vec![0, 5]);
+    }
+
+    #[test]
+    fn split_frontier_degrees_are_bounded_by_mdt() {
+        let g = hub_graph();
+        let decision = MdtDecision {
+            mdt: 3,
+            peak_bin: 0,
+            bins: 10,
+            max_degree: 7,
+        };
+        let split = split_graph(&g, decision);
+        let mut wl = NodeWorklist::new();
+        wl.push(0, g.degree(0));
+        let split_wl = nodes_to_split(&split, &wl);
+        assert!(split_wl.degrees().iter().all(|&d| d <= 3));
+        assert_eq!(split_wl.total_edges(), 7, "no pending edge lost");
+    }
+
+    #[test]
+    fn spaces_cover_every_kind() {
+        assert_eq!(space_of(StrategyKind::EP), Space::Edge);
+        assert_eq!(space_of(StrategyKind::NS), Space::Split);
+        for k in [StrategyKind::BS, StrategyKind::WD, StrategyKind::HP] {
+            assert_eq!(space_of(k), Space::Node);
+        }
+    }
+}

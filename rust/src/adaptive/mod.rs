@@ -1,0 +1,39 @@
+//! Adaptive per-iteration strategy selection (`StrategyKind::AD`).
+//!
+//! The source paper's own conclusion is that no static scheme wins
+//! everywhere: EP dominates where its COO fits, WD wins among node-based
+//! schemes on skewed inputs, HP is the only proposed scheme that scales to
+//! the Graph500 graphs, and BS's zero overhead wins on tiny frontiers.
+//! Later work closes that gap at runtime — Jatala et al. (arXiv:1911.09135)
+//! switch load-balancing schemes per kernel invocation from frontier
+//! properties, and Osama et al. (arXiv:2301.04792) decouple the schedule
+//! from the algorithm entirely. This module is that adaptive layer for the
+//! five reproduced strategies:
+//!
+//! * [`inspect`] — cheap online statistics of the current frontier
+//!   (size, total outgoing degree, skew, occupancy), reusing the worklists'
+//!   cached degrees and [`crate::graph::stats::DegreeStats`].
+//! * [`policy`] — pluggable decision policies: a heuristic with
+//!   paper-derived thresholds, a cost model that queries the
+//!   [`crate::sim::KernelSim`] predictor per candidate strategy (respecting
+//!   the device memory budget so EP/WD are never chosen when their COO /
+//!   exploded worklists would OOM), and a round-robin stress policy for
+//!   migration testing.
+//! * [`migrate`] — lossless worklist conversion between the strategies'
+//!   representations (node worklist ↔ exploded edge frontier ↔ split-graph
+//!   ids), so switching mid-run preserves the pending set and therefore
+//!   correctness.
+//! * [`engine`] — the [`Adaptive`] strategy: per outer iteration it
+//!   inspects, decides, migrates if needed, and executes that iteration in
+//!   the chosen strategy's kernel style, recording the decision trace into
+//!   [`crate::metrics::RunMetrics::decisions`].
+
+pub mod cost;
+pub mod engine;
+pub mod inspect;
+pub mod migrate;
+pub mod policy;
+
+pub use engine::Adaptive;
+pub use inspect::{FrontierInspector, FrontierSnapshot};
+pub use policy::{AdaptivePolicyKind, Decision, Feasibility, Policy};

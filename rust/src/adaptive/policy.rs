@@ -1,0 +1,404 @@
+//! Decision policies for the adaptive engine.
+//!
+//! A [`Policy`] sees the per-iteration [`FrontierSnapshot`], the frontier's
+//! degree list, the memory [`Feasibility`] mask, and the current strategy;
+//! it returns the strategy to run the next iteration with. Two production
+//! policies are provided plus one for testing:
+//!
+//! * [`HeuristicPolicy`] — paper-derived thresholds: memory-pressured runs
+//!   fall back to HP (the only proposed scheme that scales to Graph500,
+//!   §IV-A), small frontiers run BS (zero strategy overhead), skewed
+//!   frontiers run EP where its COO fits (60–80% reductions, §IV-A) and WD
+//!   otherwise (best node-based scheme on skewed inputs), large uniform
+//!   frontiers run WD.
+//! * [`CostModelPolicy`] — queries the [`crate::sim::KernelSim`]-backed
+//!   predictor ([`super::cost`]) for every memory-feasible candidate and
+//!   picks the cheapest, with 5% hysteresis so ties do not cause churn.
+//! * [`RoundRobinPolicy`] — cycles through the feasible strategies every
+//!   iteration; a stress policy exercising every migration path
+//!   (`rust/tests/strategy_properties.rs`).
+
+use crate::sim::DeviceSpec;
+use crate::strategies::{StrategyKind, StrategyParams};
+
+use super::cost;
+use super::inspect::FrontierSnapshot;
+use super::migrate::{space_of, Space};
+
+/// Which decision policy the adaptive engine uses (configured through
+/// [`StrategyParams::adaptive_policy`] and the `adaptive_policy` config
+/// key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdaptivePolicyKind {
+    /// Threshold rules derived from the paper's findings.
+    Heuristic,
+    /// KernelSim-backed cost model (default).
+    #[default]
+    CostModel,
+    /// Cycle through feasible strategies (migration stress-testing).
+    RoundRobin,
+}
+
+/// Memory feasibility of the candidate strategies under the device budget,
+/// computed by the engine before each decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Feasibility {
+    /// EP's COO + exploded worklist fit in the remaining budget.
+    pub ep: bool,
+    /// WD's degree-carrying worklist + scan scratch fit.
+    pub wd: bool,
+    /// NS's split graph (+ transient rebuild) fits.
+    pub ns: bool,
+    /// The COO arrays are already resident (EP was used before).
+    pub coo_resident: bool,
+    /// The split graph has already been built (NS was used before).
+    pub split_built: bool,
+}
+
+impl Feasibility {
+    /// Whether `kind` may be chosen at all. BS and HP are always available:
+    /// they add no storage beyond what the engine already holds.
+    pub fn allows(&self, kind: StrategyKind) -> bool {
+        match kind {
+            StrategyKind::EP => self.ep,
+            StrategyKind::WD => self.wd,
+            StrategyKind::NS => self.ns,
+            StrategyKind::BS | StrategyKind::HP => true,
+            StrategyKind::AD => false,
+        }
+    }
+}
+
+/// Everything a policy may consult for one decision.
+pub struct PolicyInput<'a> {
+    pub snapshot: &'a FrontierSnapshot,
+    /// Out-degrees of the frontier nodes (original-graph space).
+    pub degrees: &'a [u32],
+    pub current: StrategyKind,
+    pub feasibility: Feasibility,
+    pub dev: &'a DeviceSpec,
+    pub params: &'a StrategyParams,
+    /// The MDT threshold NS/HP would use.
+    pub mdt: u32,
+    /// Edges of the whole graph (COO sizing).
+    pub graph_edges: u64,
+    /// Nodes of the whole graph.
+    pub graph_nodes: u64,
+}
+
+/// A policy's verdict for one iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// The strategy to run this iteration with (one of the five static
+    /// kinds).
+    pub choice: StrategyKind,
+    /// Predicted cycles for the choice (0 when the policy does not
+    /// predict).
+    pub predicted_cycles: u64,
+}
+
+/// Per-iteration strategy selection.
+pub trait Policy {
+    /// Short name for reporting.
+    fn name(&self) -> &'static str;
+
+    /// Pick the strategy for the next iteration.
+    fn decide(&mut self, input: &PolicyInput<'_>) -> Decision;
+}
+
+/// Build the policy selected by `kind`.
+pub fn build_policy(kind: AdaptivePolicyKind) -> Box<dyn Policy> {
+    match kind {
+        AdaptivePolicyKind::Heuristic => Box::new(HeuristicPolicy),
+        AdaptivePolicyKind::CostModel => Box::new(CostModelPolicy::default()),
+        AdaptivePolicyKind::RoundRobin => Box::new(RoundRobinPolicy::default()),
+    }
+}
+
+/// Frontier skew above which the frontier counts as "skewed" (a warp
+/// containing the max-degree node stalls ≥ 4× the average lane).
+const SKEW_THRESHOLD: f64 = 4.0;
+
+/// Paper-derived threshold rules.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HeuristicPolicy;
+
+impl Policy for HeuristicPolicy {
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+
+    fn decide(&mut self, input: &PolicyInput<'_>) -> Decision {
+        let snap = input.snapshot;
+        let feas = &input.feasibility;
+        let choice = if !feas.ep && !feas.wd {
+            // Memory-pressured: HP is the scheme the paper could still run
+            // on the large graphs (§IV-A).
+            StrategyKind::HP
+        } else if snap.is_small(input.dev) {
+            // Tiny frontier: any decomposition overhead dwarfs the kernel;
+            // the plain baseline wins (the paper's road-BFS finding).
+            StrategyKind::BS
+        } else if snap.skew >= SKEW_THRESHOLD {
+            // Skewed frontier: EP where the COO fits, else the best
+            // node-based scheme for skewed inputs (WD), else HP.
+            if feas.ep {
+                StrategyKind::EP
+            } else if feas.wd {
+                StrategyKind::WD
+            } else {
+                StrategyKind::HP
+            }
+        } else if feas.wd {
+            // Large uniform frontier: workload decomposition.
+            StrategyKind::WD
+        } else if feas.ep {
+            StrategyKind::EP
+        } else {
+            StrategyKind::HP
+        };
+        Decision {
+            choice,
+            predicted_cycles: 0,
+        }
+    }
+}
+
+/// KernelSim-backed cost model with hysteresis.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CostModelPolicy;
+
+impl Policy for CostModelPolicy {
+    fn name(&self) -> &'static str {
+        "cost-model"
+    }
+
+    fn decide(&mut self, input: &PolicyInput<'_>) -> Decision {
+        let mut best: Option<(StrategyKind, u64)> = None;
+        let mut current_cost: Option<u64> = None;
+        for kind in StrategyKind::ALL {
+            if !input.feasibility.allows(kind) {
+                continue;
+            }
+            let mut cycles = cost::predict(kind, input);
+            if kind != input.current {
+                cycles = cycles.saturating_add(cost::migration_cycles(input, kind));
+            } else {
+                current_cost = Some(cycles);
+            }
+            if best.map_or(true, |(_, c)| cycles < c) {
+                best = Some((kind, cycles));
+            }
+        }
+        let (choice, cycles) = best.unwrap_or((StrategyKind::BS, 0));
+        // Hysteresis: stay with the current strategy unless the winner is
+        // more than 5% cheaper — repeated migration would eat the gain.
+        if let Some(cur) = current_cost {
+            if choice != input.current && cur <= cycles.saturating_add(cycles / 20) {
+                return Decision {
+                    choice: input.current,
+                    predicted_cycles: cur,
+                };
+            }
+        }
+        Decision {
+            choice,
+            predicted_cycles: cycles,
+        }
+    }
+}
+
+/// Cycles through the feasible strategies — every call moves on, so every
+/// migration path gets exercised.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundRobinPolicy {
+    at: usize,
+}
+
+impl Policy for RoundRobinPolicy {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn decide(&mut self, input: &PolicyInput<'_>) -> Decision {
+        let order = StrategyKind::ALL;
+        for step in 1..=order.len() {
+            let kind = order[(self.at + step) % order.len()];
+            if input.feasibility.allows(kind) {
+                self.at = (self.at + step) % order.len();
+                return Decision {
+                    choice: kind,
+                    predicted_cycles: 0,
+                };
+            }
+        }
+        Decision {
+            choice: StrategyKind::BS,
+            predicted_cycles: 0,
+        }
+    }
+}
+
+/// Whether switching `from → to` requires converting the worklist between
+/// spaces (used by the cost model's migration penalty and the engine).
+pub fn requires_migration(from: StrategyKind, to: StrategyKind) -> bool {
+    space_of(from) != space_of(to) || wd_entry_resize(from, to)
+}
+
+/// BS/HP carry 4 B worklist entries, WD carries 8 B (node + degree arrays,
+/// §III-A); switching between them re-shapes the buffer even though both
+/// live in node space.
+fn wd_entry_resize(from: StrategyKind, to: StrategyKind) -> bool {
+    space_of(from) == Space::Node
+        && space_of(to) == Space::Node
+        && (from == StrategyKind::WD) != (to == StrategyKind::WD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptive::inspect::FrontierInspector;
+
+    fn input<'a>(
+        snap: &'a FrontierSnapshot,
+        degrees: &'a [u32],
+        dev: &'a DeviceSpec,
+        params: &'a StrategyParams,
+        feas: Feasibility,
+    ) -> PolicyInput<'a> {
+        PolicyInput {
+            snapshot: snap,
+            degrees,
+            current: StrategyKind::BS,
+            feasibility: feas,
+            dev,
+            params,
+            mdt: 4,
+            graph_edges: 10_000,
+            graph_nodes: 1_000,
+        }
+    }
+
+    fn all_feasible() -> Feasibility {
+        Feasibility {
+            ep: true,
+            wd: true,
+            ns: true,
+            coo_resident: false,
+            split_built: false,
+        }
+    }
+
+    #[test]
+    fn heuristic_prefers_bs_on_tiny_frontiers() {
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams::default();
+        let degs = [2u32, 3, 1];
+        let snap = FrontierInspector::inspect(&degs, &dev);
+        let mut p = HeuristicPolicy;
+        let d = p.decide(&input(&snap, &degs, &dev, &params, all_feasible()));
+        assert_eq!(d.choice, StrategyKind::BS);
+    }
+
+    #[test]
+    fn heuristic_prefers_ep_on_large_skewed_frontiers() {
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams::default();
+        let mut degs = vec![2u32; 4096];
+        degs.push(5_000); // hub
+        let snap = FrontierInspector::inspect(&degs, &dev);
+        let mut p = HeuristicPolicy;
+        let d = p.decide(&input(&snap, &degs, &dev, &params, all_feasible()));
+        assert_eq!(d.choice, StrategyKind::EP);
+    }
+
+    #[test]
+    fn heuristic_falls_back_to_hp_under_memory_pressure() {
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams::default();
+        let degs = vec![8u32; 8192];
+        let snap = FrontierInspector::inspect(&degs, &dev);
+        let feas = Feasibility {
+            ep: false,
+            wd: false,
+            ns: false,
+            coo_resident: false,
+            split_built: false,
+        };
+        let mut p = HeuristicPolicy;
+        let d = p.decide(&input(&snap, &degs, &dev, &params, feas));
+        assert_eq!(d.choice, StrategyKind::HP);
+    }
+
+    #[test]
+    fn cost_model_never_picks_infeasible_strategies() {
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams::default();
+        let degs = vec![16u32; 8192];
+        let snap = FrontierInspector::inspect(&degs, &dev);
+        let feas = Feasibility {
+            ep: false,
+            wd: false,
+            ns: false,
+            coo_resident: false,
+            split_built: false,
+        };
+        let mut p = CostModelPolicy;
+        let d = p.decide(&input(&snap, &degs, &dev, &params, feas));
+        assert!(
+            matches!(d.choice, StrategyKind::BS | StrategyKind::HP),
+            "picked {}",
+            d.choice
+        );
+    }
+
+    #[test]
+    fn cost_model_beats_bs_on_heavy_skew() {
+        // A single huge hub: BS serializes one lane; every alternative
+        // must predict cheaper, so the model must not choose BS.
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams::default();
+        let mut degs = vec![1u32; 2048];
+        degs.push(100_000);
+        let snap = FrontierInspector::inspect(&degs, &dev);
+        let mut p = CostModelPolicy;
+        let d = p.decide(&input(&snap, &degs, &dev, &params, all_feasible()));
+        assert_ne!(d.choice, StrategyKind::BS);
+        assert!(d.predicted_cycles > 0);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_respects_feasibility() {
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams::default();
+        let degs = [4u32; 64];
+        let snap = FrontierInspector::inspect(&degs, &dev);
+        let feas = Feasibility {
+            ep: true,
+            wd: true,
+            ns: false,
+            coo_resident: false,
+            split_built: false,
+        };
+        let mut p = RoundRobinPolicy::default();
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            let d = p.decide(&input(&snap, &degs, &dev, &params, feas));
+            assert_ne!(d.choice, StrategyKind::NS, "NS is infeasible");
+            seen.push(d.choice);
+        }
+        assert!(seen.contains(&StrategyKind::BS));
+        assert!(seen.contains(&StrategyKind::EP));
+        assert!(seen.contains(&StrategyKind::WD));
+        assert!(seen.contains(&StrategyKind::HP));
+    }
+
+    #[test]
+    fn migration_required_between_spaces_and_wd_reshape() {
+        assert!(requires_migration(StrategyKind::BS, StrategyKind::EP));
+        assert!(requires_migration(StrategyKind::EP, StrategyKind::NS));
+        assert!(requires_migration(StrategyKind::BS, StrategyKind::WD));
+        assert!(!requires_migration(StrategyKind::BS, StrategyKind::HP));
+        assert!(!requires_migration(StrategyKind::WD, StrategyKind::WD));
+    }
+}

@@ -11,12 +11,13 @@
 //! scale      = small                   # tiny | small | paper (suite graphs)
 //! seed       = 20170101
 //! algos      = sssp,bfs
-//! strategies = BS,EP,WD,NS,HP
+//! strategies = BS,EP,WD,NS,HP,AD      # or "all"
 //! source     = 0
 //! push_policy = chunked                # chunked | per-edge
 //! enforce_budget = false
 //! backend    = native                  # native | xla | xla:DIR
 //! histogram_bins = 10
+//! adaptive_policy = cost               # cost | heuristic | round-robin (AD only)
 //! ```
 
 use crate::algorithms::AlgoKind;
@@ -132,6 +133,18 @@ pub fn parse_algo(s: &str) -> Result<AlgoKind> {
     }
 }
 
+/// Parse an adaptive-policy name (the `adaptive_policy` config key and the
+/// CLI's `--adaptive-policy`).
+pub fn parse_adaptive_policy(s: &str) -> Result<crate::adaptive::AdaptivePolicyKind> {
+    use crate::adaptive::AdaptivePolicyKind;
+    match s {
+        "cost" | "cost-model" => Ok(AdaptivePolicyKind::CostModel),
+        "heuristic" => Ok(AdaptivePolicyKind::Heuristic),
+        "round-robin" => Ok(AdaptivePolicyKind::RoundRobin),
+        other => Err(Error::Config(format!("unknown adaptive policy {other:?}"))),
+    }
+}
+
 /// A full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -200,7 +213,7 @@ impl ExperimentConfig {
                 }
                 "strategies" | "strategy" => {
                     cfg.strategies = if v == "all" {
-                        StrategyKind::ALL.to_vec()
+                        StrategyKind::ALL_WITH_ADAPTIVE.to_vec()
                     } else {
                         v.split(',')
                             .map(|s| s.trim().parse())
@@ -254,6 +267,9 @@ impl ExperimentConfig {
                         v.parse()
                             .map_err(|_| Error::Config(format!("bad max_threads {v:?}")))?,
                     )
+                }
+                "adaptive_policy" => {
+                    cfg.params.adaptive_policy = parse_adaptive_policy(&v)?;
                 }
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
@@ -365,5 +381,23 @@ mod tests {
         assert_eq!(cfg.strategies.len(), 5);
         assert_eq!(cfg.algos, vec![AlgoKind::Sssp]);
         assert!(!cfg.enforce_budget);
+    }
+
+    #[test]
+    fn parses_adaptive_strategy_and_policy() {
+        let cfg = ExperimentConfig::parse(
+            "strategies = AD\nadaptive_policy = heuristic\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.strategies, vec![StrategyKind::AD]);
+        assert_eq!(
+            cfg.params.adaptive_policy,
+            crate::adaptive::AdaptivePolicyKind::Heuristic
+        );
+        assert!(ExperimentConfig::parse("adaptive_policy = bogus").is_err());
+        // "all" now includes the adaptive selector.
+        let all = ExperimentConfig::parse("strategies = all").unwrap();
+        assert!(all.strategies.contains(&StrategyKind::AD));
+        assert_eq!(all.strategies.len(), 6);
     }
 }

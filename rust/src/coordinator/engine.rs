@@ -14,7 +14,7 @@ use std::time::Instant;
 use super::ExecCtx;
 
 /// Which relaxation backend computes the numeric hot path.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub enum Backend {
     /// Pure-Rust candidates (simulation + oracle).
     #[default]

@@ -271,16 +271,15 @@ impl<'d> ExecCtx<'d> {
 
     /// Charge an auxiliary (overhead) kernel touching `items` elements
     /// coalesced with `per_item` extra ALU cycles — scan, `find_offsets`,
-    /// worklist condensing, split preprocessing.
+    /// worklist condensing, split preprocessing. The cost formula lives on
+    /// [`DeviceSpec::aux_kernel_cycles`] so the adaptive cost model
+    /// predicts exactly what execution charges.
     pub fn charge_aux_kernel(&mut self, items: u64, per_item: u64) {
         let dev = self.dev;
         // items spread over the device: warps of 32, coalesced streaming
         let warps = (items + dev.warp_size as u64 - 1) / dev.warp_size as u64;
-        let per_warp = dev.coalesced_tx + dev.alu_relax + per_item;
-        let parallel = dev.num_sm as u64 * dev.warp_throughput();
-        let busy = (warps * per_warp + parallel - 1) / parallel.max(1);
         let t = crate::sim::KernelTime {
-            cycles: dev.launch_overhead + busy.max(if warps > 0 { per_warp } else { 0 }),
+            cycles: dev.aux_kernel_cycles(items, per_item),
             warps,
             edge_steps: 0,
             atomics: 0,

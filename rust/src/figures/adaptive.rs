@@ -1,0 +1,203 @@
+//! The "adaptive vs. best-static" figure: for every Table II graph, run the
+//! five static strategies *and* the adaptive selector on the same problem,
+//! then report how close AD lands to the per-graph best static strategy
+//! (which the user of a static system would have had to know in advance)
+//! and how far from the worst (which they risk picking blind).
+
+use crate::algorithms::AlgoKind;
+use crate::coordinator::{run, RunConfig};
+use crate::error::Result;
+use crate::graph::generators::paper_suite;
+use crate::graph::Graph;
+use crate::strategies::StrategyKind;
+use crate::util::Json;
+use std::io::Write;
+use std::sync::Arc;
+
+use super::{FigureOpts, Outcome};
+
+/// One graph's adaptive-vs-static comparison.
+#[derive(Debug, Clone)]
+pub struct AdaptiveRow {
+    pub graph: String,
+    pub nodes: usize,
+    pub edges: usize,
+    /// The five static outcomes, paper order.
+    pub outcomes: Vec<(StrategyKind, Outcome)>,
+    /// The adaptive run's outcome.
+    pub adaptive: Outcome,
+    /// Strategy switches the adaptive engine performed.
+    pub switches: u64,
+    /// Outer iterations (= decision-trace length).
+    pub decisions: usize,
+    /// Distinct modes executed, in first-use order (e.g. "BS>EP").
+    pub modes: String,
+    /// `100 * (ad / best_static - 1)` — how far above the best static
+    /// strategy AD landed (negative: AD beat every static strategy).
+    pub vs_best_pct: Option<f64>,
+    /// `100 * (1 - ad / worst_static)` — reduction vs. the worst static
+    /// strategy that completed.
+    pub vs_worst_pct: Option<f64>,
+}
+
+impl AdaptiveRow {
+    /// Best completed static time, with its strategy.
+    pub fn best_static(&self) -> Option<(StrategyKind, f64)> {
+        self.outcomes
+            .iter()
+            .filter_map(|(k, o)| o.total_ms().map(|t| (*k, t)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Worst completed static time, with its strategy.
+    pub fn worst_static(&self) -> Option<(StrategyKind, f64)> {
+        self.outcomes
+            .iter()
+            .filter_map(|(k, o)| o.total_ms().map(|t| (*k, t)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.as_str().into()),
+            ("nodes", self.nodes.into()),
+            ("edges", self.edges.into()),
+            (
+                "static",
+                Json::Arr(
+                    self.outcomes
+                        .iter()
+                        .map(|(k, o)| {
+                            Json::obj(vec![
+                                ("strategy", k.label().into()),
+                                ("outcome", o.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("adaptive", self.adaptive.to_json()),
+            ("switches", self.switches.into()),
+            ("decisions", self.decisions.into()),
+            ("modes", self.modes.as_str().into()),
+            (
+                "vs_best_pct",
+                self.vs_best_pct.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "vs_worst_pct",
+                self.vs_worst_pct.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+}
+
+/// Distinct decision-trace modes in first-use order.
+fn modes_used(decisions: &[crate::metrics::DecisionRecord]) -> String {
+    let mut seen: Vec<&str> = Vec::new();
+    for d in decisions {
+        if !seen.contains(&d.strategy) {
+            seen.push(d.strategy);
+        }
+    }
+    seen.join(">")
+}
+
+/// Run the adaptive-vs-best-static comparison (SSSP, the paper's
+/// computation-heavy case where load balancing matters most).
+pub fn fig_adaptive(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<AdaptiveRow>> {
+    writeln!(
+        out,
+        "\n== Adaptive (AD) vs. static strategies — SSSP total time (ms, simulated K20c) =="
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:>10} {:>10} {:>10} {:>14} {:>14} {:>8} {:>9}  {}",
+        "graph", "AD", "best", "worst", "best-static", "vs-best", "vs-worst", "switches", "modes"
+    )?;
+    let mut rows = Vec::new();
+    for entry in paper_suite(opts.scale) {
+        let g = Arc::new(entry.spec.generate(opts.seed)?);
+        let dev = opts.device_for(&entry, &g);
+        let source = crate::graph::traversal::hub_source(&g);
+
+        let mut outcomes = Vec::new();
+        for k in StrategyKind::ALL {
+            let cfg = RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: k,
+                source,
+                device: dev.clone(),
+                enforce_budget: opts.enforce_budget,
+                ..Default::default()
+            };
+            outcomes.push((k, Outcome::from_run(run(&g, &cfg), &dev)?));
+        }
+
+        let ad_cfg = RunConfig {
+            algo: AlgoKind::Sssp,
+            strategy: StrategyKind::AD,
+            source,
+            device: dev.clone(),
+            enforce_budget: opts.enforce_budget,
+            ..Default::default()
+        };
+        let ad_run = run(&g, &ad_cfg);
+        let (switches, decisions, modes) = match &ad_run {
+            Ok(r) => (
+                r.metrics.strategy_switches,
+                r.metrics.decisions.len(),
+                modes_used(&r.metrics.decisions),
+            ),
+            Err(_) => (0, 0, String::new()),
+        };
+        let adaptive = Outcome::from_run(ad_run, &dev)?;
+
+        let mut row = AdaptiveRow {
+            graph: entry.name.clone(),
+            nodes: g.num_nodes(),
+            edges: g.num_edges(),
+            outcomes,
+            adaptive,
+            switches,
+            decisions,
+            modes,
+            vs_best_pct: None,
+            vs_worst_pct: None,
+        };
+        let best = row.best_static();
+        let worst = row.worst_static();
+        if let (Some(ad), Some((_, best_ms))) = (row.adaptive.total_ms(), best) {
+            row.vs_best_pct = Some(100.0 * (ad / best_ms - 1.0));
+        }
+        if let (Some(ad), Some((_, worst_ms))) = (row.adaptive.total_ms(), worst) {
+            row.vs_worst_pct = Some(100.0 * (1.0 - ad / worst_ms));
+        }
+
+        let fmt_ms = |o: Option<f64>| match o {
+            Some(v) => format!("{v:.2}"),
+            None => "OOM".to_string(),
+        };
+        writeln!(
+            out,
+            "{:<12} {:>10} {:>10} {:>10} {:>14} {:>13}% {:>7}% {:>9}  {}",
+            row.graph,
+            fmt_ms(row.adaptive.total_ms()),
+            fmt_ms(best.map(|b| b.1)),
+            fmt_ms(worst.map(|w| w.1)),
+            best.map_or("-".to_string(), |b| b.0.label().to_string()),
+            row.vs_best_pct.map_or("-".to_string(), |p| format!("{p:+.1}")),
+            row.vs_worst_pct.map_or("-".to_string(), |p| format!("{p:.1}")),
+            row.switches,
+            row.modes,
+        )?;
+        rows.push(row);
+    }
+    writeln!(
+        out,
+        "(vs-best: how far AD lands above the per-graph best static strategy; \
+         vs-worst: reduction against the worst)"
+    )?;
+    Ok(rows)
+}

@@ -5,6 +5,7 @@
 //! paper-style rows to a writer, so the CLI, the criterion benches and the
 //! integration tests share one implementation.
 
+pub mod adaptive;
 pub mod tradeoff;
 
 use crate::algorithms::AlgoKind;
@@ -21,6 +22,7 @@ use crate::worklist::chunking::PushPolicy;
 use std::io::Write;
 use std::sync::Arc;
 
+pub use adaptive::{fig_adaptive, AdaptiveRow};
 pub use tradeoff::{fig9, Fig9Row};
 
 /// Common options of the figure harness.

@@ -29,7 +29,8 @@ pub struct Fig9Row {
 
 /// The paper's qualitative implementation-complexity ordering (§IV-B,
 /// Table I): BS and EP are "simple to implement (static)", HP is moderate,
-/// WD needs offset machinery, NS rewrites the graph.
+/// WD needs offset machinery, NS rewrites the graph. The adaptive selector
+/// composes all five plus migration, so it ranks last on this axis.
 pub fn impl_complexity_rank(k: StrategyKind) -> usize {
     match k {
         StrategyKind::BS => 1,
@@ -37,6 +38,7 @@ pub fn impl_complexity_rank(k: StrategyKind) -> usize {
         StrategyKind::HP => 3,
         StrategyKind::WD => 4,
         StrategyKind::NS => 5,
+        StrategyKind::AD => 6,
     }
 }
 

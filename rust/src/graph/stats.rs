@@ -19,6 +19,17 @@ impl DegreeStats {
     pub fn of(g: &Csr) -> Self {
         use crate::graph::Graph;
         let n = g.num_nodes();
+        Self::over((0..n as u32).map(|u| g.degree(u)), n)
+    }
+
+    /// Compute stats over an explicit degree list — the online frontier
+    /// inspection path of the adaptive subsystem ([`crate::adaptive`]),
+    /// which reuses the worklists' cached out-degrees.
+    pub fn of_degrees(degrees: &[u32]) -> Self {
+        Self::over(degrees.iter().copied(), degrees.len())
+    }
+
+    fn over(degrees: impl Iterator<Item = u32>, n: usize) -> Self {
         if n == 0 {
             return DegreeStats {
                 min: 0,
@@ -31,8 +42,7 @@ impl DegreeStats {
         let mut max = 0u32;
         let mut sum = 0u64;
         let mut sumsq = 0u128;
-        for u in 0..n as u32 {
-            let d = g.degree(u);
+        for d in degrees {
             min = min.min(d);
             max = max.max(d);
             sum += d as u64;
@@ -181,5 +191,17 @@ mod tests {
         let st = DegreeStats::of(&g);
         assert_eq!(st.max, 0);
         assert_eq!(st.avg, 0.0);
+    }
+
+    #[test]
+    fn of_degrees_matches_whole_graph_path() {
+        let g = star(20);
+        use crate::graph::Graph;
+        let degs: Vec<u32> = (0..g.num_nodes() as u32).map(|u| g.degree(u)).collect();
+        assert_eq!(DegreeStats::of(&g), DegreeStats::of_degrees(&degs));
+        assert_eq!(DegreeStats::of_degrees(&[]).max, 0);
+        let sub = DegreeStats::of_degrees(&[3, 3, 3]);
+        assert_eq!(sub.max, 3);
+        assert_eq!(sub.stddev, 0.0);
     }
 }

@@ -26,7 +26,19 @@
 //! paper's work-chunking optimization; and the metrics / reporting layer
 //! ([`metrics`], [`figures`]) that regenerates every table and figure of the
 //! evaluation section.
+//!
+//! On top of the five static reproductions sits the [`adaptive`] subsystem
+//! (`StrategyKind::AD`): a per-iteration selector that inspects the live
+//! frontier, asks a pluggable policy (paper-derived heuristics or a
+//! [`sim::KernelSim`]-backed cost model bounded by the device memory
+//! budget) which scheme should run the next kernel, and migrates the
+//! worklist between representations losslessly — turning the five static
+//! strategies into one self-tuning engine (after Jatala et al.,
+//! arXiv:1911.09135). The decision trace lands in
+//! [`metrics::RunMetrics::decisions`] and the `figad` figure compares AD
+//! against the per-graph best static strategy.
 
+pub mod adaptive;
 pub mod algorithms;
 pub mod config;
 pub mod coordinator;

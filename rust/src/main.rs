@@ -2,11 +2,12 @@
 //!
 //! ```text
 //! lonestar-lb run      [--config F] [--suite NAME | --graph FILE | --gen SPEC]
-//!                      [--algo bfs|sssp] [--strategy BS|EP|WD|NS|HP|all]
+//!                      [--algo bfs|sssp] [--strategy BS|EP|WD|NS|HP|AD|all]
+//!                      [--adaptive-policy cost|heuristic|round-robin]
 //!                      [--scale tiny|small|paper] [--seed N] [--source N]
 //!                      [--xla [--artifacts DIR]] [--enforce-budget]
 //!                      [--no-chunking] [--json]
-//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|all]
+//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|all]
 //!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
 //! lonestar-lb generate NAME OUT [--scale S] [--seed N]
 //! lonestar-lb inspect  FILE
@@ -89,11 +90,12 @@ impl Args {
 
 const USAGE: &str = "usage: lonestar-lb <run|figures|generate|inspect|runtime-info> [options]
   run          --suite NAME | --graph FILE | --gen SPEC | --config FILE
-               --algo bfs|sssp --strategy BS|EP|WD|NS|HP|all --source N
+               --algo bfs|sssp --strategy BS|EP|WD|NS|HP|AD|all --source N
+               --adaptive-policy cost|heuristic|round-robin
                --scale tiny|small|paper --seed N
                --xla --artifacts DIR --enforce-budget --no-chunking --json
-  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|all] --scale S --seed N
-               --out FILE.json --no-budget
+  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|all] --scale S
+               --seed N --out FILE.json --no-budget
   generate     NAME OUT --scale S --seed N
   inspect      FILE
   runtime-info --artifacts DIR";
@@ -152,10 +154,13 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
         cfg.algos = vec![parse_algo(args.get("algo").unwrap_or("sssp"))?];
         let strat = args.get("strategy").unwrap_or("all");
         cfg.strategies = if strat == "all" {
-            StrategyKind::ALL.to_vec()
+            StrategyKind::ALL_WITH_ADAPTIVE.to_vec()
         } else {
             vec![strat.parse()?]
         };
+        if let Some(p) = args.get("adaptive-policy") {
+            cfg.params.adaptive_policy = lonestar_lb::config::parse_adaptive_policy(p)?;
+        }
         cfg.graph = if let Some(f) = args.get("graph") {
             GraphSource::File(f.to_string())
         } else if let Some(s) = args.get("suite") {
@@ -190,8 +195,8 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
                     r.metrics.kernel_launches,
                     r.metrics.host_ns as f64 / 1e6,
                 )?;
-                json_rows.push(Json::obj(vec![
-                    ("algo", rc.algo.name().into()),
+                let mut row = vec![
+                    ("algo", Json::from(rc.algo.name())),
                     ("strategy", rc.strategy.label().into()),
                     ("kernel_ms", r.metrics.kernel_ms(&dev).into()),
                     ("overhead_ms", r.metrics.overhead_ms(&dev).into()),
@@ -201,7 +206,21 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
                     ("kernel_launches", r.metrics.kernel_launches.into()),
                     ("edge_relaxations", r.metrics.edge_relaxations.into()),
                     ("peak_memory", r.metrics.peak_memory_bytes.into()),
-                ]));
+                ];
+                if rc.strategy.is_adaptive() {
+                    row.push(("switches", r.metrics.strategy_switches.into()));
+                    row.push((
+                        "decision_trace",
+                        Json::Arr(
+                            r.metrics
+                                .decisions
+                                .iter()
+                                .map(|d| Json::from(d.strategy))
+                                .collect(),
+                        ),
+                    ));
+                }
+                json_rows.push(Json::obj(row));
             }
             Err(e) if e.is_oom() => {
                 writeln!(out, "{:<5} {:<4} OOM ({e})", rc.algo.name(), rc.strategy.label())?;
@@ -275,6 +294,13 @@ fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
         let rows = figures::fig11(&opts, out)?;
         payload.insert(
             "fig11".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "figad" || which == "adaptive" {
+        let rows = figures::fig_adaptive(&opts, out)?;
+        payload.insert(
+            "figad".into(),
             Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
         );
     }

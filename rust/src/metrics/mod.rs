@@ -4,6 +4,29 @@
 
 use crate::sim::{DeviceSpec, KernelTime};
 
+/// One adaptive-engine decision: which strategy ran a given outer iteration
+/// and what the frontier looked like when the choice was made. Recorded by
+/// [`crate::adaptive`]; empty for static-strategy runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    /// Outer iteration index (0-based).
+    pub iteration: u32,
+    /// Label of the strategy chosen for the iteration ("BS", "EP", ...).
+    pub strategy: &'static str,
+    /// Whether the engine switched strategies this iteration (migrating the
+    /// worklist representation when the two strategies disagree on it).
+    pub migrated: bool,
+    /// Frontier size in nodes when the decision was made.
+    pub frontier_nodes: u64,
+    /// Total outgoing edges of the frontier.
+    pub frontier_edges: u64,
+    /// Frontier degree skew (max / mean outdegree).
+    pub degree_skew: f64,
+    /// Cost-model estimate for the chosen strategy (0 when the policy does
+    /// not predict, e.g. the heuristic policy).
+    pub predicted_cycles: u64,
+}
+
 /// Accumulated metrics of one strategy × algorithm × graph run.
 ///
 /// The paper splits execution time into "useful kernel time" and "the
@@ -43,6 +66,12 @@ pub struct RunMetrics {
     /// Host wall-clock spent in the coordinator itself (ns) — the L3 perf
     /// figure tracked in EXPERIMENTS.md §Perf.
     pub host_ns: u64,
+    /// Times the adaptive engine switched strategies mid-run (0 for static
+    /// strategies).
+    pub strategy_switches: u64,
+    /// Per-iteration decision trace of the adaptive engine (empty for
+    /// static strategies).
+    pub decisions: Vec<DecisionRecord>,
 }
 
 impl RunMetrics {
@@ -66,6 +95,14 @@ impl RunMetrics {
     /// timeline, e.g. graph splitting, histogramming).
     pub fn charge_overhead(&mut self, cycles: u64) {
         self.overhead_cycles += cycles;
+    }
+
+    /// Append one adaptive-engine decision, updating the switch counter.
+    pub fn record_decision(&mut self, rec: DecisionRecord) {
+        if rec.migrated {
+            self.strategy_switches += 1;
+        }
+        self.decisions.push(rec);
     }
 
     fn absorb_counters(&mut self, t: &KernelTime) {
@@ -138,6 +175,26 @@ mod tests {
         m.charge_aux(t(9_000));
         assert_eq!(m.kernel_cycles, 0);
         assert_eq!(m.overhead_cycles, 9_000);
+    }
+
+    #[test]
+    fn decision_trace_counts_switches() {
+        let mut m = RunMetrics::default();
+        let rec = |iteration, strategy, migrated| DecisionRecord {
+            iteration,
+            strategy,
+            migrated,
+            frontier_nodes: 1,
+            frontier_edges: 2,
+            degree_skew: 1.0,
+            predicted_cycles: 0,
+        };
+        m.record_decision(rec(0, "BS", false));
+        m.record_decision(rec(1, "WD", true));
+        m.record_decision(rec(2, "WD", false));
+        assert_eq!(m.strategy_switches, 1);
+        assert_eq!(m.decisions.len(), 3);
+        assert_eq!(m.decisions[1].strategy, "WD");
     }
 
     #[test]

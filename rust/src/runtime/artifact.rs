@@ -9,6 +9,10 @@ use crate::util::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+// Offline build: the PJRT bindings are stubbed. Swap in the real `xla`
+// crate by replacing this alias (see `xla_stub` docs).
+use super::xla_stub as xla;
+
 /// One entry of `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {

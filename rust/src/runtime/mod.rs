@@ -9,6 +9,8 @@
 
 pub mod artifact;
 pub mod relaxer;
+#[doc(hidden)]
+pub mod xla_stub;
 
 pub use artifact::{ArtifactManifest, ArtifactRegistry};
 pub use relaxer::XlaRelaxer;

@@ -12,6 +12,9 @@ use crate::INF;
 
 use super::ArtifactRegistry;
 
+// Offline build: the PJRT bindings are stubbed (see `xla_stub` docs).
+use super::xla_stub as xla;
+
 /// i32 infinity sentinel used inside the artifacts.
 pub const INF_I32: i32 = i32::MAX;
 

@@ -98,6 +98,19 @@ impl DeviceSpec {
         cycles as f64 / (self.clock_ghz * 1e6)
     }
 
+    /// Cycles of one auxiliary kernel streaming `items` elements coalesced
+    /// with `per_item` extra ALU cycles (scan, `find_offsets`, condensing,
+    /// split preprocessing). Single source of truth shared by execution
+    /// charging ([`crate::coordinator::ExecCtx::charge_aux_kernel`]) and
+    /// the adaptive cost model's predictions.
+    pub fn aux_kernel_cycles(&self, items: u64, per_item: u64) -> u64 {
+        let warps = (items + self.warp_size as u64 - 1) / self.warp_size as u64;
+        let per_warp = self.coalesced_tx + self.alu_relax + per_item;
+        let parallel = self.num_sm as u64 * self.warp_throughput();
+        let busy = (warps * per_warp + parallel - 1) / parallel.max(1);
+        self.launch_overhead + busy.max(if warps > 0 { per_warp } else { 0 })
+    }
+
     /// Scale the memory budget for a reduced-size experiment suite.
     ///
     /// The paper's Graph500 graphs (335 M edges) exceed a 4.66 GB budget in

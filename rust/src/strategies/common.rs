@@ -47,6 +47,26 @@ impl NodeFrontier {
         })
     }
 
+    /// Frontier adopting an already-built worklist (the adaptive engine's
+    /// migration path), charging its allocation.
+    pub fn from_worklist(
+        ctx: &mut ExecCtx,
+        g: &Csr,
+        wl: NodeWorklist,
+        label: &'static str,
+        entry_bytes: u64,
+    ) -> Result<Self> {
+        let charged = entry_bytes * wl.len() as u64;
+        ctx.mem.charge(label, charged)?;
+        Ok(NodeFrontier {
+            label,
+            entry_bytes,
+            charged,
+            wl,
+            seen: vec![0u64; g.num_nodes().div_ceil(64)],
+        })
+    }
+
     /// Current worklist.
     pub fn worklist(&self) -> &NodeWorklist {
         &self.wl

@@ -1,4 +1,4 @@
-//! The five load-balancing strategies (Table I).
+//! The five load-balancing strategies (Table I) plus the adaptive selector.
 //!
 //! | Kind | Name                    | Origin   | Module |
 //! |------|-------------------------|----------|--------|
@@ -7,10 +7,13 @@
 //! | `WD` | workload decomposition  | proposed | [`workload_decomp`] |
 //! | `NS` | node splitting          | proposed | [`node_split`] |
 //! | `HP` | hierarchical processing | proposed | [`hierarchical`] |
+//! | `AD` | adaptive per-iteration selection | this repo (after arXiv:1911.09135) | [`crate::adaptive`] |
 //!
 //! A [`Strategy`] owns its worklists and (for NS) its transformed graph; the
 //! engine drives `init` → `run_iteration` until [`Strategy::pending`] hits
-//! zero, then reads the answer back via [`Strategy::finalize`].
+//! zero, then reads the answer back via [`Strategy::finalize`]. `AD` wraps
+//! the five static strategies, re-deciding per outer iteration from online
+//! frontier statistics and migrating the worklist across representations.
 
 pub mod common;
 pub mod edge_based;
@@ -44,16 +47,31 @@ pub enum StrategyKind {
     NS,
     /// Hierarchical processing.
     HP,
+    /// Adaptive per-iteration selection over the five static strategies
+    /// ([`crate::adaptive`]).
+    AD,
 }
 
 impl StrategyKind {
-    /// All strategies in the paper's reporting order.
+    /// The paper's five *static* strategies in its reporting order (the
+    /// Figure 7/8 bar order; `AD` is this repo's addition and reported
+    /// separately — see [`StrategyKind::ALL_WITH_ADAPTIVE`]).
     pub const ALL: [StrategyKind; 5] = [
         StrategyKind::BS,
         StrategyKind::EP,
         StrategyKind::WD,
         StrategyKind::NS,
         StrategyKind::HP,
+    ];
+
+    /// Every selectable strategy, adaptive included.
+    pub const ALL_WITH_ADAPTIVE: [StrategyKind; 6] = [
+        StrategyKind::BS,
+        StrategyKind::EP,
+        StrategyKind::WD,
+        StrategyKind::NS,
+        StrategyKind::HP,
+        StrategyKind::AD,
     ];
 
     /// Short label used in figures.
@@ -64,6 +82,7 @@ impl StrategyKind {
             StrategyKind::WD => "WD",
             StrategyKind::NS => "NS",
             StrategyKind::HP => "HP",
+            StrategyKind::AD => "AD",
         }
     }
 
@@ -71,6 +90,12 @@ impl StrategyKind {
     /// strategies.
     pub fn is_proposed(&self) -> bool {
         matches!(self, StrategyKind::WD | StrategyKind::NS | StrategyKind::HP)
+    }
+
+    /// Whether this is the adaptive meta-strategy rather than one of the
+    /// paper's five static schemes.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, StrategyKind::AD)
     }
 }
 
@@ -83,6 +108,7 @@ impl std::str::FromStr for StrategyKind {
             "WD" => Ok(StrategyKind::WD),
             "NS" => Ok(StrategyKind::NS),
             "HP" => Ok(StrategyKind::HP),
+            "AD" => Ok(StrategyKind::AD),
             other => Err(crate::Error::Config(format!("unknown strategy {other:?}"))),
         }
     }
@@ -104,6 +130,8 @@ pub struct StrategyParams {
     pub max_threads: Option<u32>,
     /// Explicit MDT override (bypasses the histogram heuristic).
     pub mdt_override: Option<u32>,
+    /// Which decision policy the adaptive (`AD`) engine uses.
+    pub adaptive_policy: crate::adaptive::AdaptivePolicyKind,
 }
 
 impl Default for StrategyParams {
@@ -112,6 +140,7 @@ impl Default for StrategyParams {
             histogram_bins: 10,
             max_threads: None,
             mdt_override: None,
+            adaptive_policy: crate::adaptive::AdaptivePolicyKind::default(),
         }
     }
 }
@@ -149,6 +178,7 @@ pub fn build_strategy(
         StrategyKind::WD => Box::new(WorkloadDecomposition::new(graph, params)),
         StrategyKind::NS => Box::new(NodeSplitting::new(graph, params)),
         StrategyKind::HP => Box::new(Hierarchical::new(graph, params)),
+        StrategyKind::AD => Box::new(crate::adaptive::Adaptive::new(graph, params)),
     }
 }
 
@@ -158,7 +188,7 @@ mod tests {
 
     #[test]
     fn kind_roundtrips_through_str() {
-        for k in StrategyKind::ALL {
+        for k in StrategyKind::ALL_WITH_ADAPTIVE {
             let parsed: StrategyKind = k.label().parse().unwrap();
             assert_eq!(parsed, k);
         }
@@ -172,5 +202,17 @@ mod tests {
         assert!(StrategyKind::WD.is_proposed());
         assert!(StrategyKind::NS.is_proposed());
         assert!(StrategyKind::HP.is_proposed());
+        assert!(!StrategyKind::AD.is_proposed());
+        assert!(StrategyKind::AD.is_adaptive());
+    }
+
+    #[test]
+    fn all_keeps_paper_order_and_excludes_adaptive() {
+        assert_eq!(StrategyKind::ALL.len(), 5);
+        assert!(!StrategyKind::ALL.contains(&StrategyKind::AD));
+        assert_eq!(
+            StrategyKind::ALL_WITH_ADAPTIVE.last(),
+            Some(&StrategyKind::AD)
+        );
     }
 }

@@ -2,6 +2,7 @@
 //! strategy and algorithm, checked against the serial oracles, plus
 //! structural invariants of the planning machinery.
 
+use lonestar_lb::adaptive::{migrate, AdaptivePolicyKind};
 use lonestar_lb::algorithms::AlgoKind;
 use lonestar_lb::coordinator::{run, RunConfig};
 use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
@@ -11,6 +12,7 @@ use lonestar_lb::strategies::node_split::split_graph;
 use lonestar_lb::strategies::{StrategyKind, StrategyParams};
 use lonestar_lb::util::proptest::forall;
 use lonestar_lb::util::Rng;
+use lonestar_lb::worklist::NodeWorklist;
 use std::sync::Arc;
 
 /// Random graph with arbitrary structure (not from the generators — raw
@@ -166,6 +168,139 @@ fn generated_classes_converge_from_any_source() {
             assert_eq!(r.dist, oracle, "{strategy} from source {source}");
         }
     });
+}
+
+/// Random frontier over the graph: a unique node subset with cached
+/// degrees, like the engine's canonical node worklists after condensing.
+fn random_frontier(rng: &mut Rng, g: &Csr) -> NodeWorklist {
+    let n = g.num_nodes() as u32;
+    let mut picked: Vec<u32> = (0..n).collect();
+    rng.shuffle(&mut picked);
+    let take = rng.gen_range_u32(1, n.min(64) + 1) as usize;
+    let mut wl = NodeWorklist::new();
+    for &u in &picked[..take] {
+        wl.push(u, g.degree(u));
+    }
+    wl
+}
+
+fn sorted_nodes(wl: &NodeWorklist) -> Vec<u32> {
+    let mut v = wl.nodes().to_vec();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn migrate_node_edge_roundtrip_preserves_pending_set() {
+    // nodes → EP's exploded edge frontier → nodes: the pending set is
+    // preserved exactly, minus zero-out-degree nodes (which the edge
+    // representation cannot carry and whose processing is a no-op).
+    forall("migrate-node-edge-roundtrip", 40, |rng| {
+        let g = if rng.gen_f64() < 0.5 {
+            rmat(8, 2048, RmatParams::default(), rng.next_u64()).unwrap()
+        } else {
+            road_grid(12, 12, 9, rng.next_u64()).unwrap()
+        };
+        let wl = random_frontier(rng, &g);
+        let edges = migrate::nodes_to_edges(&g, &wl);
+        assert_eq!(
+            edges.len() as u64,
+            wl.total_edges(),
+            "every pending edge must appear exactly once"
+        );
+        let back = migrate::edges_to_nodes(&g, &edges);
+        let want: Vec<u32> = sorted_nodes(&wl)
+            .into_iter()
+            .filter(|&u| g.degree(u) > 0)
+            .collect();
+        assert_eq!(sorted_nodes(&back), want);
+        // degrees are re-derived from the graph, so total work survives
+        assert_eq!(back.total_edges(), wl.total_edges());
+    });
+}
+
+#[test]
+fn migrate_split_roundtrip_preserves_pending_set() {
+    // nodes → NS's split-graph ids → nodes is exact: parents collapse back
+    // and no pending edge is gained or lost.
+    forall("migrate-split-roundtrip", 40, |rng| {
+        let g = if rng.gen_f64() < 0.5 {
+            rmat(8, 2048, RmatParams::default(), rng.next_u64()).unwrap()
+        } else {
+            road_grid(12, 12, 9, rng.next_u64()).unwrap()
+        };
+        let bins = rng.gen_range_u32(2, 16) as usize;
+        let split = split_graph(&g, auto_mdt(&g, bins));
+        let parent_of = migrate::parent_of_table(&split, g.num_nodes());
+        let wl = random_frontier(rng, &g);
+
+        let split_wl = migrate::nodes_to_split(&split, &wl);
+        assert_eq!(
+            split_wl.total_edges(),
+            wl.total_edges(),
+            "clones own exactly their parents' edges"
+        );
+        let back = migrate::split_to_nodes(&g, &parent_of, &split_wl);
+        assert_eq!(sorted_nodes(&back), sorted_nodes(&wl));
+    });
+}
+
+#[test]
+fn adaptive_matches_oracle_on_random_graphs() {
+    // The full acceptance property: whatever the policy decides, AD's
+    // distances equal the serial oracle (same check the static strategies
+    // pass). Round-robin forces migration through every representation.
+    forall("adaptive-vs-oracle", 30, |rng| {
+        let g = Arc::new(random_graph(rng));
+        let source = rng.gen_range_u32(0, g.num_nodes() as u32);
+        let algo = if rng.gen_f64() < 0.5 {
+            AlgoKind::Bfs
+        } else {
+            AlgoKind::Sssp
+        };
+        let oracle = algo.reference(&g, source);
+        for policy in [
+            AdaptivePolicyKind::CostModel,
+            AdaptivePolicyKind::Heuristic,
+            AdaptivePolicyKind::RoundRobin,
+        ] {
+            let r = run(
+                &g,
+                &RunConfig {
+                    algo,
+                    strategy: StrategyKind::AD,
+                    source,
+                    params: StrategyParams {
+                        adaptive_policy: policy,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap_or_else(|e| panic!("AD/{policy:?} failed: {e}"));
+            assert_eq!(r.dist, oracle, "AD/{policy:?}/{algo:?} diverged from oracle");
+            assert_eq!(
+                r.metrics.decisions.len() as u32,
+                r.metrics.iterations,
+                "AD/{policy:?}: one decision per iteration"
+            );
+        }
+    });
+}
+
+#[test]
+fn adaptive_decision_trace_is_deterministic() {
+    let g = Arc::new(rmat(10, 8 << 10, RmatParams::default(), 21).unwrap());
+    let cfg = RunConfig {
+        strategy: StrategyKind::AD,
+        ..Default::default()
+    };
+    let a = run(&g, &cfg).unwrap();
+    let b = run(&g, &cfg).unwrap();
+    assert_eq!(a.dist, b.dist);
+    assert_eq!(a.metrics.total_cycles(), b.metrics.total_cycles());
+    assert_eq!(a.metrics.decisions, b.metrics.decisions);
+    assert_eq!(a.metrics.strategy_switches, b.metrics.strategy_switches);
 }
 
 #[test]
