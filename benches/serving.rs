@@ -1,0 +1,117 @@
+//! Bench: **batched multi-query serving** vs. N independent single-query
+//! runs — the acceptance harness of the serving subsystem.
+//!
+//! Renders the `figserve` report (batched-AD vs. independent-AD per suite
+//! graph) and then asserts the serving layer's contract:
+//!
+//! * batched-AD performs strictly fewer inspector passes + policy
+//!   decisions than N independent AD runs at batch_size ≥ 8 (the
+//!   amortization claim — the whole point of batching);
+//! * batched distances are bit-identical to the single-query engine's
+//!   (verified inside `fig_serving` and re-checked here through the
+//!   differential replay oracle on a sharded batch);
+//! * sharding (1/2/4 devices) changes wall-clock, never results.
+//!
+//! Env knobs: `LONESTAR_SCALE=tiny|small|paper`, `LONESTAR_BENCH_ITERS=N`.
+
+use lonestar_lb::figures::serving::FIGSERVE_QUERIES;
+use lonestar_lb::figures::{fig_serving, FigureOpts};
+use lonestar_lb::graph::Graph;
+use lonestar_lb::serving::{replay_single, serve, synthetic_queries, ServeConfig};
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::util::bench::{black_box, BenchSuite};
+use std::sync::Arc;
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let iters = common::iters_from_env();
+    let opts = FigureOpts {
+        scale,
+        ..Default::default()
+    };
+
+    // The figserve report: batched-AD vs N independent AD runs per graph
+    // (distances are differentially verified inside).
+    let rows = fig_serving(&opts, &mut std::io::stdout()).expect("figserve report");
+    assert!(!rows.is_empty(), "the report must cover the suite");
+    let mut failures: Vec<String> = Vec::new();
+    for r in &rows {
+        assert!(
+            r.queries >= 8,
+            "{}: amortization is asserted at batch_size >= 8, got {}",
+            r.graph,
+            r.queries
+        );
+        let batched = r.batched.inspector_passes + r.batched.policy_decisions;
+        let independent = r.independent.inspector_passes + r.independent.policy_decisions;
+        if batched >= independent {
+            failures.push(format!(
+                "{}: batched {} inspector passes + decisions must undercut \
+                 independent {}",
+                r.graph, batched, independent
+            ));
+        }
+    }
+
+    // Host-timed serving throughput on the first suite graph, sharded.
+    let suite_entries = lonestar_lb::graph::generators::paper_suite(scale);
+    let entry = &suite_entries[0];
+    let g = Arc::new(entry.spec.generate(opts.seed).expect("generate"));
+    let queries = synthetic_queries(&g, FIGSERVE_QUERIES, 0.5, opts.seed);
+    let mut suite = BenchSuite::new("batched serving (AD), shard sweep");
+    for shards in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            shards,
+            ..Default::default()
+        };
+        let mut last = None;
+        suite.case(
+            &format!("{}/{}q/{}shard", entry.name, queries.len(), shards),
+            0,
+            iters.max(1),
+            || {
+                let report = serve(&g, &queries, &cfg).expect("serve");
+                let totals = report.totals();
+                let note = format!(
+                    "wall {:.2} ms, inspect {}, decide {}",
+                    totals.wall_ms(&cfg.device),
+                    totals.inspector_passes,
+                    totals.policy_decisions
+                );
+                last = Some(report);
+                note
+            },
+        );
+        let report = last.expect("at least one iteration ran");
+        black_box(report.query_count());
+        // Differential replay: every shard's batched distances equal the
+        // single-query engine's, regardless of shard count.
+        for shard in &report.shards {
+            replay_single(
+                &g,
+                &shard.queries,
+                StrategyKind::AD,
+                &cfg.params,
+                &shard.dists,
+            )
+            .unwrap_or_else(|e| {
+                panic!("{} with {shards} shard(s): {e}", entry.name)
+            });
+        }
+    }
+    suite.finish();
+    println!(
+        "serving acceptance over {} graphs ({} nodes, {} edges on the timed one)",
+        rows.len(),
+        g.num_nodes(),
+        g.num_edges()
+    );
+    assert!(
+        failures.is_empty(),
+        "serving acceptance violations:\n  {}",
+        failures.join("\n  ")
+    );
+}

@@ -8,6 +8,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 
+# All value-level randomness below goes through seeded np.random generators;
+# derandomizing hypothesis pins the example choice too, so the sweep is
+# bit-for-bit reproducible run to run.
+settings.register_profile("deterministic", derandomize=True, deadline=None)
+settings.load_profile("deterministic")
+
 from compile.kernels import ref
 from compile.kernels.relax import (
     DEFAULT_BLOCK,

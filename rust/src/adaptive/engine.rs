@@ -52,7 +52,7 @@ const AD_HP_SUBLIST: &str = "ad-hp-sublist";
 /// along with the worklist's cached degree array and are folded into the
 /// previous kernel's epilogue, so inspection needs no extra device kernel —
 /// cf. arXiv:1911.09135).
-const INSPECT_BASE_CYCLES: u64 = 100;
+pub(crate) const INSPECT_BASE_CYCLES: u64 = 100;
 
 /// The worklist representation currently held by the engine.
 enum Repr {
@@ -526,8 +526,9 @@ impl Adaptive {
     }
 }
 
-/// HP's WD-style fallback kernel over an explicit edge batch.
-fn hp_wd_fallback(
+/// HP's WD-style fallback kernel over an explicit edge batch (shared with
+/// the batched serving engine, whose HP mode mirrors this one).
+pub(crate) fn hp_wd_fallback(
     ctx: &mut ExecCtx,
     g: &Csr,
     src: Vec<NodeId>,
@@ -599,6 +600,7 @@ impl Strategy for Adaptive {
         // 1. Canonical view + online inspection (host-side, cheap).
         let view = self.view_nodes(&g);
         let snap = FrontierInspector::inspect(view.degrees(), ctx.dev);
+        ctx.metrics.inspector_passes += 1;
         ctx.charge_overhead(INSPECT_BASE_CYCLES + snap.nodes / 32);
 
         // 2. Decide, restricted to what fits in the remaining budget.
@@ -618,6 +620,7 @@ impl Strategy for Adaptive {
             };
             self.policy.decide(&input)
         };
+        ctx.metrics.policy_decisions += 1;
         let choice = if feas.allows(decision.choice) {
             decision.choice
         } else {

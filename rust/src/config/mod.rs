@@ -18,6 +18,8 @@
 //! backend    = native                  # native | xla | xla:DIR
 //! histogram_bins = 10
 //! adaptive_policy = cost               # cost | heuristic | round-robin (AD only)
+//! batch_size = 8                       # serve: queries per batch
+//! shards     = 1                       # serve: simulated devices per batch
 //! ```
 
 use crate::algorithms::AlgoKind;
@@ -133,6 +135,15 @@ pub fn parse_algo(s: &str) -> Result<AlgoKind> {
     }
 }
 
+/// Parse a strictly positive integer (the `batch_size` / `shards` config
+/// keys and their CLI flags). `what` names the offending key in the error.
+pub fn parse_positive(v: &str, what: &str) -> Result<usize> {
+    v.parse()
+        .ok()
+        .filter(|&n: &usize| n > 0)
+        .ok_or_else(|| Error::Config(format!("{what} expects a positive integer, got {v:?}")))
+}
+
 /// Parse an adaptive-policy name (the `adaptive_policy` config key and the
 /// CLI's `--adaptive-policy`).
 pub fn parse_adaptive_policy(s: &str) -> Result<crate::adaptive::AdaptivePolicyKind> {
@@ -159,6 +170,10 @@ pub struct ExperimentConfig {
     pub enforce_budget: bool,
     pub backend: Backend,
     pub params: StrategyParams,
+    /// Queries per serving batch (`serve` subcommand).
+    pub batch_size: usize,
+    /// Simulated devices each serving batch shards across.
+    pub shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -175,6 +190,8 @@ impl Default for ExperimentConfig {
             enforce_budget: false,
             backend: Backend::Native,
             params: StrategyParams::default(),
+            batch_size: 8,
+            shards: 1,
         }
     }
 }
@@ -271,6 +288,8 @@ impl ExperimentConfig {
                 "adaptive_policy" => {
                     cfg.params.adaptive_policy = parse_adaptive_policy(&v)?;
                 }
+                "batch_size" => cfg.batch_size = parse_positive(&v, "batch_size")?,
+                "shards" => cfg.shards = parse_positive(&v, "shards")?,
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
         }
@@ -399,5 +418,17 @@ mod tests {
         let all = ExperimentConfig::parse("strategies = all").unwrap();
         assert!(all.strategies.contains(&StrategyKind::AD));
         assert_eq!(all.strategies.len(), 6);
+    }
+
+    #[test]
+    fn parses_serving_keys_with_sane_defaults() {
+        let cfg = ExperimentConfig::parse("").unwrap();
+        assert_eq!(cfg.batch_size, 8);
+        assert_eq!(cfg.shards, 1);
+        let cfg = ExperimentConfig::parse("batch_size = 16\nshards = 4\n").unwrap();
+        assert_eq!(cfg.batch_size, 16);
+        assert_eq!(cfg.shards, 4);
+        assert!(ExperimentConfig::parse("batch_size = 0").is_err());
+        assert!(ExperimentConfig::parse("shards = zero").is_err());
     }
 }

@@ -6,6 +6,7 @@
 //! integration tests share one implementation.
 
 pub mod adaptive;
+pub mod serving;
 pub mod tradeoff;
 
 use crate::algorithms::AlgoKind;
@@ -23,6 +24,7 @@ use std::io::Write;
 use std::sync::Arc;
 
 pub use adaptive::{fig_adaptive, AdaptiveRow};
+pub use serving::{fig_serving, ServingRow};
 pub use tradeoff::{fig9, Fig9Row};
 
 /// Common options of the figure harness.

@@ -1,0 +1,175 @@
+//! The serving figure (`figserve`): batched-AD multi-query serving vs. N
+//! independent single-query AD runs on the same graph and query set.
+//!
+//! For each (non-Graph500) suite graph, Q synthetic queries are answered
+//! twice: once through [`crate::serving::serve`] (one batch, per-batch
+//! inspection + policy decision) and once as Q independent
+//! [`crate::coordinator::run`] calls (per-run inspection + decision, the
+//! status quo). Reported per graph: total simulated time of both, the
+//! inspector-pass / policy-decision counts (the amortization the serving
+//! layer exists for), and the throughput speedup. Distances are asserted
+//! identical between the two paths — the differential oracle is part of the
+//! figure, not just the test suite.
+
+use crate::coordinator::{run, RunConfig};
+use crate::error::{Error, Result};
+use crate::graph::generators::paper_suite;
+use crate::graph::Graph;
+use crate::serving::{aggregate, serve, synthetic_queries, AggregateMetrics, ServeConfig};
+use crate::strategies::StrategyKind;
+use crate::util::Json;
+use std::io::Write;
+use std::sync::Arc;
+
+use super::FigureOpts;
+
+/// Queries per graph in the comparison (≥ 8 so the amortization claim in
+/// `benches/serving.rs` is exercised at the documented batch size).
+pub const FIGSERVE_QUERIES: usize = 8;
+
+/// One graph's batched-vs-independent comparison.
+#[derive(Debug, Clone)]
+pub struct ServingRow {
+    pub graph: String,
+    pub nodes: usize,
+    pub edges: usize,
+    pub queries: usize,
+    /// Aggregate of the batched run's shard metrics.
+    pub batched: AggregateMetrics,
+    /// Aggregate over the Q independent single-query runs.
+    pub independent: AggregateMetrics,
+    pub batched_ms: f64,
+    pub independent_ms: f64,
+    /// `independent_ms / batched_ms` (throughput).
+    pub speedup: f64,
+    /// `100 * (1 - batched/(independent))` over inspector passes + policy
+    /// decisions — the amortization headline.
+    pub inspection_savings_pct: f64,
+}
+
+impl ServingRow {
+    /// JSON rendering.
+    pub fn to_json(&self, dev: &crate::sim::DeviceSpec) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.as_str().into()),
+            ("nodes", self.nodes.into()),
+            ("edges", self.edges.into()),
+            ("queries", self.queries.into()),
+            ("batched", self.batched.to_json(dev)),
+            ("independent", self.independent.to_json(dev)),
+            ("batched_ms", self.batched_ms.into()),
+            ("independent_ms", self.independent_ms.into()),
+            ("speedup", self.speedup.into()),
+            ("inspection_savings_pct", self.inspection_savings_pct.into()),
+        ])
+    }
+}
+
+/// Run the batched-vs-independent serving comparison (AD policy on both
+/// sides; SSSP-weighted mixed traffic).
+pub fn fig_serving(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<ServingRow>> {
+    writeln!(
+        out,
+        "\n== Serving: batched-AD vs. {FIGSERVE_QUERIES} independent AD runs \
+         (simulated K20c, mixed BFS/SSSP) =="
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:>10} {:>12} {:>8} {:>14} {:>14} {:>10}",
+        "graph", "batch ms", "indep ms", "speedup", "inspect b/i", "decide b/i", "saved"
+    )?;
+    let mut rows = Vec::new();
+    for entry in paper_suite(opts.scale) {
+        // Graph500 entries are the memory-wall study; the serving figure is
+        // about inspection amortization, so skip them to keep it tractable.
+        if entry.name.contains("Graph500") {
+            continue;
+        }
+        let g = Arc::new(entry.spec.generate(opts.seed)?);
+        let dev = opts.device_for(&entry, &g);
+        let queries = synthetic_queries(&g, FIGSERVE_QUERIES, 0.5, opts.seed);
+
+        let cfg = ServeConfig {
+            strategy: StrategyKind::AD,
+            device: dev.clone(),
+            enforce_budget: opts.enforce_budget,
+            ..Default::default()
+        };
+        let report = serve(&g, &queries, &cfg)?;
+        let batched = report.totals();
+
+        let mut independent_metrics = Vec::new();
+        for q in &queries {
+            let rc = RunConfig {
+                algo: q.algo,
+                strategy: StrategyKind::AD,
+                source: q.source,
+                device: dev.clone(),
+                enforce_budget: opts.enforce_budget,
+                ..Default::default()
+            };
+            let r = run(&g, &rc)?;
+            // Differential check: batched distances equal independent ones.
+            if report.dist_of(q.id) != Some(r.dist.as_slice()) {
+                return Err(Error::Config(format!(
+                    "{}: batched distances diverge from the single-query \
+                     engine for query {} ({} from {})",
+                    entry.name,
+                    q.id,
+                    q.algo.name(),
+                    q.source
+                )));
+            }
+            independent_metrics.push(r.metrics);
+        }
+        let independent = aggregate(independent_metrics.iter());
+
+        let batched_ms = batched.total_ms(&dev);
+        let independent_ms = independent.total_ms(&dev);
+        let speedup = if batched_ms > 0.0 {
+            independent_ms / batched_ms
+        } else {
+            0.0
+        };
+        let b_id = batched.inspector_passes + batched.policy_decisions;
+        let i_id = independent.inspector_passes + independent.policy_decisions;
+        let inspection_savings_pct = if i_id > 0 {
+            100.0 * (1.0 - b_id as f64 / i_id as f64)
+        } else {
+            0.0
+        };
+
+        writeln!(
+            out,
+            "{:<12} {:>10.2} {:>12.2} {:>7.2}x {:>6}/{:<7} {:>6}/{:<7} {:>9.1}%",
+            entry.name,
+            batched_ms,
+            independent_ms,
+            speedup,
+            batched.inspector_passes,
+            independent.inspector_passes,
+            batched.policy_decisions,
+            independent.policy_decisions,
+            inspection_savings_pct,
+        )?;
+        rows.push(ServingRow {
+            graph: entry.name.clone(),
+            nodes: g.num_nodes(),
+            edges: g.num_edges(),
+            queries: queries.len(),
+            batched,
+            independent,
+            batched_ms,
+            independent_ms,
+            speedup,
+            inspection_savings_pct,
+        });
+    }
+    writeln!(
+        out,
+        "(inspect/decide b/i: inspector passes and policy decisions, batched vs. \
+         independent; saved: reduction of their sum — the amortization the \
+         serving layer buys. Distances are verified identical between paths.)"
+    )?;
+    Ok(rows)
+}

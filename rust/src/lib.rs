@@ -37,6 +37,13 @@
 //! arXiv:1911.09135). The decision trace lands in
 //! [`metrics::RunMetrics::decisions`] and the `figad` figure compares AD
 //! against the per-graph best static strategy.
+//!
+//! The [`serving`] layer batches many concurrent queries over one shared
+//! CSR: per batch iteration a single frontier inspection and a single AD
+//! policy decision cover every query (bitmask-tagged merged worklist), and
+//! batches shard across simulated devices. Every batched run can replay
+//! its queries through the single-query engine as a differential oracle
+//! (`serve` CLI subcommand, `figserve` figure, `benches/serving.rs`).
 
 pub mod adaptive;
 pub mod algorithms;
@@ -47,6 +54,7 @@ pub mod figures;
 pub mod graph;
 pub mod metrics;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod strategies;
 pub mod util;

@@ -7,7 +7,12 @@
 //!                      [--scale tiny|small|paper] [--seed N] [--source N]
 //!                      [--xla [--artifacts DIR]] [--enforce-budget]
 //!                      [--no-chunking] [--json]
-//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|all]
+//! lonestar-lb serve    [--config F] [--suite NAME | --graph FILE | --gen SPEC]
+//!                      [--queries N] [--batch-size N] [--shards N]
+//!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
+//!                      [--adaptive-policy P] [--scale S] [--seed N]
+//!                      [--enforce-budget] [--verify] [--json]
+//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|all]
 //!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
 //! lonestar-lb generate NAME OUT [--scale S] [--seed N]
 //! lonestar-lb inspect  FILE
@@ -45,6 +50,7 @@ const SWITCHES: &[&str] = &[
     "no-chunking",
     "json",
     "no-budget",
+    "verify",
     "help",
 ];
 
@@ -88,14 +94,19 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: lonestar-lb <run|figures|generate|inspect|runtime-info> [options]
+const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runtime-info> [options]
   run          --suite NAME | --graph FILE | --gen SPEC | --config FILE
                --algo bfs|sssp --strategy BS|EP|WD|NS|HP|AD|all --source N
                --adaptive-policy cost|heuristic|round-robin
                --scale tiny|small|paper --seed N
                --xla --artifacts DIR --enforce-budget --no-chunking --json
-  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|all] --scale S
-               --seed N --out FILE.json --no-budget
+  serve        --suite NAME | --graph FILE | --gen SPEC | --config FILE
+               --queries N --batch-size N --shards N
+               --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
+               --adaptive-policy P --scale S --seed N
+               --enforce-budget --verify --json
+  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|all]
+               --scale S --seed N --out FILE.json --no-budget
   generate     NAME OUT --scale S --seed N
   inspect      FILE
   runtime-info --artifacts DIR";
@@ -120,6 +131,7 @@ fn real_main(argv: &[String]) -> Result<()> {
 
     match cmd {
         "run" => cmd_run(&args, &mut out),
+        "serve" => cmd_serve(&args, &mut out),
         "figures" => cmd_figures(&args, &mut out),
         "generate" => cmd_generate(&args, &mut out),
         "inspect" => cmd_inspect(&args, &mut out),
@@ -239,6 +251,130 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: the synthetic query-arrival driver over the batched serving
+/// layer — `--queries` arrivals split into `--batch-size` batches, each
+/// batch sharded across `--shards` simulated devices.
+fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
+    // Flags uniformly override the config file (every flag, not a subset),
+    // so `--config exp.conf --enforce-budget` means what it says.
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(path)?
+    } else {
+        // Defaults: small-scale rmat16 suite graph, seeded arrivals.
+        ExperimentConfig::default()
+    };
+    if let Some(s) = args.get("scale") {
+        cfg.scale = parse_scale(s)?;
+    }
+    if args.get("seed").is_some() {
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+    }
+    if args.switch("enforce-budget") {
+        cfg.enforce_budget = true;
+    }
+    if let Some(f) = args.get("graph") {
+        cfg.graph = GraphSource::File(f.to_string());
+    } else if let Some(s) = args.get("suite") {
+        cfg.graph = GraphSource::Suite(s.to_string());
+    } else if let Some(g) = args.get("gen") {
+        cfg.graph = GraphSource::parse(g)?;
+    }
+    if let Some(b) = args.get("batch-size") {
+        cfg.batch_size = lonestar_lb::config::parse_positive(b, "--batch-size")?;
+    }
+    if let Some(s) = args.get("shards") {
+        cfg.shards = lonestar_lb::config::parse_positive(s, "--shards")?;
+    }
+    if let Some(p) = args.get("adaptive-policy") {
+        cfg.params.adaptive_policy = lonestar_lb::config::parse_adaptive_policy(p)?;
+    }
+    let strategy: StrategyKind = match args.get("strategy") {
+        Some(s) => s.parse()?,
+        None => StrategyKind::AD,
+    };
+    // `mixed` (the default) draws a 50/50 BFS/SSSP stream.
+    let bfs_fraction = match args.get("algo").unwrap_or("mixed") {
+        "mixed" => 0.5,
+        other => match parse_algo(other)? {
+            AlgoKind::Bfs => 1.0,
+            AlgoKind::Sssp => 0.0,
+        },
+    };
+    let total_queries = args.get_u64("queries", 32)? as usize;
+
+    let g = Arc::new(cfg.graph.load(cfg.scale, cfg.seed)?);
+    writeln!(out, "graph: {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
+    writeln!(
+        out,
+        "serving {total_queries} queries, batch_size {}, {} shard(s), strategy {}",
+        cfg.batch_size,
+        cfg.shards,
+        strategy.label()
+    )?;
+
+    let queries = lonestar_lb::serving::synthetic_queries(&g, total_queries, bfs_fraction, cfg.seed);
+    let serve_cfg = lonestar_lb::serving::ServeConfig {
+        strategy,
+        params: cfg.params.clone(),
+        enforce_budget: cfg.enforce_budget,
+        shards: cfg.shards,
+        ..Default::default()
+    };
+    let dev = serve_cfg.device.clone();
+
+    let mut json_rows = Vec::new();
+    let mut grand = Vec::new();
+    // Batches run back-to-back, so the stream's wall-clock is the *sum* of
+    // per-batch walls (each batch wall = its slowest shard).
+    let mut wall_cycles = 0u64;
+    for (bi, chunk) in queries.chunks(cfg.batch_size).enumerate() {
+        let report = lonestar_lb::serving::serve(&g, chunk, &serve_cfg)?;
+        let totals = report.totals();
+        wall_cycles += totals.wall_cycles;
+        writeln!(
+            out,
+            "batch {bi:>3}: {:>3} queries  wall {:>9.3} ms  total {:>9.3} ms  \
+             inspect {:>4}  decide {:>4}  switches {:>3}",
+            report.query_count(),
+            totals.wall_ms(&dev),
+            totals.total_ms(&dev),
+            totals.inspector_passes,
+            totals.policy_decisions,
+            totals.strategy_switches,
+        )?;
+        if args.switch("verify") {
+            for shard in &report.shards {
+                lonestar_lb::serving::replay_single(
+                    &g,
+                    &shard.queries,
+                    strategy,
+                    &cfg.params,
+                    &shard.dists,
+                )?;
+            }
+            writeln!(out, "batch {bi:>3}: differential replay OK")?;
+        }
+        for shard in &report.shards {
+            grand.push(shard.metrics.clone());
+        }
+        json_rows.push(report.to_json(&dev));
+    }
+    let totals = lonestar_lb::serving::aggregate(grand.iter());
+    writeln!(
+        out,
+        "total: {} queries  wall {:.3} ms  total {:.3} ms  inspect {}  decide {}",
+        queries.len(),
+        dev.cycles_to_ms(wall_cycles),
+        totals.total_ms(&dev),
+        totals.inspector_passes,
+        totals.policy_decisions,
+    )?;
+    if args.switch("json") {
+        writeln!(out, "{}", Json::Arr(json_rows))?;
+    }
+    Ok(())
+}
+
 fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
     let which = args
         .positional
@@ -302,6 +438,13 @@ fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
         payload.insert(
             "figad".into(),
             Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "figserve" || which == "serving" {
+        let rows = figures::fig_serving(&opts, out)?;
+        payload.insert(
+            "figserve".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json(&opts.device)).collect()),
         );
     }
     if payload.is_empty() && !all {

@@ -69,6 +69,13 @@ pub struct RunMetrics {
     /// Times the adaptive engine switched strategies mid-run (0 for static
     /// strategies).
     pub strategy_switches: u64,
+    /// Frontier-inspection passes performed (adaptive runs: one per outer
+    /// iteration; batched serving: one per *batch* iteration, amortized
+    /// across every query in the batch — the serving layer's headline
+    /// saving).
+    pub inspector_passes: u64,
+    /// Policy decisions made (same amortization as `inspector_passes`).
+    pub policy_decisions: u64,
     /// Per-iteration decision trace of the adaptive engine (empty for
     /// static strategies).
     pub decisions: Vec<DecisionRecord>,

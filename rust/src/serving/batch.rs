@@ -1,0 +1,835 @@
+//! The batched multi-query engine: N concurrent BFS/SSSP queries over one
+//! shared CSR, with the frontier inspection and the AD policy decision
+//! amortized across the whole batch.
+//!
+//! Per outer iteration the batch (1) builds the bitmask-tagged
+//! [`MergedWorklist`] from the per-query frontiers, (2) runs **one**
+//! [`FrontierInspector`] pass over the merged degree array, (3) asks the
+//! policy for **one** strategy choice (restricted to the memory-feasible
+//! candidates, exactly like the single-query [`crate::adaptive::Adaptive`]
+//! engine), then (4) executes one iteration *per active query* in that
+//! strategy's kernel style, swapping each query's `dist` array into the
+//! [`ExecCtx`]. Structures that depend only on the graph — the MDT
+//! histogram, EP's COO materialization, NS's split graph and parent map —
+//! are built **once per batch** and shared by every query, which is the
+//! second amortization the serving layer exists for.
+//!
+//! Because every per-query relaxation is an exact min-propagation, a
+//! batched run converges to the same distance arrays as running each query
+//! alone; [`replay_single`] is the baked-in differential oracle that
+//! asserts exactly that through the existing single-query engine.
+
+use crate::adaptive::engine::{hp_wd_fallback, INSPECT_BASE_CYCLES};
+use crate::adaptive::inspect::{FrontierInspector, FrontierSnapshot};
+use crate::adaptive::migrate;
+use crate::adaptive::policy::{build_policy, requires_migration, Feasibility, Policy, PolicyInput};
+use crate::coordinator::exec::flatten_frontier;
+use crate::coordinator::{run, Assignment, ExecCtx, KernelWork, PushTarget, RunConfig};
+use crate::error::{Error, Result};
+use crate::graph::{Csr, Graph, NodeId};
+use crate::metrics::DecisionRecord;
+use crate::sim::AccessPattern;
+use crate::strategies::mdt::{auto_mdt, MdtDecision};
+use crate::strategies::node_split::{split_graph, SplitGraph};
+use crate::strategies::workload_decomp::block_offsets;
+use crate::strategies::{StrategyKind, StrategyParams};
+use crate::worklist::hierarchy::SubList;
+use crate::worklist::NodeWorklist;
+use std::sync::Arc;
+
+use super::merged::{MergedWorklist, MAX_QUERIES_PER_SHARD};
+use super::query::Query;
+
+// Device-memory labels of the batch engine's allocations.
+const SRV_CSR: &str = "srv-csr";
+const SRV_DIST: &str = "srv-dist";
+const SRV_WL: &str = "srv-wl";
+const SRV_MERGED: &str = "srv-merged";
+const SRV_COO: &str = "srv-coo";
+const SRV_EP_WL: &str = "srv-ep-wl";
+const SRV_NS_CSR: &str = "srv-ns-csr";
+const SRV_NS_MAP: &str = "srv-ns-map";
+const SRV_WD_PREFIX: &str = "srv-wd-prefix";
+const SRV_WD_OFFSETS: &str = "srv-wd-offsets";
+const SRV_HP_SUBLIST: &str = "srv-hp-sublist";
+
+/// One query's live state inside a batch: its own distance array and node
+/// frontier (canonical original-graph node space between iterations; the
+/// chosen strategy's representation is materialized per iteration through
+/// [`crate::adaptive::migrate`]).
+#[derive(Debug)]
+struct QueryState {
+    query: Query,
+    dist: Vec<u32>,
+    frontier: NodeWorklist,
+    iterations: u32,
+}
+
+/// Shared node-splitting state (one split graph for the whole batch).
+struct SplitShared {
+    split: SplitGraph,
+    parent_of: Vec<NodeId>,
+}
+
+/// A batch of concurrent queries over one shared CSR.
+pub struct QueryBatch {
+    graph: Arc<Csr>,
+    params: StrategyParams,
+    /// The configured strategy: a static kind runs every iteration in that
+    /// style; [`StrategyKind::AD`] re-decides per batch iteration.
+    strategy: StrategyKind,
+    policy: Option<Box<dyn Policy>>,
+    mdt: MdtDecision,
+    split: Option<SplitShared>,
+    coo_charged: bool,
+    /// The mode the previous iteration ran in (AD hysteresis/migration).
+    mode: StrategyKind,
+    states: Vec<QueryState>,
+    /// Reusable dedup bitset for [`QueryBatch::advance`] (queries step
+    /// sequentially, so one buffer serves the whole batch); only touched
+    /// words are cleared between uses, as in
+    /// [`crate::strategies::common::NodeFrontier`].
+    seen: Vec<u64>,
+}
+
+impl QueryBatch {
+    /// New batch over `graph`. At most [`MAX_QUERIES_PER_SHARD`] queries
+    /// (the merged worklist's tag is a `u64` bitmask); every source must be
+    /// in range.
+    pub fn new(
+        graph: Arc<Csr>,
+        queries: &[Query],
+        strategy: StrategyKind,
+        params: StrategyParams,
+    ) -> Result<Self> {
+        if queries.len() > MAX_QUERIES_PER_SHARD {
+            return Err(Error::Config(format!(
+                "batch of {} queries exceeds the {MAX_QUERIES_PER_SHARD}-query shard limit",
+                queries.len()
+            )));
+        }
+        for q in queries {
+            if q.source as usize >= graph.num_nodes() {
+                return Err(Error::Config(format!(
+                    "query {}: source {} out of range (n = {})",
+                    q.id,
+                    q.source,
+                    graph.num_nodes()
+                )));
+            }
+        }
+        let policy = if strategy == StrategyKind::AD {
+            Some(build_policy(params.adaptive_policy))
+        } else {
+            None
+        };
+        let mdt = match params.mdt_override {
+            Some(mdt) => MdtDecision {
+                mdt,
+                peak_bin: 0,
+                bins: params.histogram_bins,
+                max_degree: graph.max_degree(),
+            },
+            None => auto_mdt(&graph, params.histogram_bins),
+        };
+        let states = queries
+            .iter()
+            .map(|&query| QueryState {
+                query,
+                dist: Vec::new(),
+                frontier: NodeWorklist::new(),
+                iterations: 0,
+            })
+            .collect();
+        let seen = vec![0u64; graph.num_nodes().div_ceil(64)];
+        Ok(QueryBatch {
+            graph,
+            params,
+            strategy,
+            policy,
+            mdt,
+            split: None,
+            coo_charged: false,
+            mode: StrategyKind::BS,
+            states,
+            seen,
+        })
+    }
+
+    /// Charge shared storage and seed every query's frontier.
+    pub fn init(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        let n = g.num_nodes();
+        // One CSR and one MDT histogram for the whole batch.
+        ctx.mem.charge(SRV_CSR, g.memory_bytes())?;
+        ctx.charge_aux_kernel(n as u64, 2);
+        for st in &mut self.states {
+            ctx.mem.charge(SRV_DIST, 4 * n as u64)?;
+            st.dist = vec![crate::INF; n];
+            st.dist[st.query.source as usize] = 0;
+            st.frontier = NodeWorklist::seeded(&g, st.query.source);
+            ctx.mem.charge(SRV_WL, 8 * st.frontier.len() as u64)?;
+        }
+        Ok(())
+    }
+
+    /// Total frontier entries pending across every query (0 ⇒ converged).
+    pub fn pending(&self) -> usize {
+        self.states.iter().map(|s| s.frontier.len()).sum()
+    }
+
+    /// The queries, in slot order.
+    pub fn queries(&self) -> Vec<Query> {
+        self.states.iter().map(|s| s.query).collect()
+    }
+
+    /// Per-query outer iterations executed so far, in slot order.
+    pub fn query_iterations(&self) -> Vec<u32> {
+        self.states.iter().map(|s| s.iterations).collect()
+    }
+
+    /// Final distances of query slot `i` for the original node ids.
+    pub fn distances(&self, i: usize) -> Vec<u32> {
+        self.states[i].dist[..self.graph.num_nodes()].to_vec()
+    }
+
+    /// Drive the batch to convergence.
+    pub fn run(&mut self, ctx: &mut ExecCtx, max_iterations: u32) -> Result<()> {
+        let mut outer = 0u32;
+        while self.pending() > 0 {
+            self.run_iteration(ctx)?;
+            outer += 1;
+            if outer >= max_iterations {
+                return Err(Error::Config(format!(
+                    "batch exceeded max_iterations = {max_iterations} (non-convergence?)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// One batch iteration: merge → inspect once → decide once → step every
+    /// active query in the chosen style.
+    pub fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
+        let active: Vec<usize> = (0..self.states.len())
+            .filter(|&i| !self.states[i].frontier.is_empty())
+            .collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        // The tagged merged worklist exists to feed the shared inspection
+        // and decision, so static batch modes — which have nothing to
+        // decide — skip building (and paying for) it entirely.
+        let merged = if self.strategy == StrategyKind::AD {
+            let frontiers: Vec<(usize, &NodeWorklist)> = active
+                .iter()
+                .map(|&i| (i, &self.states[i].frontier))
+                .collect();
+            let m = MergedWorklist::from_frontiers(&g, &frontiers);
+            // The merged list is device-resident for the iteration (node,
+            // degree, tag per entry); charge it so feasibility and peak
+            // memory see it.
+            ctx.mem.charge(SRV_MERGED, m.memory_bytes())?;
+            Some(m)
+        } else {
+            None
+        };
+
+        // One inspection + one policy decision for the whole batch (AD).
+        let choice = if let Some(merged) = &merged {
+            let snap = FrontierInspector::inspect(merged.degrees(), ctx.dev);
+            ctx.metrics.inspector_passes += 1;
+            ctx.charge_overhead(INSPECT_BASE_CYCLES + snap.nodes / 32);
+            let feas = self.feasibility(ctx, &snap);
+            let decision = {
+                let input = PolicyInput {
+                    snapshot: &snap,
+                    degrees: merged.degrees(),
+                    current: self.mode,
+                    feasibility: feas,
+                    dev: ctx.dev,
+                    params: &self.params,
+                    mdt: self.mdt.mdt,
+                    graph_edges: g.num_edges() as u64,
+                    graph_nodes: g.num_nodes() as u64,
+                };
+                self.policy.as_mut().expect("AD batch has a policy").decide(&input)
+            };
+            ctx.metrics.policy_decisions += 1;
+            let choice = if feas.allows(decision.choice) {
+                decision.choice
+            } else {
+                StrategyKind::BS
+            };
+            let migrated = choice != self.mode;
+            if requires_migration(self.mode, choice) {
+                // One conversion kernel over the merged frontier — the
+                // representation switch is paid once, not per query. Mode
+                // changes inside node space (e.g. BS↔HP) are free, exactly
+                // as in the single-query engine.
+                ctx.charge_aux_kernel(merged.len() as u64 + 1, 2);
+            }
+            ctx.metrics.record_decision(DecisionRecord {
+                iteration: ctx.metrics.iterations,
+                strategy: choice.label(),
+                migrated,
+                frontier_nodes: snap.nodes,
+                frontier_edges: snap.edges,
+                degree_skew: snap.skew,
+                predicted_cycles: decision.predicted_cycles,
+            });
+            self.mode = choice;
+            choice
+        } else {
+            self.mode = self.strategy;
+            self.strategy
+        };
+
+        // Shared structures for the chosen mode, built once per batch.
+        if choice == StrategyKind::EP && !self.coo_charged {
+            ctx.mem.charge(SRV_COO, 12 * g.num_edges() as u64)?;
+            ctx.charge_aux_kernel(g.num_edges() as u64, 1);
+            self.coo_charged = true;
+        }
+        if choice == StrategyKind::NS {
+            self.ensure_split(ctx)?;
+        }
+
+        // Per-query execution, each against its own dist array. AD modes
+        // step from the merged list's tagged view; static modes step from
+        // the per-query frontier directly (identical content — the merge
+        // only reorders by node id).
+        for &slot in &active {
+            let view = match &merged {
+                Some(m) => m.query_frontier(slot),
+                None => self.states[slot].frontier.clone(),
+            };
+            self.step_query(ctx, slot, choice, &view)?;
+            self.states[slot].iterations += 1;
+        }
+        if let Some(m) = &merged {
+            ctx.mem.release(SRV_MERGED, m.memory_bytes());
+        }
+        ctx.metrics.iterations += 1;
+        Ok(())
+    }
+
+    /// Memory feasibility of the candidates under the remaining budget —
+    /// the single-query engine's bounds, with per-query costs (NS's dist
+    /// extension) multiplied across the batch.
+    fn feasibility(&self, ctx: &ExecCtx, snap: &FrontierSnapshot) -> Feasibility {
+        let headroom = ctx.mem.budget().saturating_sub(ctx.mem.current());
+        let e = self.graph.num_edges() as u64;
+        let n = self.graph.num_nodes() as u64;
+        let q = self.states.len() as u64;
+        let w = snap.edges;
+        let t = self
+            .params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads) as u64;
+        let coo_extra = if self.coo_charged { 0 } else { 12 * e };
+        let ep = coo_extra + 8 * w + 8 * e <= headroom;
+        let wd = 12 * snap.nodes + 8 * w + 8 * t <= headroom;
+        let mdt = self.mdt.mdt.max(1) as u64;
+        let ns_extra = if self.split.is_some() {
+            4 * w
+        } else {
+            // Split CSR + parent map + every query's dist extension.
+            self.graph.memory_bytes() + 8 * n + q * 4 * (e / mdt + 1) + 4 * w
+        };
+        let ns = ns_extra <= headroom;
+        Feasibility {
+            ep,
+            wd,
+            ns,
+            coo_resident: self.coo_charged,
+            split_built: self.split.is_some(),
+        }
+    }
+
+    /// Build the shared split graph (once) and extend every query's dist
+    /// array to the split node count.
+    fn ensure_split(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        if self.split.is_some() {
+            return Ok(());
+        }
+        let n = self.graph.num_nodes();
+        let split = split_graph(&self.graph, self.mdt);
+        ctx.mem.charge(SRV_NS_CSR, split.graph.memory_bytes())?;
+        ctx.mem.charge(SRV_NS_MAP, 8 * n as u64)?;
+        ctx.charge_aux_kernel(self.graph.num_edges() as u64 + n as u64, 2);
+        let n_split = split.graph.num_nodes();
+        if n_split > n {
+            for st in &mut self.states {
+                ctx.mem.charge(SRV_DIST, 4 * (n_split - n) as u64)?;
+                st.dist.resize(n_split, crate::INF);
+            }
+        }
+        let parent_of = migrate::parent_of_table(&split, n);
+        self.split = Some(SplitShared { split, parent_of });
+        Ok(())
+    }
+
+    /// Run one iteration of query `slot` in `mode`'s kernel style, with the
+    /// query's dist array and algorithm swapped into the context.
+    fn step_query(
+        &mut self,
+        ctx: &mut ExecCtx,
+        slot: usize,
+        mode: StrategyKind,
+        view: &NodeWorklist,
+    ) -> Result<()> {
+        let saved_algo = ctx.algo;
+        ctx.algo = self.states[slot].query.algo;
+        std::mem::swap(&mut ctx.dist, &mut self.states[slot].dist);
+        let res = match mode {
+            StrategyKind::BS => self.step_bs(ctx, slot, view),
+            StrategyKind::EP => self.step_ep(ctx, slot, view),
+            StrategyKind::WD => self.step_wd(ctx, slot, view),
+            StrategyKind::NS => self.step_ns(ctx, slot, view),
+            StrategyKind::HP => self.step_hp(ctx, slot, view),
+            StrategyKind::AD => unreachable!("the batch decision is a static kind"),
+        };
+        std::mem::swap(&mut ctx.dist, &mut self.states[slot].dist);
+        ctx.algo = saved_algo;
+        res
+    }
+
+    /// Replace query `slot`'s frontier with the condensed update stream
+    /// (mirrors [`crate::strategies::common::NodeFrontier::advance`]).
+    ///
+    /// Worklist bytes are charged at a flat 8 B/entry in every mode: the
+    /// batch's canonical frontier always carries the (node, degree) pair
+    /// arrays, unlike the single-query engine's mode-shaped buffers (4 B
+    /// in BS/HP) — a deliberate accounting difference, documented here
+    /// like the engine documents its own CSR-residency choice.
+    fn advance(&mut self, ctx: &mut ExecCtx, slot: usize, updated: &[NodeId]) -> Result<()> {
+        let g = &self.graph;
+        let raw = updated.len() as u64;
+        ctx.metrics.peak_worklist_entries = ctx.metrics.peak_worklist_entries.max(raw);
+        // Double buffer: the raw (duplicate-laden) output alongside the
+        // input worklist.
+        ctx.mem.charge(SRV_WL, 8 * raw)?;
+        let mut next = NodeWorklist::new();
+        for &nd in updated {
+            let (w, b) = (nd as usize / 64, nd as usize % 64);
+            if self.seen[w] & (1 << b) == 0 {
+                self.seen[w] |= 1 << b;
+                next.push(nd, g.degree(nd));
+            }
+        }
+        for &nd in next.nodes() {
+            self.seen[nd as usize / 64] = 0; // clear only touched words
+        }
+        ctx.metrics.condensed_away += raw - next.len() as u64;
+        if raw > 0 {
+            ctx.charge_aux_kernel(raw, 2);
+        }
+        let old = 8 * self.states[slot].frontier.len() as u64;
+        let keep = 8 * next.len() as u64;
+        ctx.mem.release(SRV_WL, old + 8 * raw - keep);
+        self.states[slot].frontier = next;
+        Ok(())
+    }
+
+    /// BS style: one lane per node (mirrors `ad_bs_relax`).
+    fn step_bs(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
+        let g = self.graph.clone();
+        let nodes = view.nodes().to_vec();
+        let (src, eid) = flatten_frontier(&g, &nodes);
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &n in &nodes {
+            acc += g.degree(n);
+            offsets.push(acc);
+        }
+        let work = KernelWork {
+            name: "srv_bs_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&g, &work, None)?;
+        self.advance(ctx, slot, &result.updated)
+    }
+
+    /// WD style: scan + `find_offsets` + evenly blocked edges (mirrors
+    /// `ad_wd_relax`).
+    fn step_wd(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
+        let g = self.graph.clone();
+        let max_threads = self
+            .params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads);
+        let nodes = view.nodes().to_vec();
+        let wl_len = nodes.len() as u64;
+        let (src, eid) = flatten_frontier(&g, &nodes);
+        let total = src.len();
+
+        ctx.mem.charge(SRV_WD_PREFIX, 4 * wl_len)?;
+        ctx.charge_aux_kernel(wl_len, 1);
+        let threads = (max_threads as usize).min(total.max(1)) as u64;
+        let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
+        ctx.charge_aux_kernel(threads, 4 * log_wl);
+        let offsets_bytes = 8 * max_threads as u64;
+        ctx.mem.charge(SRV_WD_OFFSETS, offsets_bytes)?;
+
+        let work = KernelWork {
+            name: "srv_wd_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(block_offsets(total, max_threads)),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 4,
+            push: PushTarget::Node,
+        };
+        let result = ctx.launch(&g, &work, None)?;
+        ctx.mem.release(SRV_WD_OFFSETS, offsets_bytes);
+        ctx.mem.release(SRV_WD_PREFIX, 4 * wl_len);
+        self.advance(ctx, slot, &result.updated)
+    }
+
+    /// EP style: the frontier exploded to edges over the shared COO
+    /// (mirrors `ad_ep_relax`); the output returns to node space, so the
+    /// transient edge worklist lives only for the launch.
+    fn step_ep(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
+        let g = self.graph.clone();
+        let wl = migrate::nodes_to_edges(&g, view);
+        let charged = wl.memory_bytes();
+        ctx.mem.charge(SRV_EP_WL, charged)?;
+        let max_threads = self
+            .params
+            .max_threads
+            .unwrap_or(ctx.dev.max_resident_threads);
+        let total = wl.len();
+        let threads = (max_threads as usize).min(total).max(1) as u32;
+        let work = KernelWork {
+            name: "srv_ep_relax",
+            src: wl.srcs().to_vec(),
+            eid: wl.edges().to_vec(),
+            assignment: Assignment::Strided {
+                num_threads: threads,
+            },
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Edges,
+        };
+        let result = ctx.launch(&g, &work, None);
+        ctx.mem.release(SRV_EP_WL, charged);
+        let result = result?;
+        self.advance(ctx, slot, &result.updated)
+    }
+
+    /// NS style: the query frontier migrated into the shared split graph,
+    /// clone attributes refreshed from their parents, results folded back
+    /// to original ids (mirrors `ad_ns_relax`).
+    fn step_ns(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
+        let parents: Vec<NodeId> = {
+            let st = self.split.as_ref().expect("ensure_split ran");
+            let sg = &st.split.graph;
+            // Refresh the clones of the active parents so the mirror
+            // invariant holds when entering split space.
+            let mut children = 0u64;
+            for &u in view.nodes() {
+                let du = ctx.dist[u as usize];
+                for c in st.split.map.children(u) {
+                    ctx.dist[c as usize] = du;
+                    children += 1;
+                }
+            }
+            if children > 0 {
+                ctx.charge_aux_kernel(children, 1);
+            }
+            let swl = migrate::nodes_to_split(&st.split, view);
+            let nodes = swl.nodes().to_vec();
+            let (src, eid) = flatten_frontier(sg, &nodes);
+            let mut offsets = Vec::with_capacity(nodes.len() + 1);
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for &nd in &nodes {
+                acc += sg.degree(nd);
+                offsets.push(acc);
+            }
+            let work = KernelWork {
+                name: "srv_ns_relax",
+                src,
+                eid,
+                assignment: Assignment::Blocked(offsets),
+                access: AccessPattern::Scattered,
+                extra_cycles_per_edge: 0,
+                push: PushTarget::Node,
+            };
+            let result = ctx.launch(sg, &work, Some(&st.split.map))?;
+            result
+                .updated
+                .iter()
+                .map(|&x| st.parent_of[x as usize])
+                .collect()
+        };
+        self.advance(ctx, slot, &parents)
+    }
+
+    /// HP style: sub-iterations of ≤ MDT edges per node with the WD
+    /// fallback on small residues (mirrors `ad_hp_relax`).
+    fn step_hp(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
+        let g = self.graph.clone();
+        let mdt = self.mdt.mdt.max(1);
+        let block = ctx.dev.block_size as usize;
+        let frontier_nodes = view.nodes().to_vec();
+        let degrees = view.degrees().to_vec();
+        let mut all_updates: Vec<NodeId> = Vec::new();
+
+        if frontier_nodes.len() < block {
+            let (src, eid) = flatten_frontier(&g, &frontier_nodes);
+            if !src.is_empty() {
+                let ups = hp_wd_fallback(ctx, &g, src, eid, frontier_nodes.len() as u64)?;
+                all_updates.extend(ups);
+            }
+        } else {
+            let mut sub = SubList::from_super(&frontier_nodes, &degrees);
+            let sub_bytes = sub.memory_bytes();
+            ctx.mem.charge(SRV_HP_SUBLIST, sub_bytes)?;
+
+            while !sub.is_empty() {
+                if sub.len() < block {
+                    let mut src = Vec::new();
+                    let mut eid = Vec::new();
+                    for c in sub.cursors() {
+                        let first = g.first_edge(c.node) + c.processed;
+                        for e in first..first + c.remaining() {
+                            src.push(c.node);
+                            eid.push(e);
+                        }
+                    }
+                    let wl_len = sub.len() as u64;
+                    let ups = hp_wd_fallback(ctx, &g, src, eid, wl_len)?;
+                    all_updates.extend(ups);
+                    break;
+                }
+
+                let mut src = Vec::new();
+                let mut eid = Vec::new();
+                let mut offsets = Vec::with_capacity(sub.len() + 1);
+                offsets.push(0u32);
+                let mut acc = 0u32;
+                for c in sub.cursors() {
+                    let take = c.remaining().min(mdt);
+                    let first = g.first_edge(c.node) + c.processed;
+                    for e in first..first + take {
+                        src.push(c.node);
+                        eid.push(e);
+                    }
+                    acc += take;
+                    offsets.push(acc);
+                }
+                let work = KernelWork {
+                    name: "srv_hp_relax",
+                    src,
+                    eid,
+                    assignment: Assignment::Blocked(offsets),
+                    access: AccessPattern::Scattered,
+                    extra_cycles_per_edge: 2,
+                    push: PushTarget::Node,
+                };
+                let result = ctx.launch(&g, &work, None)?;
+                all_updates.extend(result.updated);
+                sub.advance(mdt);
+                ctx.charge_aux_kernel(sub.len() as u64 + 1, 1);
+            }
+            ctx.mem.release(SRV_HP_SUBLIST, sub_bytes);
+        }
+        self.advance(ctx, slot, &all_updates)
+    }
+}
+
+/// The differential oracle: replay every query of a batched run through the
+/// existing single-query engine ([`crate::coordinator::run`]) with the same
+/// strategy and parameters, and require distance-array equality. Returns
+/// the first mismatch as a [`Error::Config`] describing the query.
+pub fn replay_single(
+    graph: &Arc<Csr>,
+    queries: &[Query],
+    strategy: StrategyKind,
+    params: &StrategyParams,
+    batched: &[Vec<u32>],
+) -> Result<()> {
+    if queries.len() != batched.len() {
+        return Err(Error::Config(format!(
+            "replay: {} queries but {} batched results",
+            queries.len(),
+            batched.len()
+        )));
+    }
+    for (q, got) in queries.iter().zip(batched) {
+        let cfg = RunConfig {
+            algo: q.algo,
+            strategy,
+            source: q.source,
+            params: params.clone(),
+            ..Default::default()
+        };
+        let single = run(graph, &cfg)?;
+        if &single.dist != got {
+            let diverged = single
+                .dist
+                .iter()
+                .zip(got)
+                .position(|(a, b)| a != b)
+                .unwrap_or(0);
+            return Err(Error::Config(format!(
+                "query {} ({} from {}): batched dist diverges from the single-query \
+                 engine at node {diverged} (single {} vs batched {})",
+                q.id,
+                q.algo.name(),
+                q.source,
+                single.dist[diverged],
+                got[diverged],
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, NativeRelaxer};
+    use crate::graph::generators::{erdos_renyi, rmat, RmatParams};
+    use crate::graph::traversal;
+    use crate::sim::DeviceSpec;
+
+    fn batch_run(
+        g: &Arc<Csr>,
+        queries: &[Query],
+        strategy: StrategyKind,
+    ) -> (Vec<Vec<u32>>, crate::metrics::RunMetrics) {
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        let mut batch =
+            QueryBatch::new(g.clone(), queries, strategy, StrategyParams::default()).unwrap();
+        batch.init(&mut ctx).unwrap();
+        batch.run(&mut ctx, 1_000_000).unwrap();
+        ctx.finalize_metrics();
+        let dists = (0..queries.len()).map(|i| batch.distances(i)).collect();
+        (dists, ctx.metrics)
+    }
+
+    fn queries(sources: &[NodeId], algo: AlgoKind) -> Vec<Query> {
+        sources
+            .iter()
+            .enumerate()
+            .map(|(id, &source)| Query {
+                id: id as u32,
+                algo,
+                source,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_ad_matches_oracles() {
+        let g = Arc::new(rmat(9, 4096, RmatParams::default(), 5).unwrap());
+        let qs = queries(&[0, 7, 19, 101], AlgoKind::Sssp);
+        let (dists, metrics) = batch_run(&g, &qs, StrategyKind::AD);
+        for (q, d) in qs.iter().zip(&dists) {
+            assert_eq!(d, &traversal::dijkstra(&g, q.source), "query {}", q.id);
+        }
+        assert!(metrics.inspector_passes > 0);
+        assert_eq!(metrics.inspector_passes, metrics.policy_decisions);
+        assert_eq!(
+            metrics.inspector_passes,
+            metrics.decisions.len() as u64,
+            "one shared decision per batch iteration"
+        );
+    }
+
+    #[test]
+    fn amortization_beats_independent_inspection() {
+        let g = Arc::new(rmat(9, 4096, RmatParams::default(), 5).unwrap());
+        let qs = queries(&[0, 7, 19, 101, 33, 64, 90, 110], AlgoKind::Sssp);
+        let (_, batched) = batch_run(&g, &qs, StrategyKind::AD);
+        let mut independent = 0u64;
+        for q in &qs {
+            let r = run(
+                &g,
+                &RunConfig {
+                    strategy: StrategyKind::AD,
+                    source: q.source,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            independent += r.metrics.inspector_passes + r.metrics.policy_decisions;
+        }
+        assert!(
+            batched.inspector_passes + batched.policy_decisions < independent,
+            "batched {} + {} must undercut independent {independent}",
+            batched.inspector_passes,
+            batched.policy_decisions
+        );
+    }
+
+    #[test]
+    fn every_static_mode_matches_oracles() {
+        let g = Arc::new(erdos_renyi(200, 900, 12, 3).unwrap());
+        let qs = queries(&[0, 5, 50], AlgoKind::Bfs);
+        for strategy in StrategyKind::ALL {
+            let (dists, _) = batch_run(&g, &qs, strategy);
+            for (q, d) in qs.iter().zip(&dists) {
+                assert_eq!(
+                    d,
+                    &traversal::bfs_levels(&g, q.source),
+                    "{strategy} query {}",
+                    q.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_algo_batch_keeps_queries_separate() {
+        let g = Arc::new(erdos_renyi(150, 600, 9, 11).unwrap());
+        let qs = vec![
+            Query { id: 0, algo: AlgoKind::Bfs, source: 3 },
+            Query { id: 1, algo: AlgoKind::Sssp, source: 3 },
+        ];
+        let (dists, _) = batch_run(&g, &qs, StrategyKind::AD);
+        assert_eq!(dists[0], traversal::bfs_levels(&g, 3));
+        assert_eq!(dists[1], traversal::dijkstra(&g, 3));
+    }
+
+    #[test]
+    fn replay_single_flags_divergence() {
+        let g = Arc::new(erdos_renyi(80, 300, 5, 2).unwrap());
+        let qs = queries(&[1, 2], AlgoKind::Sssp);
+        let (mut dists, _) = batch_run(&g, &qs, StrategyKind::BS);
+        replay_single(&g, &qs, StrategyKind::BS, &StrategyParams::default(), &dists)
+            .expect("faithful results must verify");
+        dists[1][3] ^= 1;
+        assert!(
+            replay_single(&g, &qs, StrategyKind::BS, &StrategyParams::default(), &dists)
+                .is_err(),
+            "corrupted results must be rejected"
+        );
+    }
+
+    #[test]
+    fn rejects_oversized_and_out_of_range() {
+        let g = Arc::new(erdos_renyi(50, 200, 5, 1).unwrap());
+        let many = queries(&vec![0; MAX_QUERIES_PER_SHARD + 1], AlgoKind::Bfs);
+        assert!(QueryBatch::new(
+            g.clone(),
+            &many,
+            StrategyKind::BS,
+            StrategyParams::default()
+        )
+        .is_err());
+        let bad = queries(&[10_000], AlgoKind::Bfs);
+        assert!(QueryBatch::new(g, &bad, StrategyKind::BS, StrategyParams::default()).is_err());
+    }
+}

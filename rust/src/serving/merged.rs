@@ -1,0 +1,249 @@
+//! The bitmask-tagged merged worklist shared by every query of a batch.
+//!
+//! A batch of up to [`MAX_QUERIES_PER_SHARD`] concurrent queries keeps one
+//! *merged* frontier: the union of the per-query node frontiers, each entry
+//! tagged with a `u64` bitmask saying which queries hold that node active.
+//! The point is amortization — the [`crate::adaptive::FrontierInspector`]
+//! pass and the AD policy decision read the merged degree array once per
+//! batch iteration instead of once per query per iteration.
+//!
+//! Like the single-query representations ([`crate::adaptive::migrate`]),
+//! the merged list converts losslessly to an exploded per-edge form and
+//! back: tags ride along unchanged, and the only drop on a round-trip is
+//! zero-out-degree nodes (which the edge form cannot carry and whose
+//! processing is a no-op) — the same documented exception as the
+//! single-query `nodes → edges → nodes` path.
+
+use crate::graph::{Csr, NodeId};
+use crate::worklist::NodeWorklist;
+use std::collections::BTreeMap;
+
+/// Maximum queries one shard's batch can carry: the tag is a `u64` bitmask,
+/// one bit per query slot.
+pub const MAX_QUERIES_PER_SHARD: usize = 64;
+
+/// Union of per-query node frontiers with a per-node query bitmask, sorted
+/// by node id (deterministic regardless of per-query discovery order).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MergedWorklist {
+    nodes: Vec<NodeId>,
+    degrees: Vec<u32>,
+    masks: Vec<u64>,
+}
+
+impl MergedWorklist {
+    /// Build from `(query slot, frontier)` pairs. Slots must be below
+    /// [`MAX_QUERIES_PER_SHARD`]; degrees are re-read from `g` so stale
+    /// cached degrees cannot diverge between queries.
+    pub fn from_frontiers(g: &Csr, frontiers: &[(usize, &NodeWorklist)]) -> Self {
+        let mut by_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+        for &(slot, wl) in frontiers {
+            assert!(
+                slot < MAX_QUERIES_PER_SHARD,
+                "query slot {slot} exceeds the {MAX_QUERIES_PER_SHARD}-wide tag mask"
+            );
+            let bit = 1u64 << slot;
+            for &n in wl.nodes() {
+                *by_node.entry(n).or_insert(0) |= bit;
+            }
+        }
+        let mut out = MergedWorklist::default();
+        for (n, mask) in by_node {
+            out.nodes.push(n);
+            out.degrees.push(g.degree(n));
+            out.masks.push(mask);
+        }
+        out
+    }
+
+    /// Distinct active nodes (union over queries).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when every query's frontier is empty.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Active node ids (sorted).
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// Out-degrees parallel to [`nodes`] — the array one inspector pass
+    /// reads for the whole batch.
+    ///
+    /// [`nodes`]: MergedWorklist::nodes
+    pub fn degrees(&self) -> &[u32] {
+        &self.degrees
+    }
+
+    /// Query bitmasks parallel to [`nodes`].
+    ///
+    /// [`nodes`]: MergedWorklist::nodes
+    pub fn masks(&self) -> &[u64] {
+        &self.masks
+    }
+
+    /// Simulated device bytes: node id (4 B) + degree (4 B) + tag (8 B).
+    pub fn memory_bytes(&self) -> u64 {
+        16 * self.nodes.len() as u64
+    }
+
+    /// Extract one query's frontier (nodes whose tag carries `slot`'s bit),
+    /// in merged (node-id) order.
+    pub fn query_frontier(&self, slot: usize) -> NodeWorklist {
+        let bit = 1u64 << slot;
+        let mut wl = NodeWorklist::new();
+        for i in 0..self.nodes.len() {
+            if self.masks[i] & bit != 0 {
+                wl.push(self.nodes[i], self.degrees[i]);
+            }
+        }
+        wl
+    }
+
+    /// Explode into the per-edge form (EP space): every outgoing edge of
+    /// every merged node, tag duplicated per edge.
+    pub fn to_edges(&self, g: &Csr) -> MergedEdgeFrontier {
+        let mut out = MergedEdgeFrontier::default();
+        for i in 0..self.nodes.len() {
+            let n = self.nodes[i];
+            let first = g.first_edge(n);
+            for e in first..first + g.degree(n) {
+                out.srcs.push(n);
+                out.eids.push(e);
+                out.masks.push(self.masks[i]);
+            }
+        }
+        out
+    }
+}
+
+/// The merged frontier exploded to edge granularity, tags preserved.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MergedEdgeFrontier {
+    srcs: Vec<NodeId>,
+    eids: Vec<u32>,
+    masks: Vec<u64>,
+}
+
+impl MergedEdgeFrontier {
+    /// Pending edges (duplicated per query only through the tag, never as
+    /// separate entries).
+    pub fn len(&self) -> usize {
+        self.eids.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.eids.is_empty()
+    }
+
+    /// Source endpoints.
+    pub fn srcs(&self) -> &[NodeId] {
+        &self.srcs
+    }
+
+    /// Global CSR edge ids.
+    pub fn eids(&self) -> &[u32] {
+        &self.eids
+    }
+
+    /// Query bitmasks parallel to the edges.
+    pub fn masks(&self) -> &[u64] {
+        &self.masks
+    }
+
+    /// Collapse back to the merged node form: distinct sources with their
+    /// tags OR-folded. Exact inverse of [`MergedWorklist::to_edges`] up to
+    /// zero-out-degree nodes (which contribute no edges).
+    pub fn to_nodes(&self, g: &Csr) -> MergedWorklist {
+        let mut by_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+        for i in 0..self.srcs.len() {
+            *by_node.entry(self.srcs[i]).or_insert(0) |= self.masks[i];
+        }
+        let mut out = MergedWorklist::default();
+        for (n, mask) in by_node {
+            out.nodes.push(n);
+            out.degrees.push(g.degree(n));
+            out.masks.push(mask);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn hub() -> Csr {
+        // 0 fans out to 1..=3; 4 is isolated (degree 0); 1 -> 2.
+        Csr::from_edges(
+            5,
+            &[
+                Edge::new(0, 1, 1),
+                Edge::new(0, 2, 1),
+                Edge::new(0, 3, 1),
+                Edge::new(1, 2, 1),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn wl(g: &Csr, nodes: &[NodeId]) -> NodeWorklist {
+        let mut w = NodeWorklist::new();
+        for &n in nodes {
+            w.push(n, g.degree(n));
+        }
+        w
+    }
+
+    #[test]
+    fn union_with_or_folded_tags() {
+        let g = hub();
+        let a = wl(&g, &[0, 1]);
+        let b = wl(&g, &[1, 4]);
+        let m = MergedWorklist::from_frontiers(&g, &[(0, &a), (3, &b)]);
+        assert_eq!(m.nodes(), &[0, 1, 4]);
+        assert_eq!(m.masks(), &[1, 1 | (1 << 3), 1 << 3]);
+        assert_eq!(m.degrees(), &[3, 1, 0]);
+        assert_eq!(m.memory_bytes(), 48);
+    }
+
+    #[test]
+    fn query_frontier_recovers_each_query() {
+        let g = hub();
+        let a = wl(&g, &[0, 1]);
+        let b = wl(&g, &[1, 4]);
+        let m = MergedWorklist::from_frontiers(&g, &[(0, &a), (3, &b)]);
+        assert_eq!(m.query_frontier(0).nodes(), &[0, 1]);
+        assert_eq!(m.query_frontier(3).nodes(), &[1, 4]);
+        assert!(m.query_frontier(5).is_empty());
+    }
+
+    #[test]
+    fn edge_roundtrip_preserves_tags_modulo_zero_degree() {
+        let g = hub();
+        let a = wl(&g, &[0, 4]);
+        let b = wl(&g, &[1]);
+        let m = MergedWorklist::from_frontiers(&g, &[(1, &a), (2, &b)]);
+        let e = m.to_edges(&g);
+        assert_eq!(e.len(), 4, "3 hub edges + 1 from node 1");
+        assert_eq!(e.masks()[0], 1 << 1);
+        let back = e.to_nodes(&g);
+        // node 4 (degree 0) vanishes; tags of the survivors are intact.
+        assert_eq!(back.nodes(), &[0, 1]);
+        assert_eq!(back.masks(), &[1 << 1, 1 << 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "tag mask")]
+    fn slot_out_of_range_panics() {
+        let g = hub();
+        let a = wl(&g, &[0]);
+        MergedWorklist::from_frontiers(&g, &[(64, &a)]);
+    }
+}

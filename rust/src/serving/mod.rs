@@ -1,0 +1,48 @@
+//! Batched multi-query serving on a shared CSR.
+//!
+//! The paper evaluates its load-balancing strategies one traversal at a
+//! time, but a serving system answers *many* concurrent BFS/SSSP queries
+//! against the same long-lived graph — exactly where per-query frontier
+//! inspection becomes redundant overhead. Jatala et al. (arXiv:1911.09135)
+//! show adaptive strategy selection pays off when its inspection cost is
+//! amortized; Osama et al. (arXiv:2301.04792) show load-balancing schedules
+//! compose cleanly once decoupled from the per-query work definition. This
+//! module batches queries behind one shared inspection/policy step:
+//!
+//! * [`query`] — the [`Query`] unit of work plus the deterministic
+//!   synthetic arrival driver behind the `serve` CLI subcommand.
+//! * [`merged`] — the bitmask-tagged [`MergedWorklist`]: the union of the
+//!   per-query frontiers, one `u64` tag per node saying which queries hold
+//!   it active; converts to/from edge granularity with tags preserved.
+//! * [`batch`] — the [`QueryBatch`] engine: per batch iteration, **one**
+//!   [`crate::adaptive::FrontierInspector`] pass and **one** AD policy
+//!   decision cover every query; per-query execution then runs in the
+//!   chosen strategy's kernel style against per-query `dist` arrays, with
+//!   the graph-shaped structures (MDT histogram, EP's COO, NS's split
+//!   graph) built once and shared. The differential oracle
+//!   [`batch::replay_single`] is baked in: any batched run can replay its
+//!   queries one-by-one through the single-query engine and assert
+//!   distance-array equality (`rust/tests/serving_parity.rs` does, across
+//!   all strategies and shard counts).
+//! * [`shard`] — the [`DeviceShard`] layer: round-robin partitioning of
+//!   queries across simulated devices, one [`QueryBatch`] per shard, and
+//!   the permutation-invariant [`AggregateMetrics`] fold into a
+//!   [`BatchReport`].
+//!
+//! The `figserve` figure ([`crate::figures::fig_serving`]) and
+//! `benches/serving.rs` compare batched-AD against N independent
+//! single-query AD runs: same distances, a fraction of the inspector
+//! passes and policy decisions.
+
+pub mod batch;
+pub mod merged;
+pub mod query;
+pub mod shard;
+
+pub use batch::{replay_single, QueryBatch};
+pub use merged::{MergedEdgeFrontier, MergedWorklist, MAX_QUERIES_PER_SHARD};
+pub use query::{synthetic_queries, Query};
+pub use shard::{
+    aggregate, partition, serve, AggregateMetrics, BatchReport, DeviceShard, ServeConfig,
+    ShardReport,
+};

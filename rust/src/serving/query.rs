@@ -1,0 +1,101 @@
+//! Query descriptions and the deterministic synthetic arrival driver.
+//!
+//! A serving deployment answers many point queries (BFS levels / SSSP
+//! distances from some source) against one long-lived graph. [`Query`] is
+//! that unit of work; [`synthetic_queries`] is the load generator the
+//! `serve` CLI subcommand and the benches drive the batch engine with —
+//! sources drawn from the populated part of the graph, algorithms drawn
+//! from a BFS/SSSP mix, everything seeded through [`crate::util::Rng`] so
+//! runs reproduce exactly.
+
+use crate::algorithms::AlgoKind;
+use crate::graph::{Csr, Graph, NodeId};
+use crate::util::Rng;
+
+/// One BFS/SSSP query against the shared graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Query {
+    /// Stable id assigned by the driver (reporting / result lookup).
+    pub id: u32,
+    /// Which propagation the query runs.
+    pub algo: AlgoKind,
+    /// Source node.
+    pub source: NodeId,
+}
+
+/// Deterministic synthetic arrival stream: `count` queries whose sources
+/// are drawn uniformly from the non-isolated nodes (real traffic starts
+/// inside the populated part of the graph) and whose algorithm is BFS with
+/// probability `bfs_fraction` (0.0 ⇒ all SSSP, 1.0 ⇒ all BFS).
+pub fn synthetic_queries(g: &Csr, count: usize, bfs_fraction: f64, seed: u64) -> Vec<Query> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5e21_1a6e_0b5e_55e5);
+    let candidates: Vec<NodeId> = (0..g.num_nodes() as u32)
+        .filter(|&u| g.degree(u) > 0)
+        .collect();
+    let mut out = Vec::with_capacity(count);
+    for id in 0..count as u32 {
+        let source = if candidates.is_empty() {
+            rng.gen_range_u32(0, g.num_nodes().max(1) as u32)
+        } else {
+            candidates[rng.gen_index(candidates.len())]
+        };
+        let algo = if rng.gen_f64() < bfs_fraction {
+            AlgoKind::Bfs
+        } else {
+            AlgoKind::Sssp
+        };
+        out.push(Query { id, algo, source });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn graph() -> Csr {
+        // node 3 is isolated; sources must avoid it.
+        Csr::from_edges(
+            4,
+            &[Edge::new(0, 1, 1), Edge::new(1, 2, 1), Edge::new(2, 0, 1)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn arrivals_are_deterministic() {
+        let g = graph();
+        let a = synthetic_queries(&g, 16, 0.5, 42);
+        let b = synthetic_queries(&g, 16, 0.5, 42);
+        assert_eq!(a, b);
+        let c = synthetic_queries(&g, 16, 0.5, 43);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn sources_avoid_isolated_nodes() {
+        let g = graph();
+        for q in synthetic_queries(&g, 64, 0.5, 7) {
+            assert_ne!(q.source, 3, "query {} sourced at an isolated node", q.id);
+        }
+    }
+
+    #[test]
+    fn bfs_fraction_extremes() {
+        let g = graph();
+        assert!(synthetic_queries(&g, 32, 0.0, 1)
+            .iter()
+            .all(|q| q.algo == AlgoKind::Sssp));
+        assert!(synthetic_queries(&g, 32, 1.0, 1)
+            .iter()
+            .all(|q| q.algo == AlgoKind::Bfs));
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let g = graph();
+        let qs = synthetic_queries(&g, 5, 0.5, 9);
+        assert_eq!(qs.iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+}

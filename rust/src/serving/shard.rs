@@ -1,0 +1,356 @@
+//! The device-shard layer: partition a batch of queries across simulated
+//! devices, run one [`QueryBatch`] per shard, and aggregate the per-shard
+//! [`RunMetrics`] into a batch report.
+//!
+//! Shards are independent simulated devices (each gets its own
+//! [`crate::coordinator::ExecCtx`] over a clone of the
+//! [`crate::sim::DeviceSpec`]), so the batch's wall-clock is the *maximum*
+//! shard time while its throughput cost is the *sum* — [`AggregateMetrics`]
+//! carries both. Aggregation is a commutative fold (sums and maxes), so it
+//! is invariant under query and shard permutation — a property pinned down
+//! in `rust/tests/strategy_properties.rs`.
+
+use crate::algorithms::{AlgoKind, NativeRelaxer};
+use crate::coordinator::ExecCtx;
+use crate::error::{Error, Result};
+use crate::graph::Csr;
+use crate::metrics::RunMetrics;
+use crate::sim::DeviceSpec;
+use crate::strategies::{StrategyKind, StrategyParams};
+use crate::util::Json;
+use std::sync::Arc;
+
+use super::batch::QueryBatch;
+use super::merged::MAX_QUERIES_PER_SHARD;
+use super::query::Query;
+
+/// Everything needed to serve one batch of queries.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Strategy of the batch engine: a static kind, or [`StrategyKind::AD`]
+    /// for per-batch adaptive decisions (the default).
+    pub strategy: StrategyKind,
+    pub params: StrategyParams,
+    pub device: DeviceSpec,
+    /// Enforce the device memory budget per shard.
+    pub enforce_budget: bool,
+    /// Simulated devices the queries are partitioned across.
+    pub shards: usize,
+    /// Safety valve on batch iterations.
+    pub max_iterations: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            strategy: StrategyKind::AD,
+            params: StrategyParams::default(),
+            device: DeviceSpec::k20c(),
+            enforce_budget: false,
+            shards: 1,
+            max_iterations: 1_000_000,
+        }
+    }
+}
+
+/// One simulated device's share of the batch.
+#[derive(Debug, Clone)]
+pub struct DeviceShard {
+    pub id: usize,
+    pub queries: Vec<Query>,
+}
+
+/// Round-robin partition of `queries` over `shards` devices (deterministic;
+/// empty shards are kept so shard ids are stable).
+pub fn partition(queries: &[Query], shards: usize) -> Vec<DeviceShard> {
+    let shards = shards.max(1);
+    let mut out: Vec<DeviceShard> = (0..shards)
+        .map(|id| DeviceShard {
+            id,
+            queries: Vec::new(),
+        })
+        .collect();
+    for (i, &q) in queries.iter().enumerate() {
+        out[i % shards].queries.push(q);
+    }
+    out
+}
+
+/// One shard's outcome: its queries, its metrics, and the per-query
+/// distance arrays (truncated to the original node ids).
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub queries: Vec<Query>,
+    pub metrics: RunMetrics,
+    pub dists: Vec<Vec<u32>>,
+}
+
+/// Commutative aggregate of per-shard metrics: sums for throughput-style
+/// counters, max for per-device quantities (peak memory, wall-clock
+/// cycles — shards run in parallel).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AggregateMetrics {
+    /// Σ over shards of total simulated cycles (throughput cost).
+    pub total_cycles: u64,
+    /// Max over shards of total simulated cycles (wall-clock: shards run
+    /// concurrently on separate devices).
+    pub wall_cycles: u64,
+    pub kernel_cycles: u64,
+    pub overhead_cycles: u64,
+    pub inspector_passes: u64,
+    pub policy_decisions: u64,
+    pub iterations: u64,
+    pub kernel_launches: u64,
+    pub edge_relaxations: u64,
+    pub strategy_switches: u64,
+    /// Max over shards (each device holds its own allocations).
+    pub peak_memory_bytes: u64,
+}
+
+/// Fold per-shard (or per-run) metrics into an [`AggregateMetrics`]. Every
+/// component is a sum or a max, so any permutation of the input yields the
+/// same aggregate.
+pub fn aggregate<'a>(metrics: impl IntoIterator<Item = &'a RunMetrics>) -> AggregateMetrics {
+    let mut agg = AggregateMetrics::default();
+    for m in metrics {
+        agg.total_cycles += m.total_cycles();
+        agg.wall_cycles = agg.wall_cycles.max(m.total_cycles());
+        agg.kernel_cycles += m.kernel_cycles;
+        agg.overhead_cycles += m.overhead_cycles;
+        agg.inspector_passes += m.inspector_passes;
+        agg.policy_decisions += m.policy_decisions;
+        agg.iterations += m.iterations as u64;
+        agg.kernel_launches += m.kernel_launches as u64;
+        agg.edge_relaxations += m.edge_relaxations;
+        agg.strategy_switches += m.strategy_switches;
+        agg.peak_memory_bytes = agg.peak_memory_bytes.max(m.peak_memory_bytes);
+    }
+    agg
+}
+
+impl AggregateMetrics {
+    /// Throughput cost in simulated milliseconds on `dev`.
+    pub fn total_ms(&self, dev: &DeviceSpec) -> f64 {
+        dev.cycles_to_ms(self.total_cycles)
+    }
+
+    /// Wall-clock in simulated milliseconds on `dev` (slowest shard).
+    pub fn wall_ms(&self, dev: &DeviceSpec) -> f64 {
+        dev.cycles_to_ms(self.wall_cycles)
+    }
+
+    /// JSON rendering.
+    pub fn to_json(&self, dev: &DeviceSpec) -> Json {
+        Json::obj(vec![
+            ("total_ms", self.total_ms(dev).into()),
+            ("wall_ms", self.wall_ms(dev).into()),
+            ("kernel_cycles", self.kernel_cycles.into()),
+            ("overhead_cycles", self.overhead_cycles.into()),
+            ("inspector_passes", self.inspector_passes.into()),
+            ("policy_decisions", self.policy_decisions.into()),
+            ("iterations", self.iterations.into()),
+            ("kernel_launches", self.kernel_launches.into()),
+            ("edge_relaxations", self.edge_relaxations.into()),
+            ("strategy_switches", self.strategy_switches.into()),
+            ("peak_memory", self.peak_memory_bytes.into()),
+        ])
+    }
+}
+
+/// Outcome of serving one batch across its shards.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub shards: Vec<ShardReport>,
+}
+
+impl BatchReport {
+    /// Queries served.
+    pub fn query_count(&self) -> usize {
+        self.shards.iter().map(|s| s.queries.len()).sum()
+    }
+
+    /// Aggregate of the shard metrics.
+    pub fn totals(&self) -> AggregateMetrics {
+        aggregate(self.shards.iter().map(|s| &s.metrics))
+    }
+
+    /// Distance array of the query with `id`, if it was in the batch.
+    pub fn dist_of(&self, id: u32) -> Option<&[u32]> {
+        for s in &self.shards {
+            if let Some(i) = s.queries.iter().position(|q| q.id == id) {
+                return Some(&s.dists[i]);
+            }
+        }
+        None
+    }
+
+    /// JSON rendering (per-shard summaries + totals).
+    pub fn to_json(&self, dev: &DeviceSpec) -> Json {
+        Json::obj(vec![
+            ("queries", self.query_count().into()),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("shard", s.shard.into()),
+                                ("queries", s.queries.len().into()),
+                                (
+                                    "metrics",
+                                    aggregate(std::iter::once(&s.metrics)).to_json(dev),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("totals", self.totals().to_json(dev)),
+        ])
+    }
+}
+
+/// Serve one batch of queries over `graph`: partition across
+/// `cfg.shards` simulated devices, run a [`QueryBatch`] per shard, collect
+/// per-shard metrics and per-query distances.
+pub fn serve(graph: &Arc<Csr>, queries: &[Query], cfg: &ServeConfig) -> Result<BatchReport> {
+    if cfg.shards == 0 {
+        return Err(Error::Config("shards must be >= 1".into()));
+    }
+    let per_shard = queries.len().div_ceil(cfg.shards.max(1));
+    if per_shard > MAX_QUERIES_PER_SHARD {
+        return Err(Error::Config(format!(
+            "{} queries over {} shards puts {per_shard} on one device \
+             (limit {MAX_QUERIES_PER_SHARD}); raise shards or lower batch_size",
+            queries.len(),
+            cfg.shards
+        )));
+    }
+    let mut shards = Vec::new();
+    for shard in partition(queries, cfg.shards) {
+        if shard.queries.is_empty() {
+            shards.push(ShardReport {
+                shard: shard.id,
+                queries: Vec::new(),
+                metrics: RunMetrics::default(),
+                dists: Vec::new(),
+            });
+            continue;
+        }
+        let mut ctx = ExecCtx::new(&cfg.device, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        if cfg.enforce_budget {
+            ctx = ctx.with_budget(cfg.device.memory_budget);
+        }
+        let mut batch = QueryBatch::new(
+            graph.clone(),
+            &shard.queries,
+            cfg.strategy,
+            cfg.params.clone(),
+        )?;
+        batch.init(&mut ctx)?;
+        batch.run(&mut ctx, cfg.max_iterations)?;
+        ctx.finalize_metrics();
+        let dists = (0..shard.queries.len()).map(|i| batch.distances(i)).collect();
+        shards.push(ShardReport {
+            shard: shard.id,
+            queries: shard.queries,
+            metrics: ctx.metrics,
+            dists,
+        });
+    }
+    Ok(BatchReport { shards })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, rmat, RmatParams};
+    use crate::graph::traversal;
+    use crate::serving::query::synthetic_queries;
+
+    #[test]
+    fn partition_is_round_robin_and_stable() {
+        let g = erdos_renyi(64, 256, 5, 1).unwrap();
+        let qs = synthetic_queries(&g, 7, 0.5, 4);
+        let shards = partition(&qs, 3);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0].queries.len(), 3);
+        assert_eq!(shards[1].queries.len(), 2);
+        assert_eq!(shards[2].queries.len(), 2);
+        assert_eq!(shards[0].queries[0].id, 0);
+        assert_eq!(shards[1].queries[0].id, 1);
+        assert_eq!(shards[2].queries[1].id, 5);
+    }
+
+    #[test]
+    fn sharded_serving_matches_oracles() {
+        let g = Arc::new(rmat(8, 2048, RmatParams::default(), 9).unwrap());
+        let qs = synthetic_queries(&g, 6, 0.0, 17);
+        for shards in [1, 2, 4] {
+            let report = serve(
+                &g,
+                &qs,
+                &ServeConfig {
+                    shards,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(report.query_count(), 6);
+            for q in &qs {
+                assert_eq!(
+                    report.dist_of(q.id).unwrap(),
+                    traversal::dijkstra(&g, q.source).as_slice(),
+                    "query {} with {shards} shards",
+                    q.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serve_rejects_overfull_shards() {
+        let g = Arc::new(erdos_renyi(32, 64, 3, 2).unwrap());
+        let qs = synthetic_queries(&g, MAX_QUERIES_PER_SHARD + 1, 1.0, 3);
+        assert!(serve(&g, &qs, &ServeConfig::default()).is_err());
+        // Two shards bring the per-device load back under the limit.
+        let report = serve(
+            &g,
+            &qs,
+            &ServeConfig {
+                shards: 2,
+                strategy: StrategyKind::BS,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.query_count(), MAX_QUERIES_PER_SHARD + 1);
+    }
+
+    #[test]
+    fn totals_fold_shard_metrics() {
+        let g = Arc::new(erdos_renyi(128, 512, 8, 6).unwrap());
+        let qs = synthetic_queries(&g, 8, 0.5, 21);
+        let report = serve(
+            &g,
+            &qs,
+            &ServeConfig {
+                shards: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let totals = report.totals();
+        let by_hand: u64 = report
+            .shards
+            .iter()
+            .map(|s| s.metrics.total_cycles())
+            .sum();
+        assert_eq!(totals.total_cycles, by_hand);
+        assert!(totals.wall_cycles <= totals.total_cycles);
+        assert!(totals.wall_cycles > 0);
+        assert!(totals.inspector_passes > 0, "AD batches inspect");
+    }
+}

@@ -1,4 +1,9 @@
 //! Self-cleaning temp files/dirs for tests (a `tempfile` stand-in).
+//!
+//! Names derive from the process id plus a process-local counter only — no
+//! clock reads, so test runs are fully deterministic (the repo's tests and
+//! generators route all randomness through [`crate::util::rng`] with fixed
+//! seeds; this module was the last time-dependent path).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,12 +23,15 @@ impl TempPath {
     pub fn file(suffix: &str) -> Self {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
-            "lonestar-lb-{}-{}-{}{}",
+            "lonestar-lb-{}-{}{}",
             std::process::id(),
             n,
-            nanos(),
             suffix
         ));
+        // pid + counter names can recur after a killed run (Drop never ran)
+        // once the OS recycles the pid; clear any stale leftover so no test
+        // ever reads a previous run's bytes.
+        let _ = std::fs::remove_file(&path);
         TempPath {
             path,
             is_dir: false,
@@ -34,11 +42,12 @@ impl TempPath {
     pub fn dir() -> Self {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
-            "lonestar-lb-dir-{}-{}-{}",
+            "lonestar-lb-dir-{}-{}",
             std::process::id(),
-            n,
-            nanos()
+            n
         ));
+        // Same stale-leftover guard as `file` (see above).
+        let _ = std::fs::remove_dir_all(&path);
         std::fs::create_dir_all(&path).expect("create temp dir");
         TempPath { path, is_dir: true }
     }
@@ -47,13 +56,6 @@ impl TempPath {
     pub fn path(&self) -> &Path {
         &self.path
     }
-}
-
-fn nanos() -> u128 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_nanos())
-        .unwrap_or(0)
 }
 
 impl Drop for TempPath {

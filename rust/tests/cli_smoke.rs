@@ -105,6 +105,30 @@ fn run_from_generated_file_and_config() {
 }
 
 #[test]
+fn serve_tiny_with_verification() {
+    let out = bin()
+        .args([
+            "serve", "--suite", "rmat10", "--scale", "tiny", "--queries", "8",
+            "--batch-size", "4", "--shards", "2", "--verify", "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("differential replay OK"), "no replay verdict:\n{text}");
+    assert!(text.contains("inspect"), "no amortization counters:\n{text}");
+    let json_line = text.lines().find(|l| l.starts_with('[')).expect("json array");
+    let v = lonestar_lb::util::Json::parse(json_line).expect("valid json");
+    let batches = v.as_arr().unwrap();
+    assert_eq!(batches.len(), 2, "8 queries / batch_size 4 = 2 batches");
+    assert_eq!(
+        batches[0].get("queries").unwrap().as_usize(),
+        Some(4),
+        "first batch carries batch_size queries"
+    );
+}
+
+#[test]
 fn figures_tiny_table2() {
     let out = bin()
         .args(["figures", "table2", "--scale", "tiny"])

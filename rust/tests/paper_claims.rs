@@ -5,7 +5,8 @@
 use lonestar_lb::algorithms::AlgoKind;
 use lonestar_lb::coordinator::{run, RunConfig};
 use lonestar_lb::figures::{fig10, fig11, fig7, fig8, FigureOpts, Outcome};
-use lonestar_lb::graph::generators::SuiteScale;
+use lonestar_lb::graph::generators::{paper_suite, SuiteScale};
+use lonestar_lb::serving::{serve, synthetic_queries, ServeConfig};
 use lonestar_lb::strategies::StrategyKind;
 use lonestar_lb::worklist::chunking::PushPolicy;
 use std::sync::Arc;
@@ -235,6 +236,92 @@ fn fig11_chunking_band() {
         (1.4..=2.6).contains(&avg),
         "average chunking speedup {avg:.2}x too far from the paper's 1.82x"
     );
+}
+
+/// §II-B / §IV-A: EP's COO arrays and NS's transient double-CSR exceed the
+/// device budget on large skewed graphs — the paper's edge-based memory
+/// caveat. The adaptive selector's contract is that its per-iteration
+/// decision trace never *picks* a strategy whose storage cannot fit,
+/// whether it drives one query or a whole serving batch.
+#[test]
+fn ad_trace_never_picks_memory_infeasible_strategies_batched_or_not() {
+    let opts = FigureOpts {
+        scale: SuiteScale::Tiny,
+        ..Default::default()
+    };
+    for entry in paper_suite(SuiteScale::Tiny) {
+        if entry.spec.skew_class() != "skewed" {
+            continue; // rmat + Graph500: the paper's memory-caveat graphs
+        }
+        let g = Arc::new(entry.spec.generate(opts.seed).unwrap());
+        let dev = opts.device_for(&entry, &g);
+
+        // Which static strategies actually hit the wall on this graph.
+        let mut infeasible = Vec::new();
+        for k in [StrategyKind::EP, StrategyKind::NS] {
+            let r = run(
+                &g,
+                &RunConfig {
+                    strategy: k,
+                    device: dev.clone(),
+                    enforce_budget: true,
+                    ..Default::default()
+                },
+            );
+            match r {
+                Err(e) if e.is_oom() => infeasible.push(k.label()),
+                Err(e) => panic!("{}/{k}: {e}", entry.name),
+                Ok(_) => {}
+            }
+        }
+
+        // Single-query AD: completes within budget, never picking them.
+        let ad = run(
+            &g,
+            &RunConfig {
+                strategy: StrategyKind::AD,
+                device: dev.clone(),
+                enforce_budget: true,
+                ..Default::default()
+            },
+        )
+        .unwrap_or_else(|e| panic!("{}: AD must fit the budget: {e}", entry.name));
+        assert!(ad.metrics.peak_memory_bytes <= dev.memory_budget);
+        assert!(!ad.metrics.decisions.is_empty());
+        for d in &ad.metrics.decisions {
+            assert!(
+                !infeasible.contains(&d.strategy),
+                "{}: AD chose {} despite the memory caveat (infeasible: {:?})",
+                entry.name,
+                d.strategy,
+                infeasible
+            );
+        }
+
+        // Batched AD: the shared per-batch decision honours the same wall.
+        let queries = synthetic_queries(&g, 3, 0.0, opts.seed);
+        let report = serve(
+            &g,
+            &queries,
+            &ServeConfig {
+                device: dev.clone(),
+                enforce_budget: true,
+                ..Default::default()
+            },
+        )
+        .unwrap_or_else(|e| panic!("{}: batched AD must fit the budget: {e}", entry.name));
+        for shard in &report.shards {
+            assert!(shard.metrics.peak_memory_bytes <= dev.memory_budget);
+            for d in &shard.metrics.decisions {
+                assert!(
+                    !infeasible.contains(&d.strategy),
+                    "{}: batched AD chose {} despite the memory caveat",
+                    entry.name,
+                    d.strategy
+                );
+            }
+        }
+    }
 }
 
 /// The per-edge push policy changes only *performance*, never the result.

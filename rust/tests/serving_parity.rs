@@ -1,0 +1,200 @@
+//! The serving layer's differential test suite: batched multi-query runs
+//! must produce distance arrays **bit-identical** to replaying every query
+//! through the existing single-query engine — for BFS and SSSP, across all
+//! `StrategyKind`s (AD included, under every policy), and across 1/2/4
+//! device shards. Random graphs and random source sets come from
+//! `util::rng` with fixed seeds, so every failure reproduces exactly.
+
+use lonestar_lb::adaptive::AdaptivePolicyKind;
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
+use lonestar_lb::graph::{Csr, Graph};
+use lonestar_lb::serving::{
+    replay_single, serve, synthetic_queries, Query, ServeConfig,
+};
+use lonestar_lb::strategies::{StrategyKind, StrategyParams};
+use lonestar_lb::util::Rng;
+use std::sync::Arc;
+
+/// The differential graph pool: one skewed (RMAT), one uniform
+/// (Erdős–Rényi), one road-like grid.
+fn graphs() -> Vec<(&'static str, Arc<Csr>)> {
+    vec![
+        (
+            "rmat",
+            Arc::new(rmat(8, 2048, RmatParams::default(), 31).unwrap()),
+        ),
+        ("er", Arc::new(erdos_renyi(300, 1200, 20, 32).unwrap())),
+        ("road", Arc::new(road_grid(16, 16, 9, 33).unwrap())),
+    ]
+}
+
+/// Random source set over the non-isolated nodes (fixed seed).
+fn random_queries(g: &Csr, count: usize, algo: AlgoKind, seed: u64) -> Vec<Query> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let candidates: Vec<u32> = (0..g.num_nodes() as u32)
+        .filter(|&u| g.degree(u) > 0)
+        .collect();
+    (0..count as u32)
+        .map(|id| Query {
+            id,
+            algo,
+            source: candidates[rng.gen_index(candidates.len())],
+        })
+        .collect()
+}
+
+/// Serve `queries` and assert bit-identical distances vs. the single-query
+/// engine, via the baked-in replay oracle.
+fn assert_parity(
+    g: &Arc<Csr>,
+    queries: &[Query],
+    strategy: StrategyKind,
+    params: StrategyParams,
+    shards: usize,
+    label: &str,
+) {
+    let cfg = ServeConfig {
+        strategy,
+        params: params.clone(),
+        shards,
+        ..Default::default()
+    };
+    let report = serve(g, queries, &cfg)
+        .unwrap_or_else(|e| panic!("{label}: serve failed: {e}"));
+    assert_eq!(report.query_count(), queries.len(), "{label}: lost queries");
+    for shard in &report.shards {
+        replay_single(g, &shard.queries, strategy, &params, &shard.dists)
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+    }
+}
+
+#[test]
+fn batched_matches_single_runs_across_all_strategies() {
+    for (name, g) in graphs() {
+        for algo in [AlgoKind::Bfs, AlgoKind::Sssp] {
+            let queries = random_queries(&g, 4, algo, 0xD1F + name.len() as u64);
+            for strategy in StrategyKind::ALL_WITH_ADAPTIVE {
+                assert_parity(
+                    &g,
+                    &queries,
+                    strategy,
+                    StrategyParams::default(),
+                    1,
+                    &format!("{name}/{algo:?}/{strategy}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_ad_matches_under_every_policy() {
+    // Round-robin forces a migration-heavy decision trace; the heuristic
+    // and cost-model policies cover the production paths.
+    for (name, g) in graphs() {
+        let queries = random_queries(&g, 5, AlgoKind::Sssp, 0xAD0 + name.len() as u64);
+        for policy in [
+            AdaptivePolicyKind::CostModel,
+            AdaptivePolicyKind::Heuristic,
+            AdaptivePolicyKind::RoundRobin,
+        ] {
+            let params = StrategyParams {
+                adaptive_policy: policy,
+                ..Default::default()
+            };
+            assert_parity(
+                &g,
+                &queries,
+                StrategyKind::AD,
+                params,
+                1,
+                &format!("{name}/AD/{policy:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_counts_never_change_results_any_strategy() {
+    // The full acceptance matrix: every strategy (AD included) across
+    // 1/2/4 shards, BFS and SSSP alternating by graph to bound runtime.
+    for (gi, (name, g)) in graphs().into_iter().enumerate() {
+        let algo = if gi % 2 == 0 { AlgoKind::Sssp } else { AlgoKind::Bfs };
+        let queries = random_queries(&g, 6, algo, 0x54A2D + name.len() as u64);
+        for shards in [1usize, 2, 4] {
+            for strategy in StrategyKind::ALL_WITH_ADAPTIVE {
+                assert_parity(
+                    &g,
+                    &queries,
+                    strategy,
+                    StrategyParams::default(),
+                    shards,
+                    &format!("{name}/{algo:?}/{strategy}/{shards}shards"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_algo_batches_keep_queries_independent() {
+    for (name, g) in graphs() {
+        // Interleave BFS and SSSP from the same sources in one batch: the
+        // per-query dist arrays must not bleed into each other.
+        let mut queries = random_queries(&g, 3, AlgoKind::Bfs, 0x317 + name.len() as u64);
+        let twins: Vec<Query> = queries
+            .iter()
+            .map(|q| Query {
+                id: q.id + 100,
+                algo: AlgoKind::Sssp,
+                source: q.source,
+            })
+            .collect();
+        queries.extend(twins);
+        for shards in [1usize, 2] {
+            assert_parity(
+                &g,
+                &queries,
+                StrategyKind::AD,
+                StrategyParams::default(),
+                shards,
+                &format!("{name}/mixed/{shards}shards"),
+            );
+        }
+    }
+}
+
+#[test]
+fn synthetic_driver_queries_are_servable_and_parity_holds() {
+    // End-to-end over the CLI's own arrival driver.
+    let pool = graphs();
+    let (_, g) = &pool[0];
+    let queries = synthetic_queries(g, 12, 0.5, 2026);
+    assert_parity(
+        g,
+        &queries,
+        StrategyKind::AD,
+        StrategyParams::default(),
+        2,
+        "driver/AD/2shards",
+    );
+}
+
+#[test]
+fn batched_runs_are_deterministic() {
+    let pool = graphs();
+    let (_, g) = &pool[0];
+    let queries = random_queries(g, 4, AlgoKind::Sssp, 77);
+    let cfg = ServeConfig {
+        shards: 2,
+        ..Default::default()
+    };
+    let a = serve(g, &queries, &cfg).unwrap();
+    let b = serve(g, &queries, &cfg).unwrap();
+    for q in &queries {
+        assert_eq!(a.dist_of(q.id), b.dist_of(q.id));
+    }
+    let (ta, tb) = (a.totals(), b.totals());
+    assert_eq!(ta, tb, "metrics must reproduce run-to-run");
+}

@@ -7,6 +7,8 @@ use lonestar_lb::algorithms::AlgoKind;
 use lonestar_lb::coordinator::{run, RunConfig};
 use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
 use lonestar_lb::graph::{Csr, Edge, Graph};
+use lonestar_lb::metrics::RunMetrics;
+use lonestar_lb::serving::{aggregate, MergedWorklist};
 use lonestar_lb::strategies::mdt::auto_mdt;
 use lonestar_lb::strategies::node_split::split_graph;
 use lonestar_lb::strategies::{StrategyKind, StrategyParams};
@@ -285,6 +287,77 @@ fn adaptive_matches_oracle_on_random_graphs() {
                 "AD/{policy:?}: one decision per iteration"
             );
         }
+    });
+}
+
+#[test]
+fn merged_worklist_migration_roundtrip_preserves_tags() {
+    // The serving layer's tagged merged worklist: nodes → exploded edges →
+    // nodes must preserve every query's tag bit exactly, with the same
+    // single documented exception as the untagged migration — nodes of
+    // out-degree zero cannot ride in edge space.
+    forall("merged-tag-roundtrip", 40, |rng| {
+        let g = if rng.gen_f64() < 0.5 {
+            rmat(8, 2048, RmatParams::default(), rng.next_u64()).unwrap()
+        } else {
+            road_grid(12, 12, 9, rng.next_u64()).unwrap()
+        };
+        let slots = rng.gen_range_u32(1, 9) as usize;
+        let frontiers: Vec<NodeWorklist> =
+            (0..slots).map(|_| random_frontier(rng, &g)).collect();
+        let pairs: Vec<(usize, &NodeWorklist)> =
+            frontiers.iter().enumerate().collect();
+        let merged = MergedWorklist::from_frontiers(&g, &pairs);
+
+        // Each slot's extracted frontier equals the input frontier.
+        for (slot, wl) in &pairs {
+            let got = merged.query_frontier(*slot);
+            assert_eq!(sorted_nodes(&got), sorted_nodes(wl), "slot {slot}");
+        }
+
+        // Tag-preserving round-trip through edge space.
+        let back = merged.to_edges(&g).to_nodes(&g);
+        let mut want: Vec<(u32, u64)> = Vec::new();
+        for i in 0..merged.len() {
+            let n = merged.nodes()[i];
+            if g.degree(n) > 0 {
+                want.push((n, merged.masks()[i]));
+            }
+        }
+        want.sort_unstable();
+        let mut got: Vec<(u32, u64)> = Vec::new();
+        for i in 0..back.len() {
+            got.push((back.nodes()[i], back.masks()[i]));
+        }
+        got.sort_unstable();
+        assert_eq!(got, want, "tags must survive the edge round-trip");
+    });
+}
+
+#[test]
+fn batch_metrics_aggregation_is_permutation_invariant() {
+    // The shard aggregation is a commutative fold (sums and maxes), so the
+    // order queries/shards are folded in can never change the report.
+    forall("aggregate-permutation", 30, |rng| {
+        let k = rng.gen_range_u32(1, 9) as usize;
+        let mut metrics: Vec<RunMetrics> = (0..k)
+            .map(|_| RunMetrics {
+                kernel_cycles: rng.next_u64() % 1_000_000,
+                overhead_cycles: rng.next_u64() % 1_000_000,
+                iterations: rng.next_u32() % 1000,
+                kernel_launches: rng.next_u32() % 1000,
+                edge_relaxations: rng.next_u64() % 1_000_000,
+                inspector_passes: rng.next_u64() % 1000,
+                policy_decisions: rng.next_u64() % 1000,
+                strategy_switches: rng.next_u64() % 100,
+                peak_memory_bytes: rng.next_u64() % 1_000_000,
+                ..Default::default()
+            })
+            .collect();
+        let before = aggregate(metrics.iter());
+        rng.shuffle(&mut metrics);
+        let after = aggregate(metrics.iter());
+        assert_eq!(before, after, "aggregation must be order-independent");
     });
 }
 
