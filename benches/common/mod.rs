@@ -2,6 +2,10 @@
 #![allow(dead_code)] // each bench binary uses a subset
 
 use lonestar_lb::graph::generators::SuiteScale;
+use lonestar_lb::util::bench::CaseResult;
+use lonestar_lb::util::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 /// `LONESTAR_SCALE=tiny|small|paper` (default small).
 pub fn scale_from_env() -> SuiteScale {
@@ -18,4 +22,71 @@ pub fn iters_from_env() -> u32 {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(3)
+}
+
+/// Where the machine-readable bench baseline goes: `BENCH_JSON_OUT` env
+/// override, else `BENCH_hotpath.json` in the working directory (the
+/// committed baseline the CI bench-smoke job diffs against).
+pub fn bench_json_path() -> PathBuf {
+    std::env::var("BENCH_JSON_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_hotpath.json"))
+}
+
+/// Merge one suite's results plus derived, machine-independent ratio
+/// metrics into the bench baseline JSON (read-modify-write keyed by suite
+/// name, so `hotpath` and `serving` share one file). Raw nanoseconds are
+/// recorded for trajectory plots; the regression gate compares the
+/// *ratios*, which survive hardware changes.
+pub fn write_bench_json(suite: &str, results: &[CaseResult], ratios: &[(&str, f64)]) {
+    let path = bench_json_path();
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(|| Json::Obj(BTreeMap::new()));
+
+    let cases: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", r.name.as_str().into()),
+                ("iters", r.iters.into()),
+                ("mean_ns", r.mean_ns.into()),
+                ("stddev_ns", r.stddev_ns.into()),
+                ("min_ns", r.min_ns.into()),
+                ("note", r.note.as_str().into()),
+            ])
+        })
+        .collect();
+    let suite_obj = Json::obj(vec![
+        ("cases", Json::Arr(cases)),
+        (
+            "ratios",
+            Json::Obj(
+                ratios
+                    .iter()
+                    .map(|&(k, v)| (k.to_string(), Json::from(v)))
+                    .collect(),
+            ),
+        ),
+    ]);
+
+    if let Json::Obj(m) = &mut root {
+        m.insert("schema".into(), 1u64.into());
+        m.remove("bootstrap"); // a real measurement replaces the stub
+        let suites = m
+            .entry("suites".to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if !matches!(suites, Json::Obj(_)) {
+            *suites = Json::Obj(BTreeMap::new());
+        }
+        if let Json::Obj(sm) = suites {
+            sm.insert(suite.to_string(), suite_obj);
+        }
+    }
+    match std::fs::write(&path, format!("{root}\n")) {
+        Ok(()) => println!("(bench baseline written to {})", path.display()),
+        Err(e) => println!("(bench baseline NOT written to {}: {e})", path.display()),
+    }
 }

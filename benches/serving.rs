@@ -102,7 +102,24 @@ fn main() {
             });
         }
     }
-    suite.finish();
+    let results = suite.finish();
+    // Fold the amortization claim into the shared bench baseline: the
+    // inspection+decision work of batched-AD as a fraction of N
+    // independent runs (machine-independent — simulated counters).
+    let batched_work: u64 = rows
+        .iter()
+        .map(|r| r.batched.inspector_passes + r.batched.policy_decisions)
+        .sum();
+    let independent_work: u64 = rows
+        .iter()
+        .map(|r| r.independent.inspector_passes + r.independent.policy_decisions)
+        .sum();
+    let amortization = independent_work as f64 / (batched_work.max(1)) as f64;
+    common::write_bench_json(
+        "serving",
+        &results,
+        &[("inspection_amortization", amortization)],
+    );
     println!(
         "serving acceptance over {} graphs ({} nodes, {} edges on the timed one)",
         rows.len(),

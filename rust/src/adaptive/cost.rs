@@ -21,6 +21,21 @@ pub fn aux_kernel_cycles(dev: &DeviceSpec, items: u64, per_item: u64) -> u64 {
     dev.aux_kernel_cycles(items, per_item)
 }
 
+/// Reusable predictor scratch: synthesized lane-step vectors plus the
+/// [`KernelSim`] per-SM accumulators, so a warm policy predicts with zero
+/// heap allocation — the arena discipline of the execution path, applied
+/// to the decision path (a cost-model decision runs every iteration).
+#[derive(Debug, Default, Clone)]
+pub struct CostScratch {
+    /// Synthesized per-lane step counts for the candidate kernel.
+    lanes: Vec<u32>,
+    /// HP's shrinking residual-degree list (distinct from `lanes`, which
+    /// its inner WD fallback clobbers).
+    residual: Vec<u32>,
+    sm_a: Vec<u64>,
+    sm_b: Vec<u64>,
+}
+
 /// Account one kernel whose lane `l` performs `lane_steps[l]` edge steps,
 /// warp by warp in launch order (exactly how [`KernelSim`] sees the real
 /// launch, minus atomics).
@@ -29,9 +44,11 @@ fn sim_lanes(
     lane_steps: &[u32],
     access: AccessPattern,
     extra_per_edge: u64,
+    sm_a: &mut Vec<u64>,
+    sm_b: &mut Vec<u64>,
 ) -> u64 {
     let warp = dev.warp_size as usize;
-    let mut ks = KernelSim::new(dev);
+    let mut ks = KernelSim::new_with(dev, std::mem::take(sm_a), std::mem::take(sm_b));
     for chunk in lane_steps.chunks(warp) {
         let max_steps = chunk.iter().copied().max().unwrap_or(0);
         if max_steps == 0 {
@@ -47,97 +64,165 @@ fn sim_lanes(
         }
         ks.commit(w);
     }
-    ks.finish().cycles
+    let (t, a, b) = ks.finish_into();
+    *sm_a = a;
+    *sm_b = b;
+    t.cycles
 }
 
 /// BS: one lane per node walking its whole adjacency (scattered).
-fn bs_cycles(dev: &DeviceSpec, degrees: &[u32]) -> u64 {
-    sim_lanes(dev, degrees, AccessPattern::Scattered, 0)
+fn bs_cycles(dev: &DeviceSpec, degrees: &[u32], s: &mut CostScratch) -> u64 {
+    sim_lanes(
+        dev,
+        degrees,
+        AccessPattern::Scattered,
+        0,
+        &mut s.sm_a,
+        &mut s.sm_b,
+    )
 }
 
 /// EP: `min(T, W)` lanes, round-robin edges, coalesced, plus the one-time
 /// CSR→COO conversion if the COO is not yet resident.
-fn ep_cycles(dev: &DeviceSpec, total_edges: u64, max_threads: u32) -> u64 {
+fn ep_cycles(dev: &DeviceSpec, total_edges: u64, max_threads: u32, s: &mut CostScratch) -> u64 {
     if total_edges == 0 {
         return dev.launch_overhead;
     }
     let t = (max_threads as u64).min(total_edges).max(1) as usize;
     let total = total_edges as usize;
-    let mut steps = Vec::with_capacity(t);
+    s.lanes.clear();
     for l in 0..t {
-        steps.push(((total - l - 1) / t + 1) as u32);
+        s.lanes.push(((total - l - 1) / t + 1) as u32);
     }
-    sim_lanes(dev, &steps, AccessPattern::Coalesced, 0)
+    sim_lanes(
+        dev,
+        &s.lanes,
+        AccessPattern::Coalesced,
+        0,
+        &mut s.sm_a,
+        &mut s.sm_b,
+    )
 }
 
 /// WD: blocked chunks of `⌈W/T⌉` edges, scattered, node-boundary
 /// bookkeeping, plus the scan and `find_offsets` auxiliary kernels.
-fn wd_cycles(dev: &DeviceSpec, total_edges: u64, wl_len: u64, max_threads: u32) -> u64 {
+fn wd_cycles(
+    dev: &DeviceSpec,
+    total_edges: u64,
+    wl_len: u64,
+    max_threads: u32,
+    s: &mut CostScratch,
+) -> u64 {
     if total_edges == 0 {
         return dev.launch_overhead;
     }
     let t = (max_threads as u64).min(total_edges).max(1);
     let per = (total_edges + t - 1) / t;
     let lanes = ((total_edges + per - 1) / per) as usize;
-    let mut steps = vec![per as u32; lanes];
+    s.lanes.clear();
+    s.lanes.resize(lanes, per as u32);
     let rem = total_edges - per * (lanes as u64 - 1);
-    steps[lanes - 1] = rem as u32;
-    let kernel = sim_lanes(dev, &steps, AccessPattern::Scattered, 4);
+    s.lanes[lanes - 1] = rem as u32;
+    let kernel = sim_lanes(
+        dev,
+        &s.lanes,
+        AccessPattern::Scattered,
+        4,
+        &mut s.sm_a,
+        &mut s.sm_b,
+    );
     let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
     kernel + aux_kernel_cycles(dev, wl_len, 1) + aux_kernel_cycles(dev, t, 4 * log_wl)
 }
 
 /// NS: one lane per (parent or clone) node, every lane ≤ MDT edges.
-fn ns_cycles(dev: &DeviceSpec, degrees: &[u32], mdt: u32) -> u64 {
+fn ns_cycles(dev: &DeviceSpec, degrees: &[u32], mdt: u32, s: &mut CostScratch) -> u64 {
     let mdt = mdt.max(1);
-    let mut lanes: Vec<u32> = Vec::with_capacity(degrees.len());
+    s.lanes.clear();
     for &d in degrees {
         if d <= mdt {
-            lanes.push(d);
+            s.lanes.push(d);
             continue;
         }
         let pieces = ((d + mdt - 1) / mdt) as usize;
         let base = d / pieces as u32;
         let extra = (d as usize) % pieces;
         for p in 0..pieces {
-            lanes.push(base + u32::from(p < extra));
+            s.lanes.push(base + u32::from(p < extra));
         }
     }
-    sim_lanes(dev, &lanes, AccessPattern::Scattered, 0)
+    sim_lanes(
+        dev,
+        &s.lanes,
+        AccessPattern::Scattered,
+        0,
+        &mut s.sm_a,
+        &mut s.sm_b,
+    )
 }
 
 /// HP: sub-iterations of ≤ MDT edges per remaining node, switching to a
 /// WD-style kernel once the sub-list drops below one block (§III-C).
-fn hp_cycles(dev: &DeviceSpec, degrees: &[u32], mdt: u32, max_threads: u32) -> u64 {
+fn hp_cycles(
+    dev: &DeviceSpec,
+    degrees: &[u32],
+    mdt: u32,
+    max_threads: u32,
+    s: &mut CostScratch,
+) -> u64 {
     let mdt = mdt.max(1);
     let block = dev.block_size as usize;
     let total: u64 = degrees.iter().map(|&d| d as u64).sum();
     if degrees.len() < block {
-        return wd_cycles(dev, total, degrees.len() as u64, max_threads);
+        return wd_cycles(dev, total, degrees.len() as u64, max_threads, s);
     }
-    let mut remaining: Vec<u32> = degrees.iter().copied().filter(|&d| d > 0).collect();
+    s.residual.clear();
+    s.residual.extend(degrees.iter().copied().filter(|&d| d > 0));
     let mut cycles = 0u64;
-    while !remaining.is_empty() {
-        if remaining.len() < block {
-            let rem_edges: u64 = remaining.iter().map(|&d| d as u64).sum();
-            cycles += wd_cycles(dev, rem_edges, remaining.len() as u64, max_threads);
+    while !s.residual.is_empty() {
+        if s.residual.len() < block {
+            let rem_edges: u64 = s.residual.iter().map(|&d| d as u64).sum();
+            let rem_len = s.residual.len() as u64;
+            cycles += wd_cycles(dev, rem_edges, rem_len, max_threads, s);
             break;
         }
-        let steps: Vec<u32> = remaining.iter().map(|&d| d.min(mdt)).collect();
-        cycles += sim_lanes(dev, &steps, AccessPattern::Scattered, 2);
-        remaining = remaining
-            .iter()
-            .filter_map(|&d| if d > mdt { Some(d - mdt) } else { None })
-            .collect();
-        cycles += aux_kernel_cycles(dev, remaining.len() as u64 + 1, 1);
+        s.lanes.clear();
+        for &d in &s.residual {
+            s.lanes.push(d.min(mdt));
+        }
+        cycles += sim_lanes(
+            dev,
+            &s.lanes,
+            AccessPattern::Scattered,
+            2,
+            &mut s.sm_a,
+            &mut s.sm_b,
+        );
+        s.residual.retain_mut(|d| {
+            if *d > mdt {
+                *d -= mdt;
+                true
+            } else {
+                false
+            }
+        });
+        cycles += aux_kernel_cycles(dev, s.residual.len() as u64 + 1, 1);
     }
     cycles.max(dev.launch_overhead)
 }
 
 /// Predicted cycles for one iteration of `kind` over the frontier in
 /// `input`, including one-time setup the choice would trigger (COO
-/// materialization for EP, the split rebuild for NS).
+/// materialization for EP, the split rebuild for NS). Allocating wrapper
+/// around [`predict_with`].
 pub fn predict(kind: StrategyKind, input: &PolicyInput<'_>) -> u64 {
+    let mut s = CostScratch::default();
+    predict_with(kind, input, &mut s)
+}
+
+/// [`predict`] with caller-provided scratch — the zero-allocation path the
+/// cost-model policy uses every iteration.
+pub fn predict_with(kind: StrategyKind, input: &PolicyInput<'_>, s: &mut CostScratch) -> u64 {
     let dev = input.dev;
     let degs = input.degrees;
     let w = input.snapshot.edges;
@@ -147,17 +232,17 @@ pub fn predict(kind: StrategyKind, input: &PolicyInput<'_>) -> u64 {
         .max_threads
         .unwrap_or(dev.max_resident_threads);
     match kind {
-        StrategyKind::BS => bs_cycles(dev, degs),
+        StrategyKind::BS => bs_cycles(dev, degs, s),
         StrategyKind::EP => {
-            let mut c = ep_cycles(dev, w, max_threads);
+            let mut c = ep_cycles(dev, w, max_threads, s);
             if !input.feasibility.coo_resident {
                 c = c.saturating_add(aux_kernel_cycles(dev, input.graph_edges, 1));
             }
             c
         }
-        StrategyKind::WD => wd_cycles(dev, w, wl_len, max_threads),
+        StrategyKind::WD => wd_cycles(dev, w, wl_len, max_threads, s),
         StrategyKind::NS => {
-            let mut c = ns_cycles(dev, degs, input.mdt);
+            let mut c = ns_cycles(dev, degs, input.mdt, s);
             // Unmodelled child-mirroring atomics: flat ~15% surcharge.
             c = c.saturating_add(c / 7);
             if !input.feasibility.split_built {
@@ -169,7 +254,7 @@ pub fn predict(kind: StrategyKind, input: &PolicyInput<'_>) -> u64 {
             }
             c
         }
-        StrategyKind::HP => hp_cycles(dev, degs, input.mdt, max_threads),
+        StrategyKind::HP => hp_cycles(dev, degs, input.mdt, max_threads, s),
         // AD never predicts itself.
         StrategyKind::AD => u64::MAX,
     }
@@ -213,10 +298,11 @@ mod tests {
     #[test]
     fn bs_pays_for_the_straggler_lane() {
         let d = dev();
-        let balanced = bs_cycles(&d, &[8u32; 32]);
+        let mut s = CostScratch::default();
+        let balanced = bs_cycles(&d, &[8u32; 32], &mut s);
         let mut skewed = vec![1u32; 31];
         skewed.push(8 * 32 - 31); // same total work, one hub lane
-        let imbalanced = bs_cycles(&d, &skewed);
+        let imbalanced = bs_cycles(&d, &skewed, &mut s);
         assert!(
             imbalanced > 2 * balanced,
             "hub lane {imbalanced} must dwarf balanced {balanced}"
@@ -226,30 +312,72 @@ mod tests {
     #[test]
     fn ep_beats_bs_on_skewed_frontiers() {
         let d = dev();
+        let mut s = CostScratch::default();
         let mut degs = vec![2u32; 1000];
         degs.push(20_000);
         let total: u64 = degs.iter().map(|&x| x as u64).sum();
-        let bs = bs_cycles(&d, &degs);
-        let ep = ep_cycles(&d, total, d.max_resident_threads);
+        let bs = bs_cycles(&d, &degs, &mut s);
+        let ep = ep_cycles(&d, total, d.max_resident_threads, &mut s);
         assert!(ep < bs, "EP {ep} must beat BS {bs} on a hub frontier");
     }
 
     #[test]
     fn ns_clamps_the_hub() {
         let d = dev();
+        let mut s = CostScratch::default();
         let mut degs = vec![2u32; 1000];
         degs.push(20_000);
-        let bs = bs_cycles(&d, &degs);
-        let ns = ns_cycles(&d, &degs, 16);
+        let bs = bs_cycles(&d, &degs, &mut s);
+        let ns = ns_cycles(&d, &degs, 16, &mut s);
         assert!(ns < bs, "NS {ns} must beat BS {bs} once the hub is split");
     }
 
     #[test]
     fn empty_frontier_costs_one_launch() {
         let d = dev();
-        assert_eq!(ep_cycles(&d, 0, 1024), d.launch_overhead);
-        assert_eq!(wd_cycles(&d, 0, 0, 1024), d.launch_overhead);
-        assert_eq!(bs_cycles(&d, &[]), d.launch_overhead);
+        let mut s = CostScratch::default();
+        assert_eq!(ep_cycles(&d, 0, 1024, &mut s), d.launch_overhead);
+        assert_eq!(wd_cycles(&d, 0, 0, 1024, &mut s), d.launch_overhead);
+        assert_eq!(bs_cycles(&d, &[], &mut s), d.launch_overhead);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // predict() with a fresh scratch and predict_with() on a warm one
+        // must agree exactly — pooling is invisible to the numbers.
+        let d = dev();
+        let params = StrategyParams::default();
+        let mut degs = vec![3u32; 4096];
+        degs.push(9_000);
+        let snap = FrontierInspector::inspect(&degs, &d);
+        let input = PolicyInput {
+            snapshot: &snap,
+            degrees: &degs,
+            current: StrategyKind::BS,
+            feasibility: Feasibility {
+                ep: true,
+                wd: true,
+                ns: true,
+                coo_resident: false,
+                split_built: false,
+            },
+            dev: &d,
+            params: &params,
+            mdt: 8,
+            graph_edges: 1 << 16,
+            graph_nodes: 1 << 12,
+        };
+        let mut warm = CostScratch::default();
+        for kind in StrategyKind::ALL {
+            let _ = predict_with(kind, &input, &mut warm); // warm the pool
+        }
+        for kind in StrategyKind::ALL {
+            assert_eq!(
+                predict(kind, &input),
+                predict_with(kind, &input, &mut warm),
+                "{kind}: warm scratch changed the prediction"
+            );
+        }
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //! switch would be slower on a real device, and the policy only chooses NS
 //! when the headroom allows it).
 
-use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::coordinator::exec::flatten_frontier_into;
+use crate::coordinator::{Assignment, ExecCtx, KernelWork, PushTarget};
 use crate::error::Result;
 use crate::graph::{Csr, Graph, NodeId};
 use crate::metrics::DecisionRecord;
@@ -26,7 +27,7 @@ use crate::sim::AccessPattern;
 use crate::strategies::common::{charge_graph_and_dist, init_dist, NodeFrontier};
 use crate::strategies::mdt::{auto_mdt, MdtDecision};
 use crate::strategies::node_split::{split_graph, SplitGraph};
-use crate::strategies::workload_decomp::block_offsets;
+use crate::strategies::workload_decomp::block_offsets_into;
 use crate::strategies::{Strategy, StrategyKind, StrategyParams};
 use crate::worklist::hierarchy::SubList;
 use crate::worklist::{EdgeWorklist, NodeWorklist};
@@ -91,6 +92,17 @@ pub struct Adaptive {
     split: Option<SplitState>,
     mdt: Option<MdtDecision>,
     coo_charged: bool,
+    /// Persistent canonical-view scratch (original node space), rebuilt in
+    /// place every iteration so the inspection path allocates nothing once
+    /// warm.
+    view: NodeWorklist,
+    /// Dedup bitmap scratch for the edge→node / split→node view rebuilds.
+    view_seen: Vec<u64>,
+    /// EP's double-buffer spare (the raw output worklist is built here and
+    /// swapped in, retaining capacity across iterations).
+    ep_spare: EdgeWorklist,
+    /// HP's persistent sub-list, rebuilt in place each outer iteration.
+    sub: SubList,
     /// HP-mode sub-iteration kernels launched.
     pub hp_sub_iterations: u64,
     /// HP-mode switches to the WD fallback.
@@ -111,6 +123,10 @@ impl Adaptive {
             split: None,
             mdt: None,
             coo_charged: false,
+            view: NodeWorklist::new(),
+            view_seen: Vec::new(),
+            ep_spare: EdgeWorklist::new(),
+            sub: SubList::default(),
             hp_sub_iterations: 0,
             hp_wd_switches: 0,
         }
@@ -121,14 +137,24 @@ impl Adaptive {
         self.mode
     }
 
-    /// Canonical original-space node view of the pending worklist.
-    fn view_nodes(&self, g: &Csr) -> NodeWorklist {
+    /// Rebuild the canonical original-space node view of the pending
+    /// worklist into the persistent `view` scratch (capacity retained, so
+    /// a warm iteration's inspection path performs no heap allocation).
+    fn refresh_view(&mut self, g: &Csr) {
         match self.repr.as_ref().expect("init first") {
-            Repr::Nodes(f) => f.worklist().clone(),
-            Repr::Edges { wl, .. } => migrate::edges_to_nodes(g, wl),
+            Repr::Nodes(f) => self.view.copy_from(f.worklist()),
+            Repr::Edges { wl, .. } => {
+                migrate::edges_to_nodes_into(g, wl, &mut self.view_seen, &mut self.view)
+            }
             Repr::Split(f) => {
                 let st = self.split.as_ref().expect("split state exists in NS mode");
-                migrate::split_to_nodes(g, &st.parent_of, f.worklist())
+                migrate::split_to_nodes_into(
+                    g,
+                    &st.parent_of,
+                    f.worklist(),
+                    &mut self.view_seen,
+                    &mut self.view,
+                );
             }
         }
     }
@@ -277,18 +303,22 @@ impl Adaptive {
     /// One BS-style iteration (mirrors [`crate::strategies::NodeBaseline`]).
     fn step_bs(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         let g = self.graph.clone();
-        let frontier = match self.repr.as_mut() {
-            Some(Repr::Nodes(f)) => f,
-            _ => unreachable!("BS mode runs on the node representation"),
-        };
-        let nodes = frontier.worklist().nodes().to_vec();
-        let (src, eid) = flatten_frontier(&g, &nodes);
-        let mut offsets = Vec::with_capacity(nodes.len() + 1);
-        offsets.push(0u32);
-        let mut acc = 0u32;
-        for &n in &nodes {
-            acc += g.degree(n);
-            offsets.push(acc);
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let mut offsets = ctx.scratch.take_u32();
+        {
+            let frontier = match self.repr.as_ref() {
+                Some(Repr::Nodes(f)) => f,
+                _ => unreachable!("BS mode runs on the node representation"),
+            };
+            let wl = frontier.worklist();
+            flatten_frontier_into(&g, wl.nodes(), &mut src, &mut eid);
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for &d in wl.degrees() {
+                acc += d;
+                offsets.push(acc);
+            }
         }
         let work = KernelWork {
             name: "ad_bs_relax",
@@ -300,7 +330,14 @@ impl Adaptive {
             push: PushTarget::Node,
         };
         let result = ctx.launch(&g, &work, None)?;
-        frontier.advance(ctx, &g, &result.updated)
+        let frontier = match self.repr.as_mut() {
+            Some(Repr::Nodes(f)) => f,
+            _ => unreachable!("BS mode runs on the node representation"),
+        };
+        frontier.advance(ctx, &g, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
+        Ok(())
     }
 
     /// One WD-style iteration (mirrors
@@ -311,13 +348,17 @@ impl Adaptive {
             .params
             .max_threads
             .unwrap_or(ctx.dev.max_resident_threads);
-        let frontier = match self.repr.as_mut() {
-            Some(Repr::Nodes(f)) => f,
-            _ => unreachable!("WD mode runs on the node representation"),
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let wl_len = {
+            let frontier = match self.repr.as_ref() {
+                Some(Repr::Nodes(f)) => f,
+                _ => unreachable!("WD mode runs on the node representation"),
+            };
+            let wl = frontier.worklist();
+            flatten_frontier_into(&g, wl.nodes(), &mut src, &mut eid);
+            wl.len() as u64
         };
-        let nodes = frontier.worklist().nodes().to_vec();
-        let wl_len = nodes.len() as u64;
-        let (src, eid) = flatten_frontier(&g, &nodes);
         let total = src.len();
 
         // Scan of the worklist's degree array (transient prefix sums).
@@ -331,11 +372,13 @@ impl Adaptive {
         let offsets_bytes = 8 * max_threads as u64;
         ctx.mem.charge(AD_WD_OFFSETS, offsets_bytes)?;
 
+        let mut offsets = ctx.scratch.take_u32();
+        block_offsets_into(total, max_threads, &mut offsets);
         let work = KernelWork {
             name: "ad_wd_relax",
             src,
             eid,
-            assignment: Assignment::Blocked(block_offsets(total, max_threads)),
+            assignment: Assignment::Blocked(offsets),
             access: AccessPattern::Scattered,
             extra_cycles_per_edge: 4,
             push: PushTarget::Node,
@@ -343,7 +386,14 @@ impl Adaptive {
         let result = ctx.launch(&g, &work, None)?;
         ctx.mem.release(AD_WD_OFFSETS, offsets_bytes);
         ctx.mem.release(AD_WD_PREFIX, 4 * wl_len);
-        frontier.advance(ctx, &g, &result.updated)
+        let frontier = match self.repr.as_mut() {
+            Some(Repr::Nodes(f)) => f,
+            _ => unreachable!("WD mode runs on the node representation"),
+        };
+        frontier.advance(ctx, &g, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
+        Ok(())
     }
 
     /// One EP-style iteration (mirrors [`crate::strategies::EdgeParallel`]).
@@ -353,16 +403,23 @@ impl Adaptive {
             .params
             .max_threads
             .unwrap_or(ctx.dev.max_resident_threads);
-        let (wl, charged) = match self.repr.as_mut() {
-            Some(Repr::Edges { wl, charged }) => (wl, charged),
-            _ => unreachable!("EP mode runs on the edge representation"),
+        // Stage the input worklist into pooled kernel buffers.
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let total = {
+            let wl = match self.repr.as_ref() {
+                Some(Repr::Edges { wl, .. }) => wl,
+                _ => unreachable!("EP mode runs on the edge representation"),
+            };
+            src.extend_from_slice(wl.srcs());
+            eid.extend_from_slice(wl.edges());
+            wl.len()
         };
-        let total = wl.len();
         let threads = (max_threads as usize).min(total).max(1) as u32;
         let work = KernelWork {
             name: "ad_ep_relax",
-            src: wl.srcs().to_vec(),
-            eid: wl.edges().to_vec(),
+            src,
+            eid,
             assignment: Assignment::Strided {
                 num_threads: threads,
             },
@@ -371,16 +428,24 @@ impl Adaptive {
             push: PushTarget::Edges,
         };
         let result = ctx.launch(&g, &work, None)?;
+        ctx.recycle_work(work);
 
-        let mut next = EdgeWorklist::new();
+        // Build the next edge worklist into the spare half of the double
+        // buffer (capacity retained across iterations).
+        self.ep_spare.clear();
         for &n in &result.updated {
-            next.push_node_edges(&g, n);
+            self.ep_spare.push_node_edges(&g, n);
         }
-        let raw_entries = next.len() as u64;
+        ctx.recycle(result);
+        let raw_entries = self.ep_spare.len() as u64;
         ctx.metrics.peak_worklist_entries =
             ctx.metrics.peak_worklist_entries.max(raw_entries);
-        let raw_bytes = next.memory_bytes();
+        let raw_bytes = self.ep_spare.memory_bytes();
         let headroom = ctx.mem.budget().saturating_sub(ctx.mem.current());
+        let charged = match self.repr.as_ref() {
+            Some(Repr::Edges { charged, .. }) => *charged,
+            _ => unreachable!("EP mode runs on the edge representation"),
+        };
         if raw_bytes > headroom {
             // Memory pressure: condense in place (streaming, chunk-wise)
             // before materializing the raw buffer — the feasibility check
@@ -388,43 +453,52 @@ impl Adaptive {
             // (≤ E entries) fits, so the duplicate-laden raw form must
             // never be charged whole. Static EP would OOM here; the
             // adaptive engine's contract is to stay inside the budget.
-            let removed = next.condense();
+            let removed = self.ep_spare.condense();
             ctx.metrics.condensed_away += removed as u64;
             ctx.charge_aux_kernel(raw_entries, 2);
-            ctx.mem.charge(AD_EP_WL, next.memory_bytes())?;
-            ctx.mem.release(AD_EP_WL, *charged);
+            ctx.mem.charge(AD_EP_WL, self.ep_spare.memory_bytes())?;
+            ctx.mem.release(AD_EP_WL, charged);
         } else {
             // Plenty of room: mirror static EP exactly (double buffer the
             // raw output, condense only on the size-explosion rule).
             ctx.mem.charge(AD_EP_WL, raw_bytes)?;
-            if next.len() > g.num_edges() {
-                let removed = next.condense();
+            if self.ep_spare.len() > g.num_edges() {
+                let removed = self.ep_spare.condense();
                 ctx.metrics.condensed_away += removed as u64;
                 ctx.charge_aux_kernel(raw_entries, 2);
             }
-            let keep = next.memory_bytes();
-            ctx.mem.release(AD_EP_WL, *charged + raw_bytes - keep);
+            let keep = self.ep_spare.memory_bytes();
+            ctx.mem.release(AD_EP_WL, charged + raw_bytes - keep);
         }
-        *charged = next.memory_bytes();
-        *wl = next;
+        match self.repr.as_mut() {
+            Some(Repr::Edges { wl, charged }) => {
+                *charged = self.ep_spare.memory_bytes();
+                std::mem::swap(wl, &mut self.ep_spare);
+            }
+            _ => unreachable!("EP mode runs on the edge representation"),
+        }
         Ok(())
     }
 
     /// One NS-style iteration (mirrors [`crate::strategies::NodeSplitting`]).
     fn step_ns(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let mut offsets = ctx.scratch.take_u32();
         let (st, frontier) = match (&self.split, &mut self.repr) {
             (Some(st), Some(Repr::Split(f))) => (st, f),
             _ => unreachable!("NS mode runs on the split representation"),
         };
         let g = &st.split.graph;
-        let nodes = frontier.worklist().nodes().to_vec();
-        let (src, eid) = flatten_frontier(g, &nodes);
-        let mut offsets = Vec::with_capacity(nodes.len() + 1);
-        offsets.push(0u32);
-        let mut acc = 0u32;
-        for &nd in &nodes {
-            acc += g.degree(nd);
-            offsets.push(acc);
+        {
+            let wl = frontier.worklist();
+            flatten_frontier_into(g, wl.nodes(), &mut src, &mut eid);
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for &d in wl.degrees() {
+                acc += d;
+                offsets.push(acc);
+            }
         }
         let work = KernelWork {
             name: "ad_ns_relax",
@@ -436,7 +510,10 @@ impl Adaptive {
             push: PushTarget::Node,
         };
         let result = ctx.launch(g, &work, Some(&st.split.map))?;
-        frontier.advance(ctx, g, &result.updated)
+        frontier.advance(ctx, g, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
+        Ok(())
     }
 
     /// One HP-style iteration (mirrors [`crate::strategies::Hierarchical`]).
@@ -444,54 +521,74 @@ impl Adaptive {
         let g = self.graph.clone();
         let mdt = self.mdt.expect("init first").mdt.max(1);
         let block = ctx.dev.block_size as usize;
-        let frontier_nodes = match self.repr.as_ref() {
-            Some(Repr::Nodes(f)) => f.worklist().nodes().to_vec(),
+        let frontier_len = match self.repr.as_ref() {
+            Some(Repr::Nodes(f)) => f.len(),
             _ => unreachable!("HP mode runs on the node representation"),
         };
-        let mut all_updates: Vec<NodeId> = Vec::new();
+        let mut all_updates: Vec<NodeId> = ctx.scratch.take_u32();
 
-        if frontier_nodes.len() < block {
+        if frontier_len < block {
             // Small super list → straight to workload decomposition.
-            let (src, eid) = flatten_frontier(&g, &frontier_nodes);
-            if !src.is_empty() {
+            let mut src = ctx.scratch.take_u32();
+            let mut eid = ctx.scratch.take_u32();
+            {
+                let f = match self.repr.as_ref() {
+                    Some(Repr::Nodes(f)) => f,
+                    _ => unreachable!("HP mode runs on the node representation"),
+                };
+                flatten_frontier_into(&g, f.worklist().nodes(), &mut src, &mut eid);
+            }
+            if src.is_empty() {
+                ctx.scratch.put_u32(src);
+                ctx.scratch.put_u32(eid);
+            } else {
                 self.hp_wd_switches += 1;
-                let ups =
-                    hp_wd_fallback(ctx, &g, src, eid, frontier_nodes.len() as u64)?;
-                all_updates.extend(ups);
+                let ups = hp_wd_fallback(ctx, &g, src, eid, frontier_len as u64)?;
+                all_updates.extend_from_slice(&ups);
+                ctx.scratch.put_u32(ups);
             }
         } else {
-            let degrees: Vec<u32> = frontier_nodes.iter().map(|&n| g.degree(n)).collect();
-            let mut sub = SubList::from_super(&frontier_nodes, &degrees);
-            let sub_bytes = sub.memory_bytes();
+            // Sub-iterations over the shrinking sub-list (persistent
+            // cursor storage, rebuilt in place).
+            {
+                let f = match self.repr.as_ref() {
+                    Some(Repr::Nodes(f)) => f,
+                    _ => unreachable!("HP mode runs on the node representation"),
+                };
+                let wl = f.worklist();
+                self.sub.reset(wl.nodes(), wl.degrees());
+            }
+            let sub_bytes = self.sub.memory_bytes();
             ctx.mem.charge(AD_HP_SUBLIST, sub_bytes)?;
 
-            while !sub.is_empty() {
-                if sub.len() < block {
+            while !self.sub.is_empty() {
+                if self.sub.len() < block {
                     // Residual tail → WD fallback over the remaining edges.
-                    let mut src = Vec::new();
-                    let mut eid = Vec::new();
-                    for c in sub.cursors() {
+                    let mut src = ctx.scratch.take_u32();
+                    let mut eid = ctx.scratch.take_u32();
+                    for c in self.sub.cursors() {
                         let first = g.first_edge(c.node) + c.processed;
                         for e in first..first + c.remaining() {
                             src.push(c.node);
                             eid.push(e);
                         }
                     }
-                    let wl_len = sub.len() as u64;
+                    let wl_len = self.sub.len() as u64;
                     self.hp_wd_switches += 1;
                     let ups = hp_wd_fallback(ctx, &g, src, eid, wl_len)?;
-                    all_updates.extend(ups);
+                    all_updates.extend_from_slice(&ups);
+                    ctx.scratch.put_u32(ups);
                     break;
                 }
 
                 // One sub-iteration: lane per node, ≤ MDT edges each.
                 self.hp_sub_iterations += 1;
-                let mut src = Vec::new();
-                let mut eid = Vec::new();
-                let mut offsets = Vec::with_capacity(sub.len() + 1);
+                let mut src = ctx.scratch.take_u32();
+                let mut eid = ctx.scratch.take_u32();
+                let mut offsets = ctx.scratch.take_u32();
                 offsets.push(0u32);
                 let mut acc = 0u32;
-                for c in sub.cursors() {
+                for c in self.sub.cursors() {
                     let take = c.remaining().min(mdt);
                     let first = g.first_edge(c.node) + c.processed;
                     for e in first..first + take {
@@ -511,9 +608,11 @@ impl Adaptive {
                     push: PushTarget::Node,
                 };
                 let result = ctx.launch(&g, &work, None)?;
-                all_updates.extend(result.updated);
-                sub.advance(mdt);
-                ctx.charge_aux_kernel(sub.len() as u64 + 1, 1);
+                all_updates.extend_from_slice(&result.updated);
+                ctx.recycle(result);
+                ctx.recycle_work(work);
+                self.sub.advance(mdt);
+                ctx.charge_aux_kernel(self.sub.len() as u64 + 1, 1);
             }
             ctx.mem.release(AD_HP_SUBLIST, sub_bytes);
         }
@@ -522,12 +621,17 @@ impl Adaptive {
             Some(Repr::Nodes(f)) => f,
             _ => unreachable!("HP mode runs on the node representation"),
         };
-        frontier.advance(ctx, &g, &all_updates)
+        frontier.advance(ctx, &g, &all_updates)?;
+        ctx.scratch.put_u32(all_updates);
+        Ok(())
     }
 }
 
 /// HP's WD-style fallback kernel over an explicit edge batch (shared with
-/// the batched serving engine, whose HP mode mirrors this one).
+/// the batched serving engine, whose HP mode mirrors this one). `src`/`eid`
+/// are consumed and returned to the scratch pool; the returned update list
+/// is a pooled buffer too — callers give it back with
+/// `ctx.scratch.put_u32` once folded into their update stream.
 pub(crate) fn hp_wd_fallback(
     ctx: &mut ExecCtx,
     g: &Csr,
@@ -541,16 +645,19 @@ pub(crate) fn hp_wd_fallback(
     let threads = ctx.dev.max_resident_threads;
     let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
     ctx.charge_aux_kernel((threads as u64).min(total as u64), 4 * log_wl);
+    let mut offsets = ctx.scratch.take_u32();
+    block_offsets_into(total, threads, &mut offsets);
     let work = KernelWork {
         name: "ad_hp_wd_relax",
         src,
         eid,
-        assignment: Assignment::Blocked(block_offsets(total, threads)),
+        assignment: Assignment::Blocked(offsets),
         access: AccessPattern::Scattered,
         extra_cycles_per_edge: 4,
         push: PushTarget::Node,
     };
     let result = ctx.launch(g, &work, None)?;
+    ctx.recycle_work(work);
     ctx.mem.release(AD_HP_PREFIX, 4 * wl_len);
     Ok(result.updated)
 }
@@ -597,9 +704,14 @@ impl Strategy for Adaptive {
 
     fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         let g = self.graph.clone();
-        // 1. Canonical view + online inspection (host-side, cheap).
-        let view = self.view_nodes(&g);
-        let snap = FrontierInspector::inspect(view.degrees(), ctx.dev);
+        // 1. Canonical view + online inspection (host-side, cheap). The
+        // view is rebuilt into a persistent scratch worklist and borrowed
+        // out of `self` for the iteration (take/restore keeps the capacity
+        // across iterations without cloning).
+        self.refresh_view(&g);
+        let view = std::mem::take(&mut self.view);
+        let snap =
+            FrontierInspector::inspect_with_edges(view.degrees(), view.total_edges(), ctx.dev);
         ctx.metrics.inspector_passes += 1;
         ctx.charge_overhead(INSPECT_BASE_CYCLES + snap.nodes / 32);
 
@@ -632,6 +744,7 @@ impl Strategy for Adaptive {
         if migrated {
             self.migrate_to(ctx, choice, &view)?;
         }
+        self.view = view; // restore the scratch capacity for next iteration
 
         // 4. Execute one iteration in the chosen style.
         match self.mode {

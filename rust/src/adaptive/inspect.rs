@@ -45,8 +45,26 @@ pub struct FrontierInspector;
 impl FrontierInspector {
     /// Inspect a frontier given the active nodes' out-degrees.
     pub fn inspect(degrees: &[u32], dev: &DeviceSpec) -> FrontierSnapshot {
-        let st = DegreeStats::of_degrees(degrees);
         let edges: u64 = degrees.iter().map(|&d| d as u64).sum();
+        Self::inspect_with_edges(degrees, edges, dev)
+    }
+
+    /// [`FrontierInspector::inspect`] with the edge total already known —
+    /// worklists cache a running Σ degrees
+    /// ([`crate::worklist::NodeWorklist::total_edges`] is O(1)), so the
+    /// per-iteration callers (the adaptive engine, the batched serving
+    /// engine) skip this function's second pass over the degree array.
+    pub fn inspect_with_edges(
+        degrees: &[u32],
+        edges: u64,
+        dev: &DeviceSpec,
+    ) -> FrontierSnapshot {
+        debug_assert_eq!(
+            edges,
+            degrees.iter().map(|&d| d as u64).sum::<u64>(),
+            "cached edge sum diverged from the degree array"
+        );
+        let st = DegreeStats::of_degrees(degrees);
         let skew = st.imbalance();
         FrontierSnapshot {
             nodes: degrees.len() as u64,

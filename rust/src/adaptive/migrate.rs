@@ -42,23 +42,36 @@ pub fn space_of(kind: StrategyKind) -> Space {
     }
 }
 
-/// Node frontier → exploded edge frontier: all outgoing edges of every
-/// active node (`outputWl.push(n.edges)` in the paper's pseudocode).
-/// Zero-degree nodes contribute nothing.
-pub fn nodes_to_edges(g: &Csr, wl: &NodeWorklist) -> EdgeWorklist {
-    let mut out = EdgeWorklist::new();
+/// Node frontier → exploded edge frontier, into caller-provided scratch:
+/// all outgoing edges of every active node (`outputWl.push(n.edges)` in
+/// the paper's pseudocode). Zero-degree nodes contribute nothing.
+pub fn nodes_to_edges_into(g: &Csr, wl: &NodeWorklist, out: &mut EdgeWorklist) {
+    out.clear();
     for &n in wl.nodes() {
         out.push_node_edges(g, n);
     }
+}
+
+/// Allocating convenience wrapper around [`nodes_to_edges_into`].
+pub fn nodes_to_edges(g: &Csr, wl: &NodeWorklist) -> EdgeWorklist {
+    let mut out = EdgeWorklist::new();
+    nodes_to_edges_into(g, wl, &mut out);
     out
 }
 
-/// Exploded edge frontier → node frontier: the distinct source endpoints in
+/// Exploded edge frontier → node frontier, into caller-provided scratch
+/// (including the dedup bitmap): the distinct source endpoints in
 /// first-seen order. Exact inverse of [`nodes_to_edges`] because EP's
 /// worklists always carry whole adjacencies per source.
-pub fn edges_to_nodes(g: &Csr, wl: &EdgeWorklist) -> NodeWorklist {
-    let mut seen = vec![0u64; g.num_nodes().div_ceil(64)];
-    let mut out = NodeWorklist::new();
+pub fn edges_to_nodes_into(
+    g: &Csr,
+    wl: &EdgeWorklist,
+    seen: &mut Vec<u64>,
+    out: &mut NodeWorklist,
+) {
+    seen.clear();
+    seen.resize(g.num_nodes().div_ceil(64), 0);
+    out.clear();
     for &s in wl.srcs() {
         let (w, b) = (s as usize / 64, s as usize % 64);
         if seen[w] & (1 << b) == 0 {
@@ -66,21 +79,35 @@ pub fn edges_to_nodes(g: &Csr, wl: &EdgeWorklist) -> NodeWorklist {
             out.push(s, g.degree(s));
         }
     }
+}
+
+/// Allocating convenience wrapper around [`edges_to_nodes_into`].
+pub fn edges_to_nodes(g: &Csr, wl: &EdgeWorklist) -> NodeWorklist {
+    let mut seen = Vec::new();
+    let mut out = NodeWorklist::new();
+    edges_to_nodes_into(g, wl, &mut seen, &mut out);
     out
 }
 
-/// Original node frontier → split-graph frontier: each node plus all of its
-/// child clones (the clones own slices of the parent's adjacency, so the
-/// parent's pending work is exactly the union).
-pub fn nodes_to_split(split: &SplitGraph, wl: &NodeWorklist) -> NodeWorklist {
+/// Original node frontier → split-graph frontier, into caller-provided
+/// scratch: each node plus all of its child clones (the clones own slices
+/// of the parent's adjacency, so the parent's pending work is exactly the
+/// union).
+pub fn nodes_to_split_into(split: &SplitGraph, wl: &NodeWorklist, out: &mut NodeWorklist) {
     let g = &split.graph;
-    let mut out = NodeWorklist::new();
+    out.clear();
     for &n in wl.nodes() {
         out.push(n, g.degree(n));
         for c in split.map.children(n) {
             out.push(c, g.degree(c));
         }
     }
+}
+
+/// Allocating convenience wrapper around [`nodes_to_split_into`].
+pub fn nodes_to_split(split: &SplitGraph, wl: &NodeWorklist) -> NodeWorklist {
+    let mut out = NodeWorklist::new();
+    nodes_to_split_into(split, wl, &mut out);
     out
 }
 
@@ -97,15 +124,19 @@ pub fn parent_of_table(split: &SplitGraph, original_nodes: usize) -> Vec<NodeId>
     parent
 }
 
-/// Split-graph frontier → original node frontier: map every id to its
-/// parent and deduplicate (a parent and its clones collapse to one entry).
-pub fn split_to_nodes(
+/// Split-graph frontier → original node frontier, into caller-provided
+/// scratch: map every id to its parent and deduplicate (a parent and its
+/// clones collapse to one entry).
+pub fn split_to_nodes_into(
     original: &Csr,
     parent_of: &[NodeId],
     wl: &NodeWorklist,
-) -> NodeWorklist {
-    let mut seen = vec![0u64; original.num_nodes().div_ceil(64)];
-    let mut out = NodeWorklist::new();
+    seen: &mut Vec<u64>,
+    out: &mut NodeWorklist,
+) {
+    seen.clear();
+    seen.resize(original.num_nodes().div_ceil(64), 0);
+    out.clear();
     for &x in wl.nodes() {
         let p = parent_of[x as usize];
         let (w, b) = (p as usize / 64, p as usize % 64);
@@ -114,6 +145,17 @@ pub fn split_to_nodes(
             out.push(p, original.degree(p));
         }
     }
+}
+
+/// Allocating convenience wrapper around [`split_to_nodes_into`].
+pub fn split_to_nodes(
+    original: &Csr,
+    parent_of: &[NodeId],
+    wl: &NodeWorklist,
+) -> NodeWorklist {
+    let mut seen = Vec::new();
+    let mut out = NodeWorklist::new();
+    split_to_nodes_into(original, parent_of, wl, &mut seen, &mut out);
     out
 }
 

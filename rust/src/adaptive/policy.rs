@@ -164,9 +164,13 @@ impl Policy for HeuristicPolicy {
     }
 }
 
-/// KernelSim-backed cost model with hysteresis.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct CostModelPolicy;
+/// KernelSim-backed cost model with hysteresis. Owns a
+/// [`cost::CostScratch`] so its per-iteration predictions allocate nothing
+/// once warm.
+#[derive(Debug, Default, Clone)]
+pub struct CostModelPolicy {
+    scratch: cost::CostScratch,
+}
 
 impl Policy for CostModelPolicy {
     fn name(&self) -> &'static str {
@@ -180,7 +184,7 @@ impl Policy for CostModelPolicy {
             if !input.feasibility.allows(kind) {
                 continue;
             }
-            let mut cycles = cost::predict(kind, input);
+            let mut cycles = cost::predict_with(kind, input, &mut self.scratch);
             if kind != input.current {
                 cycles = cycles.saturating_add(cost::migration_cycles(input, kind));
             } else {
@@ -343,7 +347,7 @@ mod tests {
             coo_resident: false,
             split_built: false,
         };
-        let mut p = CostModelPolicy;
+        let mut p = CostModelPolicy::default();
         let d = p.decide(&input(&snap, &degs, &dev, &params, feas));
         assert!(
             matches!(d.choice, StrategyKind::BS | StrategyKind::HP),
@@ -361,7 +365,7 @@ mod tests {
         let mut degs = vec![1u32; 2048];
         degs.push(100_000);
         let snap = FrontierInspector::inspect(&degs, &dev);
-        let mut p = CostModelPolicy;
+        let mut p = CostModelPolicy::default();
         let d = p.decide(&input(&snap, &degs, &dev, &params, all_feasible()));
         assert_ne!(d.choice, StrategyKind::BS);
         assert!(d.predicted_cycles > 0);

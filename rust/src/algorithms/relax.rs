@@ -23,6 +23,17 @@ pub trait Relaxer {
     /// stay `INF`.
     fn candidates(&mut self, dist_src: &[u32], w: &[u32]) -> Result<Vec<u32>>;
 
+    /// [`Relaxer::candidates`] writing into a caller-provided buffer — the
+    /// scratch-arena path of [`crate::coordinator::ExecCtx::launch`]. The
+    /// default delegates (and so still allocates); backends on the
+    /// per-iteration hot path should override it allocation-free.
+    fn candidates_into(&mut self, dist_src: &[u32], w: &[u32], out: &mut Vec<u32>) -> Result<()> {
+        let cand = self.candidates(dist_src, w)?;
+        out.clear();
+        out.extend_from_slice(&cand);
+        Ok(())
+    }
+
     /// Backend name for reporting.
     fn backend(&self) -> &'static str;
 }
@@ -33,12 +44,21 @@ pub struct NativeRelaxer;
 
 impl Relaxer for NativeRelaxer {
     fn candidates(&mut self, dist_src: &[u32], w: &[u32]) -> Result<Vec<u32>> {
+        let mut out = Vec::new();
+        self.candidates_into(dist_src, w, &mut out)?;
+        Ok(out)
+    }
+
+    fn candidates_into(&mut self, dist_src: &[u32], w: &[u32], out: &mut Vec<u32>) -> Result<()> {
         debug_assert_eq!(dist_src.len(), w.len());
-        Ok(dist_src
-            .iter()
-            .zip(w)
-            .map(|(&d, &w)| if d == INF { INF } else { d.saturating_add(w) })
-            .collect())
+        out.clear();
+        out.extend(
+            dist_src
+                .iter()
+                .zip(w)
+                .map(|(&d, &w)| if d == INF { INF } else { d.saturating_add(w) }),
+        );
+        Ok(())
     }
 
     fn backend(&self) -> &'static str {
@@ -63,5 +83,14 @@ mod tests {
     fn empty_batch() {
         let mut r = NativeRelaxer;
         assert!(r.candidates(&[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn into_variant_reuses_and_matches() {
+        let mut r = NativeRelaxer;
+        let mut out = vec![99u32; 8]; // stale content must be overwritten
+        r.candidates_into(&[0, 5, INF], &[3, 7, 10], &mut out).unwrap();
+        assert_eq!(out, vec![3, 12, INF]);
+        assert_eq!(out, r.candidates(&[0, 5, INF], &[3, 7, 10]).unwrap());
     }
 }

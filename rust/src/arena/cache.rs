@@ -1,0 +1,291 @@
+//! Graph-keyed artifact cache: derived structures that depend only on the
+//! graph (and a few parameters), built once and reused across iterations,
+//! across the queries of a batch, and across serving batches.
+//!
+//! Three artifacts qualify today:
+//!
+//! * the MDT histogram decision ([`crate::strategies::mdt::auto_mdt`] — an
+//!   `O(n)` host pass re-run per batch before this cache existed),
+//! * NS's split graph + parent table ([`SplitArtifact`] — an `O(E)` rebuild
+//!   and the single most expensive host-side transform in the engine),
+//! * EP's CSR→COO conversion flag (the conversion itself is simulated, but
+//!   a cache hit means the device-side streaming pass is not re-charged).
+//!
+//! The cache is keyed by graph *identity*: serving holds graphs in
+//! `Arc<Csr>` and never mutates them, so `Arc::ptr_eq` is exactly "same
+//! graph". The key is held as a [`Weak`] — the weak reference keeps the
+//! `ArcInner` allocation alive, so a dropped graph's address can never be
+//! recycled into a false match (no ABA), and a failed upgrade resets the
+//! cache. [`GraphCache`] is a cheap clonable handle (`Arc<Mutex<..>>`) so
+//! one cache can be threaded through every shard of a batch and across
+//! repeated [`crate::serving::serve_with_cache`] calls.
+//!
+//! Memory accounting stays honest on two axes. A host-side artifact hit
+//! skips the *rebuild* (the `build` closure). The simulated *build kernel*
+//! charge is tracked per **scope** ([`GraphCache::scoped`]) — one scope
+//! per simulated device — because an artifact built on shard 0's device
+//! is *not* resident on shard 1's: every scope pays the build kernel once,
+//! then retains the artifact across its batches. The artifact's resident
+//! bytes are still charged to every context that uses it.
+
+use crate::graph::{Csr, NodeId};
+use crate::strategies::mdt::MdtDecision;
+use crate::strategies::node_split::SplitGraph;
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, Weak};
+
+/// NS's shared split-graph artifact: the rebuilt CSR plus the
+/// clone-id → parent-id table every result fold-back consults.
+#[derive(Debug)]
+pub struct SplitArtifact {
+    /// The split graph (parents keep their ids, clones appended).
+    pub split: SplitGraph,
+    /// `parent_of[x]` for every split-graph id (identity for originals).
+    pub parent_of: Vec<NodeId>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    /// Identity of the graph the entries below belong to. The `Weak` pins
+    /// the allocation, so address reuse cannot alias a dead key.
+    graph_key: Option<Weak<Csr>>,
+    /// `(histogram_bins, mdt_override)` → decision.
+    mdt: Option<(usize, Option<u32>, MdtDecision)>,
+    /// Scopes (simulated devices) that already paid the MDT histogram
+    /// kernel for the current `mdt` entry.
+    mdt_scopes: BTreeSet<usize>,
+    /// `(mdt used)` → artifact.
+    split: Option<(u32, Arc<SplitArtifact>)>,
+    /// Scopes that already paid the split rebuild kernel.
+    split_scopes: BTreeSet<usize>,
+    /// Scopes whose device already ran the CSR→COO streaming conversion.
+    coo_scopes: BTreeSet<usize>,
+}
+
+impl CacheInner {
+    fn rekey(&mut self, g: &Arc<Csr>) {
+        let same = self
+            .graph_key
+            .as_ref()
+            .and_then(Weak::upgrade)
+            .is_some_and(|live| Arc::ptr_eq(&live, g));
+        if !same {
+            *self = CacheInner {
+                graph_key: Some(Arc::downgrade(g)),
+                ..CacheInner::default()
+            };
+        }
+    }
+}
+
+/// Clonable handle to a graph-keyed artifact cache. Handles carry a
+/// *scope* (default 0) identifying the simulated device they charge build
+/// kernels to — see [`GraphCache::scoped`].
+#[derive(Debug, Clone, Default)]
+pub struct GraphCache {
+    inner: Arc<Mutex<CacheInner>>,
+    scope: usize,
+}
+
+impl GraphCache {
+    /// Fresh, empty cache (scope 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A handle sharing this cache's artifacts under a different charge
+    /// scope. Host-side builds are shared across scopes (the artifact is
+    /// computed once), but each scope — one per simulated device, e.g.
+    /// one per [`crate::serving::DeviceShard`] — pays the device build
+    /// kernel the first time it touches an artifact: shard 1's device
+    /// does not get shard 0's resident copy for free.
+    pub fn scoped(&self, scope: usize) -> GraphCache {
+        GraphCache {
+            inner: self.inner.clone(),
+            scope,
+        }
+    }
+
+    /// The MDT decision for `g` under `(bins, override)`, built with
+    /// `build` on a host miss. Charge accounting is deliberately separate
+    /// — [`GraphCache::mark_mdt_charged`] is called at the site that
+    /// actually charges the histogram kernel, so a batch that is
+    /// constructed but never initialized cannot exempt its device from a
+    /// charge that was never simulated.
+    pub fn mdt(
+        &self,
+        g: &Arc<Csr>,
+        bins: usize,
+        mdt_override: Option<u32>,
+        build: impl FnOnce() -> MdtDecision,
+    ) -> MdtDecision {
+        let mut inner = self.inner.lock().expect("graph cache poisoned");
+        inner.rekey(g);
+        let host_hit =
+            matches!(inner.mdt, Some((b, o, _)) if b == bins && o == mdt_override);
+        if !host_hit {
+            inner.mdt = Some((bins, mdt_override, build()));
+            inner.mdt_scopes.clear();
+        }
+        inner.mdt.expect("just ensured").2
+    }
+
+    /// Record that this handle's scope charged the MDT histogram kernel;
+    /// returns whether that device had already paid it (a hit ⇒ skip
+    /// re-charging). A rebuild of the MDT entry (new parameterization or
+    /// new graph) clears the marks.
+    pub fn mark_mdt_charged(&self, g: &Arc<Csr>) -> bool {
+        let mut inner = self.inner.lock().expect("graph cache poisoned");
+        inner.rekey(g);
+        !inner.mdt_scopes.insert(self.scope)
+    }
+
+    /// The split artifact for `g` at threshold `mdt`, built with `build`
+    /// on a host miss. Returns `(artifact, device_hit)` — as with
+    /// [`GraphCache::mdt`], `device_hit` is per scope.
+    pub fn split(
+        &self,
+        g: &Arc<Csr>,
+        mdt: u32,
+        build: impl FnOnce() -> SplitArtifact,
+    ) -> (Arc<SplitArtifact>, bool) {
+        let mut inner = self.inner.lock().expect("graph cache poisoned");
+        inner.rekey(g);
+        let host_hit = matches!(&inner.split, Some((m, _)) if *m == mdt);
+        if !host_hit {
+            inner.split = Some((mdt, Arc::new(build())));
+            inner.split_scopes.clear();
+        }
+        let art = inner.split.as_ref().expect("just ensured").1.clone();
+        let device_hit = !inner.split_scopes.insert(self.scope);
+        (art, device_hit)
+    }
+
+    /// Mark the CSR→COO conversion done for `g` on this handle's scope;
+    /// returns whether that scope's device had already run it (a hit ⇒
+    /// skip re-charging the streaming pass).
+    pub fn mark_coo(&self, g: &Arc<Csr>) -> bool {
+        let mut inner = self.inner.lock().expect("graph cache poisoned");
+        inner.rekey(g);
+        !inner.coo_scopes.insert(self.scope)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+    use crate::strategies::mdt::auto_mdt;
+    use crate::strategies::node_split::split_graph;
+
+    fn hub(n_extra: u32) -> Arc<Csr> {
+        let edges: Vec<Edge> = (1..=n_extra).map(|v| Edge::new(0, v, 1)).collect();
+        Arc::new(Csr::from_edges(n_extra as usize + 1, &edges).unwrap())
+    }
+
+    #[test]
+    fn mdt_caches_per_parameterization() {
+        let g = hub(16);
+        let cache = GraphCache::new();
+        let d1 = cache.mdt(&g, 10, None, || auto_mdt(&g, 10));
+        let d2 = cache.mdt(&g, 10, None, || panic!("must not rebuild"));
+        assert_eq!(d1, d2);
+        assert!(!cache.mark_mdt_charged(&g), "first charge is a miss");
+        assert!(cache.mark_mdt_charged(&g), "second charge is a hit");
+        // Different bins ⇒ rebuild, and the charge marks reset with it.
+        let _ = cache.mdt(&g, 5, None, || auto_mdt(&g, 5));
+        assert!(
+            !cache.mark_mdt_charged(&g),
+            "a rebuilt entry must be charged afresh"
+        );
+    }
+
+    #[test]
+    fn scopes_share_artifacts_but_charge_separately() {
+        let g = hub(16);
+        let shard0 = GraphCache::new();
+        let shard1 = shard0.scoped(1);
+        let d0 = shard0.mdt(&g, 10, None, || auto_mdt(&g, 10));
+        // Shard 1 reuses the host-side artifact (the build closure must
+        // not run)...
+        let d1 = shard1.mdt(&g, 10, None, || panic!("host artifact is shared"));
+        assert_eq!(d0, d1);
+        // ...but each simulated device pays its own histogram kernel once.
+        assert!(!shard0.mark_mdt_charged(&g));
+        assert!(!shard1.mark_mdt_charged(&g), "shard 1 pays its own kernel");
+        assert!(shard1.mark_mdt_charged(&g), "then retains it across batches");
+        // Same per-device story for the split artifact and the COO pass.
+        let build = || {
+            let d = auto_mdt(&g, 10);
+            let split = split_graph(&g, d);
+            let parent_of = crate::adaptive::migrate::parent_of_table(&split, 17);
+            SplitArtifact { split, parent_of }
+        };
+        let (a0, hit0) = shard0.split(&g, 4, build);
+        assert!(!hit0);
+        let (a1, hit1) = shard1.split(&g, 4, || panic!("host artifact is shared"));
+        assert!(!hit1, "shard 1's device pays the split rebuild kernel");
+        assert!(Arc::ptr_eq(&a0, &a1), "one shared artifact");
+        let (_, hit1b) = shard1.split(&g, 4, || panic!("host artifact is shared"));
+        assert!(hit1b);
+        assert!(!shard0.mark_coo(&g));
+        assert!(!shard1.mark_coo(&g));
+        assert!(shard1.mark_coo(&g));
+    }
+
+    #[test]
+    fn dropped_graph_can_never_alias_a_new_one() {
+        let cache = GraphCache::new();
+        let d_old = {
+            let g1 = hub(16);
+            let d = cache.mdt(&g1, 10, None, || auto_mdt(&g1, 10));
+            assert!(!cache.mark_mdt_charged(&g1));
+            d
+        }; // g1 dropped — the Weak key pins its address, upgrade now fails
+        let g2 = hub(20);
+        let d_new = cache.mdt(&g2, 10, None, || auto_mdt(&g2, 10));
+        assert!(
+            !cache.mark_mdt_charged(&g2),
+            "a new graph must never hit a dead key"
+        );
+        assert_ne!(d_old.max_degree, d_new.max_degree);
+    }
+
+    #[test]
+    fn split_caches_and_shares() {
+        let g = hub(16);
+        let cache = GraphCache::new();
+        let build = || {
+            let d = auto_mdt(&g, 10);
+            let split = split_graph(&g, d);
+            let parent_of = crate::adaptive::migrate::parent_of_table(&split, 17);
+            SplitArtifact { split, parent_of }
+        };
+        let (a1, hit1) = cache.split(&g, 4, build);
+        assert!(!hit1);
+        let (a2, hit2) = cache.split(&g, 4, || panic!("must not rebuild"));
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&a1, &a2), "one shared artifact");
+    }
+
+    #[test]
+    fn different_graph_resets() {
+        let g1 = hub(8);
+        let g2 = hub(8);
+        let cache = GraphCache::new();
+        assert!(!cache.mark_coo(&g1));
+        assert!(cache.mark_coo(&g1), "second mark is a hit");
+        assert!(!cache.mark_coo(&g2), "new graph resets the cache");
+        // ... and the reset dropped g1's entries too.
+        assert!(!cache.mark_coo(&g1));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let g = hub(4);
+        let cache = GraphCache::new();
+        let handle = cache.clone();
+        assert!(!cache.mark_coo(&g));
+        assert!(handle.mark_coo(&g), "clone sees the same entries");
+    }
+}

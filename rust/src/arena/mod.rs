@@ -1,0 +1,203 @@
+//! The scratch-arena / buffer-pool subsystem: zero-allocation steady state
+//! for the per-iteration hot path.
+//!
+//! The paper's central trade-off is per-iteration overhead vs. load balance
+//! — WD pays a prefix-sum per iteration, EP pays worklist condensing, NS
+//! pays a split-graph transform. Those are *simulated device* costs; this
+//! module eliminates their *host-side* analogue: before it existed, every
+//! outer iteration heap-allocated fresh flattened frontiers, block offsets,
+//! worklists and per-launch staging buffers. Osama et al. (arXiv:2301.04792)
+//! make the same observation for real GPU schedules — they are cheap only
+//! when their intermediate buffers are reused across launches.
+//!
+//! Two facilities:
+//!
+//! * [`ScratchArena`] — a pool of reusable `Vec<u32>` / `Vec<u64>` buffers
+//!   (node ids, edge ids, degrees, lane offsets, bitmap words) checked out
+//!   at the top of a hot path and returned when the launch retires.
+//!   Capacity is retained across round-trips, so steady-state iterations
+//!   perform **zero heap allocations** (`rust/tests/alloc_regression.rs`
+//!   proves it with a counting global allocator). [`PerfCounters`] records
+//!   the pool traffic and is folded into
+//!   [`crate::metrics::RunMetrics`] at finalization.
+//! * [`GraphCache`] ([`cache`]) — graph-keyed artifacts that depend only on
+//!   the graph (the MDT histogram decision, NS's split graph + parent map,
+//!   EP's COO conversion flag), shared across iterations, across the
+//!   queries of a batch, and across serving batches (the ROADMAP's
+//!   "cross-batch reuse" item).
+
+pub mod cache;
+
+pub use cache::{GraphCache, SplitArtifact};
+
+/// Pool-traffic counters: how many buffer checkouts hit the pool, how many
+/// had to create a fresh buffer, and how much heap the pool is holding.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PerfCounters {
+    /// `take_*` calls served by allocating a fresh (empty) buffer.
+    pub buffers_created: u64,
+    /// `take_*` calls served from the pool (the steady-state path).
+    pub buffers_reused: u64,
+    /// Buffers currently parked in the pool.
+    pub buffers_pooled: u64,
+    /// Capacity bytes currently parked in the pool.
+    pub bytes_pooled: u64,
+    /// High-water mark of [`PerfCounters::bytes_pooled`] — the arena's heap
+    /// footprint, the price paid for zero steady-state allocation.
+    pub peak_bytes_pooled: u64,
+}
+
+impl PerfCounters {
+    fn on_take(&mut self, cap_bytes: u64, from_pool: bool) {
+        if from_pool {
+            self.buffers_reused += 1;
+            self.buffers_pooled -= 1;
+            self.bytes_pooled = self.bytes_pooled.saturating_sub(cap_bytes);
+        } else {
+            self.buffers_created += 1;
+        }
+    }
+
+    fn on_put(&mut self, cap_bytes: u64) {
+        self.buffers_pooled += 1;
+        self.bytes_pooled += cap_bytes;
+        self.peak_bytes_pooled = self.peak_bytes_pooled.max(self.bytes_pooled);
+    }
+}
+
+/// A pool of reusable scratch buffers.
+///
+/// Buffers come back cleared but with their capacity intact; after the
+/// first few (warm-up) iterations of a traversal every checkout is a pool
+/// hit and no heap traffic occurs. Two element widths cover every hot-path
+/// buffer in the engine: `u32` (node ids, edge ids, degrees, offsets,
+/// cursors) and `u64` (dedup bitmap words, per-SM cycle accumulators).
+///
+/// Checkout is not RAII: a caller that errors out mid-launch simply drops
+/// its buffers instead of returning them. That is deliberate — every such
+/// error (`OutOfMemory`, a backend failure) aborts the whole run, so the
+/// pool never needs to survive it; the cost of the simpler contract is
+/// only that `buffers_created` counts a few extra warm-ups if a caller
+/// ever recovers.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    u32s: Vec<Vec<u32>>,
+    u64s: Vec<Vec<u64>>,
+    counters: PerfCounters,
+}
+
+impl ScratchArena {
+    /// Empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a cleared `u32` buffer (node/edge ids, degrees, offsets).
+    pub fn take_u32(&mut self) -> Vec<u32> {
+        match self.u32s.pop() {
+            Some(v) => {
+                self.counters.on_take(4 * v.capacity() as u64, true);
+                v
+            }
+            None => {
+                self.counters.on_take(0, false);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a `u32` buffer to the pool (cleared here, capacity kept).
+    pub fn put_u32(&mut self, mut v: Vec<u32>) {
+        v.clear();
+        self.counters.on_put(4 * v.capacity() as u64);
+        self.u32s.push(v);
+    }
+
+    /// Check out a cleared `u64` buffer (bitmap words, cycle accumulators).
+    pub fn take_u64(&mut self) -> Vec<u64> {
+        match self.u64s.pop() {
+            Some(v) => {
+                self.counters.on_take(8 * v.capacity() as u64, true);
+                v
+            }
+            None => {
+                self.counters.on_take(0, false);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a `u64` buffer to the pool (cleared here, capacity kept).
+    pub fn put_u64(&mut self, mut v: Vec<u64>) {
+        v.clear();
+        self.counters.on_put(8 * v.capacity() as u64);
+        self.u64s.push(v);
+    }
+
+    /// Pool-traffic counters (folded into
+    /// [`crate::metrics::RunMetrics`] by
+    /// [`crate::coordinator::ExecCtx::finalize_metrics`]).
+    pub fn counters(&self) -> &PerfCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_retains_capacity() {
+        let mut a = ScratchArena::new();
+        let mut v = a.take_u32();
+        assert_eq!(a.counters().buffers_created, 1);
+        v.extend(0..1000);
+        let cap = v.capacity();
+        a.put_u32(v);
+        assert_eq!(a.counters().bytes_pooled, 4 * cap as u64);
+        let v2 = a.take_u32();
+        assert!(v2.is_empty(), "buffers come back cleared");
+        assert_eq!(v2.capacity(), cap, "capacity survives the round trip");
+        assert_eq!(a.counters().buffers_reused, 1);
+        assert_eq!(a.counters().bytes_pooled, 0);
+    }
+
+    #[test]
+    fn pools_are_per_width() {
+        let mut a = ScratchArena::new();
+        let mut w = a.take_u64();
+        w.push(7);
+        a.put_u64(w);
+        let _ = a.take_u32(); // must not steal the u64 buffer
+        assert_eq!(a.counters().buffers_created, 2);
+        let w2 = a.take_u64();
+        assert!(w2.capacity() >= 1);
+        assert_eq!(a.counters().buffers_reused, 1);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut a = ScratchArena::new();
+        let mut v = a.take_u32();
+        v.extend(0..100);
+        a.put_u32(v);
+        let peak = a.counters().peak_bytes_pooled;
+        assert!(peak >= 400);
+        let _ = a.take_u32();
+        assert_eq!(a.counters().peak_bytes_pooled, peak, "peak is sticky");
+    }
+
+    #[test]
+    fn counters_balance() {
+        let mut a = ScratchArena::new();
+        let bufs: Vec<Vec<u32>> = (0..4).map(|_| a.take_u32()).collect();
+        for b in bufs {
+            a.put_u32(b);
+        }
+        let c = *a.counters();
+        assert_eq!(c.buffers_created, 4);
+        assert_eq!(c.buffers_pooled, 4);
+        let _ = a.take_u32();
+        assert_eq!(a.counters().buffers_pooled, 3);
+    }
+}

@@ -10,6 +10,7 @@
 //! native Rust implementation or the AOT-compiled XLA artifact.
 
 use crate::algorithms::{AlgoKind, Relaxer};
+use crate::arena::ScratchArena;
 use crate::error::Result;
 use crate::graph::{Csr, NodeId};
 use crate::metrics::RunMetrics;
@@ -146,6 +147,11 @@ pub struct ExecCtx<'d> {
     /// Distance / level array. Node-splitting strategies size it to the
     /// transformed node count; entries `0..original_n` hold the answer.
     pub dist: Vec<u32>,
+    /// Pooled scratch buffers for the per-iteration hot path: strategies
+    /// check out flatten/offset/staging buffers here and return them when
+    /// the launch retires, so steady-state iterations allocate nothing
+    /// (see [`crate::arena`]).
+    pub scratch: ScratchArena,
 }
 
 impl<'d> ExecCtx<'d> {
@@ -159,6 +165,7 @@ impl<'d> ExecCtx<'d> {
             push_policy: PushPolicy::default(),
             relaxer,
             dist: Vec::new(),
+            scratch: ScratchArena::new(),
         }
     }
 
@@ -184,22 +191,28 @@ impl<'d> ExecCtx<'d> {
 
         // Batch candidate computation from a snapshot of `dist` (threads
         // read global memory without ordering guarantees; min-fold below
-        // keeps monotonicity).
-        let mut dist_src = Vec::with_capacity(total);
-        let mut wts = Vec::with_capacity(total);
+        // keeps monotonicity). All staging buffers come from the scratch
+        // arena, so a warm launch performs no heap allocation.
+        let mut dist_src = self.scratch.take_u32();
+        let mut wts = self.scratch.take_u32();
         for p in 0..total {
             dist_src.push(self.dist[work.src[p] as usize]);
             wts.push(self.algo.effective_weight(graph.edge_wt(work.eid[p])));
         }
-        let cand = self.relaxer.candidates(&dist_src, &wts)?;
+        let mut cand = self.scratch.take_u32();
+        self.relaxer.candidates_into(&dist_src, &wts, &mut cand)?;
 
         let lanes = work.assignment.lanes();
         let warp = self.dev.warp_size as usize;
-        let mut ksim = KernelSim::new(self.dev);
-        let mut result = LaunchResult::default();
-        let mut dsts_buf: Vec<u32> = Vec::with_capacity(warp);
+        let sm_a = self.scratch.take_u64();
+        let sm_b = self.scratch.take_u64();
+        let mut ksim = KernelSim::new_with(self.dev, sm_a, sm_b);
+        let mut result = LaunchResult {
+            updated: self.scratch.take_u32(),
+        };
+        let mut dsts_buf: Vec<u32> = self.scratch.take_u32();
 
-        let mut lane_counts: Vec<u32> = Vec::with_capacity(warp);
+        let mut lane_counts: Vec<u32> = self.scratch.take_u32();
         for warp_start in (0..lanes).step_by(warp) {
             let warp_end = (warp_start + warp).min(lanes);
             lane_counts.clear();
@@ -263,10 +276,39 @@ impl<'d> ExecCtx<'d> {
             ksim.commit(wsim);
         }
 
-        let t = ksim.finish();
+        let (t, sm_a, sm_b) = ksim.finish_into();
+        self.scratch.put_u64(sm_a);
+        self.scratch.put_u64(sm_b);
+        self.scratch.put_u32(dist_src);
+        self.scratch.put_u32(wts);
+        self.scratch.put_u32(cand);
+        self.scratch.put_u32(dsts_buf);
+        self.scratch.put_u32(lane_counts);
         self.metrics
             .charge_processing(t, self.dev.launch_overhead);
         Ok(result)
+    }
+
+    /// Return a retired launch's `updated` buffer to the scratch pool.
+    /// Callers that skip this merely fall back to allocate-and-drop.
+    pub fn recycle(&mut self, r: LaunchResult) {
+        self.scratch.put_u32(r.updated);
+    }
+
+    /// Return a retired kernel's staging buffers (`src`, `eid` and blocked
+    /// offsets) to the scratch pool.
+    pub fn recycle_work(&mut self, work: KernelWork) {
+        let KernelWork {
+            src,
+            eid,
+            assignment,
+            ..
+        } = work;
+        self.scratch.put_u32(src);
+        self.scratch.put_u32(eid);
+        if let Assignment::Blocked(offsets) = assignment {
+            self.scratch.put_u32(offsets);
+        }
     }
 
     /// Charge an auxiliary (overhead) kernel touching `items` elements
@@ -295,16 +337,51 @@ impl<'d> ExecCtx<'d> {
         self.metrics.charge_overhead(cycles);
     }
 
-    /// Snapshot peak memory into the metrics (call before reporting).
+    /// Snapshot peak memory and the scratch-arena counters into the
+    /// metrics (call before reporting).
     pub fn finalize_metrics(&mut self) {
         self.metrics.peak_memory_bytes = self.mem.peak();
+        let c = self.scratch.counters();
+        self.metrics.scratch_created = c.buffers_created;
+        self.metrics.scratch_reused = c.buffers_reused;
+        self.metrics.scratch_peak_bytes = c.peak_bytes_pooled;
     }
 }
 
 /// Flatten a node frontier into the parallel `(src, eid)` arrays every
-/// node-based kernel consumes: the concatenated adjacencies of the active
-/// nodes, in worklist order. Shared by BS, WD, NS and HP.
+/// node-based kernel consumes — the concatenated adjacencies of the active
+/// nodes, in worklist order — writing into caller-provided scratch. One
+/// pass over the active nodes (the degree array is never walked twice) and
+/// zero allocations once the buffers are warm. Shared by BS, WD, NS and HP.
+pub fn flatten_frontier_into(
+    g: &Csr,
+    nodes: &[NodeId],
+    src: &mut Vec<NodeId>,
+    eid: &mut Vec<u32>,
+) {
+    src.clear();
+    eid.clear();
+    for &n in nodes {
+        let first = g.first_edge(n);
+        let deg = g.degree(n);
+        src.resize(src.len() + deg as usize, n);
+        eid.extend(first..first + deg);
+    }
+}
+
+/// Allocating convenience wrapper around [`flatten_frontier_into`].
 pub fn flatten_frontier(g: &Csr, nodes: &[NodeId]) -> (Vec<NodeId>, Vec<u32>) {
+    let mut src = Vec::new();
+    let mut eid = Vec::new();
+    flatten_frontier_into(g, nodes, &mut src, &mut eid);
+    (src, eid)
+}
+
+/// The pre-arena reference implementation: walks the degrees twice (sum
+/// pass, then fill pass) and allocates fresh arrays per call. Kept as the
+/// baseline `benches/hotpath.rs` measures the single-pass rewrite against
+/// and as a differential oracle for [`flatten_frontier_into`].
+pub fn flatten_frontier_two_pass(g: &Csr, nodes: &[NodeId]) -> (Vec<NodeId>, Vec<u32>) {
     let total: usize = nodes.iter().map(|&n| g.degree(n) as usize).sum();
     let mut src = Vec::with_capacity(total);
     let mut eid = Vec::with_capacity(total);
@@ -465,6 +542,53 @@ mod tests {
         };
         ex.launch(&g, &work, None).unwrap();
         assert_eq!(ex.dist[2], 1);
+    }
+
+    #[test]
+    fn single_pass_flatten_matches_two_pass_reference() {
+        let g = diamond();
+        for nodes in [vec![], vec![0u32], vec![0, 1, 2], vec![2, 0, 3, 1]] {
+            let (s1, e1) = flatten_frontier(&g, &nodes);
+            let (s2, e2) = flatten_frontier_two_pass(&g, &nodes);
+            assert_eq!(s1, s2, "src diverged on {nodes:?}");
+            assert_eq!(e1, e2, "eid diverged on {nodes:?}");
+        }
+    }
+
+    #[test]
+    fn repeated_launches_reuse_scratch() {
+        let g = diamond();
+        let dev = DeviceSpec::k20c();
+        let mut ex = ctx(&dev);
+        ex.dist = vec![INF; 4];
+        ex.dist[0] = 0;
+        for _ in 0..5 {
+            ex.dist.iter_mut().skip(1).for_each(|d| *d = INF);
+            let (src, eid) = flatten_frontier(&g, &[0]);
+            let n = src.len() as u32;
+            let work = KernelWork {
+                name: "test",
+                src,
+                eid,
+                assignment: Assignment::Blocked(vec![0, n]),
+                access: AccessPattern::Coalesced,
+                extra_cycles_per_edge: 0,
+                push: PushTarget::Node,
+            };
+            let r = ex.launch(&g, &work, None).unwrap();
+            ex.recycle(r);
+            ex.recycle_work(work);
+        }
+        let c = *ex.scratch.counters();
+        assert!(
+            c.buffers_reused > c.buffers_created,
+            "steady-state launches must hit the pool (created {}, reused {})",
+            c.buffers_created,
+            c.buffers_reused
+        );
+        ex.finalize_metrics();
+        assert_eq!(ex.metrics.scratch_created, c.buffers_created);
+        assert_eq!(ex.metrics.scratch_reused, c.buffers_reused);
     }
 
     #[test]

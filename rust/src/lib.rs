@@ -44,9 +44,18 @@
 //! batches shard across simulated devices. Every batched run can replay
 //! its queries through the single-query engine as a differential oracle
 //! (`serve` CLI subcommand, `figserve` figure, `benches/serving.rs`).
+//!
+//! Underneath all of it sits the [`arena`] subsystem: a scratch buffer
+//! pool threaded through [`coordinator::ExecCtx`] plus a graph-keyed
+//! artifact cache, giving the per-iteration hot path a **zero-allocation
+//! steady state** (proved by `rust/tests/alloc_regression.rs`) and letting
+//! serving reuse the MDT/COO/split-graph artifacts across batches. The
+//! perf trajectory is tracked in `BENCH_hotpath.json` (see README
+//! "Performance").
 
 pub mod adaptive;
 pub mod algorithms;
+pub mod arena;
 pub mod config;
 pub mod coordinator;
 pub mod error;

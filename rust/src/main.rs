@@ -218,6 +218,9 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
                     ("kernel_launches", r.metrics.kernel_launches.into()),
                     ("edge_relaxations", r.metrics.edge_relaxations.into()),
                     ("peak_memory", r.metrics.peak_memory_bytes.into()),
+                    ("scratch_created", r.metrics.scratch_created.into()),
+                    ("scratch_reused", r.metrics.scratch_reused.into()),
+                    ("scratch_peak_bytes", r.metrics.scratch_peak_bytes.into()),
                 ];
                 if rc.strategy.is_adaptive() {
                     row.push(("switches", r.metrics.strategy_switches.into()));

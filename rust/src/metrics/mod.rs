@@ -76,6 +76,14 @@ pub struct RunMetrics {
     pub inspector_passes: u64,
     /// Policy decisions made (same amortization as `inspector_passes`).
     pub policy_decisions: u64,
+    /// Scratch-arena checkouts that had to allocate a fresh buffer
+    /// (warm-up traffic; see [`crate::arena::PerfCounters`]).
+    pub scratch_created: u64,
+    /// Scratch-arena checkouts served from the pool — the zero-allocation
+    /// steady-state path.
+    pub scratch_reused: u64,
+    /// Peak heap bytes parked in the scratch arena (the price of pooling).
+    pub scratch_peak_bytes: u64,
     /// Per-iteration decision trace of the adaptive engine (empty for
     /// static strategies).
     pub decisions: Vec<DecisionRecord>,

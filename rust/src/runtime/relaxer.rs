@@ -93,9 +93,19 @@ impl XlaRelaxer {
 
 impl Relaxer for XlaRelaxer {
     fn candidates(&mut self, dist_src: &[u32], w: &[u32]) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(dist_src.len());
+        self.candidates_into(dist_src, w, &mut out)?;
+        Ok(out)
+    }
+
+    /// Writes into the caller's pooled buffer; the staging (`src_buf` /
+    /// `w_buf`) is reused across calls. The PJRT execute itself still owns
+    /// its result literal — that allocation lives inside the runtime and
+    /// is outside the arena's reach.
+    fn candidates_into(&mut self, dist_src: &[u32], w: &[u32], out: &mut Vec<u32>) -> Result<()> {
         debug_assert_eq!(dist_src.len(), w.len());
         let total = dist_src.len();
-        let mut out = Vec::with_capacity(total);
+        out.clear();
         let mut at = 0usize;
         while at < total {
             let remaining = total - at;
@@ -110,10 +120,10 @@ impl Relaxer for XlaRelaxer {
             // Pad inert lanes.
             self.src_buf.resize(batch, INF_I32);
             self.w_buf.resize(batch, 0);
-            self.run_batch(batch, take, &mut out)?;
+            self.run_batch(batch, take, out)?;
             at += take;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn backend(&self) -> &'static str {

@@ -23,21 +23,22 @@ use crate::adaptive::engine::{hp_wd_fallback, INSPECT_BASE_CYCLES};
 use crate::adaptive::inspect::{FrontierInspector, FrontierSnapshot};
 use crate::adaptive::migrate;
 use crate::adaptive::policy::{build_policy, requires_migration, Feasibility, Policy, PolicyInput};
-use crate::coordinator::exec::flatten_frontier;
+use crate::arena::{GraphCache, SplitArtifact};
+use crate::coordinator::exec::flatten_frontier_into;
 use crate::coordinator::{run, Assignment, ExecCtx, KernelWork, PushTarget, RunConfig};
 use crate::error::{Error, Result};
 use crate::graph::{Csr, Graph, NodeId};
 use crate::metrics::DecisionRecord;
 use crate::sim::AccessPattern;
 use crate::strategies::mdt::{auto_mdt, MdtDecision};
-use crate::strategies::node_split::{split_graph, SplitGraph};
-use crate::strategies::workload_decomp::block_offsets;
+use crate::strategies::node_split::split_graph;
+use crate::strategies::workload_decomp::block_offsets_into;
 use crate::strategies::{StrategyKind, StrategyParams};
 use crate::worklist::hierarchy::SubList;
 use crate::worklist::NodeWorklist;
 use std::sync::Arc;
 
-use super::merged::{MergedWorklist, MAX_QUERIES_PER_SHARD};
+use super::merged::{MergedBuilder, MergedWorklist, MAX_QUERIES_PER_SHARD};
 use super::query::Query;
 
 // Device-memory labels of the batch engine's allocations.
@@ -62,13 +63,11 @@ struct QueryState {
     query: Query,
     dist: Vec<u32>,
     frontier: NodeWorklist,
+    /// The other half of the frontier double buffer:
+    /// [`QueryBatch::advance`] dedups the update stream here and swaps,
+    /// so steady-state iterations reuse both halves' capacity.
+    spare: NodeWorklist,
     iterations: u32,
-}
-
-/// Shared node-splitting state (one split graph for the whole batch).
-struct SplitShared {
-    split: SplitGraph,
-    parent_of: Vec<NodeId>,
 }
 
 /// A batch of concurrent queries over one shared CSR.
@@ -79,8 +78,12 @@ pub struct QueryBatch {
     /// style; [`StrategyKind::AD`] re-decides per batch iteration.
     strategy: StrategyKind,
     policy: Option<Box<dyn Policy>>,
+    /// Graph-keyed artifact cache (MDT decision, split graph, COO flag) —
+    /// shared across the batches of a [`crate::serving::serve_with_cache`]
+    /// sweep, which is where the cross-batch reuse happens.
+    cache: GraphCache,
     mdt: MdtDecision,
-    split: Option<SplitShared>,
+    split: Option<Arc<SplitArtifact>>,
     coo_charged: bool,
     /// The mode the previous iteration ran in (AD hysteresis/migration).
     mode: StrategyKind,
@@ -88,8 +91,22 @@ pub struct QueryBatch {
     /// Reusable dedup bitset for [`QueryBatch::advance`] (queries step
     /// sequentially, so one buffer serves the whole batch); only touched
     /// words are cleared between uses, as in
-    /// [`crate::strategies::common::NodeFrontier`].
+    /// [`crate::strategies::common::NodeFrontier`]. Drawn from the arena
+    /// in [`QueryBatch::init`], returned by [`QueryBatch::recycle`].
     seen: Vec<u64>,
+    /// Persistent merge scratch: the pair builder and the merged list it
+    /// fills, rebuilt in place every AD batch iteration.
+    builder: MergedBuilder,
+    merged_buf: MergedWorklist,
+    /// Per-query frontier view scratch (original node space), rebuilt in
+    /// place for every stepped query.
+    view: NodeWorklist,
+    /// NS's split-space frontier scratch.
+    split_view: NodeWorklist,
+    /// HP's persistent sub-list.
+    sub: SubList,
+    /// Active slot indices of the current iteration.
+    active: Vec<usize>,
 }
 
 impl QueryBatch {
@@ -101,6 +118,24 @@ impl QueryBatch {
         queries: &[Query],
         strategy: StrategyKind,
         params: StrategyParams,
+    ) -> Result<Self> {
+        Self::with_cache(graph, queries, strategy, params, GraphCache::new())
+    }
+
+    /// [`QueryBatch::new`] sharing a [`GraphCache`]: graph-keyed artifacts
+    /// (the MDT histogram decision, NS's split graph + parent table, the
+    /// COO conversion flag) built by an earlier batch on the same graph
+    /// are reused instead of rebuilt — the cross-batch amortization the
+    /// serving layer exists for. Distances are unaffected; the one-time
+    /// build kernels are skipped only when the cache handle's *scope*
+    /// (simulated device — see [`GraphCache::scoped`]) already paid them,
+    /// so shards never get another device's residency for free.
+    pub fn with_cache(
+        graph: Arc<Csr>,
+        queries: &[Query],
+        strategy: StrategyKind,
+        params: StrategyParams,
+        cache: GraphCache,
     ) -> Result<Self> {
         if queries.len() > MAX_QUERIES_PER_SHARD {
             return Err(Error::Config(format!(
@@ -123,54 +158,87 @@ impl QueryBatch {
         } else {
             None
         };
-        let mdt = match params.mdt_override {
-            Some(mdt) => MdtDecision {
-                mdt,
-                peak_bin: 0,
-                bins: params.histogram_bins,
-                max_degree: graph.max_degree(),
-            },
-            None => auto_mdt(&graph, params.histogram_bins),
-        };
+        let mdt = cache.mdt(&graph, params.histogram_bins, params.mdt_override, || {
+            match params.mdt_override {
+                Some(mdt) => MdtDecision {
+                    mdt,
+                    peak_bin: 0,
+                    bins: params.histogram_bins,
+                    max_degree: graph.max_degree(),
+                },
+                None => auto_mdt(&graph, params.histogram_bins),
+            }
+        });
         let states = queries
             .iter()
             .map(|&query| QueryState {
                 query,
                 dist: Vec::new(),
                 frontier: NodeWorklist::new(),
+                spare: NodeWorklist::new(),
                 iterations: 0,
             })
             .collect();
-        let seen = vec![0u64; graph.num_nodes().div_ceil(64)];
         Ok(QueryBatch {
             graph,
             params,
             strategy,
             policy,
+            cache,
             mdt,
             split: None,
             coo_charged: false,
             mode: StrategyKind::BS,
             states,
-            seen,
+            seen: Vec::new(),
+            builder: MergedBuilder::new(),
+            merged_buf: MergedWorklist::default(),
+            view: NodeWorklist::new(),
+            split_view: NodeWorklist::new(),
+            sub: SubList::default(),
+            active: Vec::new(),
         })
     }
 
-    /// Charge shared storage and seed every query's frontier.
+    /// Charge shared storage and seed every query's frontier. The dist
+    /// arrays and the dedup bitmap are drawn from the context's scratch
+    /// arena, so a caller that [`QueryBatch::recycle`]s a retired batch
+    /// serves the next one without re-allocating them.
     pub fn init(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         let g = self.graph.clone();
         let n = g.num_nodes();
-        // One CSR and one MDT histogram for the whole batch.
+        // One CSR for the whole batch, and one MDT histogram pass unless
+        // this device (cache scope) already paid it for an earlier batch.
+        // The mark happens here, at the charge site, so a batch whose
+        // init never ran cannot exempt a later one.
         ctx.mem.charge(SRV_CSR, g.memory_bytes())?;
-        ctx.charge_aux_kernel(n as u64, 2);
+        if !self.cache.mark_mdt_charged(&g) {
+            ctx.charge_aux_kernel(n as u64, 2);
+        }
         for st in &mut self.states {
             ctx.mem.charge(SRV_DIST, 4 * n as u64)?;
-            st.dist = vec![crate::INF; n];
-            st.dist[st.query.source as usize] = 0;
-            st.frontier = NodeWorklist::seeded(&g, st.query.source);
+            let mut dist = ctx.scratch.take_u32();
+            dist.resize(n, crate::INF);
+            dist[st.query.source as usize] = 0;
+            st.dist = dist;
+            st.frontier.clear();
+            st.frontier.push(st.query.source, g.degree(st.query.source));
             ctx.mem.charge(SRV_WL, 8 * st.frontier.len() as u64)?;
         }
+        self.seen = ctx.scratch.take_u64();
+        self.seen.resize(n.div_ceil(64), 0);
         Ok(())
+    }
+
+    /// Return the batch's pooled buffers (per-query dist arrays, the dedup
+    /// bitmap) to the context's scratch arena. Call after the results have
+    /// been extracted; the next batch served on the same context then
+    /// starts warm.
+    pub fn recycle(self, ctx: &mut ExecCtx) {
+        for st in self.states {
+            ctx.scratch.put_u32(st.dist);
+        }
+        ctx.scratch.put_u64(self.seen);
     }
 
     /// Total frontier entries pending across every query (0 ⇒ converged).
@@ -209,43 +277,51 @@ impl QueryBatch {
     }
 
     /// One batch iteration: merge → inspect once → decide once → step every
-    /// active query in the chosen style.
+    /// active query in the chosen style. Every per-iteration structure —
+    /// the active list, the merged worklist, the per-query frontier views —
+    /// is rebuilt in place from persistent scratch, so a warm iteration
+    /// performs no heap allocation.
     pub fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         let g = self.graph.clone();
-        let active: Vec<usize> = (0..self.states.len())
-            .filter(|&i| !self.states[i].frontier.is_empty())
-            .collect();
-        if active.is_empty() {
+        self.active.clear();
+        for i in 0..self.states.len() {
+            if !self.states[i].frontier.is_empty() {
+                self.active.push(i);
+            }
+        }
+        if self.active.is_empty() {
             return Ok(());
         }
         // The tagged merged worklist exists to feed the shared inspection
         // and decision, so static batch modes — which have nothing to
         // decide — skip building (and paying for) it entirely.
-        let merged = if self.strategy == StrategyKind::AD {
-            let frontiers: Vec<(usize, &NodeWorklist)> = active
-                .iter()
-                .map(|&i| (i, &self.states[i].frontier))
-                .collect();
-            let m = MergedWorklist::from_frontiers(&g, &frontiers);
+        let use_merged = self.strategy == StrategyKind::AD;
+        if use_merged {
+            self.builder.begin();
+            for &i in &self.active {
+                self.builder.add(i, &self.states[i].frontier);
+            }
+            self.builder.finish_into(&g, &mut self.merged_buf);
             // The merged list is device-resident for the iteration (node,
             // degree, tag per entry); charge it so feasibility and peak
             // memory see it.
-            ctx.mem.charge(SRV_MERGED, m.memory_bytes())?;
-            Some(m)
-        } else {
-            None
-        };
+            ctx.mem.charge(SRV_MERGED, self.merged_buf.memory_bytes())?;
+        }
 
         // One inspection + one policy decision for the whole batch (AD).
-        let choice = if let Some(merged) = &merged {
-            let snap = FrontierInspector::inspect(merged.degrees(), ctx.dev);
+        let choice = if use_merged {
+            let snap = FrontierInspector::inspect_with_edges(
+                self.merged_buf.degrees(),
+                self.merged_buf.total_edges(),
+                ctx.dev,
+            );
             ctx.metrics.inspector_passes += 1;
             ctx.charge_overhead(INSPECT_BASE_CYCLES + snap.nodes / 32);
             let feas = self.feasibility(ctx, &snap);
             let decision = {
                 let input = PolicyInput {
                     snapshot: &snap,
-                    degrees: merged.degrees(),
+                    degrees: self.merged_buf.degrees(),
                     current: self.mode,
                     feasibility: feas,
                     dev: ctx.dev,
@@ -268,7 +344,7 @@ impl QueryBatch {
                 // representation switch is paid once, not per query. Mode
                 // changes inside node space (e.g. BS↔HP) are free, exactly
                 // as in the single-query engine.
-                ctx.charge_aux_kernel(merged.len() as u64 + 1, 2);
+                ctx.charge_aux_kernel(self.merged_buf.len() as u64 + 1, 2);
             }
             ctx.metrics.record_decision(DecisionRecord {
                 iteration: ctx.metrics.iterations,
@@ -286,10 +362,14 @@ impl QueryBatch {
             self.strategy
         };
 
-        // Shared structures for the chosen mode, built once per batch.
+        // Shared structures for the chosen mode, built once per batch (or
+        // fetched from the graph-keyed cache when an earlier batch on the
+        // same graph already built them).
         if choice == StrategyKind::EP && !self.coo_charged {
             ctx.mem.charge(SRV_COO, 12 * g.num_edges() as u64)?;
-            ctx.charge_aux_kernel(g.num_edges() as u64, 1);
+            if !self.cache.mark_coo(&g) {
+                ctx.charge_aux_kernel(g.num_edges() as u64, 1);
+            }
             self.coo_charged = true;
         }
         if choice == StrategyKind::NS {
@@ -299,17 +379,25 @@ impl QueryBatch {
         // Per-query execution, each against its own dist array. AD modes
         // step from the merged list's tagged view; static modes step from
         // the per-query frontier directly (identical content — the merge
-        // only reorders by node id).
+        // only reorders by node id). The view is rebuilt into persistent
+        // scratch and borrowed out of `self` for the step (take/restore
+        // keeps its capacity without cloning).
+        let active = std::mem::take(&mut self.active);
         for &slot in &active {
-            let view = match &merged {
-                Some(m) => m.query_frontier(slot),
-                None => self.states[slot].frontier.clone(),
-            };
-            self.step_query(ctx, slot, choice, &view)?;
+            if use_merged {
+                self.merged_buf.query_frontier_into(slot, &mut self.view);
+            } else {
+                self.view.copy_from(&self.states[slot].frontier);
+            }
+            let view = std::mem::take(&mut self.view);
+            let res = self.step_query(ctx, slot, choice, &view);
+            self.view = view;
+            res?;
             self.states[slot].iterations += 1;
         }
-        if let Some(m) = &merged {
-            ctx.mem.release(SRV_MERGED, m.memory_bytes());
+        self.active = active;
+        if use_merged {
+            ctx.mem.release(SRV_MERGED, self.merged_buf.memory_bytes());
         }
         ctx.metrics.iterations += 1;
         Ok(())
@@ -348,26 +436,35 @@ impl QueryBatch {
         }
     }
 
-    /// Build the shared split graph (once) and extend every query's dist
-    /// array to the split node count.
+    /// Build the shared split graph (the host transform runs once per
+    /// graph; the device rebuild kernel is charged once per cache scope —
+    /// an earlier batch on the *same* device retains it, another shard's
+    /// device does not) and extend every query's dist array to the split
+    /// node count. The artifact's resident bytes are charged to this
+    /// context either way: retention is not free residency.
     fn ensure_split(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         if self.split.is_some() {
             return Ok(());
         }
         let n = self.graph.num_nodes();
-        let split = split_graph(&self.graph, self.mdt);
-        ctx.mem.charge(SRV_NS_CSR, split.graph.memory_bytes())?;
+        let (art, was_cached) = self.cache.split(&self.graph, self.mdt.mdt, || {
+            let split = split_graph(&self.graph, self.mdt);
+            let parent_of = migrate::parent_of_table(&split, n);
+            SplitArtifact { split, parent_of }
+        });
+        ctx.mem.charge(SRV_NS_CSR, art.split.graph.memory_bytes())?;
         ctx.mem.charge(SRV_NS_MAP, 8 * n as u64)?;
-        ctx.charge_aux_kernel(self.graph.num_edges() as u64 + n as u64, 2);
-        let n_split = split.graph.num_nodes();
+        if !was_cached {
+            ctx.charge_aux_kernel(self.graph.num_edges() as u64 + n as u64, 2);
+        }
+        let n_split = art.split.graph.num_nodes();
         if n_split > n {
             for st in &mut self.states {
                 ctx.mem.charge(SRV_DIST, 4 * (n_split - n) as u64)?;
                 st.dist.resize(n_split, crate::INF);
             }
         }
-        let parent_of = migrate::parent_of_table(&split, n);
-        self.split = Some(SplitShared { split, parent_of });
+        self.split = Some(art);
         Ok(())
     }
 
@@ -405,44 +502,47 @@ impl QueryBatch {
     /// in BS/HP) — a deliberate accounting difference, documented here
     /// like the engine documents its own CSR-residency choice.
     fn advance(&mut self, ctx: &mut ExecCtx, slot: usize, updated: &[NodeId]) -> Result<()> {
-        let g = &self.graph;
+        let g = self.graph.clone();
         let raw = updated.len() as u64;
         ctx.metrics.peak_worklist_entries = ctx.metrics.peak_worklist_entries.max(raw);
         // Double buffer: the raw (duplicate-laden) output alongside the
-        // input worklist.
+        // input worklist. The dedup writes into the state's spare half, so
+        // both halves' capacity survives across iterations.
         ctx.mem.charge(SRV_WL, 8 * raw)?;
-        let mut next = NodeWorklist::new();
+        let st = &mut self.states[slot];
+        st.spare.clear();
         for &nd in updated {
             let (w, b) = (nd as usize / 64, nd as usize % 64);
             if self.seen[w] & (1 << b) == 0 {
                 self.seen[w] |= 1 << b;
-                next.push(nd, g.degree(nd));
+                st.spare.push(nd, g.degree(nd));
             }
         }
-        for &nd in next.nodes() {
+        for &nd in st.spare.nodes() {
             self.seen[nd as usize / 64] = 0; // clear only touched words
         }
-        ctx.metrics.condensed_away += raw - next.len() as u64;
+        ctx.metrics.condensed_away += raw - st.spare.len() as u64;
         if raw > 0 {
             ctx.charge_aux_kernel(raw, 2);
         }
-        let old = 8 * self.states[slot].frontier.len() as u64;
-        let keep = 8 * next.len() as u64;
+        let old = 8 * st.frontier.len() as u64;
+        let keep = 8 * st.spare.len() as u64;
         ctx.mem.release(SRV_WL, old + 8 * raw - keep);
-        self.states[slot].frontier = next;
+        std::mem::swap(&mut st.frontier, &mut st.spare);
         Ok(())
     }
 
     /// BS style: one lane per node (mirrors `ad_bs_relax`).
     fn step_bs(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
         let g = self.graph.clone();
-        let nodes = view.nodes().to_vec();
-        let (src, eid) = flatten_frontier(&g, &nodes);
-        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let mut offsets = ctx.scratch.take_u32();
+        flatten_frontier_into(&g, view.nodes(), &mut src, &mut eid);
         offsets.push(0u32);
         let mut acc = 0u32;
-        for &n in &nodes {
-            acc += g.degree(n);
+        for &d in view.degrees() {
+            acc += d;
             offsets.push(acc);
         }
         let work = KernelWork {
@@ -455,7 +555,10 @@ impl QueryBatch {
             push: PushTarget::Node,
         };
         let result = ctx.launch(&g, &work, None)?;
-        self.advance(ctx, slot, &result.updated)
+        self.advance(ctx, slot, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
+        Ok(())
     }
 
     /// WD style: scan + `find_offsets` + evenly blocked edges (mirrors
@@ -466,9 +569,10 @@ impl QueryBatch {
             .params
             .max_threads
             .unwrap_or(ctx.dev.max_resident_threads);
-        let nodes = view.nodes().to_vec();
-        let wl_len = nodes.len() as u64;
-        let (src, eid) = flatten_frontier(&g, &nodes);
+        let wl_len = view.len() as u64;
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        flatten_frontier_into(&g, view.nodes(), &mut src, &mut eid);
         let total = src.len();
 
         ctx.mem.charge(SRV_WD_PREFIX, 4 * wl_len)?;
@@ -479,11 +583,13 @@ impl QueryBatch {
         let offsets_bytes = 8 * max_threads as u64;
         ctx.mem.charge(SRV_WD_OFFSETS, offsets_bytes)?;
 
+        let mut offsets = ctx.scratch.take_u32();
+        block_offsets_into(total, max_threads, &mut offsets);
         let work = KernelWork {
             name: "srv_wd_relax",
             src,
             eid,
-            assignment: Assignment::Blocked(block_offsets(total, max_threads)),
+            assignment: Assignment::Blocked(offsets),
             access: AccessPattern::Scattered,
             extra_cycles_per_edge: 4,
             push: PushTarget::Node,
@@ -491,7 +597,10 @@ impl QueryBatch {
         let result = ctx.launch(&g, &work, None)?;
         ctx.mem.release(SRV_WD_OFFSETS, offsets_bytes);
         ctx.mem.release(SRV_WD_PREFIX, 4 * wl_len);
-        self.advance(ctx, slot, &result.updated)
+        self.advance(ctx, slot, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
+        Ok(())
     }
 
     /// EP style: the frontier exploded to edges over the shared COO
@@ -499,19 +608,24 @@ impl QueryBatch {
     /// transient edge worklist lives only for the launch.
     fn step_ep(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
         let g = self.graph.clone();
-        let wl = migrate::nodes_to_edges(&g, view);
-        let charged = wl.memory_bytes();
+        // Exploding the node view to edge granularity writes the same
+        // (src, eid) arrays an [`crate::worklist::EdgeWorklist`] would
+        // carry, directly into pooled kernel staging.
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        flatten_frontier_into(&g, view.nodes(), &mut src, &mut eid);
+        let total = src.len();
+        let charged = 8 * total as u64;
         ctx.mem.charge(SRV_EP_WL, charged)?;
         let max_threads = self
             .params
             .max_threads
             .unwrap_or(ctx.dev.max_resident_threads);
-        let total = wl.len();
         let threads = (max_threads as usize).min(total).max(1) as u32;
         let work = KernelWork {
             name: "srv_ep_relax",
-            src: wl.srcs().to_vec(),
-            eid: wl.edges().to_vec(),
+            src,
+            eid,
             assignment: Assignment::Strided {
                 num_threads: threads,
             },
@@ -521,57 +635,63 @@ impl QueryBatch {
         };
         let result = ctx.launch(&g, &work, None);
         ctx.mem.release(SRV_EP_WL, charged);
+        ctx.recycle_work(work);
         let result = result?;
-        self.advance(ctx, slot, &result.updated)
+        self.advance(ctx, slot, &result.updated)?;
+        ctx.recycle(result);
+        Ok(())
     }
 
     /// NS style: the query frontier migrated into the shared split graph,
     /// clone attributes refreshed from their parents, results folded back
     /// to original ids (mirrors `ad_ns_relax`).
     fn step_ns(&mut self, ctx: &mut ExecCtx, slot: usize, view: &NodeWorklist) -> Result<()> {
-        let parents: Vec<NodeId> = {
-            let st = self.split.as_ref().expect("ensure_split ran");
-            let sg = &st.split.graph;
-            // Refresh the clones of the active parents so the mirror
-            // invariant holds when entering split space.
-            let mut children = 0u64;
-            for &u in view.nodes() {
-                let du = ctx.dist[u as usize];
-                for c in st.split.map.children(u) {
-                    ctx.dist[c as usize] = du;
-                    children += 1;
-                }
+        let st = self.split.clone().expect("ensure_split ran");
+        let sg = &st.split.graph;
+        // Refresh the clones of the active parents so the mirror
+        // invariant holds when entering split space.
+        let mut children = 0u64;
+        for &u in view.nodes() {
+            let du = ctx.dist[u as usize];
+            for c in st.split.map.children(u) {
+                ctx.dist[c as usize] = du;
+                children += 1;
             }
-            if children > 0 {
-                ctx.charge_aux_kernel(children, 1);
-            }
-            let swl = migrate::nodes_to_split(&st.split, view);
-            let nodes = swl.nodes().to_vec();
-            let (src, eid) = flatten_frontier(sg, &nodes);
-            let mut offsets = Vec::with_capacity(nodes.len() + 1);
-            offsets.push(0u32);
-            let mut acc = 0u32;
-            for &nd in &nodes {
-                acc += sg.degree(nd);
-                offsets.push(acc);
-            }
-            let work = KernelWork {
-                name: "srv_ns_relax",
-                src,
-                eid,
-                assignment: Assignment::Blocked(offsets),
-                access: AccessPattern::Scattered,
-                extra_cycles_per_edge: 0,
-                push: PushTarget::Node,
-            };
-            let result = ctx.launch(sg, &work, Some(&st.split.map))?;
-            result
-                .updated
-                .iter()
-                .map(|&x| st.parent_of[x as usize])
-                .collect()
+        }
+        if children > 0 {
+            ctx.charge_aux_kernel(children, 1);
+        }
+        migrate::nodes_to_split_into(&st.split, view, &mut self.split_view);
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let mut offsets = ctx.scratch.take_u32();
+        flatten_frontier_into(sg, self.split_view.nodes(), &mut src, &mut eid);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &d in self.split_view.degrees() {
+            acc += d;
+            offsets.push(acc);
+        }
+        let work = KernelWork {
+            name: "srv_ns_relax",
+            src,
+            eid,
+            assignment: Assignment::Blocked(offsets),
+            access: AccessPattern::Scattered,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Node,
         };
-        self.advance(ctx, slot, &parents)
+        let result = ctx.launch(sg, &work, Some(&st.split.map))?;
+        ctx.recycle_work(work);
+        // Fold the split-space updates back to parent ids in place, then
+        // advance from the pooled buffer.
+        let mut parents = result.updated;
+        for x in parents.iter_mut() {
+            *x = st.parent_of[*x as usize];
+        }
+        self.advance(ctx, slot, &parents)?;
+        ctx.scratch.put_u32(parents);
+        Ok(())
     }
 
     /// HP style: sub-iterations of ≤ MDT edges per node with the WD
@@ -580,44 +700,50 @@ impl QueryBatch {
         let g = self.graph.clone();
         let mdt = self.mdt.mdt.max(1);
         let block = ctx.dev.block_size as usize;
-        let frontier_nodes = view.nodes().to_vec();
-        let degrees = view.degrees().to_vec();
-        let mut all_updates: Vec<NodeId> = Vec::new();
+        let mut all_updates: Vec<NodeId> = ctx.scratch.take_u32();
 
-        if frontier_nodes.len() < block {
-            let (src, eid) = flatten_frontier(&g, &frontier_nodes);
-            if !src.is_empty() {
-                let ups = hp_wd_fallback(ctx, &g, src, eid, frontier_nodes.len() as u64)?;
-                all_updates.extend(ups);
+        if view.len() < block {
+            let mut src = ctx.scratch.take_u32();
+            let mut eid = ctx.scratch.take_u32();
+            flatten_frontier_into(&g, view.nodes(), &mut src, &mut eid);
+            if src.is_empty() {
+                ctx.scratch.put_u32(src);
+                ctx.scratch.put_u32(eid);
+            } else {
+                let ups = hp_wd_fallback(ctx, &g, src, eid, view.len() as u64)?;
+                all_updates.extend_from_slice(&ups);
+                ctx.scratch.put_u32(ups);
             }
         } else {
-            let mut sub = SubList::from_super(&frontier_nodes, &degrees);
-            let sub_bytes = sub.memory_bytes();
+            // Persistent sub-list, rebuilt in place each outer iteration.
+            self.sub.reset(view.nodes(), view.degrees());
+            let sub_bytes = self.sub.memory_bytes();
             ctx.mem.charge(SRV_HP_SUBLIST, sub_bytes)?;
 
-            while !sub.is_empty() {
-                if sub.len() < block {
-                    let mut src = Vec::new();
-                    let mut eid = Vec::new();
-                    for c in sub.cursors() {
+            while !self.sub.is_empty() {
+                if self.sub.len() < block {
+                    let mut src = ctx.scratch.take_u32();
+                    let mut eid = ctx.scratch.take_u32();
+                    for c in self.sub.cursors() {
                         let first = g.first_edge(c.node) + c.processed;
                         for e in first..first + c.remaining() {
                             src.push(c.node);
                             eid.push(e);
                         }
                     }
-                    let wl_len = sub.len() as u64;
+                    let wl_len = self.sub.len() as u64;
                     let ups = hp_wd_fallback(ctx, &g, src, eid, wl_len)?;
-                    all_updates.extend(ups);
+                    all_updates.extend_from_slice(&ups);
+                    ctx.scratch.put_u32(ups);
                     break;
                 }
 
-                let mut src = Vec::new();
-                let mut eid = Vec::new();
-                let mut offsets = Vec::with_capacity(sub.len() + 1);
+                let mut src = ctx.scratch.take_u32();
+                let mut eid = ctx.scratch.take_u32();
+                let mut offsets = ctx.scratch.take_u32();
                 offsets.push(0u32);
                 let mut acc = 0u32;
-                for c in sub.cursors() {
+                for c in self.sub.cursors() {
                     let take = c.remaining().min(mdt);
                     let first = g.first_edge(c.node) + c.processed;
                     for e in first..first + take {
@@ -637,13 +763,17 @@ impl QueryBatch {
                     push: PushTarget::Node,
                 };
                 let result = ctx.launch(&g, &work, None)?;
-                all_updates.extend(result.updated);
-                sub.advance(mdt);
-                ctx.charge_aux_kernel(sub.len() as u64 + 1, 1);
+                all_updates.extend_from_slice(&result.updated);
+                ctx.recycle(result);
+                ctx.recycle_work(work);
+                self.sub.advance(mdt);
+                ctx.charge_aux_kernel(self.sub.len() as u64 + 1, 1);
             }
             ctx.mem.release(SRV_HP_SUBLIST, sub_bytes);
         }
-        self.advance(ctx, slot, &all_updates)
+        self.advance(ctx, slot, &all_updates)?;
+        ctx.scratch.put_u32(all_updates);
+        Ok(())
     }
 }
 

@@ -29,13 +29,91 @@ pub struct MergedWorklist {
     nodes: Vec<NodeId>,
     degrees: Vec<u32>,
     masks: Vec<u64>,
+    /// Running Σ degrees, maintained while the list is built so the
+    /// per-batch-iteration inspection pass gets its edge total in O(1)
+    /// (mirrors [`NodeWorklist::total_edges`]).
+    edge_sum: u64,
+}
+
+/// Reusable build scratch for [`MergedWorklist`]: `(node, tag)` pairs
+/// accumulated per iteration, sorted in place and OR-folded into the
+/// output. Once warm, rebuilding the merged list allocates nothing — the
+/// serving engine's per-iteration path ([`crate::serving::batch`]) keeps
+/// one builder for the life of the batch.
+#[derive(Debug, Default)]
+pub struct MergedBuilder {
+    pairs: Vec<(NodeId, u64)>,
+}
+
+impl MergedBuilder {
+    /// Empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new merge (clears the pair scratch, keeps its capacity).
+    pub fn begin(&mut self) {
+        self.pairs.clear();
+    }
+
+    /// Add one query's frontier under `slot`'s tag bit. Slots must be
+    /// below [`MAX_QUERIES_PER_SHARD`].
+    pub fn add(&mut self, slot: usize, wl: &NodeWorklist) {
+        assert!(
+            slot < MAX_QUERIES_PER_SHARD,
+            "query slot {slot} exceeds the {MAX_QUERIES_PER_SHARD}-wide tag mask"
+        );
+        let bit = 1u64 << slot;
+        for &n in wl.nodes() {
+            self.pairs.push((n, bit));
+        }
+    }
+
+    /// Sort, OR-fold and write the merged list into `out` (cleared first,
+    /// capacity retained). Degrees are re-read from `g` so stale cached
+    /// degrees cannot diverge between queries. The in-place unstable sort
+    /// on `Copy` pairs allocates nothing, and a sorted fold produces
+    /// exactly the node-id order the `BTreeMap`-based builder used to.
+    pub fn finish_into(&mut self, g: &Csr, out: &mut MergedWorklist) {
+        self.pairs.sort_unstable_by_key(|p| p.0);
+        out.nodes.clear();
+        out.degrees.clear();
+        out.masks.clear();
+        out.edge_sum = 0;
+        for &(n, bit) in &self.pairs {
+            if out.nodes.last() == Some(&n) {
+                *out.masks.last_mut().expect("parallel to nodes") |= bit;
+            } else {
+                let d = g.degree(n);
+                out.nodes.push(n);
+                out.degrees.push(d);
+                out.masks.push(bit);
+                out.edge_sum += d as u64;
+            }
+        }
+    }
 }
 
 impl MergedWorklist {
-    /// Build from `(query slot, frontier)` pairs. Slots must be below
-    /// [`MAX_QUERIES_PER_SHARD`]; degrees are re-read from `g` so stale
-    /// cached degrees cannot diverge between queries.
+    /// Build from `(query slot, frontier)` pairs — the allocating
+    /// convenience wrapper around [`MergedBuilder`].
     pub fn from_frontiers(g: &Csr, frontiers: &[(usize, &NodeWorklist)]) -> Self {
+        let mut b = MergedBuilder::new();
+        b.begin();
+        for &(slot, wl) in frontiers {
+            b.add(slot, wl);
+        }
+        let mut out = MergedWorklist::default();
+        b.finish_into(g, &mut out);
+        out
+    }
+
+    /// The pre-arena reference implementation: a fresh `BTreeMap` per
+    /// merge (one heap node per distinct frontier node). Kept in-tree as
+    /// the baseline `benches/hotpath.rs` measures [`MergedBuilder`]
+    /// against and as a differential oracle for it (the builder must
+    /// reproduce this output bit for bit).
+    pub fn from_frontiers_btree(g: &Csr, frontiers: &[(usize, &NodeWorklist)]) -> Self {
         let mut by_node: BTreeMap<NodeId, u64> = BTreeMap::new();
         for &(slot, wl) in frontiers {
             assert!(
@@ -49,9 +127,11 @@ impl MergedWorklist {
         }
         let mut out = MergedWorklist::default();
         for (n, mask) in by_node {
+            let d = g.degree(n);
             out.nodes.push(n);
-            out.degrees.push(g.degree(n));
+            out.degrees.push(d);
             out.masks.push(mask);
+            out.edge_sum += d as u64;
         }
         out
     }
@@ -86,21 +166,35 @@ impl MergedWorklist {
         &self.masks
     }
 
+    /// Total edges across the merged frontier (cached Σ degrees — O(1),
+    /// consumed by the batch engine's shared inspection pass).
+    pub fn total_edges(&self) -> u64 {
+        self.edge_sum
+    }
+
     /// Simulated device bytes: node id (4 B) + degree (4 B) + tag (8 B).
     pub fn memory_bytes(&self) -> u64 {
         16 * self.nodes.len() as u64
     }
 
     /// Extract one query's frontier (nodes whose tag carries `slot`'s bit),
-    /// in merged (node-id) order.
-    pub fn query_frontier(&self, slot: usize) -> NodeWorklist {
+    /// in merged (node-id) order, into caller-provided scratch (cleared
+    /// first, capacity retained).
+    pub fn query_frontier_into(&self, slot: usize, out: &mut NodeWorklist) {
         let bit = 1u64 << slot;
-        let mut wl = NodeWorklist::new();
+        out.clear();
         for i in 0..self.nodes.len() {
             if self.masks[i] & bit != 0 {
-                wl.push(self.nodes[i], self.degrees[i]);
+                out.push(self.nodes[i], self.degrees[i]);
             }
         }
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`MergedWorklist::query_frontier_into`].
+    pub fn query_frontier(&self, slot: usize) -> NodeWorklist {
+        let mut wl = NodeWorklist::new();
+        self.query_frontier_into(slot, &mut wl);
         wl
     }
 
@@ -166,9 +260,11 @@ impl MergedEdgeFrontier {
         }
         let mut out = MergedWorklist::default();
         for (n, mask) in by_node {
+            let d = g.degree(n);
             out.nodes.push(n);
-            out.degrees.push(g.degree(n));
+            out.degrees.push(d);
             out.masks.push(mask);
+            out.edge_sum += d as u64;
         }
         out
     }
@@ -237,6 +333,31 @@ mod tests {
         // node 4 (degree 0) vanishes; tags of the survivors are intact.
         assert_eq!(back.nodes(), &[0, 1]);
         assert_eq!(back.masks(), &[1 << 1, 1 << 2]);
+    }
+
+    #[test]
+    fn builder_reuse_matches_from_frontiers() {
+        let g = hub();
+        let a = wl(&g, &[1, 0]); // deliberately unsorted input order
+        let b = wl(&g, &[1, 4]);
+        let oracle = MergedWorklist::from_frontiers_btree(&g, &[(0, &a), (3, &b)]);
+        assert_eq!(
+            oracle,
+            MergedWorklist::from_frontiers(&g, &[(0, &a), (3, &b)]),
+            "sort-based builder must reproduce the BTreeMap reference"
+        );
+        let mut builder = MergedBuilder::new();
+        let mut out = MergedWorklist::default();
+        let mut view = NodeWorklist::new();
+        for _ in 0..3 {
+            builder.begin();
+            builder.add(0, &a);
+            builder.add(3, &b);
+            builder.finish_into(&g, &mut out);
+            assert_eq!(out, oracle, "warm rebuilds must be bit-identical");
+            out.query_frontier_into(3, &mut view);
+            assert_eq!(view.nodes(), &[1, 4]);
+        }
     }
 
     #[test]

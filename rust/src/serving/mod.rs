@@ -40,9 +40,9 @@ pub mod query;
 pub mod shard;
 
 pub use batch::{replay_single, QueryBatch};
-pub use merged::{MergedEdgeFrontier, MergedWorklist, MAX_QUERIES_PER_SHARD};
+pub use merged::{MergedBuilder, MergedEdgeFrontier, MergedWorklist, MAX_QUERIES_PER_SHARD};
 pub use query::{synthetic_queries, Query};
 pub use shard::{
-    aggregate, partition, serve, AggregateMetrics, BatchReport, DeviceShard, ServeConfig,
-    ShardReport,
+    aggregate, partition, serve, serve_with_cache, AggregateMetrics, BatchReport, DeviceShard,
+    ServeConfig, ShardReport,
 };

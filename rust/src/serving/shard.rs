@@ -11,6 +11,7 @@
 //! in `rust/tests/strategy_properties.rs`.
 
 use crate::algorithms::{AlgoKind, NativeRelaxer};
+use crate::arena::GraphCache;
 use crate::coordinator::ExecCtx;
 use crate::error::{Error, Result};
 use crate::graph::Csr;
@@ -106,6 +107,14 @@ pub struct AggregateMetrics {
     pub strategy_switches: u64,
     /// Max over shards (each device holds its own allocations).
     pub peak_memory_bytes: u64,
+    /// Σ scratch-arena checkouts that allocated a fresh buffer (warm-up
+    /// traffic; see [`crate::arena::PerfCounters`]).
+    pub scratch_created: u64,
+    /// Σ scratch-arena checkouts served from the pool — the serving
+    /// layer's zero-allocation steady state.
+    pub scratch_reused: u64,
+    /// Max over shards of the arena's peak pooled bytes.
+    pub scratch_peak_bytes: u64,
 }
 
 /// Fold per-shard (or per-run) metrics into an [`AggregateMetrics`]. Every
@@ -125,6 +134,9 @@ pub fn aggregate<'a>(metrics: impl IntoIterator<Item = &'a RunMetrics>) -> Aggre
         agg.edge_relaxations += m.edge_relaxations;
         agg.strategy_switches += m.strategy_switches;
         agg.peak_memory_bytes = agg.peak_memory_bytes.max(m.peak_memory_bytes);
+        agg.scratch_created += m.scratch_created;
+        agg.scratch_reused += m.scratch_reused;
+        agg.scratch_peak_bytes = agg.scratch_peak_bytes.max(m.scratch_peak_bytes);
     }
     agg
 }
@@ -154,6 +166,9 @@ impl AggregateMetrics {
             ("edge_relaxations", self.edge_relaxations.into()),
             ("strategy_switches", self.strategy_switches.into()),
             ("peak_memory", self.peak_memory_bytes.into()),
+            ("scratch_created", self.scratch_created.into()),
+            ("scratch_reused", self.scratch_reused.into()),
+            ("scratch_peak_bytes", self.scratch_peak_bytes.into()),
         ])
     }
 }
@@ -214,8 +229,24 @@ impl BatchReport {
 
 /// Serve one batch of queries over `graph`: partition across
 /// `cfg.shards` simulated devices, run a [`QueryBatch`] per shard, collect
-/// per-shard metrics and per-query distances.
+/// per-shard metrics and per-query distances. Uses a fresh [`GraphCache`]
+/// — call [`serve_with_cache`] to share graph-keyed artifacts (MDT
+/// decision, NS split graph, COO flag) across repeated batches.
 pub fn serve(graph: &Arc<Csr>, queries: &[Query], cfg: &ServeConfig) -> Result<BatchReport> {
+    serve_with_cache(graph, queries, cfg, &GraphCache::new())
+}
+
+/// [`serve`] with a caller-held [`GraphCache`]: batches served repeatedly
+/// on the same long-lived graph skip rebuilding the graph-keyed artifacts
+/// (the cross-batch reuse seam of the ROADMAP's serving section).
+/// Distances are bit-identical with or without a warm cache — only the
+/// one-time build kernels are skipped on a hit.
+pub fn serve_with_cache(
+    graph: &Arc<Csr>,
+    queries: &[Query],
+    cfg: &ServeConfig,
+    cache: &GraphCache,
+) -> Result<BatchReport> {
     if cfg.shards == 0 {
         return Err(Error::Config("shards must be >= 1".into()));
     }
@@ -243,16 +274,21 @@ pub fn serve(graph: &Arc<Csr>, queries: &[Query], cfg: &ServeConfig) -> Result<B
         if cfg.enforce_budget {
             ctx = ctx.with_budget(cfg.device.memory_budget);
         }
-        let mut batch = QueryBatch::new(
+        // Each shard is its own simulated device: it shares the cache's
+        // host-side artifacts but pays its own build kernels (scope =
+        // shard id), so multi-shard totals stay honest.
+        let mut batch = QueryBatch::with_cache(
             graph.clone(),
             &shard.queries,
             cfg.strategy,
             cfg.params.clone(),
+            cache.scoped(shard.id),
         )?;
         batch.init(&mut ctx)?;
         batch.run(&mut ctx, cfg.max_iterations)?;
-        ctx.finalize_metrics();
         let dists = (0..shard.queries.len()).map(|i| batch.distances(i)).collect();
+        batch.recycle(&mut ctx);
+        ctx.finalize_metrics();
         shards.push(ShardReport {
             shard: shard.id,
             queries: shard.queries,
@@ -327,6 +363,37 @@ mod tests {
         )
         .unwrap();
         assert_eq!(report.query_count(), MAX_QUERIES_PER_SHARD + 1);
+    }
+
+    #[test]
+    fn warm_cache_skips_rebuilds_without_changing_distances() {
+        // NS forces the split-graph build — the most expensive graph-keyed
+        // artifact. A second batch sharing the cache must produce
+        // bit-identical distances while paying strictly less overhead
+        // (the split transform and MDT histogram kernels are skipped).
+        let g = Arc::new(rmat(8, 2048, RmatParams::default(), 4).unwrap());
+        let qs = synthetic_queries(&g, 4, 0.0, 5);
+        let cfg = ServeConfig {
+            strategy: StrategyKind::NS,
+            ..Default::default()
+        };
+        let cache = GraphCache::new();
+        let cold = serve_with_cache(&g, &qs, &cfg, &cache).unwrap();
+        let warm = serve_with_cache(&g, &qs, &cfg, &cache).unwrap();
+        for q in &qs {
+            assert_eq!(
+                cold.dist_of(q.id).unwrap(),
+                warm.dist_of(q.id).unwrap(),
+                "cache reuse changed query {}'s distances",
+                q.id
+            );
+        }
+        assert!(
+            warm.totals().overhead_cycles < cold.totals().overhead_cycles,
+            "warm batch overhead {} must undercut cold {}",
+            warm.totals().overhead_cycles,
+            cold.totals().overhead_cycles
+        );
     }
 
     #[test]

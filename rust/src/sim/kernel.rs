@@ -56,11 +56,23 @@ pub struct KernelSim<'d> {
 impl<'d> KernelSim<'d> {
     /// Start accounting a kernel on `dev`.
     pub fn new(dev: &'d DeviceSpec) -> Self {
+        Self::new_with(dev, Vec::new(), Vec::new())
+    }
+
+    /// Start accounting a kernel on `dev`, reusing caller-provided per-SM
+    /// accumulator buffers (the scratch-arena path: paired with
+    /// [`KernelSim::finish_into`], a warm caller launches kernels with zero
+    /// heap allocation).
+    pub fn new_with(dev: &'d DeviceSpec, mut sm_total: Vec<u64>, mut sm_max: Vec<u64>) -> Self {
+        sm_total.clear();
+        sm_total.resize(dev.num_sm as usize, 0);
+        sm_max.clear();
+        sm_max.resize(dev.num_sm as usize, 0);
         KernelSim {
             dev,
             warps_per_block: dev.warps_per_block() as u64,
-            sm_total: vec![0; dev.num_sm as usize],
-            sm_max: vec![0; dev.num_sm as usize],
+            sm_total,
+            sm_max,
             warp_count: 0,
             stats: KernelTime::default(),
         }
@@ -93,7 +105,13 @@ impl<'d> KernelSim<'d> {
     }
 
     /// Close the launch and return its cost.
-    pub fn finish(mut self) -> KernelTime {
+    pub fn finish(self) -> KernelTime {
+        self.finish_into().0
+    }
+
+    /// Close the launch, returning the cost plus the per-SM buffers so a
+    /// pooled caller can reuse them (see [`KernelSim::new_with`]).
+    pub fn finish_into(mut self) -> (KernelTime, Vec<u64>, Vec<u64>) {
         let t = self.dev.warp_throughput();
         let busiest = self
             .sm_total
@@ -104,7 +122,11 @@ impl<'d> KernelSim<'d> {
             .unwrap_or(0);
         self.stats.cycles = self.dev.launch_overhead + busiest;
         self.stats.warps = self.warp_count;
-        self.stats
+        (
+            self.stats,
+            std::mem::take(&mut self.sm_total),
+            std::mem::take(&mut self.sm_max),
+        )
     }
 }
 

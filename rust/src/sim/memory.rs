@@ -9,12 +9,17 @@ use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
 /// Tracks current and peak simulated device-memory usage by label.
+///
+/// Labels are `&'static str`: every call site charges a literal, and static
+/// keys keep [`MemoryTracker::charge`] allocation-free on the per-iteration
+/// hot path (the zero-allocation steady state of
+/// `rust/tests/alloc_regression.rs`).
 #[derive(Debug, Clone)]
 pub struct MemoryTracker {
     budget: u64,
     current: u64,
     peak: u64,
-    by_label: BTreeMap<String, u64>,
+    by_label: BTreeMap<&'static str, u64>,
 }
 
 impl MemoryTracker {
@@ -34,7 +39,7 @@ impl MemoryTracker {
     }
 
     /// Allocate `bytes` under `label`; errors if the budget is exceeded.
-    pub fn charge(&mut self, label: &str, bytes: u64) -> Result<()> {
+    pub fn charge(&mut self, label: &'static str, bytes: u64) -> Result<()> {
         let next = self.current.saturating_add(bytes);
         if next > self.budget {
             return Err(Error::OutOfMemory {
@@ -45,12 +50,12 @@ impl MemoryTracker {
         }
         self.current = next;
         self.peak = self.peak.max(self.current);
-        *self.by_label.entry(label.to_string()).or_insert(0) += bytes;
+        *self.by_label.entry(label).or_insert(0) += bytes;
         Ok(())
     }
 
     /// Release `bytes` previously charged under `label`.
-    pub fn release(&mut self, label: &str, bytes: u64) {
+    pub fn release(&mut self, label: &'static str, bytes: u64) {
         self.current = self.current.saturating_sub(bytes);
         if let Some(v) = self.by_label.get_mut(label) {
             *v = v.saturating_sub(bytes);
@@ -59,7 +64,7 @@ impl MemoryTracker {
 
     /// Grow/shrink a label to a new size (worklists resize per iteration);
     /// peak accounting sees the high-water mark.
-    pub fn resize(&mut self, label: &str, old_bytes: u64, new_bytes: u64) -> Result<()> {
+    pub fn resize(&mut self, label: &'static str, old_bytes: u64, new_bytes: u64) -> Result<()> {
         self.release(label, old_bytes);
         self.charge(label, new_bytes)
     }
@@ -81,7 +86,7 @@ impl MemoryTracker {
 
     /// Cumulative bytes charged per label (diagnostics / Figure 9 memory
     /// axis).
-    pub fn by_label(&self) -> &BTreeMap<String, u64> {
+    pub fn by_label(&self) -> &BTreeMap<&'static str, u64> {
         &self.by_label
     }
 }

@@ -19,6 +19,12 @@ pub struct NodeFrontier {
     entry_bytes: u64,
     charged: u64,
     wl: NodeWorklist,
+    /// The other half of the double buffer: [`NodeFrontier::advance`]
+    /// builds the next frontier here and swaps, so steady-state iterations
+    /// reuse both buffers' capacity instead of reallocating (`inputWl` /
+    /// `outputWl` in the paper's pseudocode, finally represented as such
+    /// host-side too).
+    spare: NodeWorklist,
     /// Reusable dedup bitset (one bit per node): turns the host-side
     /// condensing pass from `O(n log n)` sort into `O(n)` — see
     /// EXPERIMENTS.md §Perf (the simulated *device* cost of condensing is
@@ -43,6 +49,7 @@ impl NodeFrontier {
             entry_bytes,
             charged,
             wl,
+            spare: NodeWorklist::new(),
             seen: vec![0u64; g.num_nodes().div_ceil(64)],
         })
     }
@@ -63,6 +70,7 @@ impl NodeFrontier {
             entry_bytes,
             charged,
             wl,
+            spare: NodeWorklist::new(),
             seen: vec![0u64; g.num_nodes().div_ceil(64)],
         })
     }
@@ -95,9 +103,10 @@ impl NodeFrontier {
         let raw_bytes = self.entry_bytes * raw_entries;
         ctx.mem.charge(self.label, raw_bytes)?;
 
-        // Host-side: O(n) bitset dedup (the simulated device still pays the
-        // condensing kernel below).
-        let mut next = NodeWorklist::new();
+        // Host-side: O(n) bitset dedup into the spare buffer (the simulated
+        // device still pays the condensing kernel below); capacity of both
+        // double-buffer halves is retained across iterations.
+        self.spare.clear();
         if self.seen.len() * 64 < g.num_nodes() {
             self.seen.resize(g.num_nodes().div_ceil(64), 0);
         }
@@ -105,13 +114,13 @@ impl NodeFrontier {
             let (w, b) = (n as usize / 64, n as usize % 64);
             if self.seen[w] & (1 << b) == 0 {
                 self.seen[w] |= 1 << b;
-                next.push(n, g.degree(n));
+                self.spare.push(n, g.degree(n));
             }
         }
-        for &n in next.nodes() {
+        for &n in self.spare.nodes() {
             self.seen[n as usize / 64] = 0; // clear only touched words
         }
-        let removed = updated.len() - next.len();
+        let removed = updated.len() - self.spare.len();
         ctx.metrics.condensed_away += removed as u64;
         if raw_entries > 0 {
             // Condensing = sort + dedup over the raw buffer.
@@ -120,10 +129,10 @@ impl NodeFrontier {
 
         // Old input buffer + the duplicate tail are released; the condensed
         // buffer remains charged.
-        let keep = self.entry_bytes * next.len() as u64;
+        let keep = self.entry_bytes * self.spare.len() as u64;
         ctx.mem.release(self.label, self.charged + raw_bytes - keep);
         self.charged = keep;
-        self.wl = next;
+        std::mem::swap(&mut self.wl, &mut self.spare);
         Ok(())
     }
 

@@ -21,6 +21,10 @@ pub struct EdgeParallel {
     graph: Arc<Csr>,
     params: StrategyParams,
     input: EdgeWorklist,
+    /// The other half of the double buffer: the raw (duplicate-laden)
+    /// output worklist is built here and swapped in, retaining capacity
+    /// across iterations.
+    spare: EdgeWorklist,
     charged: u64,
 }
 
@@ -31,6 +35,7 @@ impl EdgeParallel {
             graph,
             params,
             input: EdgeWorklist::new(),
+            spare: EdgeWorklist::new(),
             charged: 0,
         }
     }
@@ -71,10 +76,15 @@ impl Strategy for EdgeParallel {
         let total = self.input.len();
         let threads = (self.num_threads(ctx) as usize).min(total).max(1) as u32;
 
+        // Stage the input worklist into pooled kernel buffers.
+        let mut src = ctx.scratch.take_u32();
+        src.extend_from_slice(self.input.srcs());
+        let mut eid = ctx.scratch.take_u32();
+        eid.extend_from_slice(self.input.edges());
         let work = KernelWork {
             name: "ep_relax",
-            src: self.input.srcs().to_vec(),
-            eid: self.input.edges().to_vec(),
+            src,
+            eid,
             assignment: Assignment::Strided {
                 num_threads: threads,
             },
@@ -85,33 +95,36 @@ impl Strategy for EdgeParallel {
             push: PushTarget::Edges,
         };
         let result = ctx.launch(&self.graph, &work, None)?;
+        ctx.recycle_work(work);
 
-        // Build the next edge worklist: all outgoing edges of every updated
-        // node (duplicates included — the worklist explosion of §II-B).
-        let mut next = EdgeWorklist::new();
+        // Build the next edge worklist into the spare half of the double
+        // buffer: all outgoing edges of every updated node (duplicates
+        // included — the worklist explosion of §II-B).
+        self.spare.clear();
         for &n in &result.updated {
-            next.push_node_edges(&self.graph, n);
+            self.spare.push_node_edges(&self.graph, n);
         }
-        let raw_entries = next.len() as u64;
+        ctx.recycle(result);
+        let raw_entries = self.spare.len() as u64;
         ctx.metrics.peak_worklist_entries =
             ctx.metrics.peak_worklist_entries.max(raw_entries);
 
         // Double buffer: input + raw output simultaneously resident.
-        ctx.mem.charge("ep-wl", next.memory_bytes())?;
+        ctx.mem.charge("ep-wl", self.spare.memory_bytes())?;
 
         // Condense when the worklist outgrows the edge count (§II-B's
         // condensing overhead).
-        if next.len() > self.graph.num_edges() {
-            let removed = next.condense();
+        if self.spare.len() > self.graph.num_edges() {
+            let removed = self.spare.condense();
             ctx.metrics.condensed_away += removed as u64;
             ctx.charge_aux_kernel(raw_entries, 2);
         }
 
-        let keep = next.memory_bytes();
+        let keep = self.spare.memory_bytes();
         ctx.mem
             .release("ep-wl", self.charged + 8 * raw_entries - keep);
         self.charged = keep;
-        self.input = next;
+        std::mem::swap(&mut self.input, &mut self.spare);
         ctx.metrics.iterations += 1;
         Ok(())
     }

@@ -13,8 +13,9 @@
 
 use super::common::{charge_graph_and_dist, init_dist, NodeFrontier};
 use super::mdt::{auto_mdt, MdtDecision};
-use super::workload_decomp::block_offsets;
+use super::workload_decomp::block_offsets_into;
 use super::{Strategy, StrategyKind, StrategyParams};
+use crate::coordinator::exec::flatten_frontier_into;
 use crate::coordinator::{Assignment, ExecCtx, KernelWork, PushTarget};
 use crate::error::Result;
 use crate::graph::{Csr, Graph, NodeId};
@@ -28,6 +29,9 @@ pub struct Hierarchical {
     params: StrategyParams,
     frontier: Option<NodeFrontier>,
     decision: Option<MdtDecision>,
+    /// Persistent sub-list, rebuilt in place each outer iteration so its
+    /// cursor storage is reused (zero steady-state allocation).
+    sub: SubList,
     /// Sub-iteration kernels launched (reported in EXPERIMENTS.md).
     pub sub_iterations: u64,
     /// Times the WD fallback engaged.
@@ -42,6 +46,7 @@ impl Hierarchical {
             params,
             frontier: None,
             decision: None,
+            sub: SubList::default(),
             sub_iterations: 0,
             wd_switches: 0,
         }
@@ -52,7 +57,10 @@ impl Hierarchical {
         self.decision.map(|d| d.mdt)
     }
 
-    /// WD-style fallback kernel over an explicit edge batch.
+    /// WD-style fallback kernel over an explicit edge batch. `src`/`eid`
+    /// are consumed and returned to the scratch pool; the returned update
+    /// list is pooled too — the caller gives it back with `put_u32` once
+    /// folded into its update stream.
     fn launch_wd_style(
         &mut self,
         ctx: &mut ExecCtx,
@@ -68,16 +76,19 @@ impl Hierarchical {
         let threads = ctx.dev.max_resident_threads;
         let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
         ctx.charge_aux_kernel((threads as u64).min(total as u64), 4 * log_wl);
+        let mut offsets = ctx.scratch.take_u32();
+        block_offsets_into(total, threads, &mut offsets);
         let work = KernelWork {
             name: "hp_wd_relax",
             src,
             eid,
-            assignment: Assignment::Blocked(block_offsets(total, threads)),
+            assignment: Assignment::Blocked(offsets),
             access: AccessPattern::Scattered,
             extra_cycles_per_edge: 4,
             push: PushTarget::Node,
         };
         let result = ctx.launch(&self.graph, &work, None)?;
+        ctx.recycle_work(work);
         ctx.mem.release("hp-prefix", 4 * wl_len);
         Ok(result.updated)
     }
@@ -116,54 +127,63 @@ impl Strategy for Hierarchical {
         let decision = self.decision.expect("init first");
         let mdt = decision.mdt.max(1);
         let block = ctx.dev.block_size as usize;
-        let frontier_nodes = {
-            let f = self.frontier.as_ref().expect("init first");
-            f.worklist().nodes().to_vec()
-        };
         let g = self.graph.clone();
-        let mut all_updates: Vec<NodeId> = Vec::new();
+        let mut all_updates: Vec<NodeId> = ctx.scratch.take_u32();
+        let frontier_len = self.frontier.as_ref().expect("init first").len();
 
-        if frontier_nodes.len() < block {
+        if frontier_len < block {
             // Small super list → straight to workload decomposition.
-            let (src, eid) = crate::coordinator::exec::flatten_frontier(&g, &frontier_nodes);
-            if !src.is_empty() {
-                let ups =
-                    self.launch_wd_style(ctx, src, eid, frontier_nodes.len() as u64)?;
-                all_updates.extend(ups);
+            let mut src = ctx.scratch.take_u32();
+            let mut eid = ctx.scratch.take_u32();
+            {
+                let wl = self.frontier.as_ref().expect("init first").worklist();
+                flatten_frontier_into(&g, wl.nodes(), &mut src, &mut eid);
+            }
+            if src.is_empty() {
+                ctx.scratch.put_u32(src);
+                ctx.scratch.put_u32(eid);
+            } else {
+                let ups = self.launch_wd_style(ctx, src, eid, frontier_len as u64)?;
+                all_updates.extend_from_slice(&ups);
+                ctx.scratch.put_u32(ups);
             }
         } else {
-            // Sub-iterations over the shrinking sub-list.
-            let degrees: Vec<u32> = frontier_nodes.iter().map(|&n| g.degree(n)).collect();
-            let mut sub = SubList::from_super(&frontier_nodes, &degrees);
-            let sub_bytes = sub.memory_bytes();
+            // Sub-iterations over the shrinking sub-list (persistent
+            // cursor storage, rebuilt in place).
+            {
+                let wl = self.frontier.as_ref().expect("init first").worklist();
+                self.sub.reset(wl.nodes(), wl.degrees());
+            }
+            let sub_bytes = self.sub.memory_bytes();
             ctx.mem.charge("hp-sublist", sub_bytes)?;
 
-            while !sub.is_empty() {
-                if sub.len() < block {
+            while !self.sub.is_empty() {
+                if self.sub.len() < block {
                     // Residual tail → WD fallback over the remaining edges.
-                    let mut src = Vec::new();
-                    let mut eid = Vec::new();
-                    for c in sub.cursors() {
+                    let mut src = ctx.scratch.take_u32();
+                    let mut eid = ctx.scratch.take_u32();
+                    for c in self.sub.cursors() {
                         let first = g.first_edge(c.node) + c.processed;
                         for e in first..first + c.remaining() {
                             src.push(c.node);
                             eid.push(e);
                         }
                     }
-                    let wl_len = sub.len() as u64;
+                    let wl_len = self.sub.len() as u64;
                     let ups = self.launch_wd_style(ctx, src, eid, wl_len)?;
-                    all_updates.extend(ups);
+                    all_updates.extend_from_slice(&ups);
+                    ctx.scratch.put_u32(ups);
                     break;
                 }
 
                 // One sub-iteration: lane per node, ≤ MDT edges each.
                 self.sub_iterations += 1;
-                let mut src = Vec::new();
-                let mut eid = Vec::new();
-                let mut offsets = Vec::with_capacity(sub.len() + 1);
+                let mut src = ctx.scratch.take_u32();
+                let mut eid = ctx.scratch.take_u32();
+                let mut offsets = ctx.scratch.take_u32();
                 offsets.push(0u32);
                 let mut acc = 0u32;
-                for c in sub.cursors() {
+                for c in self.sub.cursors() {
                     let take = c.remaining().min(mdt);
                     let first = g.first_edge(c.node) + c.processed;
                     for e in first..first + take {
@@ -184,16 +204,21 @@ impl Strategy for Hierarchical {
                     push: PushTarget::Node,
                 };
                 let result = ctx.launch(&g, &work, None)?;
-                all_updates.extend(result.updated);
-                sub.advance(mdt);
+                all_updates.extend_from_slice(&result.updated);
+                ctx.recycle(result);
+                ctx.recycle_work(work);
+                self.sub.advance(mdt);
                 // Sub-list compaction between sub-iterations (overhead).
-                ctx.charge_aux_kernel(sub.len() as u64 + 1, 1);
+                ctx.charge_aux_kernel(self.sub.len() as u64 + 1, 1);
             }
             ctx.mem.release("hp-sublist", sub_bytes);
         }
 
-        let frontier = self.frontier.as_mut().expect("init first");
-        frontier.advance(ctx, &g, &all_updates)?;
+        self.frontier
+            .as_mut()
+            .expect("init first")
+            .advance(ctx, &g, &all_updates)?;
+        ctx.scratch.put_u32(all_updates);
         ctx.metrics.iterations += 1;
         Ok(())
     }

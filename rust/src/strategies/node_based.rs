@@ -9,7 +9,7 @@
 
 use super::common::{charge_graph_and_dist, init_dist, NodeFrontier};
 use super::{Strategy, StrategyKind};
-use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::coordinator::{exec::flatten_frontier_into, Assignment, ExecCtx, KernelWork, PushTarget};
 use crate::error::Result;
 use crate::graph::{Csr, Graph, NodeId};
 use crate::sim::AccessPattern;
@@ -49,18 +49,22 @@ impl Strategy for NodeBaseline {
     }
 
     fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
-        let frontier = self.frontier.as_mut().expect("init first");
-        let nodes = frontier.worklist().nodes().to_vec();
-        let (src, eid) = flatten_frontier(&self.graph, &nodes);
-
-        // One lane per node: lane l owns the contiguous span of node l's
-        // edges — per-lane offsets are the prefix sums of the degrees.
-        let mut offsets = Vec::with_capacity(nodes.len() + 1);
-        offsets.push(0u32);
-        let mut acc = 0u32;
-        for &n in &nodes {
-            acc += self.graph.degree(n);
-            offsets.push(acc);
+        let g = self.graph.clone();
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let mut offsets = ctx.scratch.take_u32();
+        {
+            let wl = self.frontier.as_ref().expect("init first").worklist();
+            flatten_frontier_into(&g, wl.nodes(), &mut src, &mut eid);
+            // One lane per node: lane l owns the contiguous span of node
+            // l's edges — per-lane offsets are the prefix sums of the
+            // worklist's cached degrees.
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for &d in wl.degrees() {
+                acc += d;
+                offsets.push(acc);
+            }
         }
 
         let work = KernelWork {
@@ -73,8 +77,13 @@ impl Strategy for NodeBaseline {
             extra_cycles_per_edge: 0,
             push: PushTarget::Node,
         };
-        let result = ctx.launch(&self.graph, &work, None)?;
-        frontier.advance(ctx, &self.graph, &result.updated)?;
+        let result = ctx.launch(&g, &work, None)?;
+        self.frontier
+            .as_mut()
+            .expect("init first")
+            .advance(ctx, &g, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
         ctx.metrics.iterations += 1;
         Ok(())
     }

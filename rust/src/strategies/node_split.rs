@@ -16,7 +16,7 @@
 use super::common::{init_dist, NodeFrontier};
 use super::mdt::{auto_mdt, MdtDecision};
 use super::{Strategy, StrategyKind, StrategyParams};
-use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget, SplitMap};
+use crate::coordinator::{exec::flatten_frontier_into, Assignment, ExecCtx, KernelWork, PushTarget, SplitMap};
 use crate::error::Result;
 use crate::graph::{Csr, Edge, Graph, NodeId};
 use crate::sim::AccessPattern;
@@ -172,19 +172,22 @@ impl Strategy for NodeSplitting {
     }
 
     fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let mut offsets = ctx.scratch.take_u32();
         let split = self.split.as_ref().expect("init first");
-        let frontier = self.frontier.as_mut().expect("init first");
         let g = &split.graph;
-        let nodes = frontier.worklist().nodes().to_vec();
-        let (src, eid) = flatten_frontier(g, &nodes);
-
-        // One lane per (possibly child) node — bounded by MDT edges.
-        let mut offsets = Vec::with_capacity(nodes.len() + 1);
-        offsets.push(0u32);
-        let mut acc = 0u32;
-        for &nd in &nodes {
-            acc += g.degree(nd);
-            offsets.push(acc);
+        {
+            let wl = self.frontier.as_ref().expect("init first").worklist();
+            flatten_frontier_into(g, wl.nodes(), &mut src, &mut eid);
+            // One lane per (possibly child) node — bounded by MDT edges;
+            // offsets are the prefix sums of the cached degrees.
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for &d in wl.degrees() {
+                acc += d;
+                offsets.push(acc);
+            }
         }
 
         let work = KernelWork {
@@ -197,7 +200,12 @@ impl Strategy for NodeSplitting {
             push: PushTarget::Node,
         };
         let result = ctx.launch(g, &work, Some(&split.map))?;
-        frontier.advance(ctx, g, &result.updated)?;
+        self.frontier
+            .as_mut()
+            .expect("init first")
+            .advance(ctx, g, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
         ctx.metrics.iterations += 1;
         Ok(())
     }

@@ -15,7 +15,7 @@
 
 use super::common::{charge_graph_and_dist, init_dist, NodeFrontier};
 use super::{Strategy, StrategyKind, StrategyParams};
-use crate::coordinator::{exec::flatten_frontier, Assignment, ExecCtx, KernelWork, PushTarget};
+use crate::coordinator::{exec::flatten_frontier_into, Assignment, ExecCtx, KernelWork, PushTarget};
 use crate::error::Result;
 use crate::graph::{Csr, Graph, NodeId};
 use crate::sim::AccessPattern;
@@ -48,21 +48,28 @@ impl WorkloadDecomposition {
 }
 
 /// Compute the blocked per-lane offsets for `total` edges over at most
-/// `max_threads` lanes: `⌈total/T⌉` edges per lane (the last lane may get
-/// fewer).
-pub fn block_offsets(total: usize, max_threads: u32) -> Vec<u32> {
+/// `max_threads` lanes — `⌈total/T⌉` edges per lane (the last lane may get
+/// fewer) — into a caller-provided scratch buffer (zero allocations once
+/// the buffer is warm).
+pub fn block_offsets_into(total: usize, max_threads: u32, offsets: &mut Vec<u32>) {
+    offsets.clear();
+    offsets.push(0);
     if total == 0 {
-        return vec![0];
+        return;
     }
     let threads = (max_threads as usize).min(total).max(1);
     let per = (total + threads - 1) / threads;
-    let mut offsets = Vec::with_capacity(threads + 1);
     let mut at = 0usize;
-    offsets.push(0);
     while at < total {
         at = (at + per).min(total);
         offsets.push(at as u32);
     }
+}
+
+/// Allocating convenience wrapper around [`block_offsets_into`].
+pub fn block_offsets(total: usize, max_threads: u32) -> Vec<u32> {
+    let mut offsets = Vec::new();
+    block_offsets_into(total, max_threads, &mut offsets);
     offsets
 }
 
@@ -89,11 +96,15 @@ impl Strategy for WorkloadDecomposition {
     }
 
     fn run_iteration(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        let g = self.graph.clone();
         let max_threads = self.num_threads(ctx);
-        let frontier = self.frontier.as_mut().expect("init first");
-        let nodes = frontier.worklist().nodes().to_vec();
-        let wl_len = nodes.len() as u64;
-        let (src, eid) = flatten_frontier(&self.graph, &nodes);
+        let mut src = ctx.scratch.take_u32();
+        let mut eid = ctx.scratch.take_u32();
+        let wl_len = {
+            let wl = self.frontier.as_ref().expect("init first").worklist();
+            flatten_frontier_into(&g, wl.nodes(), &mut src, &mut eid);
+            wl.len() as u64
+        };
         let total = src.len();
 
         // Overhead kernel 1: inclusive scan of the worklist's degree array
@@ -108,7 +119,8 @@ impl Strategy for WorkloadDecomposition {
         let log_wl = (64 - wl_len.leading_zeros() as u64).max(1);
         ctx.charge_aux_kernel(threads, 4 * log_wl);
 
-        let offsets = block_offsets(total, max_threads);
+        let mut offsets = ctx.scratch.take_u32();
+        block_offsets_into(total, max_threads, &mut offsets);
         let work = KernelWork {
             name: "wd_relax",
             src,
@@ -121,10 +133,15 @@ impl Strategy for WorkloadDecomposition {
             extra_cycles_per_edge: 4,
             push: PushTarget::Node,
         };
-        let result = ctx.launch(&self.graph, &work, None)?;
+        let result = ctx.launch(&g, &work, None)?;
 
         ctx.mem.release("wd-prefix", 4 * wl_len);
-        frontier.advance(ctx, &self.graph, &result.updated)?;
+        self.frontier
+            .as_mut()
+            .expect("init first")
+            .advance(ctx, &g, &result.updated)?;
+        ctx.recycle(result);
+        ctx.recycle_work(work);
         ctx.metrics.iterations += 1;
         Ok(())
     }

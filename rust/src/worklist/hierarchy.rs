@@ -35,17 +35,28 @@ impl SubList {
     /// Build the initial sub-list from the super-worklist's (node, degree)
     /// pairs, dropping zero-degree nodes.
     pub fn from_super(nodes: &[NodeId], degrees: &[u32]) -> Self {
-        let cursors = nodes
-            .iter()
-            .zip(degrees)
-            .filter(|(_, &d)| d > 0)
-            .map(|(&node, &degree)| NodeCursor {
-                node,
-                processed: 0,
-                degree,
-            })
-            .collect();
-        SubList { cursors }
+        let mut sub = SubList::default();
+        sub.reset(nodes, degrees);
+        sub
+    }
+
+    /// Rebuild in place from the super-worklist's (node, degree) pairs,
+    /// dropping zero-degree nodes. Capacity is retained, so a persistent
+    /// sub-list is allocation-free across iterations (the arena path of
+    /// [`crate::strategies::Hierarchical`]).
+    pub fn reset(&mut self, nodes: &[NodeId], degrees: &[u32]) {
+        self.cursors.clear();
+        self.cursors.extend(
+            nodes
+                .iter()
+                .zip(degrees)
+                .filter(|(_, &d)| d > 0)
+                .map(|(&node, &degree)| NodeCursor {
+                    node,
+                    processed: 0,
+                    degree,
+                }),
+        );
     }
 
     /// Nodes still holding unprocessed edges.

@@ -27,6 +27,10 @@ use crate::graph::{Csr, NodeId};
 pub struct NodeWorklist {
     nodes: Vec<NodeId>,
     degrees: Vec<u32>,
+    /// Running Σ degrees, maintained at push time so
+    /// [`NodeWorklist::total_edges`] is O(1) — it is consulted every
+    /// iteration by the frontier inspector and the cost model.
+    edge_sum: u64,
 }
 
 impl NodeWorklist {
@@ -47,6 +51,17 @@ impl NodeWorklist {
     pub fn push(&mut self, node: NodeId, degree: u32) {
         self.nodes.push(node);
         self.degrees.push(degree);
+        self.edge_sum += degree as u64;
+    }
+
+    /// Overwrite with the contents of `other`, reusing this worklist's
+    /// capacity (the arena-friendly alternative to `clone`).
+    pub fn copy_from(&mut self, other: &NodeWorklist) {
+        self.nodes.clear();
+        self.nodes.extend_from_slice(&other.nodes);
+        self.degrees.clear();
+        self.degrees.extend_from_slice(&other.degrees);
+        self.edge_sum = other.edge_sum;
     }
 
     /// Number of entries (duplicates included).
@@ -71,9 +86,9 @@ impl NodeWorklist {
         &self.degrees
     }
 
-    /// Total edges carried by the worklist (Σ degrees).
+    /// Total edges carried by the worklist (cached Σ degrees — O(1)).
     pub fn total_edges(&self) -> u64 {
-        self.degrees.iter().map(|&d| d as u64).sum()
+        self.edge_sum
     }
 
     /// Simulated device bytes: two 4-byte arrays.
@@ -96,6 +111,7 @@ impl NodeWorklist {
         pairs.dedup_by_key(|p| p.0);
         self.nodes = pairs.iter().map(|p| p.0).collect();
         self.degrees = pairs.iter().map(|p| p.1).collect();
+        self.edge_sum = self.degrees.iter().map(|&d| d as u64).sum();
         before - self.nodes.len()
     }
 
@@ -103,6 +119,7 @@ impl NodeWorklist {
     pub fn clear(&mut self) {
         self.nodes.clear();
         self.degrees.clear();
+        self.edge_sum = 0;
     }
 }
 
@@ -268,6 +285,24 @@ mod tests {
         assert_eq!(nwl.memory_bytes(), 8);
         let ewl = EdgeWorklist::seeded(&g, 0);
         assert_eq!(ewl.memory_bytes(), 24);
+    }
+
+    #[test]
+    fn total_edges_cache_survives_mutation() {
+        let g = star();
+        let mut wl = NodeWorklist::seeded(&g, 0);
+        wl.push(1, g.degree(1));
+        wl.push(1, g.degree(1)); // duplicate
+        assert_eq!(wl.total_edges(), 5);
+        wl.condense();
+        assert_eq!(wl.total_edges(), 4, "condense recomputes the sum");
+        let mut copy = NodeWorklist::new();
+        copy.push(3, 9); // stale content to be overwritten
+        copy.copy_from(&wl);
+        assert_eq!(copy, wl);
+        assert_eq!(copy.total_edges(), 4);
+        wl.clear();
+        assert_eq!(wl.total_edges(), 0);
     }
 
     #[test]

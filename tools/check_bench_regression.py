@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Gate the perf trajectory: compare a freshly measured BENCH_hotpath.json
+against the committed baseline and fail on a >tolerance regression.
+
+Usage:
+    tools/check_bench_regression.py BASELINE FRESH [TOLERANCE]
+
+The gate compares the *ratio* metrics (pooled-vs-legacy speedups, the
+serving amortization factor) — dimensionless numbers that survive hardware
+changes, unlike raw nanoseconds. Raw per-case timings ride along in both
+files for trajectory plots; pass STRICT_NS=1 in the environment to also
+gate each case's mean_ns (only meaningful when baseline and CI run on the
+same machine class).
+
+A baseline marked {"bootstrap": true} (or with no suites) accepts any
+fresh measurement and asks the committer to promote it — that is how the
+first real baseline lands without fabricating numbers.
+"""
+
+import json
+import os
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    tolerance = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
+
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    if baseline.get("bootstrap") or not baseline.get("suites"):
+        print(
+            "baseline is a bootstrap stub — accepting this measurement.\n"
+            f"To arm the regression gate, commit the fresh file:\n"
+            f"    cp {fresh_path} {baseline_path}"
+        )
+        return 0
+
+    failures = []
+    for suite, sdata in sorted(baseline.get("suites", {}).items()):
+        fresh_suite = fresh.get("suites", {}).get(suite)
+        if fresh_suite is None:
+            failures.append(f"{suite}: suite missing from the fresh run")
+            continue
+        for name, base_val in sorted(sdata.get("ratios", {}).items()):
+            cur = fresh_suite.get("ratios", {}).get(name)
+            if cur is None:
+                failures.append(f"{suite}:{name}: ratio missing from the fresh run")
+            elif cur < base_val * (1.0 - tolerance):
+                failures.append(
+                    f"{suite}:{name}: {cur:.3f} is >{tolerance:.0%} below "
+                    f"the baseline {base_val:.3f}"
+                )
+            else:
+                print(f"ok {suite}:{name}: {cur:.3f} (baseline {base_val:.3f})")
+        if os.environ.get("STRICT_NS") == "1":
+            base_cases = {c["name"]: c for c in sdata.get("cases", [])}
+            for c in fresh_suite.get("cases", []):
+                base = base_cases.get(c["name"])
+                if base is None or base["mean_ns"] <= 0:
+                    continue
+                if c["mean_ns"] > base["mean_ns"] * (1.0 + tolerance):
+                    failures.append(
+                        f"{suite}:{c['name']}: {c['mean_ns']:.0f} ns is "
+                        f">{tolerance:.0%} above the baseline "
+                        f"{base['mean_ns']:.0f} ns"
+                    )
+
+    if failures:
+        print("bench regression gate FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
