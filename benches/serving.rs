@@ -14,10 +14,15 @@
 //!
 //! Env knobs: `LONESTAR_SCALE=tiny|small|paper`, `LONESTAR_BENCH_ITERS=N`.
 
+use lonestar_lb::arena::GraphCache;
 use lonestar_lb::figures::serving::FIGSERVE_QUERIES;
 use lonestar_lb::figures::{fig_serving, FigureOpts};
 use lonestar_lb::graph::Graph;
-use lonestar_lb::serving::{replay_single, serve, synthetic_queries, ServeConfig};
+use lonestar_lb::serving::{
+    replay_single, serve, serve_stream, synthetic_arrivals, synthetic_queries, SchedulerConfig,
+    ServeConfig,
+};
+use lonestar_lb::sim::DeviceSpec;
 use lonestar_lb::strategies::StrategyKind;
 use lonestar_lb::util::bench::{black_box, BenchSuite};
 use std::sync::Arc;
@@ -63,10 +68,7 @@ fn main() {
     let queries = synthetic_queries(&g, FIGSERVE_QUERIES, 0.5, opts.seed);
     let mut suite = BenchSuite::new("batched serving (AD), shard sweep");
     for shards in [1usize, 2, 4] {
-        let cfg = ServeConfig {
-            shards,
-            ..Default::default()
-        };
+        let cfg = ServeConfig::with_shards(shards);
         let mut last = None;
         suite.case(
             &format!("{}/{}q/{}shard", entry.name, queries.len(), shards),
@@ -77,7 +79,7 @@ fn main() {
                 let totals = report.totals();
                 let note = format!(
                     "wall {:.2} ms, inspect {}, decide {}",
-                    totals.wall_ms(&cfg.device),
+                    report.wall_ms(),
                     totals.inspector_passes,
                     totals.policy_decisions
                 );
@@ -102,6 +104,65 @@ fn main() {
             });
         }
     }
+    // Admission-controlled scheduler case: a 100-query burst (0.1 µs mean
+    // gaps) against a heterogeneous k20c+gtx680 pool — the queue backs up
+    // past 64 behind the first singleton batches, so the freed shard
+    // forms an 80-query batch and the multi-word tag path really runs.
+    // The headline metric is *simulated* queries per simulated
+    // millisecond — counter-derived, machine-independent, gated by the
+    // bench baseline.
+    let sched_cfg = SchedulerConfig {
+        serve: ServeConfig {
+            devices: vec![DeviceSpec::k20c(), DeviceSpec::gtx680()],
+            max_batch: 80,
+            ..Default::default()
+        },
+        queue_cap: 120,
+        ..Default::default()
+    };
+    let cache = GraphCache::new();
+    let mut sched_qps = 0.0f64;
+    suite.case(
+        &format!("scheduler/{}q-stream-2dev", 100),
+        0,
+        iters.max(1),
+        || {
+            let arrivals = synthetic_arrivals(&g, 100, 0.5, 100_000, opts.seed);
+            let report = serve_stream(&g, arrivals, &sched_cfg, &cache).expect("serve_stream");
+            assert_eq!(
+                report.arrived,
+                report.admitted + report.dropped.len() as u64,
+                "scheduler conservation: arrived == admitted + dropped"
+            );
+            assert_eq!(report.admitted, report.served() as u64, "admitted == served at drain");
+            for shard in &report.shards {
+                replay_single(
+                    &g,
+                    &shard.queries,
+                    StrategyKind::AD,
+                    &sched_cfg.serve.params,
+                    &shard.dists,
+                )
+                .expect("scheduler replay oracle");
+            }
+            assert!(
+                report.queue_peak > 64,
+                "the burst must back the queue up past one tag word \
+                 (peak {})",
+                report.queue_peak
+            );
+            sched_qps = report.served() as f64 / report.wall_ms().max(1e-9);
+            format!(
+                "{} served / {} dropped, {} batches, wall {:.2} ms, {:.2} q/ms",
+                report.served(),
+                report.dropped.len(),
+                report.batches,
+                report.wall_ms(),
+                sched_qps
+            )
+        },
+    );
+
     let results = suite.finish();
     // Fold the amortization claim into the shared bench baseline: the
     // inspection+decision work of batched-AD as a fraction of N
@@ -118,7 +179,10 @@ fn main() {
     common::write_bench_json(
         "serving",
         &results,
-        &[("inspection_amortization", amortization)],
+        &[
+            ("inspection_amortization", amortization),
+            ("scheduler_sim_qps", sched_qps),
+        ],
     );
     println!(
         "serving acceptance over {} graphs ({} nodes, {} edges on the timed one)",

@@ -32,16 +32,15 @@ fn main() -> lonestar_lb::Result<()> {
     //    sharded across two simulated devices.
     let cfg = ServeConfig {
         strategy: StrategyKind::AD,
-        shards: 2,
-        ..Default::default()
+        ..ServeConfig::with_shards(2)
     };
     let report = serve(&graph, &queries, &cfg)?;
     let batched = report.totals();
     println!(
         "batched-AD : wall {:>8.2} ms  total {:>8.2} ms  inspector passes {:>4}  \
          policy decisions {:>4}",
-        batched.wall_ms(&cfg.device),
-        batched.total_ms(&cfg.device),
+        report.wall_ms(),
+        report.total_ms(),
         batched.inspector_passes,
         batched.policy_decisions
     );
@@ -71,8 +70,8 @@ fn main() -> lonestar_lb::Result<()> {
     println!(
         "independent: wall {:>8.2} ms  total {:>8.2} ms  inspector passes {:>4}  \
          policy decisions {:>4}",
-        independent.wall_ms(&cfg.device),
-        independent.total_ms(&cfg.device),
+        independent.wall_ms(&cfg.devices[0]),
+        independent.total_ms(&cfg.devices[0]),
         independent.inspector_passes,
         independent.policy_decisions
     );

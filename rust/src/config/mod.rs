@@ -20,6 +20,14 @@
 //! adaptive_policy = cost               # cost | heuristic | round-robin (AD only)
 //! batch_size = 8                       # serve: queries per batch
 //! shards     = 1                       # serve: simulated devices per batch
+//! devices    = k20c,k40               # serve: one DeviceSpec per shard
+//!                                      #  (overrides `shards`; heterogeneous OK)
+//! max_batch  = 64                      # serve: concurrent queries per shard
+//!                                      #  (>64 widens the merged-worklist tag)
+//! arrival_rate = 2.0                   # serve: queries per simulated ms
+//!                                      #  (> 0 switches on the scheduler)
+//! queue_cap  = 64                      # serve: admission-queue bound
+//! queue_policy = drop                  # drop | block at a full queue
 //! ```
 
 use crate::algorithms::AlgoKind;
@@ -144,6 +152,22 @@ pub fn parse_positive(v: &str, what: &str) -> Result<usize> {
         .ok_or_else(|| Error::Config(format!("{what} expects a positive integer, got {v:?}")))
 }
 
+/// Parse and validate a comma-separated device list (the `devices`
+/// config key and the CLI's `--devices`) into trimmed preset names —
+/// every name is checked against [`crate::sim::DeviceSpec::by_name`]
+/// here, once, so config parsing, flag handling and
+/// [`ExperimentConfig::device_pool`] all share one validation site.
+pub fn parse_device_names(v: &str) -> Result<Vec<String>> {
+    let names: Vec<String> = v.split(',').map(|s| s.trim().to_string()).collect();
+    if names.is_empty() {
+        return Err(Error::Config("devices expects at least one name".into()));
+    }
+    for name in &names {
+        crate::sim::DeviceSpec::by_name(name)?;
+    }
+    Ok(names)
+}
+
 /// Parse an adaptive-policy name (the `adaptive_policy` config key and the
 /// CLI's `--adaptive-policy`).
 pub fn parse_adaptive_policy(s: &str) -> Result<crate::adaptive::AdaptivePolicyKind> {
@@ -172,8 +196,22 @@ pub struct ExperimentConfig {
     pub params: StrategyParams,
     /// Queries per serving batch (`serve` subcommand).
     pub batch_size: usize,
-    /// Simulated devices each serving batch shards across.
+    /// Simulated devices each serving batch shards across (used when
+    /// `devices` is not given: that many default K20c shards).
     pub shards: usize,
+    /// Explicit per-shard device presets (heterogeneous pools); overrides
+    /// `shards` when non-empty.
+    pub devices: Vec<String>,
+    /// Concurrent queries one shard's batch engine carries (the merged
+    /// worklist grows one tag word per 64).
+    pub max_batch: usize,
+    /// Mean arrival rate of the continuous driver, queries per simulated
+    /// millisecond. `0` keeps the legacy pre-materialized batch mode.
+    pub arrival_rate: f64,
+    /// Bound of the scheduler's admission queue.
+    pub queue_cap: usize,
+    /// Overflow policy at a full admission queue.
+    pub queue_policy: crate::serving::OverflowPolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -192,6 +230,11 @@ impl Default for ExperimentConfig {
             params: StrategyParams::default(),
             batch_size: 8,
             shards: 1,
+            devices: Vec::new(),
+            max_batch: crate::serving::MAX_QUERIES_PER_SHARD,
+            arrival_rate: 0.0,
+            queue_cap: 64,
+            queue_policy: crate::serving::OverflowPolicy::Drop,
         }
     }
 }
@@ -290,6 +333,21 @@ impl ExperimentConfig {
                 }
                 "batch_size" => cfg.batch_size = parse_positive(&v, "batch_size")?,
                 "shards" => cfg.shards = parse_positive(&v, "shards")?,
+                "devices" => cfg.devices = parse_device_names(&v)?,
+                "max_batch" => cfg.max_batch = parse_positive(&v, "max_batch")?,
+                "arrival_rate" => {
+                    cfg.arrival_rate = v
+                        .parse()
+                        .ok()
+                        .filter(|r: &f64| r.is_finite() && *r >= 0.0)
+                        .ok_or_else(|| {
+                            Error::Config(format!("bad arrival_rate {v:?} (queries/ms, >= 0)"))
+                        })?
+                }
+                "queue_cap" => cfg.queue_cap = parse_positive(&v, "queue_cap")?,
+                "queue_policy" => {
+                    cfg.queue_policy = crate::serving::OverflowPolicy::parse(&v)?
+                }
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
         }
@@ -299,6 +357,19 @@ impl ExperimentConfig {
     /// Parse from a file.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
         Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Resolve the serving device pool: the explicit `devices` list when
+    /// given, else `shards` copies of the default K20c.
+    pub fn device_pool(&self) -> Result<Vec<crate::sim::DeviceSpec>> {
+        if self.devices.is_empty() {
+            Ok(vec![crate::sim::DeviceSpec::k20c(); self.shards.max(1)])
+        } else {
+            self.devices
+                .iter()
+                .map(|name| crate::sim::DeviceSpec::by_name(name))
+                .collect()
+        }
     }
 
     /// Expand into the individual runs.
@@ -425,10 +496,41 @@ mod tests {
         let cfg = ExperimentConfig::parse("").unwrap();
         assert_eq!(cfg.batch_size, 8);
         assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.max_batch, 64);
+        assert_eq!(cfg.arrival_rate, 0.0);
+        assert_eq!(cfg.queue_cap, 64);
+        assert_eq!(cfg.queue_policy, crate::serving::OverflowPolicy::Drop);
         let cfg = ExperimentConfig::parse("batch_size = 16\nshards = 4\n").unwrap();
         assert_eq!(cfg.batch_size, 16);
         assert_eq!(cfg.shards, 4);
         assert!(ExperimentConfig::parse("batch_size = 0").is_err());
         assert!(ExperimentConfig::parse("shards = zero").is_err());
+    }
+
+    #[test]
+    fn parses_scheduler_keys_and_device_pools() {
+        let cfg = ExperimentConfig::parse(
+            "devices = k20c, k40 ,gtx680\nmax_batch = 150\narrival_rate = 2.5\n\
+             queue_cap = 12\nqueue_policy = block\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.devices, vec!["k20c", "k40", "gtx680"]);
+        assert_eq!(cfg.max_batch, 150);
+        assert_eq!(cfg.arrival_rate, 2.5);
+        assert_eq!(cfg.queue_cap, 12);
+        assert_eq!(cfg.queue_policy, crate::serving::OverflowPolicy::Block);
+        let pool = cfg.device_pool().unwrap();
+        assert_eq!(pool.len(), 3);
+        assert_eq!(pool[1].name, "k40");
+        // `shards` drives the pool only when `devices` is absent.
+        let homog = ExperimentConfig::parse("shards = 3").unwrap();
+        let pool = homog.device_pool().unwrap();
+        assert_eq!(pool.len(), 3);
+        assert!(pool.iter().all(|d| d.name == "k20c"));
+        assert!(ExperimentConfig::parse("devices = h100").is_err());
+        assert!(ExperimentConfig::parse("arrival_rate = -1").is_err());
+        assert!(ExperimentConfig::parse("queue_policy = spill").is_err());
+        assert!(ExperimentConfig::parse("queue_cap = 0").is_err());
+        assert!(ExperimentConfig::parse("max_batch = 0").is_err());
     }
 }

@@ -91,7 +91,7 @@ pub fn fig_serving(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Servin
 
         let cfg = ServeConfig {
             strategy: StrategyKind::AD,
-            device: dev.clone(),
+            devices: vec![dev.clone()],
             enforce_budget: opts.enforce_budget,
             ..Default::default()
         };

@@ -40,10 +40,16 @@
 //!
 //! The [`serving`] layer batches many concurrent queries over one shared
 //! CSR: per batch iteration a single frontier inspection and a single AD
-//! policy decision cover every query (bitmask-tagged merged worklist), and
-//! batches shard across simulated devices. Every batched run can replay
-//! its queries through the single-query engine as a differential oracle
-//! (`serve` CLI subcommand, `figserve` figure, `benches/serving.rs`).
+//! policy decision cover every query (multi-word bitmask-tagged merged
+//! worklist — one tag word per 64 queries, so batches are not capped at
+//! 64), and batches shard across simulated devices, heterogeneous
+//! `DeviceSpec`s included. In front sits an admission-controlled
+//! scheduler ([`serving::Scheduler`]): continuous seeded arrivals, a
+//! bounded FIFO queue with a drop/block overflow policy, and load-aware
+//! placement on a deterministic virtual clock (`figqueue` figure). Every
+//! batched run can replay its queries through the single-query engine as
+//! a differential oracle (`serve` CLI subcommand, `figserve` figure,
+//! `benches/serving.rs`).
 //!
 //! Underneath all of it sits the [`arena`] subsystem: a scratch buffer
 //! pool threaded through [`coordinator::ExecCtx`] plus a graph-keyed

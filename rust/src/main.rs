@@ -9,10 +9,14 @@
 //!                      [--no-chunking] [--json]
 //! lonestar-lb serve    [--config F] [--suite NAME | --graph FILE | --gen SPEC]
 //!                      [--queries N] [--batch-size N] [--shards N]
+//!                      [--devices k20c,k40,...] [--max-batch N]
+//!                      [--arrival-rate Q_PER_MS] [--queue-cap N]
+//!                      [--queue-policy drop|block]
 //!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
 //!                      [--adaptive-policy P] [--scale S] [--seed N]
 //!                      [--enforce-budget] [--verify] [--json]
-//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|all]
+//! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|
+//!                       figqueue|all]
 //!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
 //! lonestar-lb generate NAME OUT [--scale S] [--seed N]
 //! lonestar-lb inspect  FILE
@@ -92,6 +96,20 @@ impl Args {
                 .map_err(|_| Error::Config(format!("--{key} expects a number, got {v:?}"))),
         }
     }
+
+    fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .map(Some)
+                .ok_or_else(|| {
+                    Error::Config(format!("--{key} expects a non-negative number, got {v:?}"))
+                }),
+        }
+    }
 }
 
 const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runtime-info> [options]
@@ -102,10 +120,12 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --xla --artifacts DIR --enforce-budget --no-chunking --json
   serve        --suite NAME | --graph FILE | --gen SPEC | --config FILE
                --queries N --batch-size N --shards N
+               --devices k20c,k40,gtx680 --max-batch N
+               --arrival-rate Q_PER_MS --queue-cap N --queue-policy drop|block
                --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
                --adaptive-policy P --scale S --seed N
                --enforce-budget --verify --json
-  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|all]
+  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|figqueue|all]
                --scale S --seed N --out FILE.json --no-budget
   generate     NAME OUT --scale S --seed N
   inspect      FILE
@@ -288,6 +308,21 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     if let Some(s) = args.get("shards") {
         cfg.shards = lonestar_lb::config::parse_positive(s, "--shards")?;
     }
+    if let Some(d) = args.get("devices") {
+        cfg.devices = lonestar_lb::config::parse_device_names(d)?;
+    }
+    if let Some(m) = args.get("max-batch") {
+        cfg.max_batch = lonestar_lb::config::parse_positive(m, "--max-batch")?;
+    }
+    if let Some(rate) = args.get_f64("arrival-rate")? {
+        cfg.arrival_rate = rate;
+    }
+    if let Some(c) = args.get("queue-cap") {
+        cfg.queue_cap = lonestar_lb::config::parse_positive(c, "--queue-cap")?;
+    }
+    if let Some(p) = args.get("queue-policy") {
+        cfg.queue_policy = lonestar_lb::serving::OverflowPolicy::parse(p)?;
+    }
     if let Some(p) = args.get("adaptive-policy") {
         cfg.params.adaptive_policy = lonestar_lb::config::parse_adaptive_policy(p)?;
     }
@@ -307,40 +342,58 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
 
     let g = Arc::new(cfg.graph.load(cfg.scale, cfg.seed)?);
     writeln!(out, "graph: {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
-    writeln!(
-        out,
-        "serving {total_queries} queries, batch_size {}, {} shard(s), strategy {}",
-        cfg.batch_size,
-        cfg.shards,
-        strategy.label()
-    )?;
-
-    let queries = lonestar_lb::serving::synthetic_queries(&g, total_queries, bfs_fraction, cfg.seed);
+    let devices = cfg.device_pool()?;
     let serve_cfg = lonestar_lb::serving::ServeConfig {
         strategy,
         params: cfg.params.clone(),
         enforce_budget: cfg.enforce_budget,
-        shards: cfg.shards,
+        devices,
+        max_batch: cfg.max_batch,
         ..Default::default()
     };
-    let dev = serve_cfg.device.clone();
 
+    if cfg.arrival_rate > 0.0 {
+        // Admission-controlled scheduler: a continuous arrival stream at
+        // `--arrival-rate` queries per simulated ms against the bounded
+        // queue, load-aware-placed over the (possibly heterogeneous)
+        // device pool.
+        return cmd_serve_stream(args, out, &g, &cfg, serve_cfg, total_queries, bfs_fraction);
+    }
+
+    writeln!(
+        out,
+        "serving {total_queries} queries, batch_size {}, {} shard(s) [{}], strategy {}",
+        cfg.batch_size,
+        serve_cfg.shards(),
+        serve_cfg
+            .devices
+            .iter()
+            .map(|d| d.name)
+            .collect::<Vec<_>>()
+            .join(","),
+        strategy.label()
+    )?;
+
+    let queries = lonestar_lb::serving::synthetic_queries(&g, total_queries, bfs_fraction, cfg.seed);
     let mut json_rows = Vec::new();
     let mut grand = Vec::new();
     // Batches run back-to-back, so the stream's wall-clock is the *sum* of
-    // per-batch walls (each batch wall = its slowest shard).
-    let mut wall_cycles = 0u64;
+    // per-batch walls (each batch wall = its slowest shard, timed on that
+    // shard's own device clock).
+    let mut wall_ms = 0.0f64;
+    let mut total_ms = 0.0f64;
     for (bi, chunk) in queries.chunks(cfg.batch_size).enumerate() {
         let report = lonestar_lb::serving::serve(&g, chunk, &serve_cfg)?;
         let totals = report.totals();
-        wall_cycles += totals.wall_cycles;
+        wall_ms += report.wall_ms();
+        total_ms += report.total_ms();
         writeln!(
             out,
             "batch {bi:>3}: {:>3} queries  wall {:>9.3} ms  total {:>9.3} ms  \
              inspect {:>4}  decide {:>4}  switches {:>3}",
             report.query_count(),
-            totals.wall_ms(&dev),
-            totals.total_ms(&dev),
+            report.wall_ms(),
+            report.total_ms(),
             totals.inspector_passes,
             totals.policy_decisions,
             totals.strategy_switches,
@@ -360,20 +413,112 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
         for shard in &report.shards {
             grand.push(shard.metrics.clone());
         }
-        json_rows.push(report.to_json(&dev));
+        json_rows.push(report.to_json());
     }
     let totals = lonestar_lb::serving::aggregate(grand.iter());
     writeln!(
         out,
         "total: {} queries  wall {:.3} ms  total {:.3} ms  inspect {}  decide {}",
         queries.len(),
-        dev.cycles_to_ms(wall_cycles),
-        totals.total_ms(&dev),
+        wall_ms,
+        total_ms,
         totals.inspector_passes,
         totals.policy_decisions,
     )?;
     if args.switch("json") {
         writeln!(out, "{}", Json::Arr(json_rows))?;
+    }
+    Ok(())
+}
+
+/// The scheduler path of `serve`: continuous seeded arrivals, bounded
+/// admission queue, least-outstanding-edges placement over the device
+/// pool, batches formed as capacity frees.
+fn cmd_serve_stream(
+    args: &Args,
+    out: &mut impl Write,
+    g: &Arc<lonestar_lb::graph::Csr>,
+    cfg: &ExperimentConfig,
+    serve_cfg: lonestar_lb::serving::ServeConfig,
+    total_queries: usize,
+    bfs_fraction: f64,
+) -> Result<()> {
+    // queries/ms → mean inter-arrival gap on the ps virtual clock.
+    let mean_gap_ps = (1e9 / cfg.arrival_rate).round().max(1.0) as u64;
+    writeln!(
+        out,
+        "scheduling {total_queries} arrivals at {} q/ms (queue cap {}, {} on overflow, \
+         max_batch {}) over {} shard(s) [{}], strategy {}",
+        cfg.arrival_rate,
+        cfg.queue_cap,
+        cfg.queue_policy.label(),
+        serve_cfg.max_batch,
+        serve_cfg.shards(),
+        serve_cfg
+            .devices
+            .iter()
+            .map(|d| d.name)
+            .collect::<Vec<_>>()
+            .join(","),
+        serve_cfg.strategy.label()
+    )?;
+    let strategy = serve_cfg.strategy;
+    let params = serve_cfg.params.clone();
+    let sched_cfg = lonestar_lb::serving::SchedulerConfig {
+        serve: serve_cfg,
+        queue_cap: cfg.queue_cap,
+        overflow: cfg.queue_policy,
+        collect_distances: true,
+    };
+    let arrivals = lonestar_lb::serving::synthetic_arrivals(
+        g,
+        total_queries,
+        bfs_fraction,
+        mean_gap_ps,
+        cfg.seed,
+    );
+    let cache = lonestar_lb::arena::GraphCache::new();
+    let report = lonestar_lb::serving::serve_stream(g, arrivals, &sched_cfg, &cache)?;
+
+    for shard in &report.shards {
+        writeln!(
+            out,
+            "shard {:>2} [{:>7}]: {:>4} queries  {:>9.3} ms on-device",
+            shard.shard,
+            shard.device.name,
+            shard.queries.len(),
+            shard.total_ms(),
+        )?;
+    }
+    writeln!(
+        out,
+        "arrived {}  admitted {}  dropped {}  served {}  queue_peak {}  batches {}",
+        report.arrived,
+        report.admitted,
+        report.dropped.len(),
+        report.served(),
+        report.queue_peak,
+        report.batches,
+    )?;
+    writeln!(
+        out,
+        "latency: mean {:.3} ms  p95 {:.3} ms  wait {} ref-cycles  stream wall {:.3} ms",
+        report.mean_latency_ms(),
+        report.p95_latency_ms(),
+        report.wait_cycles,
+        report.wall_ms(),
+    )?;
+    if args.switch("verify") {
+        // Served queries replay bit-identically through the single-query
+        // engine; dropped queries are excluded (they were never answered)
+        // but stay counted in the report above.
+        for shard in &report.shards {
+            lonestar_lb::serving::replay_single(g, &shard.queries, strategy, &params, &shard.dists)?;
+        }
+        writeln!(out, "differential replay OK ({} served)", report.served())?;
+    }
+    if args.switch("json") {
+        writeln!(out, "{}", report.to_json())?;
     }
     Ok(())
 }
@@ -448,6 +593,13 @@ fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
         payload.insert(
             "figserve".into(),
             Json::Arr(rows.iter().map(|r| r.to_json(&opts.device)).collect()),
+        );
+    }
+    if all || which == "figqueue" || which == "queue" {
+        let rows = figures::fig_queue(&opts, out)?;
+        payload.insert(
+            "figqueue".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
         );
     }
     if payload.is_empty() && !all {

@@ -38,7 +38,7 @@ use crate::worklist::hierarchy::SubList;
 use crate::worklist::NodeWorklist;
 use std::sync::Arc;
 
-use super::merged::{MergedBuilder, MergedWorklist, MAX_QUERIES_PER_SHARD};
+use super::merged::{MergedBuilder, MergedWorklist, MAX_SUPPORTED_QUERIES_PER_SHARD};
 use super::query::Query;
 
 // Device-memory labels of the batch engine's allocations.
@@ -88,6 +88,14 @@ pub struct QueryBatch {
     /// The mode the previous iteration ran in (AD hysteresis/migration).
     mode: StrategyKind,
     states: Vec<QueryState>,
+    /// Retired per-query states parked between batches: a smaller batch
+    /// [`QueryBatch::reset`] leaves surplus states (and their warm dist /
+    /// frontier capacity) here for the next larger one.
+    parked: Vec<QueryState>,
+    /// Σ `SRV_DIST` bytes currently charged (released whole by
+    /// [`QueryBatch::retire`] so a persistent context's accounting stays
+    /// balanced across batches).
+    dist_charged: u64,
     /// Reusable dedup bitset for [`QueryBatch::advance`] (queries step
     /// sequentially, so one buffer serves the whole batch); only touched
     /// words are cleared between uses, as in
@@ -110,9 +118,11 @@ pub struct QueryBatch {
 }
 
 impl QueryBatch {
-    /// New batch over `graph`. At most [`MAX_QUERIES_PER_SHARD`] queries
-    /// (the merged worklist's tag is a `u64` bitmask); every source must be
-    /// in range.
+    /// New batch over `graph`. At most
+    /// [`MAX_SUPPORTED_QUERIES_PER_SHARD`] queries (the merged worklist's
+    /// tag grows one `u64` word per 64 slots); every source must be in
+    /// range. The per-shard *policy* cap is the serving config's
+    /// `max_batch`, enforced by the shard/scheduler layer.
     pub fn new(
         graph: Arc<Csr>,
         queries: &[Query],
@@ -137,22 +147,7 @@ impl QueryBatch {
         params: StrategyParams,
         cache: GraphCache,
     ) -> Result<Self> {
-        if queries.len() > MAX_QUERIES_PER_SHARD {
-            return Err(Error::Config(format!(
-                "batch of {} queries exceeds the {MAX_QUERIES_PER_SHARD}-query shard limit",
-                queries.len()
-            )));
-        }
-        for q in queries {
-            if q.source as usize >= graph.num_nodes() {
-                return Err(Error::Config(format!(
-                    "query {}: source {} out of range (n = {})",
-                    q.id,
-                    q.source,
-                    graph.num_nodes()
-                )));
-            }
-        }
+        Self::validate(&graph, queries)?;
         let policy = if strategy == StrategyKind::AD {
             Some(build_policy(params.adaptive_policy))
         } else {
@@ -190,6 +185,8 @@ impl QueryBatch {
             coo_charged: false,
             mode: StrategyKind::BS,
             states,
+            parked: Vec::new(),
+            dist_charged: 0,
             seen: Vec::new(),
             builder: MergedBuilder::new(),
             merged_buf: MergedWorklist::default(),
@@ -200,11 +197,71 @@ impl QueryBatch {
         })
     }
 
+    /// Source / size validation shared by [`QueryBatch::with_cache`] and
+    /// [`QueryBatch::reset`]. The per-shard *policy* limit (`max_batch`)
+    /// is enforced by the callers that own a config — here only the
+    /// structural mask ceiling applies.
+    fn validate(graph: &Csr, queries: &[Query]) -> Result<()> {
+        if queries.len() > MAX_SUPPORTED_QUERIES_PER_SHARD {
+            return Err(Error::Config(format!(
+                "batch of {} queries exceeds the {MAX_SUPPORTED_QUERIES_PER_SHARD}-query \
+                 mask ceiling",
+                queries.len()
+            )));
+        }
+        for q in queries {
+            if q.source as usize >= graph.num_nodes() {
+                return Err(Error::Config(format!(
+                    "query {}: source {} out of range (n = {})",
+                    q.id,
+                    q.source,
+                    graph.num_nodes()
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Charge shared storage and seed every query's frontier. The dist
     /// arrays and the dedup bitmap are drawn from the context's scratch
     /// arena, so a caller that [`QueryBatch::recycle`]s a retired batch
     /// serves the next one without re-allocating them.
     pub fn init(&mut self, ctx: &mut ExecCtx) -> Result<()> {
+        self.seed(ctx)
+    }
+
+    /// Re-arm a retired batch engine for a new query set, reusing every
+    /// internal buffer (per-slot dist arrays, frontiers, merge scratch,
+    /// the dedup bitmap). This is the serving scheduler's steady-state
+    /// path: one engine per shard, [`QueryBatch::retire`]d and reset per
+    /// batch, allocating nothing once its high-water batch size has been
+    /// seen. Call [`QueryBatch::retire`] first when a previous batch ran
+    /// on the same context, or the memory accounting double-charges.
+    pub fn reset(&mut self, ctx: &mut ExecCtx, queries: &[Query]) -> Result<()> {
+        Self::validate(&self.graph, queries)?;
+        while self.states.len() > queries.len() {
+            self.parked.push(self.states.pop().expect("len checked"));
+        }
+        while self.states.len() < queries.len() {
+            self.states.push(self.parked.pop().unwrap_or_else(|| QueryState {
+                query: queries[0],
+                dist: Vec::new(),
+                frontier: NodeWorklist::new(),
+                spare: NodeWorklist::new(),
+                iterations: 0,
+            }));
+        }
+        for (st, &query) in self.states.iter_mut().zip(queries) {
+            st.query = query;
+            st.iterations = 0;
+        }
+        self.seed(ctx)
+    }
+
+    /// Shared (re)initialization: charge the batch's resident storage and
+    /// seed every query. Per-slot buffers are reused when present, drawn
+    /// from the arena when not.
+    fn seed(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         let g = self.graph.clone();
         let n = g.num_nodes();
         // One CSR for the whole batch, and one MDT histogram pass unless
@@ -217,17 +274,52 @@ impl QueryBatch {
         }
         for st in &mut self.states {
             ctx.mem.charge(SRV_DIST, 4 * n as u64)?;
-            let mut dist = ctx.scratch.take_u32();
-            dist.resize(n, crate::INF);
-            dist[st.query.source as usize] = 0;
-            st.dist = dist;
+            self.dist_charged += 4 * n as u64;
+            if st.dist.capacity() == 0 {
+                st.dist = ctx.scratch.take_u32();
+            }
+            st.dist.clear();
+            st.dist.resize(n, crate::INF);
+            st.dist[st.query.source as usize] = 0;
             st.frontier.clear();
             st.frontier.push(st.query.source, g.degree(st.query.source));
             ctx.mem.charge(SRV_WL, 8 * st.frontier.len() as u64)?;
+            st.spare.clear();
         }
-        self.seen = ctx.scratch.take_u64();
+        if self.seen.capacity() == 0 {
+            self.seen = ctx.scratch.take_u64();
+        }
+        self.seen.clear();
         self.seen.resize(n.div_ceil(64), 0);
+        // Mode and per-batch residency restart with the new query set; the
+        // graph-keyed cache still exempts the rebuild *kernels*.
+        self.mode = StrategyKind::BS;
+        self.coo_charged = false;
+        self.split = None;
         Ok(())
+    }
+
+    /// Release every resident byte this batch charged to `ctx` (CSR,
+    /// per-query dist arrays, worklists, COO / split residency), keeping
+    /// the internal buffers for a later [`QueryBatch::reset`]. Call after
+    /// extracting results when the context outlives the batch — the
+    /// serving scheduler does, between every batch of a shard's stream.
+    pub fn retire(&mut self, ctx: &mut ExecCtx) {
+        let g = &self.graph;
+        ctx.mem.release(SRV_CSR, g.memory_bytes());
+        ctx.mem.release(SRV_DIST, self.dist_charged);
+        self.dist_charged = 0;
+        for st in &self.states {
+            ctx.mem.release(SRV_WL, 8 * st.frontier.len() as u64);
+        }
+        if self.coo_charged {
+            ctx.mem.release(SRV_COO, 12 * g.num_edges() as u64);
+            self.coo_charged = false;
+        }
+        if let Some(art) = self.split.take() {
+            ctx.mem.release(SRV_NS_CSR, art.split.graph.memory_bytes());
+            ctx.mem.release(SRV_NS_MAP, 8 * g.num_nodes() as u64);
+        }
     }
 
     /// Return the batch's pooled buffers (per-query dist arrays, the dedup
@@ -235,7 +327,7 @@ impl QueryBatch {
     /// been extracted; the next batch served on the same context then
     /// starts warm.
     pub fn recycle(self, ctx: &mut ExecCtx) {
-        for st in self.states {
+        for st in self.states.into_iter().chain(self.parked) {
             ctx.scratch.put_u32(st.dist);
         }
         ctx.scratch.put_u64(self.seen);
@@ -297,7 +389,9 @@ impl QueryBatch {
         // decide — skip building (and paying for) it entirely.
         let use_merged = self.strategy == StrategyKind::AD;
         if use_merged {
-            self.builder.begin();
+            // Tag stride follows the live batch size: ≤ 64 queries keep
+            // the single-word layout, wider batches grow a word per 64.
+            self.builder.begin_with_capacity(self.states.len());
             for &i in &self.active {
                 self.builder.add(i, &self.states[i].frontier);
             }
@@ -461,6 +555,7 @@ impl QueryBatch {
         if n_split > n {
             for st in &mut self.states {
                 ctx.mem.charge(SRV_DIST, 4 * (n_split - n) as u64)?;
+                self.dist_charged += 4 * (n_split - n) as u64;
                 st.dist.resize(n_split, crate::INF);
             }
         }
@@ -951,7 +1046,7 @@ mod tests {
     #[test]
     fn rejects_oversized_and_out_of_range() {
         let g = Arc::new(erdos_renyi(50, 200, 5, 1).unwrap());
-        let many = queries(&vec![0; MAX_QUERIES_PER_SHARD + 1], AlgoKind::Bfs);
+        let many = queries(&vec![0; MAX_SUPPORTED_QUERIES_PER_SHARD + 1], AlgoKind::Bfs);
         assert!(QueryBatch::new(
             g.clone(),
             &many,
@@ -961,5 +1056,59 @@ mod tests {
         .is_err());
         let bad = queries(&[10_000], AlgoKind::Bfs);
         assert!(QueryBatch::new(g, &bad, StrategyKind::BS, StrategyParams::default()).is_err());
+    }
+
+    #[test]
+    fn over_64_queries_match_oracles_via_multiword_tags() {
+        // 70 concurrent queries on one shard: the tag must spill into a
+        // second mask word and distances must still be exact.
+        let g = Arc::new(erdos_renyi(120, 500, 7, 8).unwrap());
+        let sources: Vec<NodeId> = (0..70).map(|i| (i * 7) % 120).collect();
+        let qs = queries(&sources, AlgoKind::Bfs);
+        for strategy in [StrategyKind::AD, StrategyKind::BS] {
+            let (dists, _) = batch_run(&g, &qs, strategy);
+            for (q, d) in qs.iter().zip(&dists) {
+                assert_eq!(
+                    d,
+                    &traversal::bfs_levels(&g, q.source),
+                    "{strategy} query {}",
+                    q.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reset_reuses_engine_across_batches() {
+        let g = Arc::new(erdos_renyi(150, 600, 9, 11).unwrap());
+        let dev = DeviceSpec::k20c();
+        let mut ctx = ExecCtx::new(&dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        let mut engine =
+            QueryBatch::new(g.clone(), &[], StrategyKind::AD, StrategyParams::default()).unwrap();
+        let batches: [&[NodeId]; 3] = [&[0, 5, 50], &[7, 8], &[3, 9, 20, 40]];
+        for sources in batches {
+            let qs = queries(sources, AlgoKind::Sssp);
+            engine.reset(&mut ctx, &qs).unwrap();
+            engine.run(&mut ctx, 1_000_000).unwrap();
+            for (i, q) in qs.iter().enumerate() {
+                assert_eq!(
+                    engine.distances(i),
+                    traversal::dijkstra(&g, q.source),
+                    "query {} after engine reuse",
+                    q.id
+                );
+            }
+            let before = ctx.mem.current();
+            engine.retire(&mut ctx);
+            assert!(
+                ctx.mem.current() < before,
+                "retire must release the batch's resident bytes"
+            );
+        }
+        assert_eq!(
+            ctx.mem.current(),
+            0,
+            "a fully retired stream leaves nothing charged"
+        );
     }
 }

@@ -1,11 +1,19 @@
 //! The bitmask-tagged merged worklist shared by every query of a batch.
 //!
-//! A batch of up to [`MAX_QUERIES_PER_SHARD`] concurrent queries keeps one
-//! *merged* frontier: the union of the per-query node frontiers, each entry
-//! tagged with a `u64` bitmask saying which queries hold that node active.
-//! The point is amortization — the [`crate::adaptive::FrontierInspector`]
-//! pass and the AD policy decision read the merged degree array once per
-//! batch iteration instead of once per query per iteration.
+//! A batch of concurrent queries keeps one *merged* frontier: the union of
+//! the per-query node frontiers, each entry tagged with a bitmask saying
+//! which queries hold that node active. The point is amortization — the
+//! [`crate::adaptive::FrontierInspector`] pass and the AD policy decision
+//! read the merged degree array once per batch iteration instead of once
+//! per query per iteration.
+//!
+//! The tag is **multi-word**: node `i`'s mask occupies `stride` consecutive
+//! `u64` words of one flat array (`words[i*stride .. (i+1)*stride]`), where
+//! `stride = ceil(capacity / 64)`. A batch of ≤ 64 queries keeps the
+//! original single-word layout (`stride == 1`); larger batches grow one
+//! word per 64 slots, so [`MAX_QUERIES_PER_SHARD`] is a *default* capacity
+//! (the `max_batch` config knob raises it), not a structural limit — the
+//! hard ceiling is [`MAX_SUPPORTED_QUERIES_PER_SHARD`].
 //!
 //! Like the single-query representations ([`crate::adaptive::migrate`]),
 //! the merged list converts losslessly to an exploded per-edge form and
@@ -18,54 +26,110 @@ use crate::graph::{Csr, NodeId};
 use crate::worklist::NodeWorklist;
 use std::collections::BTreeMap;
 
-/// Maximum queries one shard's batch can carry: the tag is a `u64` bitmask,
-/// one bit per query slot.
+/// Default queries per shard batch: one `u64` tag word. The serving
+/// scheduler's `max_batch` knob raises it (one extra mask word per 64
+/// slots) up to [`MAX_SUPPORTED_QUERIES_PER_SHARD`].
 pub const MAX_QUERIES_PER_SHARD: usize = 64;
+
+/// Hard ceiling on per-shard batch capacity — 64 mask words. A backstop
+/// against pathological configs, far above any simulated device's worth of
+/// concurrent traversals.
+pub const MAX_SUPPORTED_QUERIES_PER_SHARD: usize = 4096;
+
+/// Mask words needed to tag `capacity` query slots.
+pub fn mask_words_for(capacity: usize) -> usize {
+    capacity.div_ceil(64).max(1)
+}
+
+#[inline]
+fn word_bit(slot: usize) -> (usize, u64) {
+    (slot / 64, 1u64 << (slot % 64))
+}
 
 /// Union of per-query node frontiers with a per-node query bitmask, sorted
 /// by node id (deterministic regardless of per-query discovery order).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MergedWorklist {
     nodes: Vec<NodeId>,
     degrees: Vec<u32>,
-    masks: Vec<u64>,
+    /// Stride-`stride` flat tag words: node `i`'s mask is
+    /// `words[i*stride .. (i+1)*stride]`.
+    words: Vec<u64>,
+    stride: usize,
     /// Running Σ degrees, maintained while the list is built so the
     /// per-batch-iteration inspection pass gets its edge total in O(1)
     /// (mirrors [`NodeWorklist::total_edges`]).
     edge_sum: u64,
 }
 
-/// Reusable build scratch for [`MergedWorklist`]: `(node, tag)` pairs
+impl Default for MergedWorklist {
+    fn default() -> Self {
+        MergedWorklist {
+            nodes: Vec::new(),
+            degrees: Vec::new(),
+            words: Vec::new(),
+            stride: 1,
+            edge_sum: 0,
+        }
+    }
+}
+
+/// Reusable build scratch for [`MergedWorklist`]: `(node, slot)` pairs
 /// accumulated per iteration, sorted in place and OR-folded into the
 /// output. Once warm, rebuilding the merged list allocates nothing — the
 /// serving engine's per-iteration path ([`crate::serving::batch`]) keeps
 /// one builder for the life of the batch.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct MergedBuilder {
-    pairs: Vec<(NodeId, u64)>,
+    pairs: Vec<(NodeId, u32)>,
+    capacity: usize,
+}
+
+impl Default for MergedBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MergedBuilder {
-    /// Empty builder.
+    /// Empty builder at the default 64-slot capacity.
     pub fn new() -> Self {
-        Self::default()
+        MergedBuilder {
+            pairs: Vec::new(),
+            capacity: MAX_QUERIES_PER_SHARD,
+        }
     }
 
-    /// Start a new merge (clears the pair scratch, keeps its capacity).
+    /// Start a new merge (clears the pair scratch, keeps its capacity and
+    /// the current slot capacity).
     pub fn begin(&mut self) {
         self.pairs.clear();
     }
 
+    /// Start a new merge that may carry up to `capacity` query slots —
+    /// the tag stride becomes `ceil(capacity / 64)` words.
+    pub fn begin_with_capacity(&mut self, capacity: usize) {
+        assert!(
+            capacity <= MAX_SUPPORTED_QUERIES_PER_SHARD,
+            "batch capacity {capacity} exceeds the supported \
+             {MAX_SUPPORTED_QUERIES_PER_SHARD}-query ceiling"
+        );
+        self.capacity = capacity.max(1);
+        self.pairs.clear();
+    }
+
     /// Add one query's frontier under `slot`'s tag bit. Slots must be
-    /// below [`MAX_QUERIES_PER_SHARD`].
+    /// below the capacity set by [`MergedBuilder::begin_with_capacity`]
+    /// (default [`MAX_QUERIES_PER_SHARD`]).
     pub fn add(&mut self, slot: usize, wl: &NodeWorklist) {
         assert!(
-            slot < MAX_QUERIES_PER_SHARD,
-            "query slot {slot} exceeds the {MAX_QUERIES_PER_SHARD}-wide tag mask"
+            slot < self.capacity,
+            "query slot {slot} exceeds the {}-wide tag mask",
+            self.capacity
         );
-        let bit = 1u64 << slot;
+        let slot = slot as u32;
         for &n in wl.nodes() {
-            self.pairs.push((n, bit));
+            self.pairs.push((n, slot));
         }
     }
 
@@ -75,31 +139,45 @@ impl MergedBuilder {
     /// on `Copy` pairs allocates nothing, and a sorted fold produces
     /// exactly the node-id order the `BTreeMap`-based builder used to.
     pub fn finish_into(&mut self, g: &Csr, out: &mut MergedWorklist) {
-        self.pairs.sort_unstable_by_key(|p| p.0);
+        self.pairs.sort_unstable();
+        let stride = mask_words_for(self.capacity);
         out.nodes.clear();
         out.degrees.clear();
-        out.masks.clear();
+        out.words.clear();
+        out.stride = stride;
         out.edge_sum = 0;
-        for &(n, bit) in &self.pairs {
-            if out.nodes.last() == Some(&n) {
-                *out.masks.last_mut().expect("parallel to nodes") |= bit;
-            } else {
+        for &(n, slot) in &self.pairs {
+            if out.nodes.last() != Some(&n) {
                 let d = g.degree(n);
                 out.nodes.push(n);
                 out.degrees.push(d);
-                out.masks.push(bit);
+                out.words.resize(out.words.len() + stride, 0);
                 out.edge_sum += d as u64;
             }
+            let (w, b) = word_bit(slot as usize);
+            let base = out.words.len() - stride;
+            out.words[base + w] |= b;
         }
     }
 }
 
 impl MergedWorklist {
-    /// Build from `(query slot, frontier)` pairs — the allocating
-    /// convenience wrapper around [`MergedBuilder`].
+    /// Build from `(query slot, frontier)` pairs at the default 64-slot
+    /// capacity — the allocating convenience wrapper around
+    /// [`MergedBuilder`].
     pub fn from_frontiers(g: &Csr, frontiers: &[(usize, &NodeWorklist)]) -> Self {
+        Self::from_frontiers_with_capacity(g, frontiers, MAX_QUERIES_PER_SHARD)
+    }
+
+    /// [`MergedWorklist::from_frontiers`] with an explicit slot capacity
+    /// (multi-word tags when `capacity > 64`).
+    pub fn from_frontiers_with_capacity(
+        g: &Csr,
+        frontiers: &[(usize, &NodeWorklist)],
+        capacity: usize,
+    ) -> Self {
         let mut b = MergedBuilder::new();
-        b.begin();
+        b.begin_with_capacity(capacity);
         for &(slot, wl) in frontiers {
             b.add(slot, wl);
         }
@@ -114,23 +192,37 @@ impl MergedWorklist {
     /// against and as a differential oracle for it (the builder must
     /// reproduce this output bit for bit).
     pub fn from_frontiers_btree(g: &Csr, frontiers: &[(usize, &NodeWorklist)]) -> Self {
-        let mut by_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+        Self::from_frontiers_btree_with_capacity(g, frontiers, MAX_QUERIES_PER_SHARD)
+    }
+
+    /// [`MergedWorklist::from_frontiers_btree`] with an explicit slot
+    /// capacity — the multi-word differential oracle.
+    pub fn from_frontiers_btree_with_capacity(
+        g: &Csr,
+        frontiers: &[(usize, &NodeWorklist)],
+        capacity: usize,
+    ) -> Self {
+        let stride = mask_words_for(capacity);
+        let mut by_node: BTreeMap<NodeId, Vec<u64>> = BTreeMap::new();
         for &(slot, wl) in frontiers {
             assert!(
-                slot < MAX_QUERIES_PER_SHARD,
-                "query slot {slot} exceeds the {MAX_QUERIES_PER_SHARD}-wide tag mask"
+                slot < capacity,
+                "query slot {slot} exceeds the {capacity}-wide tag mask"
             );
-            let bit = 1u64 << slot;
+            let (w, b) = word_bit(slot);
             for &n in wl.nodes() {
-                *by_node.entry(n).or_insert(0) |= bit;
+                by_node.entry(n).or_insert_with(|| vec![0; stride])[w] |= b;
             }
         }
-        let mut out = MergedWorklist::default();
+        let mut out = MergedWorklist {
+            stride,
+            ..Default::default()
+        };
         for (n, mask) in by_node {
             let d = g.degree(n);
             out.nodes.push(n);
             out.degrees.push(d);
-            out.masks.push(mask);
+            out.words.extend_from_slice(&mask);
             out.edge_sum += d as u64;
         }
         out
@@ -159,11 +251,22 @@ impl MergedWorklist {
         &self.degrees
     }
 
-    /// Query bitmasks parallel to [`nodes`].
-    ///
-    /// [`nodes`]: MergedWorklist::nodes
-    pub fn masks(&self) -> &[u64] {
-        &self.masks
+    /// Tag words per node (`ceil(capacity / 64)`).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Node `i`'s tag mask (`stride` words, bit `s % 64` of word `s / 64`
+    /// set ⇔ query slot `s` holds the node active).
+    pub fn mask_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// True when node `i`'s tag carries query `slot`'s bit.
+    #[inline]
+    pub fn has_slot(&self, i: usize, slot: usize) -> bool {
+        let (w, b) = word_bit(slot);
+        w < self.stride && self.words[i * self.stride + w] & b != 0
     }
 
     /// Total edges across the merged frontier (cached Σ degrees — O(1),
@@ -172,19 +275,23 @@ impl MergedWorklist {
         self.edge_sum
     }
 
-    /// Simulated device bytes: node id (4 B) + degree (4 B) + tag (8 B).
+    /// Simulated device bytes: node id (4 B) + degree (4 B) + tag words
+    /// (8 B × stride).
     pub fn memory_bytes(&self) -> u64 {
-        16 * self.nodes.len() as u64
+        (8 + 8 * self.stride as u64) * self.nodes.len() as u64
     }
 
     /// Extract one query's frontier (nodes whose tag carries `slot`'s bit),
     /// in merged (node-id) order, into caller-provided scratch (cleared
     /// first, capacity retained).
     pub fn query_frontier_into(&self, slot: usize, out: &mut NodeWorklist) {
-        let bit = 1u64 << slot;
+        let (w, b) = word_bit(slot);
         out.clear();
+        if w >= self.stride {
+            return;
+        }
         for i in 0..self.nodes.len() {
-            if self.masks[i] & bit != 0 {
+            if self.words[i * self.stride + w] & b != 0 {
                 out.push(self.nodes[i], self.degrees[i]);
             }
         }
@@ -201,26 +308,42 @@ impl MergedWorklist {
     /// Explode into the per-edge form (EP space): every outgoing edge of
     /// every merged node, tag duplicated per edge.
     pub fn to_edges(&self, g: &Csr) -> MergedEdgeFrontier {
-        let mut out = MergedEdgeFrontier::default();
+        let mut out = MergedEdgeFrontier {
+            stride: self.stride,
+            ..Default::default()
+        };
         for i in 0..self.nodes.len() {
             let n = self.nodes[i];
             let first = g.first_edge(n);
             for e in first..first + g.degree(n) {
                 out.srcs.push(n);
                 out.eids.push(e);
-                out.masks.push(self.masks[i]);
+                out.words.extend_from_slice(self.mask_words(i));
             }
         }
         out
     }
 }
 
-/// The merged frontier exploded to edge granularity, tags preserved.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// The merged frontier exploded to edge granularity, tags preserved
+/// (stride-`stride` words per edge, same layout as [`MergedWorklist`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MergedEdgeFrontier {
     srcs: Vec<NodeId>,
     eids: Vec<u32>,
-    masks: Vec<u64>,
+    words: Vec<u64>,
+    stride: usize,
+}
+
+impl Default for MergedEdgeFrontier {
+    fn default() -> Self {
+        MergedEdgeFrontier {
+            srcs: Vec::new(),
+            eids: Vec::new(),
+            words: Vec::new(),
+            stride: 1,
+        }
+    }
 }
 
 impl MergedEdgeFrontier {
@@ -245,25 +368,39 @@ impl MergedEdgeFrontier {
         &self.eids
     }
 
-    /// Query bitmasks parallel to the edges.
-    pub fn masks(&self) -> &[u64] {
-        &self.masks
+    /// Tag words per edge.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Edge `i`'s tag mask (`stride` words).
+    pub fn mask_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.stride..(i + 1) * self.stride]
     }
 
     /// Collapse back to the merged node form: distinct sources with their
     /// tags OR-folded. Exact inverse of [`MergedWorklist::to_edges`] up to
     /// zero-out-degree nodes (which contribute no edges).
     pub fn to_nodes(&self, g: &Csr) -> MergedWorklist {
-        let mut by_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+        let stride = self.stride;
+        let mut by_node: BTreeMap<NodeId, Vec<u64>> = BTreeMap::new();
         for i in 0..self.srcs.len() {
-            *by_node.entry(self.srcs[i]).or_insert(0) |= self.masks[i];
+            let mask = by_node
+                .entry(self.srcs[i])
+                .or_insert_with(|| vec![0; stride]);
+            for (w, &word) in mask.iter_mut().zip(self.mask_words(i)) {
+                *w |= word;
+            }
         }
-        let mut out = MergedWorklist::default();
+        let mut out = MergedWorklist {
+            stride,
+            ..Default::default()
+        };
         for (n, mask) in by_node {
             let d = g.degree(n);
             out.nodes.push(n);
             out.degrees.push(d);
-            out.masks.push(mask);
+            out.words.extend_from_slice(&mask);
             out.edge_sum += d as u64;
         }
         out
@@ -304,7 +441,10 @@ mod tests {
         let b = wl(&g, &[1, 4]);
         let m = MergedWorklist::from_frontiers(&g, &[(0, &a), (3, &b)]);
         assert_eq!(m.nodes(), &[0, 1, 4]);
-        assert_eq!(m.masks(), &[1, 1 | (1 << 3), 1 << 3]);
+        assert_eq!(m.stride(), 1);
+        assert_eq!(m.mask_words(0), &[1]);
+        assert_eq!(m.mask_words(1), &[1 | (1 << 3)]);
+        assert_eq!(m.mask_words(2), &[1 << 3]);
         assert_eq!(m.degrees(), &[3, 1, 0]);
         assert_eq!(m.memory_bytes(), 48);
     }
@@ -328,11 +468,12 @@ mod tests {
         let m = MergedWorklist::from_frontiers(&g, &[(1, &a), (2, &b)]);
         let e = m.to_edges(&g);
         assert_eq!(e.len(), 4, "3 hub edges + 1 from node 1");
-        assert_eq!(e.masks()[0], 1 << 1);
+        assert_eq!(e.mask_words(0), &[1 << 1]);
         let back = e.to_nodes(&g);
         // node 4 (degree 0) vanishes; tags of the survivors are intact.
         assert_eq!(back.nodes(), &[0, 1]);
-        assert_eq!(back.masks(), &[1 << 1, 1 << 2]);
+        assert_eq!(back.mask_words(0), &[1 << 1]);
+        assert_eq!(back.mask_words(1), &[1 << 2]);
     }
 
     #[test]
@@ -361,10 +502,64 @@ mod tests {
     }
 
     #[test]
+    fn multiword_slots_set_the_right_word() {
+        let g = hub();
+        let a = wl(&g, &[0]);
+        let b = wl(&g, &[0, 1]);
+        // Slots 3, 64 and 150 force a 3-word stride (capacity 150 → 192).
+        let m =
+            MergedWorklist::from_frontiers_with_capacity(&g, &[(3, &a), (64, &b), (150, &b)], 151);
+        assert_eq!(m.stride(), 3);
+        assert_eq!(m.nodes(), &[0, 1]);
+        assert_eq!(m.mask_words(0), &[1 << 3, 1, 1 << (150 - 128)]);
+        assert_eq!(m.mask_words(1), &[0, 1, 1 << (150 - 128)]);
+        assert!(m.has_slot(0, 3) && m.has_slot(0, 64) && m.has_slot(0, 150));
+        assert!(!m.has_slot(1, 3) && m.has_slot(1, 64));
+        assert_eq!(m.memory_bytes(), 2 * (8 + 24));
+        assert_eq!(m.query_frontier(64).nodes(), &[0, 1]);
+        assert_eq!(m.query_frontier(3).nodes(), &[0]);
+        // Out-of-stride probes are simply absent, never a panic.
+        assert!(m.query_frontier(200).is_empty());
+    }
+
+    #[test]
+    fn multiword_builder_matches_btree_oracle() {
+        let g = hub();
+        let a = wl(&g, &[1, 0]);
+        let b = wl(&g, &[1, 4]);
+        let pairs: [(usize, &NodeWorklist); 3] = [(0, &a), (70, &b), (129, &a)];
+        let oracle = MergedWorklist::from_frontiers_btree_with_capacity(&g, &pairs, 130);
+        let mut builder = MergedBuilder::new();
+        let mut out = MergedWorklist::default();
+        for _ in 0..3 {
+            builder.begin_with_capacity(130);
+            for &(slot, f) in &pairs {
+                builder.add(slot, f);
+            }
+            builder.finish_into(&g, &mut out);
+            assert_eq!(out, oracle, "multi-word warm rebuilds must match the oracle");
+        }
+        // The multi-word edge round-trip keeps every word.
+        let back = oracle.to_edges(&g).to_nodes(&g);
+        for i in 0..back.len() {
+            let n = back.nodes()[i];
+            let j = oracle.nodes().iter().position(|&x| x == n).unwrap();
+            assert_eq!(back.mask_words(i), oracle.mask_words(j), "node {n}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "tag mask")]
     fn slot_out_of_range_panics() {
         let g = hub();
         let a = wl(&g, &[0]);
         MergedWorklist::from_frontiers(&g, &[(64, &a)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ceiling")]
+    fn capacity_over_hard_ceiling_panics() {
+        let mut b = MergedBuilder::new();
+        b.begin_with_capacity(MAX_SUPPORTED_QUERIES_PER_SHARD + 1);
     }
 }

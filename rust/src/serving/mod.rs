@@ -12,8 +12,9 @@
 //! * [`query`] — the [`Query`] unit of work plus the deterministic
 //!   synthetic arrival driver behind the `serve` CLI subcommand.
 //! * [`merged`] — the bitmask-tagged [`MergedWorklist`]: the union of the
-//!   per-query frontiers, one `u64` tag per node saying which queries hold
-//!   it active; converts to/from edge granularity with tags preserved.
+//!   per-query frontiers, a multi-word bitmask per node saying which
+//!   queries hold it active (one `u64` word per 64 query slots); converts
+//!   to/from edge granularity with tags preserved.
 //! * [`batch`] — the [`QueryBatch`] engine: per batch iteration, **one**
 //!   [`crate::adaptive::FrontierInspector`] pass and **one** AD policy
 //!   decision cover every query; per-query execution then runs in the
@@ -25,9 +26,17 @@
 //!   distance-array equality (`rust/tests/serving_parity.rs` does, across
 //!   all strategies and shard counts).
 //! * [`shard`] — the [`DeviceShard`] layer: round-robin partitioning of
-//!   queries across simulated devices, one [`QueryBatch`] per shard, and
-//!   the permutation-invariant [`AggregateMetrics`] fold into a
-//!   [`BatchReport`].
+//!   queries across simulated devices (heterogeneous `DeviceSpec`s
+//!   allowed, one per shard), one [`QueryBatch`] per shard, and the
+//!   permutation-invariant [`AggregateMetrics`] fold into a
+//!   [`BatchReport`] whose ms figures are converted on each shard's own
+//!   device clock.
+//! * [`queue`] + [`scheduler`] — the admission-controlled serving path:
+//!   a bounded FIFO [`AdmissionQueue`] with an explicit
+//!   [`OverflowPolicy`] (`drop` / `block`), fed by the continuous
+//!   [`synthetic_arrivals`] driver, drained by the deterministic
+//!   virtual-clock [`Scheduler`] that places queries least-loaded-first
+//!   over the device pool and forms batches as capacity frees.
 //!
 //! The `figserve` figure ([`crate::figures::fig_serving`]) and
 //! `benches/serving.rs` compare batched-AD against N independent
@@ -37,11 +46,20 @@
 pub mod batch;
 pub mod merged;
 pub mod query;
+pub mod queue;
+pub mod scheduler;
 pub mod shard;
 
 pub use batch::{replay_single, QueryBatch};
-pub use merged::{MergedBuilder, MergedEdgeFrontier, MergedWorklist, MAX_QUERIES_PER_SHARD};
-pub use query::{synthetic_queries, Query};
+pub use merged::{
+    mask_words_for, MergedBuilder, MergedEdgeFrontier, MergedWorklist, MAX_QUERIES_PER_SHARD,
+    MAX_SUPPORTED_QUERIES_PER_SHARD,
+};
+pub use query::{synthetic_arrivals, synthetic_queries, Arrival, Query};
+pub use queue::{AdmissionQueue, OverflowPolicy};
+pub use scheduler::{
+    serve_stream, QueryOutcome, ScheduleReport, Scheduler, SchedulerConfig,
+};
 pub use shard::{
     aggregate, partition, serve, serve_with_cache, AggregateMetrics, BatchReport, DeviceShard,
     ServeConfig, ShardReport,

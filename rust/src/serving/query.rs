@@ -49,6 +49,45 @@ pub fn synthetic_queries(g: &Csr, count: usize, bfs_fraction: f64, seed: u64) ->
     out
 }
 
+/// One timed arrival of the continuous driver: a query plus the virtual
+/// instant it reaches the admission queue, in **picoseconds** — the
+/// integer unit the scheduler's virtual clock runs in, chosen because
+/// heterogeneous shards' cycle counts are incomparable but their
+/// [`crate::sim::DeviceSpec::ps_per_cycle`] steps meet on one timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub query: Query,
+    /// Arrival instant on the scheduler's virtual clock (ps; 1 ms = 1e9).
+    pub at_ps: u64,
+}
+
+/// Deterministic continuous arrival stream: the same source/algorithm mix
+/// as [`synthetic_queries`] (identical seed ⇒ identical queries), plus
+/// seeded exponential inter-arrival gaps with mean `mean_gap_ps` — the
+/// memoryless arrival process queueing analyses assume, discretized to
+/// integer picoseconds (min 1) so replays are exact on every platform.
+pub fn synthetic_arrivals(
+    g: &Csr,
+    count: usize,
+    bfs_fraction: f64,
+    mean_gap_ps: u64,
+    seed: u64,
+) -> Vec<Arrival> {
+    let queries = synthetic_queries(g, count, bfs_fraction, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xa221_7a1e_57a6_e000);
+    let mut at_ps = 0u64;
+    queries
+        .into_iter()
+        .map(|query| {
+            // Inverse-CDF exponential draw; 1 - u keeps ln's argument > 0.
+            let u = rng.gen_f64();
+            let gap = (-(1.0 - u).ln() * mean_gap_ps.max(1) as f64).round() as u64;
+            at_ps += gap.max(1);
+            Arrival { query, at_ps }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +136,26 @@ mod tests {
         let g = graph();
         let qs = synthetic_queries(&g, 5, 0.5, 9);
         assert_eq!(qs.iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_monotonic_and_share_the_query_stream() {
+        let g = graph();
+        let a = synthetic_arrivals(&g, 32, 0.5, 1_000_000, 42);
+        let b = synthetic_arrivals(&g, 32, 0.5, 1_000_000, 42);
+        assert_eq!(a, b, "same seed must replay exactly");
+        let queries = synthetic_queries(&g, 32, 0.5, 42);
+        assert_eq!(
+            a.iter().map(|x| x.query).collect::<Vec<_>>(),
+            queries,
+            "the timed stream carries the same queries as the untimed driver"
+        );
+        for w in a.windows(2) {
+            assert!(w[0].at_ps < w[1].at_ps, "gaps are at least 1 ps");
+        }
+        let c = synthetic_arrivals(&g, 32, 0.5, 2_000_000, 42);
+        let mean_a = a.last().unwrap().at_ps / 32;
+        let mean_c = c.last().unwrap().at_ps / 32;
+        assert!(mean_c > mean_a, "a larger mean gap must stretch the stream");
     }
 }

@@ -1,0 +1,167 @@
+//! The bounded FIFO admission queue in front of the serving scheduler.
+//!
+//! Arrivals that outpace capacity have to go *somewhere*: either the queue
+//! absorbs them (up to `cap`), or the [`OverflowPolicy`] decides — `drop`
+//! sheds the query (counted, excluded from results), `block` back-pressures
+//! the arrival until space frees. Every admission-control decision is
+//! counted here so the scheduler's conservation law
+//! (`arrived == admitted + dropped`) is checkable from the outside —
+//! `rust/tests/strategy_properties.rs` pins it across seeds.
+
+use std::collections::VecDeque;
+
+use super::query::Query;
+
+/// What happens to an arrival when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverflowPolicy {
+    /// Shed the query: it is counted in `dropped`, never served, and
+    /// excluded from result comparison (the default — serving systems
+    /// prefer bounded latency over lossless admission).
+    #[default]
+    Drop,
+    /// Back-pressure the client: the arrival stalls until the queue has
+    /// room, then enters in arrival order. Nothing is lost; the stall is
+    /// part of the query's measured wait.
+    Block,
+}
+
+impl OverflowPolicy {
+    /// Parse the `queue_policy` config key / `--queue-policy` flag.
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "drop" => Ok(OverflowPolicy::Drop),
+            "block" => Ok(OverflowPolicy::Block),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown queue policy {other:?} (expected drop | block)"
+            ))),
+        }
+    }
+
+    /// Label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OverflowPolicy::Drop => "drop",
+            OverflowPolicy::Block => "block",
+        }
+    }
+}
+
+/// Bounded FIFO of admitted-but-unplaced queries, with the admission
+/// counters the scheduler reports. Each entry remembers its arrival
+/// instant (virtual-clock ps) so wait time is measured from arrival, not
+/// from admission. Shed queries are NOT counted here — the scheduler
+/// keeps the dropped queries themselves (its `dropped` vec is the single
+/// source of truth), so there is no second counter to drift out of sync.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    items: VecDeque<(Query, u64)>,
+    cap: usize,
+    /// Queries that entered the queue (admission events).
+    pub admitted: u64,
+    /// Deepest the queue ever got.
+    pub peak: u64,
+}
+
+impl AdmissionQueue {
+    /// Empty queue holding at most `cap` queries (`cap ≥ 1`); backing
+    /// storage is pre-allocated so steady-state admission never grows it.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        AdmissionQueue {
+            items: VecDeque::with_capacity(cap),
+            cap,
+            admitted: 0,
+            peak: 0,
+        }
+    }
+
+    /// Capacity bound.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Queries currently queued.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// True when another admission would overflow.
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.cap
+    }
+
+    /// Admit `query` (arrived at `at_ps`) if there is room; returns
+    /// whether it entered. A `false` means the caller's overflow policy
+    /// decides — shed the query (the scheduler records it) or hold the
+    /// arrival back for a blocked retry.
+    pub fn try_admit(&mut self, query: Query, at_ps: u64) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        self.items.push_back((query, at_ps));
+        self.admitted += 1;
+        self.peak = self.peak.max(self.items.len() as u64);
+        true
+    }
+
+    /// Pop the oldest admitted query (FIFO — admission order is placement
+    /// order, a property `strategy_properties.rs` pins).
+    pub fn pop(&mut self) -> Option<(Query, u64)> {
+        self.items.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::AlgoKind;
+
+    fn q(id: u32) -> Query {
+        Query {
+            id,
+            algo: AlgoKind::Bfs,
+            source: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_counters() {
+        let mut aq = AdmissionQueue::new(2);
+        assert!(aq.try_admit(q(0), 10));
+        assert!(aq.try_admit(q(1), 20));
+        assert!(aq.is_full());
+        assert!(!aq.try_admit(q(2), 30), "over-cap admission must fail");
+        assert_eq!((aq.admitted, aq.peak), (2, 2));
+        assert_eq!(aq.pop().unwrap().0.id, 0, "FIFO");
+        assert!(aq.try_admit(q(3), 40), "space frees after a pop");
+        assert_eq!(aq.pop().unwrap().0.id, 1);
+        assert_eq!(aq.pop().unwrap().0.id, 3);
+        assert!(aq.pop().is_none());
+        assert_eq!(aq.peak, 2, "peak is sticky");
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut aq = AdmissionQueue::new(0);
+        assert_eq!(aq.cap(), 1);
+        assert!(aq.try_admit(q(0), 0));
+        assert!(!aq.try_admit(q(1), 0));
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!(OverflowPolicy::parse("drop").unwrap(), OverflowPolicy::Drop);
+        assert_eq!(
+            OverflowPolicy::parse("block").unwrap(),
+            OverflowPolicy::Block
+        );
+        assert!(OverflowPolicy::parse("spill").is_err());
+        assert_eq!(OverflowPolicy::default().label(), "drop");
+    }
+}

@@ -1,0 +1,776 @@
+//! The admission-controlled serving scheduler: a deterministic
+//! virtual-clock event loop that consumes a continuous arrival stream,
+//! admits queries through the bounded [`AdmissionQueue`], places them
+//! load-aware over heterogeneous device shards, and forms batches per
+//! shard as capacity frees.
+//!
+//! This replaces the batch engine's original operating assumptions — a
+//! pre-materialized query list, round-robin placement, identical devices —
+//! with the serving reality the adaptive-load-balancing line of work
+//! argues for (Jatala et al., arXiv:1911.09135): decisions made online
+//! against *observed* load. Concretely, per virtual instant:
+//!
+//! 1. **Completions first.** Shards whose running batch finishes at `now`
+//!    retire it (results extracted, memory accounting released, the
+//!    engine's buffers kept warm for the next batch).
+//! 2. **Arrivals** due at `now` enter the bounded FIFO queue; a full
+//!    queue invokes the [`OverflowPolicy`] — `drop` sheds (counted),
+//!    `block` back-pressures until space frees.
+//! 3. **Placement.** Queries leave the queue in FIFO order *as capacity
+//!    frees*: only idle shards receive work (a busy shard's next batch is
+//!    not committed early, so the bounded queue really is the only buffer
+//!    under load), each query going to the idle shard minimizing
+//!    *outstanding edges weighted by device throughput*
+//!    (`edges_a × tp_b < edges_b × tp_a`, exact u128 integer
+//!    cross-multiplication — deterministic on every platform, and a K40
+//!    legitimately absorbs more work than a GTX 680).
+//! 4. **Dispatch.** Every idle shard with placed queries launches them
+//!    as one batch on its own [`QueryBatch`] engine (reused via
+//!    [`QueryBatch::reset`], so the steady state allocates nothing) and
+//!    becomes busy for the batch's simulated duration, converted to the
+//!    shared picosecond timeline via its own clock.
+//!
+//! The virtual clock runs in integer **picoseconds** because
+//! heterogeneous shards' cycle counts are incomparable: each device
+//! contributes `cycles × ps_per_cycle(device)`. Latency and wait are
+//! measured from *arrival* (including any blocked stall), so the
+//! latency-vs-arrival-rate curve (`figqueue`) shows the real queueing
+//! behavior.
+
+use crate::algorithms::{AlgoKind, NativeRelaxer};
+use crate::arena::GraphCache;
+use crate::coordinator::ExecCtx;
+use crate::error::{Error, Result};
+use crate::graph::Csr;
+use crate::sim::DeviceSpec;
+use crate::util::Json;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::batch::QueryBatch;
+use super::query::{Arrival, Query};
+use super::queue::{AdmissionQueue, OverflowPolicy};
+use super::shard::{aggregate, AggregateMetrics, ServeConfig, ShardReport};
+
+/// Scheduler configuration: the batch-engine config plus admission
+/// control.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Strategy / params / devices / `max_batch` of the per-shard batch
+    /// engines.
+    pub serve: ServeConfig,
+    /// Bound of the admission queue.
+    pub queue_cap: usize,
+    /// What happens to arrivals at a full queue.
+    pub overflow: OverflowPolicy,
+    /// Collect per-query distance arrays into the report (needed for
+    /// `--verify` / parity; the allocation-regression harness turns it
+    /// off because cloning a distance array is inherently an allocation).
+    pub collect_distances: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            serve: ServeConfig::default(),
+            queue_cap: 64,
+            overflow: OverflowPolicy::default(),
+            collect_distances: true,
+        }
+    }
+}
+
+/// One served query's timeline on the virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueryOutcome {
+    pub query: Query,
+    /// Shard that served it.
+    pub shard: usize,
+    /// When it arrived (ps) — blocked stalls count from here.
+    pub arrival_ps: u64,
+    /// When its batch launched (ps).
+    pub start_ps: u64,
+    /// When its batch completed (ps).
+    pub done_ps: u64,
+}
+
+impl QueryOutcome {
+    /// Arrival → launch (queueing + blocking), ps.
+    pub fn wait_ps(&self) -> u64 {
+        self.start_ps - self.arrival_ps
+    }
+
+    /// Arrival → completion, ps.
+    pub fn latency_ps(&self) -> u64 {
+        self.done_ps - self.arrival_ps
+    }
+
+    /// Arrival → completion, milliseconds.
+    pub fn latency_ms(&self) -> f64 {
+        self.latency_ps() as f64 / 1e9
+    }
+}
+
+/// Everything a finished scheduler run reports.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    /// One report per device shard; `queries`/`dists` accumulate every
+    /// batch the shard ran, so the replay oracle applies per shard
+    /// exactly as with [`crate::serving::serve`].
+    pub shards: Vec<ShardReport>,
+    /// Per-served-query timelines, in completion order.
+    pub outcomes: Vec<QueryOutcome>,
+    /// Queries shed by the drop policy (excluded from results, counted).
+    pub dropped: Vec<Query>,
+    /// Query ids in the order they left the admission queue — FIFO
+    /// admission order, pinned by `strategy_properties.rs`.
+    pub placed_order: Vec<u32>,
+    /// Arrivals consumed (`== admitted + dropped.len()` at drain).
+    pub arrived: u64,
+    /// Queries admitted into the queue.
+    pub admitted: u64,
+    /// Peak admission-queue depth.
+    pub queue_peak: u64,
+    /// Arrivals that stalled under [`OverflowPolicy::Block`].
+    pub blocked: u64,
+    /// Batches launched across all shards.
+    pub batches: u64,
+    /// Σ wait (arrival → launch) over served queries, converted to
+    /// reference-device cycles (`devices[0]`).
+    pub wait_cycles: u64,
+    /// Virtual instant the stream drained (ps).
+    pub wall_ps: u64,
+}
+
+impl ScheduleReport {
+    /// Queries actually served.
+    pub fn served(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Distance array of the query with `id`, if it was served and
+    /// distance collection was on.
+    pub fn dist_of(&self, id: u32) -> Option<&[u32]> {
+        for s in &self.shards {
+            if let Some(i) = s.queries.iter().position(|q| q.id == id) {
+                // `dists` is empty when `collect_distances` was off.
+                return s.dists.get(i).map(Vec::as_slice);
+            }
+        }
+        None
+    }
+
+    /// Wall-clock of the whole stream (arrival of the first query to
+    /// completion of the last), ms.
+    pub fn wall_ms(&self) -> f64 {
+        self.wall_ps as f64 / 1e9
+    }
+
+    /// Throughput cost: Σ per-shard simulated ms, each shard on its own
+    /// device clock.
+    pub fn total_ms(&self) -> f64 {
+        self.shards.iter().map(ShardReport::total_ms).sum()
+    }
+
+    /// Mean served latency, ms (0 when nothing was served).
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(QueryOutcome::latency_ms).sum::<f64>()
+            / self.outcomes.len() as f64
+    }
+
+    /// 95th-percentile served latency, ms (nearest-rank).
+    pub fn p95_latency_ms(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let mut lat: Vec<u64> = self.outcomes.iter().map(QueryOutcome::latency_ps).collect();
+        lat.sort_unstable();
+        let rank = (lat.len() * 95).div_ceil(100).max(1) - 1;
+        lat[rank] as f64 / 1e9
+    }
+
+    /// Fold of the shard metrics plus the scheduler's admission counters.
+    pub fn totals(&self) -> AggregateMetrics {
+        let mut agg = aggregate(self.shards.iter().map(|s| &s.metrics));
+        agg.admitted = self.admitted;
+        agg.dropped = self.dropped.len() as u64;
+        agg.queue_peak = self.queue_peak;
+        agg.wait_cycles = self.wait_cycles;
+        agg
+    }
+
+    /// JSON rendering: scheduler counters, latency stats, and per-shard
+    /// summaries converted on each shard's own device clock.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrived", self.arrived.into()),
+            ("admitted", self.admitted.into()),
+            ("dropped", self.dropped.len().into()),
+            ("served", self.served().into()),
+            ("queue_peak", self.queue_peak.into()),
+            ("blocked", self.blocked.into()),
+            ("batches", self.batches.into()),
+            ("wait_cycles", self.wait_cycles.into()),
+            ("wall_ms", self.wall_ms().into()),
+            ("latency_ms_mean", self.mean_latency_ms().into()),
+            ("latency_ms_p95", self.p95_latency_ms().into()),
+            (
+                "shards",
+                Json::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
+            ),
+            (
+                "totals",
+                self.totals()
+                    .to_json_with_ms(self.total_ms(), self.wall_ms()),
+            ),
+        ])
+    }
+}
+
+/// One device shard's live state inside the event loop.
+struct ShardState<'a> {
+    dev: &'a DeviceSpec,
+    ctx: ExecCtx<'a>,
+    /// Persistent batch engine, [`QueryBatch::reset`] per batch.
+    engine: QueryBatch,
+    /// Placed, waiting for the shard to go idle: `(query, arrival_ps)`.
+    pending: Vec<(Query, u64)>,
+    /// The batch currently executing.
+    running: Vec<(Query, u64)>,
+    /// Reset scratch: the query slice handed to the engine.
+    batch_queries: Vec<Query>,
+    start_ps: u64,
+    busy_until_ps: u64,
+    busy: bool,
+    /// Σ source degrees of pending + running queries — the load signal
+    /// placement minimizes (degree 0 counts as 1 so empty-frontier
+    /// queries still occupy a slot).
+    outstanding_edges: u64,
+    /// Cycle watermark for per-batch durations on a cumulative context.
+    prev_cycles: u64,
+    /// Integer virtual-clock step of this device.
+    ps_per_cycle: u64,
+    /// Cached [`DeviceSpec::throughput_index`].
+    tp: u64,
+    /// Served queries / distances accumulated across every batch.
+    served: Vec<Query>,
+    dists: Vec<Vec<u32>>,
+}
+
+/// The stepwise scheduler. [`serve_stream`] wraps construct → drain →
+/// finish; the allocation-regression harness drives [`Scheduler::step`]
+/// directly to measure individual events.
+pub struct Scheduler<'a> {
+    graph: Arc<Csr>,
+    cfg: &'a SchedulerConfig,
+    arrivals: Vec<Arrival>,
+    next_arrival: usize,
+    queue: AdmissionQueue,
+    /// Arrivals stalled by [`OverflowPolicy::Block`], in arrival order.
+    blocked: VecDeque<(Query, u64)>,
+    shards: Vec<ShardState<'a>>,
+    now_ps: u64,
+    blocked_events: u64,
+    batches: u64,
+    wait_ps_total: u64,
+    outcomes: Vec<QueryOutcome>,
+    dropped: Vec<Query>,
+    placed_order: Vec<u32>,
+}
+
+impl<'a> Scheduler<'a> {
+    /// Build the event loop over `arrivals` (sorted by arrival time if
+    /// not already). Every growable buffer is pre-reserved to its
+    /// worst-case size here, so steady-state steps allocate nothing.
+    pub fn new(
+        graph: Arc<Csr>,
+        mut arrivals: Vec<Arrival>,
+        cfg: &'a SchedulerConfig,
+        cache: &GraphCache,
+    ) -> Result<Self> {
+        if cfg.serve.devices.is_empty() {
+            return Err(Error::Config("devices must list at least one shard".into()));
+        }
+        if cfg.serve.max_batch == 0 {
+            return Err(Error::Config("max_batch must be >= 1".into()));
+        }
+        arrivals.sort_by_key(|a| a.at_ps);
+        let n_arrivals = arrivals.len();
+        let mut shards = Vec::with_capacity(cfg.serve.devices.len());
+        for (id, dev) in cfg.serve.devices.iter().enumerate() {
+            let mut ctx = ExecCtx::new(dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+            if cfg.serve.enforce_budget {
+                ctx = ctx.with_budget(dev.memory_budget);
+            }
+            let engine = QueryBatch::with_cache(
+                graph.clone(),
+                &[],
+                cfg.serve.strategy,
+                cfg.serve.params.clone(),
+                cache.scoped(id),
+            )?;
+            shards.push(ShardState {
+                dev,
+                ctx,
+                engine,
+                pending: Vec::with_capacity(cfg.serve.max_batch),
+                running: Vec::with_capacity(cfg.serve.max_batch),
+                batch_queries: Vec::with_capacity(cfg.serve.max_batch),
+                start_ps: 0,
+                busy_until_ps: 0,
+                busy: false,
+                outstanding_edges: 0,
+                prev_cycles: 0,
+                ps_per_cycle: dev.ps_per_cycle(),
+                tp: dev.throughput_index(),
+                served: Vec::with_capacity(n_arrivals),
+                dists: Vec::with_capacity(if cfg.collect_distances { n_arrivals } else { 0 }),
+            });
+        }
+        Ok(Scheduler {
+            graph,
+            cfg,
+            arrivals,
+            next_arrival: 0,
+            queue: AdmissionQueue::new(cfg.queue_cap),
+            blocked: VecDeque::with_capacity(n_arrivals),
+            shards,
+            now_ps: 0,
+            blocked_events: 0,
+            batches: 0,
+            wait_ps_total: 0,
+            outcomes: Vec::with_capacity(n_arrivals),
+            dropped: Vec::with_capacity(n_arrivals),
+            placed_order: Vec::with_capacity(n_arrivals),
+        })
+    }
+
+    /// Batches launched so far — the allocation-regression harness uses
+    /// this to find its warm-up horizon (buffers reach their high-water
+    /// capacity once a full-size batch has run).
+    pub fn batches_launched(&self) -> u64 {
+        self.batches
+    }
+
+    /// Advance the virtual clock to the next event (a batch completion or
+    /// an arrival) and process everything due. Returns `false` once the
+    /// stream has drained: no future arrivals, every shard idle, nothing
+    /// queued.
+    pub fn step(&mut self) -> Result<bool> {
+        let next_arrival = self.arrivals.get(self.next_arrival).map(|a| a.at_ps);
+        let next_done = self
+            .shards
+            .iter()
+            .filter(|s| s.busy)
+            .map(|s| s.busy_until_ps)
+            .min();
+        let now = match (next_arrival, next_done) {
+            (Some(a), Some(d)) => a.min(d),
+            (Some(a), None) => a,
+            (None, Some(d)) => d,
+            // No future event: dispatch runs at the end of every step, so
+            // anything queued or pending would have made a shard busy.
+            (None, None) => return Ok(false),
+        };
+        debug_assert!(now >= self.now_ps, "the virtual clock is monotonic");
+        self.now_ps = now;
+
+        // 1. Completions first — capacity freed at `now` serves arrivals
+        //    and placements of the same instant.
+        for i in 0..self.shards.len() {
+            if self.shards[i].busy && self.shards[i].busy_until_ps <= now {
+                self.complete(i);
+            }
+        }
+        // 2. Settle the backlog against the freed capacity BEFORE looking
+        //    at new arrivals: earlier (blocked) arrivals re-enter first
+        //    and queued queries move onto the freed shards, so an arrival
+        //    at exactly this instant sees the queue as it is *after* the
+        //    completion — capacity freed at `now` really does serve
+        //    same-instant arrivals instead of dropping them.
+        self.settle();
+        // 3. Arrivals due now meet the bounded queue — behind the backlog
+        //    (after a full drain, a non-empty backlog implies a full
+        //    queue, so `try_admit` fails and the arrival queues behind).
+        while let Some(a) = self.arrivals.get(self.next_arrival) {
+            if a.at_ps > now {
+                break;
+            }
+            let (query, at_ps) = (a.query, a.at_ps);
+            self.next_arrival += 1;
+            if !self.queue.try_admit(query, at_ps) {
+                match self.cfg.overflow {
+                    OverflowPolicy::Drop => {
+                        self.dropped.push(query);
+                    }
+                    OverflowPolicy::Block => {
+                        self.blocked.push_back((query, at_ps));
+                        self.blocked_events += 1;
+                    }
+                }
+            }
+        }
+        // 4. Settle again: the new arrivals may themselves be placeable
+        //    right now (idle shards), which frees queue slots the blocked
+        //    backlog can take at the same instant.
+        self.settle();
+        // 5. Idle shards with pending work launch a batch.
+        self.dispatch()?;
+        Ok(true)
+    }
+
+    /// Fixpoint of placement + backlog drain at one instant: popping the
+    /// queue onto idle shards frees slots the blocked backlog can take
+    /// right now. Both preserve FIFO, so the fixpoint does too.
+    fn settle(&mut self) {
+        loop {
+            let moved = self.drain_blocked() + self.place();
+            if moved == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Move blocked arrivals (in arrival order) into the queue while it
+    /// has room; returns how many entered.
+    fn drain_blocked(&mut self) -> usize {
+        let mut moved = 0;
+        while !self.queue.is_full() {
+            let Some((query, at_ps)) = self.blocked.pop_front() else {
+                break;
+            };
+            let entered = self.queue.try_admit(query, at_ps);
+            debug_assert!(entered, "queue had room");
+            moved += 1;
+        }
+        moved
+    }
+
+    /// Retire shard `i`'s finished batch: record outcomes, extract
+    /// distances, release its memory accounting, keep the engine warm.
+    fn complete(&mut self, i: usize) {
+        let s = &mut self.shards[i];
+        s.busy = false;
+        for (k, &(query, arrival_ps)) in s.running.iter().enumerate() {
+            self.outcomes.push(QueryOutcome {
+                query,
+                shard: i,
+                arrival_ps,
+                start_ps: s.start_ps,
+                done_ps: s.busy_until_ps,
+            });
+            s.served.push(query);
+            if self.cfg.collect_distances {
+                s.dists.push(s.engine.distances(k));
+            }
+            s.outstanding_edges -= (self.graph.degree(query.source) as u64).max(1);
+        }
+        s.running.clear();
+        s.engine.retire(&mut s.ctx);
+    }
+
+    /// Pop admitted queries FIFO and place each on the **idle** shard
+    /// minimizing outstanding edges per unit throughput (exact integer
+    /// cross-multiplication; ties go to the lower shard id). Busy shards
+    /// take nothing — their next batch forms from whatever the queue
+    /// holds when they free, so the admission queue is the only buffer
+    /// under load and its cap is a real bound. Stops when the queue
+    /// empties or every idle shard is at `max_batch`; returns how many
+    /// queries were placed.
+    fn place(&mut self) -> usize {
+        let max_batch = self.cfg.serve.max_batch;
+        let mut placed = 0;
+        while !self.queue.is_empty() {
+            let mut best: Option<usize> = None;
+            for i in 0..self.shards.len() {
+                if self.shards[i].busy || self.shards[i].pending.len() >= max_batch {
+                    continue;
+                }
+                best = Some(match best {
+                    None => i,
+                    Some(j) => {
+                        let (a, b) = (&self.shards[i], &self.shards[j]);
+                        let lhs = a.outstanding_edges as u128 * b.tp as u128;
+                        let rhs = b.outstanding_edges as u128 * a.tp as u128;
+                        if lhs < rhs {
+                            i
+                        } else {
+                            j
+                        }
+                    }
+                });
+            }
+            let Some(i) = best else { break };
+            let (query, at_ps) = self.queue.pop().expect("non-empty");
+            let load = (self.graph.degree(query.source) as u64).max(1);
+            self.placed_order.push(query.id);
+            let s = &mut self.shards[i];
+            s.pending.push((query, at_ps));
+            s.outstanding_edges += load;
+            placed += 1;
+        }
+        placed
+    }
+
+    /// Launch every idle shard's pending queries as one batch and stamp
+    /// its completion on the shared timeline via the shard's own clock.
+    fn dispatch(&mut self) -> Result<()> {
+        let now = self.now_ps;
+        let max_iterations = self.cfg.serve.max_iterations;
+        for s in &mut self.shards {
+            if s.busy || s.pending.is_empty() {
+                continue;
+            }
+            s.batch_queries.clear();
+            for &(query, at_ps) in &s.pending {
+                s.batch_queries.push(query);
+                self.wait_ps_total += now - at_ps;
+            }
+            s.engine.reset(&mut s.ctx, &s.batch_queries)?;
+            s.engine.run(&mut s.ctx, max_iterations)?;
+            let total = s.ctx.metrics.total_cycles();
+            let cycles = total - s.prev_cycles;
+            s.prev_cycles = total;
+            s.start_ps = now;
+            s.busy_until_ps = now + cycles.max(1) * s.ps_per_cycle;
+            s.busy = true;
+            std::mem::swap(&mut s.running, &mut s.pending);
+            self.batches += 1;
+        }
+        Ok(())
+    }
+
+    /// Drain the stream and assemble the report.
+    pub fn finish(self) -> ScheduleReport {
+        let ref_ppc = self.cfg.serve.devices[0].ps_per_cycle().max(1);
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for (i, mut s) in self.shards.into_iter().enumerate() {
+            debug_assert!(!s.busy && s.pending.is_empty(), "finish before drain");
+            s.ctx.finalize_metrics();
+            let metrics = std::mem::take(&mut s.ctx.metrics);
+            drop(s.ctx);
+            shards.push(ShardReport {
+                shard: i,
+                device: s.dev.clone(),
+                queries: s.served,
+                metrics,
+                dists: s.dists,
+            });
+        }
+        ScheduleReport {
+            shards,
+            outcomes: self.outcomes,
+            dropped: self.dropped,
+            placed_order: self.placed_order,
+            arrived: self.next_arrival as u64,
+            admitted: self.queue.admitted,
+            queue_peak: self.queue.peak,
+            blocked: self.blocked_events,
+            batches: self.batches,
+            wait_cycles: self.wait_ps_total / ref_ppc,
+            wall_ps: self.now_ps,
+        }
+    }
+}
+
+/// Run an arrival stream through the admission-controlled scheduler to
+/// drain: construct, step until idle, report.
+pub fn serve_stream(
+    graph: &Arc<Csr>,
+    arrivals: Vec<Arrival>,
+    cfg: &SchedulerConfig,
+    cache: &GraphCache,
+) -> Result<ScheduleReport> {
+    let mut sched = Scheduler::new(graph.clone(), arrivals, cfg, cache)?;
+    while sched.step()? {}
+    Ok(sched.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, rmat, RmatParams};
+    use crate::graph::traversal;
+    use crate::serving::query::synthetic_arrivals;
+    use crate::strategies::StrategyKind;
+
+    fn stream(g: &Csr, count: usize, mean_gap_ps: u64, seed: u64) -> Vec<Arrival> {
+        synthetic_arrivals(g, count, 0.0, mean_gap_ps, seed)
+    }
+
+    #[test]
+    fn drains_and_conserves_queries() {
+        let g = Arc::new(erdos_renyi(200, 800, 11, 3).unwrap());
+        let arrivals = stream(&g, 40, 500_000, 7);
+        let cfg = SchedulerConfig {
+            serve: ServeConfig {
+                strategy: StrategyKind::BS,
+                max_batch: 8,
+                ..Default::default()
+            },
+            queue_cap: 4,
+            ..Default::default()
+        };
+        let report = serve_stream(&g, arrivals, &cfg, &GraphCache::new()).unwrap();
+        assert_eq!(report.arrived, 40);
+        assert_eq!(
+            report.arrived,
+            report.admitted + report.dropped.len() as u64,
+            "arrived == admitted + dropped"
+        );
+        assert_eq!(
+            report.admitted,
+            report.served() as u64,
+            "admitted == served at drain"
+        );
+        assert!(report.batches > 0);
+        assert!(report.queue_peak >= 1);
+        // Every served distance matches the oracle.
+        for o in &report.outcomes {
+            assert_eq!(
+                report.dist_of(o.query.id).unwrap(),
+                traversal::dijkstra(&g, o.query.source).as_slice(),
+                "query {}",
+                o.query.id
+            );
+        }
+    }
+
+    #[test]
+    fn tight_queue_drops_and_block_does_not() {
+        let g = Arc::new(erdos_renyi(150, 600, 9, 5).unwrap());
+        // Near-simultaneous arrivals against a 2-deep queue force overflow.
+        let arrivals = stream(&g, 30, 10, 11);
+        let mut cfg = SchedulerConfig {
+            serve: ServeConfig {
+                strategy: StrategyKind::BS,
+                max_batch: 4,
+                ..Default::default()
+            },
+            queue_cap: 2,
+            ..Default::default()
+        };
+        let dropping = serve_stream(&g, arrivals.clone(), &cfg, &GraphCache::new()).unwrap();
+        assert!(!dropping.dropped.is_empty(), "a 2-deep queue must shed");
+        assert_eq!(
+            dropping.arrived,
+            dropping.admitted + dropping.dropped.len() as u64
+        );
+        // Dropped queries are excluded from results.
+        for q in &dropping.dropped {
+            assert!(dropping.dist_of(q.id).is_none(), "dropped query {} served", q.id);
+        }
+
+        cfg.overflow = OverflowPolicy::Block;
+        let blocking = serve_stream(&g, arrivals, &cfg, &GraphCache::new()).unwrap();
+        assert!(blocking.dropped.is_empty(), "block never sheds");
+        assert_eq!(blocking.served() as u64, blocking.arrived);
+        assert!(blocking.blocked > 0, "the stall counter must trip");
+        assert!(
+            blocking.wait_cycles > dropping.wait_cycles,
+            "lossless admission pays with wait"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_pool_is_deterministic_and_uses_every_shard() {
+        let g = Arc::new(rmat(8, 2048, RmatParams::default(), 13).unwrap());
+        let cfg = SchedulerConfig {
+            serve: ServeConfig {
+                devices: vec![DeviceSpec::k40(), DeviceSpec::gtx680()],
+                max_batch: 8,
+                ..Default::default()
+            },
+            queue_cap: 16,
+            ..Default::default()
+        };
+        let a = serve_stream(&g, stream(&g, 32, 100_000, 21), &cfg, &GraphCache::new()).unwrap();
+        let b = serve_stream(&g, stream(&g, 32, 100_000, 21), &cfg, &GraphCache::new()).unwrap();
+        assert_eq!(a.outcomes, b.outcomes, "replays must be exact");
+        assert_eq!(a.placed_order, b.placed_order);
+        for s in &a.shards {
+            assert!(
+                !s.queries.is_empty(),
+                "under sustained load every device serves (shard {})",
+                s.shard
+            );
+        }
+        assert_eq!(a.shards[0].device.name, "k40");
+        assert_eq!(a.shards[1].device.name, "gtx680");
+        assert!(a.total_ms() > 0.0 && a.wall_ms() > 0.0);
+        assert!(a.mean_latency_ms() <= a.p95_latency_ms());
+    }
+
+    #[test]
+    fn scheduler_forms_batches_past_64_queries() {
+        // queue_cap > 64 + max_batch 80: a burst behind one busy shard
+        // must coalesce into a batch wider than the old 64-query limit
+        // (multi-word tags on the scheduler path), results still exact.
+        let g = Arc::new(erdos_renyi(150, 600, 9, 5).unwrap());
+        let cfg = SchedulerConfig {
+            serve: ServeConfig {
+                strategy: StrategyKind::BS,
+                max_batch: 80,
+                ..Default::default()
+            },
+            queue_cap: 128,
+            ..Default::default()
+        };
+        let arrivals = stream(&g, 100, 10, 9);
+        let report = serve_stream(&g, arrivals, &cfg, &GraphCache::new()).unwrap();
+        assert_eq!(report.served(), 100, "128-deep queue loses nothing here");
+        // Outcomes of one batch share (shard, start_ps).
+        let mut widest = 0usize;
+        for o in &report.outcomes {
+            let width = report
+                .outcomes
+                .iter()
+                .filter(|p| p.shard == o.shard && p.start_ps == o.start_ps)
+                .count();
+            widest = widest.max(width);
+        }
+        assert!(
+            widest > 64,
+            "expected a multi-word batch, widest was {widest}"
+        );
+        for o in &report.outcomes {
+            assert_eq!(
+                report.dist_of(o.query.id).unwrap(),
+                traversal::dijkstra(&g, o.query.source).as_slice(),
+                "query {}",
+                o.query.id
+            );
+        }
+    }
+
+    #[test]
+    fn batches_grow_under_pressure() {
+        let g = Arc::new(erdos_renyi(150, 600, 9, 5).unwrap());
+        let cfg = SchedulerConfig {
+            serve: ServeConfig {
+                strategy: StrategyKind::BS,
+                max_batch: 16,
+                ..Default::default()
+            },
+            queue_cap: 64,
+            ..Default::default()
+        };
+        let cache = GraphCache::new();
+        // Sparse arrivals: every query tends to get its own batch.
+        let relaxed = serve_stream(&g, stream(&g, 24, 2_000_000_000, 3), &cfg, &cache).unwrap();
+        // A burst: batches must coalesce, so strictly fewer launches.
+        let bursty = serve_stream(&g, stream(&g, 24, 10, 3), &cfg, &cache).unwrap();
+        assert!(
+            bursty.batches < relaxed.batches,
+            "burst arrivals must batch ({} vs {})",
+            bursty.batches,
+            relaxed.batches
+        );
+        assert!(
+            bursty.mean_latency_ms() > 0.0 && relaxed.mean_latency_ms() > 0.0
+        );
+    }
+}

@@ -32,13 +32,18 @@ pub struct ServeConfig {
     /// for per-batch adaptive decisions (the default).
     pub strategy: StrategyKind,
     pub params: StrategyParams,
-    pub device: DeviceSpec,
-    /// Enforce the device memory budget per shard.
+    /// One simulated device per shard — heterogeneous pools list different
+    /// presets (replaces the former single `device` + `shards` pair; the
+    /// `devices` config key / `--devices` flag feed it).
+    pub devices: Vec<DeviceSpec>,
+    /// Enforce each device's own memory budget on its shard.
     pub enforce_budget: bool,
-    /// Simulated devices the queries are partitioned across.
-    pub shards: usize,
     /// Safety valve on batch iterations.
     pub max_iterations: u32,
+    /// Per-shard batch capacity: how many concurrent queries one device
+    /// carries (the merged worklist grows one tag word per 64 — see
+    /// [`crate::serving::merged`]). Defaults to [`MAX_QUERIES_PER_SHARD`].
+    pub max_batch: usize,
 }
 
 impl Default for ServeConfig {
@@ -46,11 +51,26 @@ impl Default for ServeConfig {
         ServeConfig {
             strategy: StrategyKind::AD,
             params: StrategyParams::default(),
-            device: DeviceSpec::k20c(),
+            devices: vec![DeviceSpec::k20c()],
             enforce_budget: false,
-            shards: 1,
             max_iterations: 1_000_000,
+            max_batch: MAX_QUERIES_PER_SHARD,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Homogeneous pool of `n` default (K20c) devices.
+    pub fn with_shards(n: usize) -> Self {
+        ServeConfig {
+            devices: vec![DeviceSpec::k20c(); n.max(1)],
+            ..Default::default()
+        }
+    }
+
+    /// Shard count (one per device).
+    pub fn shards(&self) -> usize {
+        self.devices.len()
     }
 }
 
@@ -82,9 +102,33 @@ pub fn partition(queries: &[Query], shards: usize) -> Vec<DeviceShard> {
 #[derive(Debug, Clone)]
 pub struct ShardReport {
     pub shard: usize,
+    /// The simulated device this shard ran on — cycle→ms conversions for
+    /// this shard MUST use it (shards of a heterogeneous pool run at
+    /// different clocks, so one shared `DeviceSpec` mis-times them).
+    pub device: DeviceSpec,
     pub queries: Vec<Query>,
     pub metrics: RunMetrics,
     pub dists: Vec<Vec<u32>>,
+}
+
+impl ShardReport {
+    /// This shard's simulated milliseconds, on its **own** device clock.
+    pub fn total_ms(&self) -> f64 {
+        self.device.cycles_to_ms(self.metrics.total_cycles())
+    }
+
+    /// JSON rendering (all ms figures converted with this shard's device).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", self.shard.into()),
+            ("device", self.device.name.into()),
+            ("queries", self.queries.len().into()),
+            (
+                "metrics",
+                aggregate(std::iter::once(&self.metrics)).to_json(&self.device),
+            ),
+        ])
+    }
 }
 
 /// Commutative aggregate of per-shard metrics: sums for throughput-style
@@ -115,6 +159,17 @@ pub struct AggregateMetrics {
     pub scratch_reused: u64,
     /// Max over shards of the arena's peak pooled bytes.
     pub scratch_peak_bytes: u64,
+    /// Queries admitted into the scheduler's bounded queue (0 outside the
+    /// admission-controlled path — plain [`serve`] admits implicitly).
+    pub admitted: u64,
+    /// Queries the overflow policy dropped at a full queue.
+    pub dropped: u64,
+    /// Peak depth the admission queue reached.
+    pub queue_peak: u64,
+    /// Σ over served queries of the cycles spent between arrival and
+    /// batch launch, on the *reference* device clock (`devices[0]`) — the
+    /// one cross-shard-comparable latency unit a heterogeneous pool has.
+    pub wait_cycles: u64,
 }
 
 /// Fold per-shard (or per-run) metrics into an [`AggregateMetrics`]. Every
@@ -152,11 +207,21 @@ impl AggregateMetrics {
         dev.cycles_to_ms(self.wall_cycles)
     }
 
-    /// JSON rendering.
+    /// JSON rendering. `dev` converts the cycle totals to ms, so this is
+    /// only meaningful for a homogeneous aggregate (a single shard, or a
+    /// pool of identical devices); [`BatchReport::to_json`] converts
+    /// per-shard before folding when devices differ.
     pub fn to_json(&self, dev: &DeviceSpec) -> Json {
+        self.to_json_with_ms(self.total_ms(dev), self.wall_ms(dev))
+    }
+
+    /// JSON rendering with externally converted ms figures — the
+    /// heterogeneous path, where cycles from different clocks must be
+    /// converted per shard *before* summing/maxing.
+    pub fn to_json_with_ms(&self, total_ms: f64, wall_ms: f64) -> Json {
         Json::obj(vec![
-            ("total_ms", self.total_ms(dev).into()),
-            ("wall_ms", self.wall_ms(dev).into()),
+            ("total_ms", total_ms.into()),
+            ("wall_ms", wall_ms.into()),
             ("kernel_cycles", self.kernel_cycles.into()),
             ("overhead_cycles", self.overhead_cycles.into()),
             ("inspector_passes", self.inspector_passes.into()),
@@ -169,6 +234,10 @@ impl AggregateMetrics {
             ("scratch_created", self.scratch_created.into()),
             ("scratch_reused", self.scratch_reused.into()),
             ("scratch_peak_bytes", self.scratch_peak_bytes.into()),
+            ("admitted", self.admitted.into()),
+            ("dropped", self.dropped.into()),
+            ("queue_peak", self.queue_peak.into()),
+            ("wait_cycles", self.wait_cycles.into()),
         ])
     }
 }
@@ -190,6 +259,23 @@ impl BatchReport {
         aggregate(self.shards.iter().map(|s| &s.metrics))
     }
 
+    /// Throughput cost in simulated ms: Σ over shards of that shard's
+    /// cycles converted on that shard's **own** device clock. (Folding
+    /// cycles first and converting once would mis-time every shard of a
+    /// heterogeneous pool.)
+    pub fn total_ms(&self) -> f64 {
+        self.shards.iter().map(ShardReport::total_ms).sum()
+    }
+
+    /// Wall-clock in simulated ms: the slowest shard, each on its own
+    /// device clock (shards run concurrently).
+    pub fn wall_ms(&self) -> f64 {
+        self.shards
+            .iter()
+            .map(ShardReport::total_ms)
+            .fold(0.0, f64::max)
+    }
+
     /// Distance array of the query with `id`, if it was in the batch.
     pub fn dist_of(&self, id: u32) -> Option<&[u32]> {
         for s in &self.shards {
@@ -200,29 +286,21 @@ impl BatchReport {
         None
     }
 
-    /// JSON rendering (per-shard summaries + totals).
-    pub fn to_json(&self, dev: &DeviceSpec) -> Json {
+    /// JSON rendering (per-shard summaries + totals). Every ms figure is
+    /// converted with the owning shard's device before folding, so
+    /// heterogeneous pools report honest times.
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("queries", self.query_count().into()),
             (
                 "shards",
-                Json::Arr(
-                    self.shards
-                        .iter()
-                        .map(|s| {
-                            Json::obj(vec![
-                                ("shard", s.shard.into()),
-                                ("queries", s.queries.len().into()),
-                                (
-                                    "metrics",
-                                    aggregate(std::iter::once(&s.metrics)).to_json(dev),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
             ),
-            ("totals", self.totals().to_json(dev)),
+            (
+                "totals",
+                self.totals()
+                    .to_json_with_ms(self.total_ms(), self.wall_ms()),
+            ),
         ])
     }
 }
@@ -247,32 +325,38 @@ pub fn serve_with_cache(
     cfg: &ServeConfig,
     cache: &GraphCache,
 ) -> Result<BatchReport> {
-    if cfg.shards == 0 {
-        return Err(Error::Config("shards must be >= 1".into()));
+    if cfg.devices.is_empty() {
+        return Err(Error::Config("devices must list at least one shard".into()));
     }
-    let per_shard = queries.len().div_ceil(cfg.shards.max(1));
-    if per_shard > MAX_QUERIES_PER_SHARD {
+    if cfg.max_batch == 0 {
+        return Err(Error::Config("max_batch must be >= 1".into()));
+    }
+    let per_shard = queries.len().div_ceil(cfg.devices.len());
+    if per_shard > cfg.max_batch {
         return Err(Error::Config(format!(
             "{} queries over {} shards puts {per_shard} on one device \
-             (limit {MAX_QUERIES_PER_SHARD}); raise shards or lower batch_size",
+             (max_batch {}); raise shards/max_batch or lower batch_size",
             queries.len(),
-            cfg.shards
+            cfg.devices.len(),
+            cfg.max_batch
         )));
     }
     let mut shards = Vec::new();
-    for shard in partition(queries, cfg.shards) {
+    for shard in partition(queries, cfg.devices.len()) {
+        let device = cfg.devices[shard.id].clone();
         if shard.queries.is_empty() {
             shards.push(ShardReport {
                 shard: shard.id,
+                device,
                 queries: Vec::new(),
                 metrics: RunMetrics::default(),
                 dists: Vec::new(),
             });
             continue;
         }
-        let mut ctx = ExecCtx::new(&cfg.device, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        let mut ctx = ExecCtx::new(&device, AlgoKind::Sssp, Box::new(NativeRelaxer));
         if cfg.enforce_budget {
-            ctx = ctx.with_budget(cfg.device.memory_budget);
+            ctx = ctx.with_budget(device.memory_budget);
         }
         // Each shard is its own simulated device: it shares the cache's
         // host-side artifacts but pays its own build kernels (scope =
@@ -289,10 +373,13 @@ pub fn serve_with_cache(
         let dists = (0..shard.queries.len()).map(|i| batch.distances(i)).collect();
         batch.recycle(&mut ctx);
         ctx.finalize_metrics();
+        let metrics = std::mem::take(&mut ctx.metrics);
+        drop(ctx); // ends the borrow of `device`
         shards.push(ShardReport {
             shard: shard.id,
+            device,
             queries: shard.queries,
-            metrics: ctx.metrics,
+            metrics,
             dists,
         });
     }
@@ -325,15 +412,7 @@ mod tests {
         let g = Arc::new(rmat(8, 2048, RmatParams::default(), 9).unwrap());
         let qs = synthetic_queries(&g, 6, 0.0, 17);
         for shards in [1, 2, 4] {
-            let report = serve(
-                &g,
-                &qs,
-                &ServeConfig {
-                    shards,
-                    ..Default::default()
-                },
-            )
-            .unwrap();
+            let report = serve(&g, &qs, &ServeConfig::with_shards(shards)).unwrap();
             assert_eq!(report.query_count(), 6);
             for q in &qs {
                 assert_eq!(
@@ -356,13 +435,64 @@ mod tests {
             &g,
             &qs,
             &ServeConfig {
-                shards: 2,
                 strategy: StrategyKind::BS,
+                ..ServeConfig::with_shards(2)
+            },
+        )
+        .unwrap();
+        assert_eq!(report.query_count(), MAX_QUERIES_PER_SHARD + 1);
+        // ...and so does raising max_batch (multi-word tags on one shard).
+        let report = serve(
+            &g,
+            &qs,
+            &ServeConfig {
+                strategy: StrategyKind::BS,
+                max_batch: 2 * MAX_QUERIES_PER_SHARD,
                 ..Default::default()
             },
         )
         .unwrap();
         assert_eq!(report.query_count(), MAX_QUERIES_PER_SHARD + 1);
+    }
+
+    #[test]
+    fn heterogeneous_shards_convert_ms_per_device() {
+        let g = Arc::new(rmat(8, 2048, RmatParams::default(), 6).unwrap());
+        let qs = synthetic_queries(&g, 8, 0.0, 9);
+        let cfg = ServeConfig {
+            devices: vec![DeviceSpec::k20c(), DeviceSpec::gtx680()],
+            ..Default::default()
+        };
+        let report = serve(&g, &qs, &cfg).unwrap();
+        // Distances still match the oracle on a mixed pool.
+        for q in &qs {
+            assert_eq!(
+                report.dist_of(q.id).unwrap(),
+                crate::graph::traversal::dijkstra(&g, q.source).as_slice(),
+                "query {}",
+                q.id
+            );
+        }
+        // Per-shard ms must come from each shard's own clock: the folded
+        // report equals the by-hand per-device conversion, not a single
+        // shared-device conversion.
+        let by_hand: f64 = report
+            .shards
+            .iter()
+            .map(|s| s.device.cycles_to_ms(s.metrics.total_cycles()))
+            .sum();
+        assert!((report.total_ms() - by_hand).abs() < 1e-9);
+        let shared_dev: f64 = report
+            .shards
+            .iter()
+            .map(|s| cfg.devices[0].cycles_to_ms(s.metrics.total_cycles()))
+            .sum();
+        assert!(
+            (by_hand - shared_dev).abs() > 1e-9,
+            "distinct clocks must actually change the conversion"
+        );
+        assert_eq!(report.shards[1].device.name, "gtx680");
+        assert!(report.wall_ms() <= report.total_ms());
     }
 
     #[test]
@@ -400,15 +530,7 @@ mod tests {
     fn totals_fold_shard_metrics() {
         let g = Arc::new(erdos_renyi(128, 512, 8, 6).unwrap());
         let qs = synthetic_queries(&g, 8, 0.5, 21);
-        let report = serve(
-            &g,
-            &qs,
-            &ServeConfig {
-                shards: 2,
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let report = serve(&g, &qs, &ServeConfig::with_shards(2)).unwrap();
         let totals = report.totals();
         let by_hand: u64 = report
             .shards

@@ -9,6 +9,9 @@
 /// absolute values.
 #[derive(Debug, Clone)]
 pub struct DeviceSpec {
+    /// Preset name (`k20c`, `k40`, `gtx680`) — the string accepted by
+    /// [`DeviceSpec::by_name`], the `devices` config key and `--devices`.
+    pub name: &'static str,
     /// Streaming multiprocessors (SMX on Kepler).
     pub num_sm: u32,
     /// CUDA cores per SM — determines how many warps retire in parallel.
@@ -59,6 +62,7 @@ impl DeviceSpec {
     /// The paper's testbed: Tesla K20c (Kepler GK110).
     pub fn k20c() -> Self {
         DeviceSpec {
+            name: "k20c",
             num_sm: 13,
             cores_per_sm: 192,
             warp_size: 32,
@@ -81,6 +85,65 @@ impl DeviceSpec {
             atomic_conflict: 60,
             atomic_append: 10,
         }
+    }
+
+    /// Tesla K40 (Kepler GK110B): two more SMX, triple the memory and a
+    /// slightly faster clock than the K20c — same per-op Kepler latencies,
+    /// so heterogeneous serving pools mix it with the K20c cleanly.
+    pub fn k40() -> Self {
+        DeviceSpec {
+            name: "k40",
+            num_sm: 15,
+            max_resident_threads: 15 * 2048,
+            memory_budget: (12.0 * 1024.0 * 1024.0 * 1024.0) as u64,
+            clock_ghz: 0.745,
+            ..DeviceSpec::k20c()
+        }
+    }
+
+    /// GeForce GTX 680 (Kepler GK104): fewer SMX and a quarter of the
+    /// K40's memory, but a much higher clock — the "small fast consumer
+    /// card" end of a heterogeneous pool.
+    pub fn gtx680() -> Self {
+        DeviceSpec {
+            name: "gtx680",
+            num_sm: 8,
+            max_resident_threads: 8 * 2048,
+            memory_budget: (2.0 * 1024.0 * 1024.0 * 1024.0) as u64,
+            clock_ghz: 1.006,
+            ..DeviceSpec::k20c()
+        }
+    }
+
+    /// Preset names accepted by [`DeviceSpec::by_name`].
+    pub const PRESETS: &'static [&'static str] = &["k20c", "k40", "gtx680"];
+
+    /// Resolve a preset by name (the `devices` config key / `--devices`).
+    pub fn by_name(name: &str) -> crate::error::Result<DeviceSpec> {
+        match name {
+            "k20c" => Ok(DeviceSpec::k20c()),
+            "k40" => Ok(DeviceSpec::k40()),
+            "gtx680" => Ok(DeviceSpec::gtx680()),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown device {other:?}; available: {}",
+                DeviceSpec::PRESETS.join(", ")
+            ))),
+        }
+    }
+
+    /// Integer picoseconds per core cycle — the exact unit the serving
+    /// scheduler's virtual clock runs in, so heterogeneous shards (whose
+    /// cycle counts are incomparable) meet on one deterministic timeline.
+    pub fn ps_per_cycle(&self) -> u64 {
+        (1000.0 / self.clock_ghz).round() as u64
+    }
+
+    /// Dimensionless throughput index (`SMs × cores × clock in MHz`) used
+    /// for cross-multiplied load comparisons in the scheduler's
+    /// least-outstanding-edges placement — pure integer math, so shard
+    /// choice is deterministic on every platform.
+    pub fn throughput_index(&self) -> u64 {
+        self.num_sm as u64 * self.cores_per_sm as u64 * (self.clock_ghz * 1000.0).round() as u64
     }
 
     /// Warps an SM retires in parallel (`cores / warp_size`; 6 on K20c).
@@ -143,6 +206,27 @@ mod tests {
         let d = DeviceSpec::k20c();
         let ms = d.cycles_to_ms(706_000);
         assert!((ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_resolve_by_name_and_differ() {
+        for name in DeviceSpec::PRESETS {
+            let d = DeviceSpec::by_name(name).unwrap();
+            assert_eq!(d.name, *name);
+        }
+        assert!(DeviceSpec::by_name("h100").is_err());
+        let (k20c, k40, gtx680) = (
+            DeviceSpec::k20c(),
+            DeviceSpec::k40(),
+            DeviceSpec::gtx680(),
+        );
+        assert!(k40.throughput_index() > k20c.throughput_index());
+        assert!(k40.memory_budget > k20c.memory_budget);
+        assert!(gtx680.memory_budget < k20c.memory_budget);
+        // Distinct clocks ⇒ distinct integer virtual-clock steps.
+        assert_eq!(k20c.ps_per_cycle(), 1416);
+        assert_eq!(k40.ps_per_cycle(), 1342);
+        assert_eq!(gtx680.ps_per_cycle(), 994);
     }
 
     #[test]

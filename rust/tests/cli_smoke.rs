@@ -129,6 +129,67 @@ fn serve_tiny_with_verification() {
 }
 
 #[test]
+fn serve_scheduler_admission_control_end_to_end() {
+    // The admission-controlled path: a near-simultaneous burst so the
+    // queue backs up past 64 behind the two in-flight singleton batches —
+    // the freed shard then forms a 70-query batch (multi-word tags) over
+    // heterogeneous devices; differential verification + JSON shape.
+    let out = bin()
+        .args([
+            "serve", "--suite", "rmat10", "--scale", "tiny", "--queries", "80",
+            "--arrival-rate", "10000", "--queue-cap", "90", "--queue-policy", "drop",
+            "--devices", "k20c,gtx680", "--max-batch", "70", "--verify", "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("differential replay OK"),
+        "no replay verdict:\n{text}"
+    );
+    let json_line = text.lines().find(|l| l.starts_with('{')).expect("json object");
+    let v = lonestar_lb::util::Json::parse(json_line).expect("valid json");
+    let arrived = v.get("arrived").unwrap().as_usize().unwrap();
+    let admitted = v.get("admitted").unwrap().as_usize().unwrap();
+    let dropped = v.get("dropped").unwrap().as_usize().unwrap();
+    let served = v.get("served").unwrap().as_usize().unwrap();
+    assert_eq!(arrived, 80);
+    assert_eq!(arrived, admitted + dropped, "arrived == admitted + dropped");
+    assert_eq!(admitted, served, "admitted == served at drain");
+    let queue_peak = v.get("queue_peak").unwrap().as_usize().unwrap();
+    // The burst outruns the first batches, so the queue must back up past
+    // 64 — which with --max-batch 70 forces a multi-word (>64-query)
+    // batch at the next dispatch.
+    assert!(queue_peak > 64 && queue_peak <= 90, "queue_peak {queue_peak}");
+    assert!(v.get("wait_cycles").is_some(), "missing wait_cycles");
+    assert!(v.get("latency_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
+    let shards = v.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2, "one report per device");
+    assert_eq!(shards[0].get("device").unwrap().as_str(), Some("k20c"));
+    assert_eq!(shards[1].get("device").unwrap().as_str(), Some("gtx680"));
+    let totals = v.get("totals").unwrap();
+    for key in ["admitted", "dropped", "queue_peak", "wait_cycles"] {
+        assert!(totals.get(key).is_some(), "totals missing {key}");
+    }
+}
+
+#[test]
+fn serve_rejects_unknown_devices_and_bad_rates() {
+    let out = bin()
+        .args(["serve", "--suite", "rmat10", "--scale", "tiny", "--devices", "h100"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown device"));
+    let out = bin()
+        .args(["serve", "--suite", "rmat10", "--scale", "tiny", "--arrival-rate", "-2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn figures_tiny_table2() {
     let out = bin()
         .args(["figures", "table2", "--scale", "tiny"])

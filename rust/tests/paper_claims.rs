@@ -304,7 +304,7 @@ fn ad_trace_never_picks_memory_infeasible_strategies_batched_or_not() {
             &g,
             &queries,
             &ServeConfig {
-                device: dev.clone(),
+                devices: vec![dev.clone()],
                 enforce_budget: true,
                 ..Default::default()
             },

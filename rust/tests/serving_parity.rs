@@ -7,11 +7,14 @@
 
 use lonestar_lb::adaptive::AdaptivePolicyKind;
 use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::arena::GraphCache;
 use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
 use lonestar_lb::graph::{Csr, Graph};
 use lonestar_lb::serving::{
-    replay_single, serve, synthetic_queries, Query, ServeConfig,
+    replay_single, serve, serve_stream, synthetic_arrivals, synthetic_queries, Query,
+    SchedulerConfig, ServeConfig,
 };
+use lonestar_lb::sim::DeviceSpec;
 use lonestar_lb::strategies::{StrategyKind, StrategyParams};
 use lonestar_lb::util::Rng;
 use std::sync::Arc;
@@ -56,15 +59,20 @@ fn assert_parity(
 ) {
     let cfg = ServeConfig {
         strategy,
-        params: params.clone(),
-        shards,
-        ..Default::default()
+        params,
+        ..ServeConfig::with_shards(shards)
     };
-    let report = serve(g, queries, &cfg)
+    assert_parity_cfg(g, queries, &cfg, label);
+}
+
+/// [`assert_parity`] with a caller-built config (heterogeneous pools,
+/// raised `max_batch`).
+fn assert_parity_cfg(g: &Arc<Csr>, queries: &[Query], cfg: &ServeConfig, label: &str) {
+    let report = serve(g, queries, cfg)
         .unwrap_or_else(|e| panic!("{label}: serve failed: {e}"));
     assert_eq!(report.query_count(), queries.len(), "{label}: lost queries");
     for shard in &report.shards {
-        replay_single(g, &shard.queries, strategy, &params, &shard.dists)
+        replay_single(g, &shard.queries, cfg.strategy, &cfg.params, &shard.dists)
             .unwrap_or_else(|e| panic!("{label}: {e}"));
     }
 }
@@ -186,10 +194,7 @@ fn batched_runs_are_deterministic() {
     let pool = graphs();
     let (_, g) = &pool[0];
     let queries = random_queries(g, 4, AlgoKind::Sssp, 77);
-    let cfg = ServeConfig {
-        shards: 2,
-        ..Default::default()
-    };
+    let cfg = ServeConfig::with_shards(2);
     let a = serve(g, &queries, &cfg).unwrap();
     let b = serve(g, &queries, &cfg).unwrap();
     for q in &queries {
@@ -197,4 +202,109 @@ fn batched_runs_are_deterministic() {
     }
     let (ta, tb) = (a.totals(), b.totals());
     assert_eq!(ta, tb, "metrics must reproduce run-to-run");
+}
+
+#[test]
+fn wide_batches_replay_bit_identically_across_all_strategies() {
+    // 65–200 queries on ONE shard: the merged worklist's tag spills past
+    // its first word (multi-word masks), and every strategy — AD included
+    // — must still replay bit-identically, BFS and SSSP.
+    let g = Arc::new(erdos_renyi(300, 1200, 20, 32).unwrap());
+    for (count, algo) in [(70usize, AlgoKind::Bfs), (130, AlgoKind::Sssp)] {
+        let queries = random_queries(&g, count, algo, 0xB16 + count as u64);
+        for strategy in StrategyKind::ALL_WITH_ADAPTIVE {
+            let cfg = ServeConfig {
+                strategy,
+                max_batch: 200,
+                ..Default::default()
+            };
+            assert_parity_cfg(&g, &queries, &cfg, &format!("wide{count}/{algo:?}/{strategy}"));
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_shard_sets_replay_bit_identically() {
+    // A mixed k20c/k40/gtx680 pool: placement is round-robin here (plain
+    // serve), but each shard runs on its own device spec — distances must
+    // not care, for every strategy, BFS and SSSP.
+    let g = Arc::new(road_grid(16, 16, 9, 33).unwrap());
+    let devices = vec![DeviceSpec::k20c(), DeviceSpec::k40(), DeviceSpec::gtx680()];
+    for algo in [AlgoKind::Bfs, AlgoKind::Sssp] {
+        let queries = random_queries(&g, 9, algo, 0x4E7 + algo as u64);
+        for strategy in StrategyKind::ALL_WITH_ADAPTIVE {
+            let cfg = ServeConfig {
+                strategy,
+                devices: devices.clone(),
+                ..Default::default()
+            };
+            assert_parity_cfg(&g, &queries, &cfg, &format!("hetero/{algo:?}/{strategy}"));
+        }
+    }
+}
+
+#[test]
+fn scheduler_150_queries_heterogeneous_with_forced_drops() {
+    // The acceptance scenario: a 150-query continuous stream over a
+    // heterogeneous pool with a queue small enough to force drops. Served
+    // queries replay bit-identically; dropped ones are excluded from the
+    // comparison but stay counted in the report.
+    let g = Arc::new(rmat(8, 2048, RmatParams::default(), 31).unwrap());
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            devices: vec![DeviceSpec::k20c(), DeviceSpec::gtx680()],
+            // Note: with queue_cap 8 the queue bounds batch width, so this
+            // run exercises *drops*, not wide batches — >64-query batches
+            // are pinned by `wide_batches_replay_bit_identically_...` and
+            // the scheduler's own `scheduler_forms_batches_past_64_queries`.
+            max_batch: 96,
+            ..Default::default()
+        },
+        queue_cap: 8,
+        ..Default::default()
+    };
+    // Mean gap 0.002 ms ⇒ ~500 q/ms: far beyond service capacity.
+    let arrivals = synthetic_arrivals(&g, 150, 0.5, 2_000_000, 2026);
+    let report = serve_stream(&g, arrivals, &cfg, &GraphCache::new()).unwrap();
+    assert_eq!(report.arrived, 150);
+    assert!(
+        !report.dropped.is_empty(),
+        "an 8-deep queue at 500 q/ms must shed load"
+    );
+    assert_eq!(
+        report.arrived,
+        report.admitted + report.dropped.len() as u64,
+        "conservation: arrived == admitted + dropped"
+    );
+    assert_eq!(report.admitted, report.served() as u64, "admitted == served at drain");
+    // Bit-identical replay of every *served* query, per shard.
+    for shard in &report.shards {
+        replay_single(
+            &g,
+            &shard.queries,
+            StrategyKind::AD,
+            &cfg.serve.params,
+            &shard.dists,
+        )
+        .unwrap_or_else(|e| panic!("scheduler shard {}: {e}", shard.shard));
+    }
+    // Dropped queries were never answered.
+    for q in &report.dropped {
+        assert!(report.dist_of(q.id).is_none(), "dropped query {} has results", q.id);
+    }
+    // Per-shard ms figures use each shard's own device spec.
+    for shard in &report.shards {
+        let own = shard.device.cycles_to_ms(shard.metrics.total_cycles());
+        assert!((shard.total_ms() - own).abs() < 1e-12, "shard {}", shard.shard);
+    }
+    assert!(
+        (report.total_ms()
+            - report
+                .shards
+                .iter()
+                .map(|s| s.total_ms())
+                .sum::<f64>())
+        .abs()
+            < 1e-9
+    );
 }

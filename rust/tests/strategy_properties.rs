@@ -4,11 +4,15 @@
 
 use lonestar_lb::adaptive::{migrate, AdaptivePolicyKind};
 use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::arena::GraphCache;
 use lonestar_lb::coordinator::{run, RunConfig};
 use lonestar_lb::graph::generators::{erdos_renyi, rmat, road_grid, RmatParams};
 use lonestar_lb::graph::{Csr, Edge, Graph};
 use lonestar_lb::metrics::RunMetrics;
-use lonestar_lb::serving::{aggregate, MergedWorklist};
+use lonestar_lb::serving::{
+    aggregate, serve_stream, synthetic_arrivals, MergedWorklist, OverflowPolicy, SchedulerConfig,
+    ServeConfig,
+};
 use lonestar_lb::strategies::mdt::auto_mdt;
 use lonestar_lb::strategies::node_split::split_graph;
 use lonestar_lb::strategies::{StrategyKind, StrategyParams};
@@ -293,21 +297,39 @@ fn adaptive_matches_oracle_on_random_graphs() {
 #[test]
 fn merged_worklist_migration_roundtrip_preserves_tags() {
     // The serving layer's tagged merged worklist: nodes → exploded edges →
-    // nodes must preserve every query's tag bit exactly, with the same
-    // single documented exception as the untagged migration — nodes of
-    // out-degree zero cannot ride in edge space.
+    // nodes must preserve every query's tag exactly, with the same single
+    // documented exception as the untagged migration — nodes of out-degree
+    // zero cannot ride in edge space. Slot counts range past 64, so the
+    // multi-word tag layout is exercised alongside the single-word one
+    // (generalizing the original 64-bit property).
     forall("merged-tag-roundtrip", 40, |rng| {
         let g = if rng.gen_f64() < 0.5 {
             rmat(8, 2048, RmatParams::default(), rng.next_u64()).unwrap()
         } else {
             road_grid(12, 12, 9, rng.next_u64()).unwrap()
         };
-        let slots = rng.gen_range_u32(1, 9) as usize;
+        // 1..=8 slots half the time (single-word), 60..=200 otherwise
+        // (1–4 words); slots are sparse so high bits really get set.
+        let capacity = if rng.gen_f64() < 0.5 {
+            rng.gen_range_u32(1, 9) as usize
+        } else {
+            rng.gen_range_u32(60, 201) as usize
+        };
+        let count = rng.gen_range_u32(1, 9).min(capacity as u32) as usize;
+        let mut slots: Vec<usize> = (0..count)
+            .map(|_| rng.gen_index(capacity))
+            .collect();
+        slots.sort_unstable();
+        slots.dedup();
         let frontiers: Vec<NodeWorklist> =
-            (0..slots).map(|_| random_frontier(rng, &g)).collect();
-        let pairs: Vec<(usize, &NodeWorklist)> =
-            frontiers.iter().enumerate().collect();
-        let merged = MergedWorklist::from_frontiers(&g, &pairs);
+            slots.iter().map(|_| random_frontier(rng, &g)).collect();
+        let pairs: Vec<(usize, &NodeWorklist)> = slots
+            .iter()
+            .copied()
+            .zip(frontiers.iter())
+            .collect();
+        let merged = MergedWorklist::from_frontiers_with_capacity(&g, &pairs, capacity);
+        assert_eq!(merged.stride(), capacity.div_ceil(64).max(1));
 
         // Each slot's extracted frontier equals the input frontier.
         for (slot, wl) in &pairs {
@@ -315,22 +337,107 @@ fn merged_worklist_migration_roundtrip_preserves_tags() {
             assert_eq!(sorted_nodes(&got), sorted_nodes(wl), "slot {slot}");
         }
 
-        // Tag-preserving round-trip through edge space.
+        // Tag-preserving round-trip through edge space (all words).
         let back = merged.to_edges(&g).to_nodes(&g);
-        let mut want: Vec<(u32, u64)> = Vec::new();
+        let mut want: Vec<(u32, Vec<u64>)> = Vec::new();
         for i in 0..merged.len() {
             let n = merged.nodes()[i];
             if g.degree(n) > 0 {
-                want.push((n, merged.masks()[i]));
+                want.push((n, merged.mask_words(i).to_vec()));
             }
         }
         want.sort_unstable();
-        let mut got: Vec<(u32, u64)> = Vec::new();
+        let mut got: Vec<(u32, Vec<u64>)> = Vec::new();
         for i in 0..back.len() {
-            got.push((back.nodes()[i], back.masks()[i]));
+            got.push((back.nodes()[i], back.mask_words(i).to_vec()));
         }
         got.sort_unstable();
         assert_eq!(got, want, "tags must survive the edge round-trip");
+
+        // The sort-based builder still matches the BTreeMap oracle at
+        // every stride.
+        let oracle = MergedWorklist::from_frontiers_btree_with_capacity(&g, &pairs, capacity);
+        assert_eq!(merged, oracle, "builder == btree oracle (capacity {capacity})");
+    });
+}
+
+#[test]
+fn scheduler_conserves_queries_and_admits_fifo() {
+    // The admission-control conservation law and FIFO admission order,
+    // across random rates, queue caps, pool shapes and both overflow
+    // policies: `arrived == admitted + dropped`, `admitted == served` at
+    // drain, and queries leave the queue exactly in arrival order minus
+    // the dropped ones.
+    let g = std::sync::Arc::new(erdos_renyi(200, 800, 11, 17).unwrap());
+    forall("scheduler-conservation", 12, |rng| {
+        let count = rng.gen_range_u32(10, 60) as usize;
+        let mean_gap_ps = [1_000u64, 100_000, 10_000_000, 1_000_000_000]
+            [rng.gen_index(4)];
+        let queue_cap = rng.gen_range_u32(1, 20) as usize;
+        let max_batch = rng.gen_range_u32(1, 12) as usize;
+        let shards = rng.gen_range_u32(1, 4) as usize;
+        let overflow = if rng.gen_f64() < 0.5 {
+            OverflowPolicy::Drop
+        } else {
+            OverflowPolicy::Block
+        };
+        let devices: Vec<_> = (0..shards)
+            .map(|i| match i % 3 {
+                0 => lonestar_lb::sim::DeviceSpec::k20c(),
+                1 => lonestar_lb::sim::DeviceSpec::k40(),
+                _ => lonestar_lb::sim::DeviceSpec::gtx680(),
+            })
+            .collect();
+        let cfg = SchedulerConfig {
+            serve: ServeConfig {
+                strategy: StrategyKind::BS,
+                devices,
+                max_batch,
+                ..Default::default()
+            },
+            queue_cap,
+            overflow,
+            ..Default::default()
+        };
+        let arrivals = synthetic_arrivals(&g, count, 0.5, mean_gap_ps, rng.next_u64());
+        let label = format!(
+            "count={count} gap={mean_gap_ps} cap={queue_cap} batch={max_batch} \
+             shards={shards} {overflow:?}"
+        );
+        let report = serve_stream(&g, arrivals.clone(), &cfg, &GraphCache::new())
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(report.arrived, count as u64, "{label}");
+        assert_eq!(
+            report.arrived,
+            report.admitted + report.dropped.len() as u64,
+            "{label}: arrived == admitted + dropped"
+        );
+        assert_eq!(
+            report.admitted,
+            report.served() as u64,
+            "{label}: admitted == served at drain"
+        );
+        if overflow == OverflowPolicy::Block {
+            assert!(report.dropped.is_empty(), "{label}: block never sheds");
+        }
+        // FIFO: placement order == arrival order minus the dropped ids.
+        let dropped: std::collections::BTreeSet<u32> =
+            report.dropped.iter().map(|q| q.id).collect();
+        let expected: Vec<u32> = arrivals
+            .iter()
+            .map(|a| a.query.id)
+            .filter(|id| !dropped.contains(id))
+            .collect();
+        assert_eq!(
+            report.placed_order, expected,
+            "{label}: queries must leave the queue in admission order"
+        );
+        // Aggregate counters mirror the report.
+        let totals = report.totals();
+        assert_eq!(totals.admitted, report.admitted, "{label}");
+        assert_eq!(totals.dropped, report.dropped.len() as u64, "{label}");
+        assert_eq!(totals.queue_peak, report.queue_peak, "{label}");
+        assert!(totals.queue_peak <= queue_cap as u64, "{label}");
     });
 }
 

@@ -21,6 +21,34 @@ import json
 import os
 import sys
 
+# Ratio metrics every fresh measurement must carry, per suite. Checked even
+# against a bootstrap baseline, so a bench refactor cannot silently stop
+# emitting a gated number (the scheduler entry lands here with the
+# admission-control PR).
+REQUIRED_RATIOS = {
+    "hotpath": [
+        "flatten_micro_speedup",
+        "iteration_overhead_speedup",
+        "serving_merge_speedup",
+    ],
+    "serving": [
+        "inspection_amortization",
+        "scheduler_sim_qps",
+    ],
+}
+
+
+def check_required(fresh) -> list:
+    failures = []
+    for suite, names in sorted(REQUIRED_RATIOS.items()):
+        ratios = fresh.get("suites", {}).get(suite, {}).get("ratios", {})
+        for name in names:
+            if name not in ratios:
+                failures.append(
+                    f"{suite}:{name}: required ratio missing from the fresh run"
+                )
+    return failures
+
 
 def main() -> int:
     if len(sys.argv) < 3:
@@ -34,7 +62,13 @@ def main() -> int:
     with open(fresh_path) as f:
         fresh = json.load(f)
 
+    required_failures = check_required(fresh)
     if baseline.get("bootstrap") or not baseline.get("suites"):
+        if required_failures:
+            print("bench gate FAILED (bootstrap baseline, but the fresh run is incomplete):")
+            for f_ in required_failures:
+                print(f"  - {f_}")
+            return 1
         print(
             "baseline is a bootstrap stub — accepting this measurement.\n"
             f"To arm the regression gate, commit the fresh file:\n"
@@ -42,7 +76,7 @@ def main() -> int:
         )
         return 0
 
-    failures = []
+    failures = required_failures
     for suite, sdata in sorted(baseline.get("suites", {}).items()):
         fresh_suite = fresh.get("suites", {}).get(suite)
         if fresh_suite is None:
