@@ -29,6 +29,7 @@ use crate::strategies::mdt::{auto_mdt, MdtDecision};
 use crate::strategies::node_split::{split_graph, SplitGraph};
 use crate::strategies::workload_decomp::block_offsets_into;
 use crate::strategies::{Strategy, StrategyKind, StrategyParams};
+use crate::telemetry::TraceEventKind;
 use crate::worklist::hierarchy::SubList;
 use crate::worklist::{EdgeWorklist, NodeWorklist};
 use std::sync::Arc;
@@ -739,9 +740,14 @@ impl Strategy for Adaptive {
             StrategyKind::BS
         };
 
-        // 3. Migrate if the mode changed.
+        // 3. Migrate if the mode changed. The telemetry instants land
+        // here — before the iteration's kernels — so in a trace the
+        // decision precedes the slices it caused.
+        ctx.record_trace(TraceEventKind::FrontierSize, "", snap.nodes, snap.edges);
+        ctx.record_trace(TraceEventKind::StrategyDecision, choice.label(), snap.nodes, snap.edges);
         let migrated = choice != self.mode;
         if migrated {
+            ctx.record_trace(TraceEventKind::Migration, choice.label(), snap.nodes, snap.edges);
             self.migrate_to(ctx, choice, &view)?;
         }
         self.view = view; // restore the scratch capacity for next iteration

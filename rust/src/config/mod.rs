@@ -28,6 +28,8 @@
 //!                                      #  (> 0 switches on the scheduler)
 //! queue_cap  = 64                      # serve: admission-queue bound
 //! queue_policy = drop                  # drop | block at a full queue
+//! trace_out  = trace.json              # write a Chrome trace-event file
+//! metrics_out = metrics.prom           # write Prometheus text exposition
 //! ```
 
 use crate::algorithms::AlgoKind;
@@ -212,6 +214,12 @@ pub struct ExperimentConfig {
     pub queue_cap: usize,
     /// Overflow policy at a full admission queue.
     pub queue_policy: crate::serving::OverflowPolicy,
+    /// Chrome trace-event JSON output path (`run`/`serve`); CLI
+    /// `--trace-out` overrides.
+    pub trace_out: Option<String>,
+    /// Prometheus text-exposition output path (`run`/`serve`); CLI
+    /// `--metrics-out` overrides.
+    pub metrics_out: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -235,6 +243,8 @@ impl Default for ExperimentConfig {
             arrival_rate: 0.0,
             queue_cap: 64,
             queue_policy: crate::serving::OverflowPolicy::Drop,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -348,6 +358,8 @@ impl ExperimentConfig {
                 "queue_policy" => {
                     cfg.queue_policy = crate::serving::OverflowPolicy::parse(&v)?
                 }
+                "trace_out" => cfg.trace_out = Some(v),
+                "metrics_out" => cfg.metrics_out = Some(v),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
         }
@@ -532,5 +544,18 @@ mod tests {
         assert!(ExperimentConfig::parse("queue_policy = spill").is_err());
         assert!(ExperimentConfig::parse("queue_cap = 0").is_err());
         assert!(ExperimentConfig::parse("max_batch = 0").is_err());
+    }
+
+    #[test]
+    fn parses_telemetry_keys() {
+        let cfg = ExperimentConfig::parse("").unwrap();
+        assert_eq!(cfg.trace_out, None);
+        assert_eq!(cfg.metrics_out, None);
+        let cfg = ExperimentConfig::parse(
+            "trace_out = out/trace.json\nmetrics_out = out/metrics.prom\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("out/trace.json"));
+        assert_eq!(cfg.metrics_out.as_deref(), Some("out/metrics.prom"));
     }
 }

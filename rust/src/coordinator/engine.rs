@@ -69,6 +69,20 @@ pub struct RunResult {
 
 /// Drive `cfg` over `graph` to convergence.
 pub fn run(graph: &Arc<Csr>, cfg: &RunConfig) -> Result<RunResult> {
+    run_traced(graph, cfg, None, 0)
+}
+
+/// [`run`] with an optional telemetry sink: kernel launches (and, for the
+/// adaptive engine, strategy decisions / migrations) are recorded on the
+/// device's virtual ps timeline starting at `base_ps` — the CLI threads a
+/// running base through consecutive strategies so one `--trace-out` file
+/// lays them out back-to-back.
+pub fn run_traced(
+    graph: &Arc<Csr>,
+    cfg: &RunConfig,
+    mut trace: Option<&mut crate::telemetry::TraceSink>,
+    base_ps: u64,
+) -> Result<RunResult> {
     if graph.num_nodes() == 0 {
         return Err(Error::InvalidGraph("empty graph".into()));
     }
@@ -89,6 +103,9 @@ pub fn run(graph: &Arc<Csr>, cfg: &RunConfig) -> Result<RunResult> {
 
     let host_start = Instant::now();
     let mut ctx = ExecCtx::new(&cfg.device, cfg.algo, relaxer);
+    ctx.trace = trace.as_deref_mut();
+    ctx.trace_base_ps = base_ps;
+    ctx.trace_shard = 0;
     ctx.push_policy = cfg.push_policy;
     if cfg.enforce_budget {
         ctx = ctx.with_budget(cfg.device.memory_budget);

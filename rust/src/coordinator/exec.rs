@@ -15,6 +15,7 @@ use crate::error::Result;
 use crate::graph::{Csr, NodeId};
 use crate::metrics::RunMetrics;
 use crate::sim::{AccessPattern, DeviceSpec, KernelSim, MemoryTracker};
+use crate::telemetry::{TraceEvent, TraceEventKind, TraceSink, NO_ID};
 use crate::worklist::chunking::PushPolicy;
 
 /// How batch positions are distributed over lanes.
@@ -152,6 +153,21 @@ pub struct ExecCtx<'d> {
     /// the launch retires, so steady-state iterations allocate nothing
     /// (see [`crate::arena`]).
     pub scratch: ScratchArena,
+    /// Optional telemetry sink (the `--trace-out` seam): when attached,
+    /// kernel launches and adaptive decisions are recorded as
+    /// [`TraceEvent`]s on the shared virtual timeline. `None` costs one
+    /// branch per would-be event; recording never allocates.
+    pub trace: Option<&'d mut TraceSink>,
+    /// Virtual instant (ps) this context's timeline starts at — the
+    /// scheduler sets it to the batch-launch instant so engine events land
+    /// inside the shard's busy interval.
+    pub trace_base_ps: u64,
+    /// Cycle watermark paired with `trace_base_ps`: cycles accumulated
+    /// before the sink was attached do not shift the timeline.
+    pub trace_base_cycles: u64,
+    /// Shard id stamped on this context's events ([`NO_ID`] outside the
+    /// sharded serving path; single-run tracing uses shard 0).
+    pub trace_shard: u32,
 }
 
 impl<'d> ExecCtx<'d> {
@@ -166,6 +182,43 @@ impl<'d> ExecCtx<'d> {
             relaxer,
             dist: Vec::new(),
             scratch: ScratchArena::new(),
+            trace: None,
+            trace_base_ps: 0,
+            trace_base_cycles: 0,
+            trace_shard: NO_ID,
+        }
+    }
+
+    /// Position on the shared virtual timeline: the trace base plus the
+    /// cycles accumulated since the sink was attached, converted on this
+    /// device's own clock (heterogeneous pools stay clock-neutral).
+    pub fn trace_now_ps(&self) -> u64 {
+        self.trace_base_ps
+            + self
+                .metrics
+                .total_cycles()
+                .saturating_sub(self.trace_base_cycles)
+                * self.dev.ps_per_cycle()
+    }
+
+    /// Record an engine-side telemetry event. No-op without an attached
+    /// sink; never allocates. `label` is a static tag (strategy / kernel
+    /// name), `a`/`b` the kind-specific payload.
+    #[inline]
+    pub fn record_trace(&mut self, kind: TraceEventKind, label: &'static str, a: u64, b: u64) {
+        if self.trace.is_none() {
+            return;
+        }
+        let at_ps = self.trace_now_ps();
+        let shard = self.trace_shard;
+        if let Some(sink) = self.trace.as_deref_mut() {
+            sink.record(TraceEvent {
+                shard,
+                a,
+                b,
+                label,
+                ..TraceEvent::new(kind, at_ps)
+            });
         }
     }
 
@@ -188,6 +241,11 @@ impl<'d> ExecCtx<'d> {
     ) -> Result<LaunchResult> {
         let total = work.src.len();
         debug_assert_eq!(total, work.eid.len());
+        let trace_start_cycles = if self.trace.is_some() {
+            self.metrics.total_cycles()
+        } else {
+            0
+        };
 
         // Batch candidate computation from a snapshot of `dist` (threads
         // read global memory without ordering guarantees; min-fold below
@@ -286,6 +344,23 @@ impl<'d> ExecCtx<'d> {
         self.scratch.put_u32(lane_counts);
         self.metrics
             .charge_processing(t, self.dev.launch_overhead);
+        if self.trace.is_some() {
+            // A complete slice covering exactly the cycles this launch
+            // charged, placed so it ends at the current virtual instant.
+            let dur_ps = self.metrics.total_cycles().saturating_sub(trace_start_cycles)
+                * self.dev.ps_per_cycle();
+            let end_ps = self.trace_now_ps();
+            let shard = self.trace_shard;
+            if let Some(sink) = self.trace.as_deref_mut() {
+                sink.record(TraceEvent {
+                    shard,
+                    a: dur_ps,
+                    b: total as u64,
+                    label: work.name,
+                    ..TraceEvent::new(TraceEventKind::Kernel, end_ps.saturating_sub(dur_ps))
+                });
+            }
+        }
         Ok(result)
     }
 

@@ -8,5 +8,5 @@
 pub mod engine;
 pub mod exec;
 
-pub use engine::{run, RunConfig, RunResult};
+pub use engine::{run, run_traced, RunConfig, RunResult};
 pub use exec::{Assignment, ExecCtx, KernelWork, LaunchResult, PushTarget, SplitMap};

@@ -45,7 +45,11 @@ pub struct QueueRow {
     pub queue_peak: u64,
     pub batches: u64,
     pub mean_latency_ms: f64,
+    pub p50_latency_ms: f64,
     pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub max_latency_ms: f64,
+    pub p95_wait_ms: f64,
     pub wall_ms: f64,
 }
 
@@ -61,7 +65,11 @@ impl QueueRow {
             ("queue_peak", self.queue_peak.into()),
             ("batches", self.batches.into()),
             ("mean_latency_ms", self.mean_latency_ms.into()),
+            ("p50_latency_ms", self.p50_latency_ms.into()),
             ("p95_latency_ms", self.p95_latency_ms.into()),
+            ("p99_latency_ms", self.p99_latency_ms.into()),
+            ("max_latency_ms", self.max_latency_ms.into()),
+            ("p95_wait_ms", self.p95_wait_ms.into()),
             ("wall_ms", self.wall_ms.into()),
         ])
     }
@@ -85,8 +93,8 @@ pub fn fig_queue(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<QueueRow
     )?;
     writeln!(
         out,
-        "{:>9} {:>8} {:>8} {:>8} {:>7} {:>8} {:>12} {:>11} {:>10}",
-        "q/ms", "admitted", "dropped", "served", "batches", "qpeak", "mean lat ms", "p95 lat ms", "wall ms"
+        "{:>9} {:>8} {:>8} {:>8} {:>7} {:>8} {:>12} {:>11} {:>11} {:>11} {:>10}",
+        "q/ms", "admitted", "dropped", "served", "batches", "qpeak", "mean lat ms", "p95 lat ms", "p99 lat ms", "p95 wait ms", "wall ms"
     )?;
     let cache = GraphCache::new();
     let mut rows = Vec::new();
@@ -113,12 +121,16 @@ pub fn fig_queue(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<QueueRow
             queue_peak: report.queue_peak,
             batches: report.batches,
             mean_latency_ms: report.mean_latency_ms(),
+            p50_latency_ms: report.p50_latency_ms(),
             p95_latency_ms: report.p95_latency_ms(),
+            p99_latency_ms: report.p99_latency_ms(),
+            max_latency_ms: report.max_latency_ms(),
+            p95_wait_ms: report.wait_ms_p95(),
             wall_ms: report.wall_ms(),
         };
         writeln!(
             out,
-            "{:>9.2} {:>8} {:>8} {:>8} {:>7} {:>8} {:>12.3} {:>11.3} {:>10.3}",
+            "{:>9.2} {:>8} {:>8} {:>8} {:>7} {:>8} {:>12.3} {:>11.3} {:>11.3} {:>11.3} {:>10.3}",
             row.rate_per_ms,
             row.admitted,
             row.dropped,
@@ -127,15 +139,18 @@ pub fn fig_queue(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<QueueRow
             row.queue_peak,
             row.mean_latency_ms,
             row.p95_latency_ms,
+            row.p99_latency_ms,
+            row.p95_wait_ms,
             row.wall_ms,
         )?;
         rows.push(row);
     }
     writeln!(
         out,
-        "(mean/p95 latency over *served* queries — arrival to completion on the \
-         virtual clock. Rising rate ⇒ queueing delay, fuller batches, then \
-         drops once the {FIGQUEUE_CAP}-deep queue saturates.)"
+        "(latency over *served* queries — arrival to completion on the virtual \
+         clock; percentiles are log2-bucket upper bounds clamped to the max. \
+         Rising rate ⇒ queueing delay, fuller batches, then drops once the \
+         {FIGQUEUE_CAP}-deep queue saturates.)"
     )?;
     Ok(rows)
 }

@@ -58,6 +58,17 @@
 //! serving reuse the MDT/COO/split-graph artifacts across batches. The
 //! perf trajectory is tracked in `BENCH_hotpath.json` (see README
 //! "Performance").
+//!
+//! Observability rides on the same virtual clock: the [`telemetry`]
+//! subsystem records fixed-width events into a pre-allocated ring
+//! ([`telemetry::TraceSink`], attached through the scheduler and
+//! [`coordinator::ExecCtx`] behind an `Option<&mut TraceSink>` seam) and
+//! exports Chrome trace-event JSON (Perfetto) plus a Prometheus-style
+//! text exposition (`--trace-out` / `--metrics-out`). Latency and queue
+//! wait are tracked in log₂-bucketed histograms
+//! ([`telemetry::LogHistogram`]) — p50/p95/p99/max without the old
+//! sort-per-call, and allocation-free so a live sink preserves the
+//! zero-alloc invariant.
 
 pub mod adaptive;
 pub mod algorithms;
@@ -72,6 +83,7 @@ pub mod runtime;
 pub mod serving;
 pub mod sim;
 pub mod strategies;
+pub mod telemetry;
 pub mod util;
 pub mod worklist;
 

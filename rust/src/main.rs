@@ -7,6 +7,7 @@
 //!                      [--scale tiny|small|paper] [--seed N] [--source N]
 //!                      [--xla [--artifacts DIR]] [--enforce-budget]
 //!                      [--no-chunking] [--json]
+//!                      [--trace-out FILE] [--metrics-out FILE]
 //! lonestar-lb serve    [--config F] [--suite NAME | --graph FILE | --gen SPEC]
 //!                      [--queries N] [--batch-size N] [--shards N]
 //!                      [--devices k20c,k40,...] [--max-batch N]
@@ -15,6 +16,7 @@
 //!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
 //!                      [--adaptive-policy P] [--scale S] [--seed N]
 //!                      [--enforce-budget] [--verify] [--json]
+//!                      [--trace-out FILE] [--metrics-out FILE]
 //! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|
 //!                       figqueue|all]
 //!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
@@ -29,7 +31,8 @@
 use lonestar_lb::algorithms::AlgoKind;
 use lonestar_lb::config::{parse_algo, parse_scale, ExperimentConfig, GraphSource};
 use lonestar_lb::coordinator::engine::Backend;
-use lonestar_lb::coordinator::run;
+use lonestar_lb::coordinator::run_traced;
+use lonestar_lb::telemetry::{Exposition, TraceEventKind, TraceSink, DEFAULT_TRACE_CAPACITY};
 use lonestar_lb::figures::{self, FigureOpts};
 use lonestar_lb::graph::generators::paper_suite;
 use lonestar_lb::graph::stats::DegreeStats;
@@ -118,6 +121,7 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --adaptive-policy cost|heuristic|round-robin
                --scale tiny|small|paper --seed N
                --xla --artifacts DIR --enforce-budget --no-chunking --json
+               --trace-out FILE.json --metrics-out FILE.prom
   serve        --suite NAME | --graph FILE | --gen SPEC | --config FILE
                --queries N --batch-size N --shards N
                --devices k20c,k40,gtx680 --max-batch N
@@ -125,6 +129,7 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
                --adaptive-policy P --scale S --seed N
                --enforce-budget --verify --json
+               --trace-out FILE.json --metrics-out FILE.prom
   figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|figqueue|all]
                --scale S --seed N --out FILE.json --no-budget
   generate     NAME OUT --scale S --seed N
@@ -158,6 +163,62 @@ fn real_main(argv: &[String]) -> Result<()> {
         "runtime-info" => cmd_runtime_info(&args, &mut out),
         other => Err(Error::Config(format!("unknown command {other:?}"))),
     }
+}
+
+/// Resolve the `--trace-out`/`--metrics-out` destinations: flags override
+/// the config file, absent everywhere means telemetry stays detached.
+fn trace_paths(args: &Args, cfg: &ExperimentConfig) -> (Option<String>, Option<String>) {
+    (
+        args.get("trace-out").map(str::to_string).or_else(|| cfg.trace_out.clone()),
+        args.get("metrics-out").map(str::to_string).or_else(|| cfg.metrics_out.clone()),
+    )
+}
+
+/// Per-kind trace-event counters as a Prometheus exposition — the `run`
+/// and pre-materialized batch `serve` paths have no [`ScheduleReport`]
+/// (and so no latency histograms), but their event totals are still worth
+/// scraping.
+fn trace_exposition(sink: &TraceSink) -> String {
+    let mut exp = Exposition::new();
+    for kind in TraceEventKind::ALL {
+        exp.counter(
+            "lonestar_trace_events_total",
+            "Trace events recorded, by kind",
+            &[("kind", kind.label())],
+            sink.kind_count(kind) as f64,
+        );
+    }
+    exp.counter(
+        "lonestar_trace_overwritten_total",
+        "Trace events lost to ring wrap-around",
+        &[],
+        sink.overwritten() as f64,
+    );
+    exp.finish()
+}
+
+/// Write the Chrome trace and/or metrics exposition files.
+fn write_trace_outputs(
+    out: &mut impl Write,
+    sink: &TraceSink,
+    shard_devices: &[&str],
+    trace_out: Option<&str>,
+    metrics: Option<(&str, String)>,
+) -> Result<()> {
+    if let Some(path) = trace_out {
+        std::fs::write(path, lonestar_lb::telemetry::chrome_trace(sink, shard_devices))?;
+        writeln!(
+            out,
+            "wrote trace {path} ({} events, {} overwritten)",
+            sink.len(),
+            sink.overwritten()
+        )?;
+    }
+    if let Some((path, text)) = metrics {
+        std::fs::write(path, text)?;
+        writeln!(out, "wrote metrics {path}")?;
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
@@ -208,11 +269,21 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
     let g = Arc::new(cfg.graph.load(cfg.scale, cfg.seed)?);
     writeln!(out, "graph: {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
 
+    let (trace_out, metrics_out) = trace_paths(args, &cfg);
+    let mut sink = (trace_out.is_some() || metrics_out.is_some())
+        .then(|| TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY));
+    // Successive strategy runs are laid end to end on one virtual
+    // timeline, so the exported trace shows them as consecutive spans.
+    let mut base_ps = 0u64;
+    let mut trace_device: &'static str = "k20c";
+
     let mut json_rows = Vec::new();
     for rc in cfg.run_configs() {
         let dev = rc.device.clone();
-        match run(&g, &rc) {
+        match run_traced(&g, &rc, sink.as_mut(), base_ps) {
             Ok(r) => {
+                base_ps += r.metrics.total_cycles() * dev.ps_per_cycle();
+                trace_device = dev.name;
                 writeln!(
                     out,
                     "{:<5} {:<4} kernel {:>10.3} ms  overhead {:>10.3} ms  total {:>10.3} ms  \
@@ -270,6 +341,10 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
     }
     if args.switch("json") {
         writeln!(out, "{}", Json::Arr(json_rows))?;
+    }
+    if let Some(sink) = &sink {
+        let metrics = metrics_out.as_deref().map(|p| (p, trace_exposition(sink)));
+        write_trace_outputs(out, sink, &[trace_device], trace_out.as_deref(), metrics)?;
     }
     Ok(())
 }
@@ -375,6 +450,12 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     )?;
 
     let queries = lonestar_lb::serving::synthetic_queries(&g, total_queries, bfs_fraction, cfg.seed);
+    let (trace_out, metrics_out) = trace_paths(args, &cfg);
+    let mut sink = (trace_out.is_some() || metrics_out.is_some())
+        .then(|| TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY));
+    // Batches run back-to-back on the trace timeline: each batch starts
+    // where the previous batch's slowest shard finished.
+    let mut base_ps = 0u64;
     let mut json_rows = Vec::new();
     let mut grand = Vec::new();
     // Batches run back-to-back, so the stream's wall-clock is the *sum* of
@@ -383,7 +464,17 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     let mut wall_ms = 0.0f64;
     let mut total_ms = 0.0f64;
     for (bi, chunk) in queries.chunks(cfg.batch_size).enumerate() {
-        let report = lonestar_lb::serving::serve(&g, chunk, &serve_cfg)?;
+        // A fresh cache per batch keeps the cold-start build kernels in
+        // every batch's metrics, matching the untraced `serve` path.
+        let report = lonestar_lb::serving::serve_traced(
+            &g,
+            chunk,
+            &serve_cfg,
+            &lonestar_lb::arena::GraphCache::new(),
+            sink.as_mut(),
+            base_ps,
+        )?;
+        base_ps += report.shards.iter().map(|s| s.busy_ps).max().unwrap_or(0);
         let totals = report.totals();
         wall_ms += report.wall_ms();
         total_ms += report.total_ms();
@@ -428,6 +519,11 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     if args.switch("json") {
         writeln!(out, "{}", Json::Arr(json_rows))?;
     }
+    if let Some(sink) = &sink {
+        let names: Vec<&str> = serve_cfg.devices.iter().map(|d| d.name).collect();
+        let metrics = metrics_out.as_deref().map(|p| (p, trace_exposition(sink)));
+        write_trace_outputs(out, sink, &names, trace_out.as_deref(), metrics)?;
+    }
     Ok(())
 }
 
@@ -464,6 +560,7 @@ fn cmd_serve_stream(
     )?;
     let strategy = serve_cfg.strategy;
     let params = serve_cfg.params.clone();
+    let shard_names: Vec<&str> = serve_cfg.devices.iter().map(|d| d.name).collect();
     let sched_cfg = lonestar_lb::serving::SchedulerConfig {
         serve: serve_cfg,
         queue_cap: cfg.queue_cap,
@@ -477,17 +574,22 @@ fn cmd_serve_stream(
         mean_gap_ps,
         cfg.seed,
     );
+    let (trace_out, metrics_out) = trace_paths(args, cfg);
+    let mut sink = (trace_out.is_some() || metrics_out.is_some())
+        .then(|| TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY));
     let cache = lonestar_lb::arena::GraphCache::new();
-    let report = lonestar_lb::serving::serve_stream(g, arrivals, &sched_cfg, &cache)?;
+    let report =
+        lonestar_lb::serving::serve_stream_traced(g, arrivals, &sched_cfg, &cache, sink.as_mut())?;
 
     for shard in &report.shards {
         writeln!(
             out,
-            "shard {:>2} [{:>7}]: {:>4} queries  {:>9.3} ms on-device",
+            "shard {:>2} [{:>7}]: {:>4} queries  {:>9.3} ms on-device  util {:>5.1}%",
             shard.shard,
             shard.device.name,
             shard.queries.len(),
             shard.total_ms(),
+            shard.utilization(report.wall_ps) * 100.0,
         )?;
     }
     writeln!(
@@ -502,10 +604,14 @@ fn cmd_serve_stream(
     )?;
     writeln!(
         out,
-        "latency: mean {:.3} ms  p95 {:.3} ms  wait {} ref-cycles  stream wall {:.3} ms",
-        report.mean_latency_ms(),
+        "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}  mean {:.3}  \
+         wait p95 {:.3} ms  stream wall {:.3} ms",
+        report.p50_latency_ms(),
         report.p95_latency_ms(),
-        report.wait_cycles,
+        report.p99_latency_ms(),
+        report.max_latency_ms(),
+        report.mean_latency_ms(),
+        report.wait_ms_p95(),
         report.wall_ms(),
     )?;
     if args.switch("verify") {
@@ -519,6 +625,12 @@ fn cmd_serve_stream(
     }
     if args.switch("json") {
         writeln!(out, "{}", report.to_json())?;
+    }
+    if let Some(sink) = &sink {
+        let metrics = metrics_out
+            .as_deref()
+            .map(|p| (p, report.prometheus(Some(sink))));
+        write_trace_outputs(out, sink, &shard_names, trace_out.as_deref(), metrics)?;
     }
     Ok(())
 }

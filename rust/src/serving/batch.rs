@@ -34,6 +34,7 @@ use crate::strategies::mdt::{auto_mdt, MdtDecision};
 use crate::strategies::node_split::split_graph;
 use crate::strategies::workload_decomp::block_offsets_into;
 use crate::strategies::{StrategyKind, StrategyParams};
+use crate::telemetry::TraceEventKind;
 use crate::worklist::hierarchy::SubList;
 use crate::worklist::NodeWorklist;
 use std::sync::Arc;
@@ -449,9 +450,31 @@ impl QueryBatch {
                 degree_skew: snap.skew,
                 predicted_cycles: decision.predicted_cycles,
             });
+            ctx.record_trace(TraceEventKind::FrontierSize, "", snap.nodes, snap.edges);
+            ctx.record_trace(
+                TraceEventKind::StrategyDecision,
+                choice.label(),
+                snap.nodes,
+                snap.edges,
+            );
+            if migrated {
+                ctx.record_trace(TraceEventKind::Migration, choice.label(), snap.nodes, snap.edges);
+            }
             self.mode = choice;
             choice
         } else {
+            if ctx.trace.is_some() {
+                // Static batch modes skip the merged inspection, so sample
+                // the frontier counter from the per-query worklists
+                // directly (both sums are O(active) reads).
+                let mut nodes = 0u64;
+                let mut edges = 0u64;
+                for &i in &self.active {
+                    nodes += self.states[i].frontier.len() as u64;
+                    edges += self.states[i].frontier.total_edges();
+                }
+                ctx.record_trace(TraceEventKind::FrontierSize, "", nodes, edges);
+            }
             self.mode = self.strategy;
             self.strategy
         };

@@ -38,6 +38,12 @@
 //!   virtual-clock [`Scheduler`] that places queries least-loaded-first
 //!   over the device pool and forms batches as capacity frees.
 //!
+//! Both serving paths accept an optional [`crate::telemetry::TraceSink`]
+//! (`serve_traced` / `serve_stream_traced`): when attached, every
+//! admission, placement, batch launch, shard-busy interval, and AD
+//! strategy decision is recorded on the virtual ps clock without
+//! allocating in steady state.
+//!
 //! The `figserve` figure ([`crate::figures::fig_serving`]) and
 //! `benches/serving.rs` compare batched-AD against N independent
 //! single-query AD runs: same distances, a fraction of the inspector
@@ -58,9 +64,9 @@ pub use merged::{
 pub use query::{synthetic_arrivals, synthetic_queries, Arrival, Query};
 pub use queue::{AdmissionQueue, OverflowPolicy};
 pub use scheduler::{
-    serve_stream, QueryOutcome, ScheduleReport, Scheduler, SchedulerConfig,
+    serve_stream, serve_stream_traced, QueryOutcome, ScheduleReport, Scheduler, SchedulerConfig,
 };
 pub use shard::{
-    aggregate, partition, serve, serve_with_cache, AggregateMetrics, BatchReport, DeviceShard,
-    ServeConfig, ShardReport,
+    aggregate, partition, serve, serve_traced, serve_with_cache, AggregateMetrics, BatchReport,
+    DeviceShard, ServeConfig, ShardReport,
 };

@@ -43,6 +43,7 @@ use crate::coordinator::ExecCtx;
 use crate::error::{Error, Result};
 use crate::graph::Csr;
 use crate::sim::DeviceSpec;
+use crate::telemetry::{Exposition, LogHistogram, TraceEvent, TraceEventKind, TraceSink};
 use crate::util::Json;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -137,9 +138,19 @@ pub struct ScheduleReport {
     pub batches: u64,
     /// Σ wait (arrival → launch) over served queries, converted to
     /// reference-device cycles (`devices[0]`).
+    ///
+    /// **Deprecated in favor of the `wait_ms_*` accessors**: a cycle count
+    /// on `devices[0]`'s clock is misleading for heterogeneous pools (a
+    /// k20c cycle is 1.42× a gtx680 cycle). Kept for JSON compatibility;
+    /// new consumers should read [`ScheduleReport::wait_ms_p95`] etc.,
+    /// which are clock-neutral ps/ms.
     pub wait_cycles: u64,
     /// Virtual instant the stream drained (ps).
     pub wall_ps: u64,
+    /// Queue-wait distribution (arrival → batch launch), ps samples.
+    pub wait_hist: LogHistogram,
+    /// End-to-end latency distribution (arrival → completion), ps samples.
+    pub latency_hist: LogHistogram,
 }
 
 impl ScheduleReport {
@@ -181,15 +192,46 @@ impl ScheduleReport {
             / self.outcomes.len() as f64
     }
 
-    /// 95th-percentile served latency, ms (nearest-rank).
+    /// Median served latency, ms (histogram-backed, log₂ resolution).
+    pub fn p50_latency_ms(&self) -> f64 {
+        self.latency_hist.percentile_ms(50)
+    }
+
+    /// 95th-percentile served latency, ms.
+    ///
+    /// Reads the log₂-bucketed histogram — O(buckets), allocation-free —
+    /// instead of collecting and sorting every outcome per call. The
+    /// reported value is the percentile bucket's upper bound (clamped to
+    /// the exact maximum), so it upper-bounds the exact nearest-rank
+    /// value within its power-of-two bucket.
     pub fn p95_latency_ms(&self) -> f64 {
-        if self.outcomes.is_empty() {
-            return 0.0;
-        }
-        let mut lat: Vec<u64> = self.outcomes.iter().map(QueryOutcome::latency_ps).collect();
-        lat.sort_unstable();
-        let rank = (lat.len() * 95).div_ceil(100).max(1) - 1;
-        lat[rank] as f64 / 1e9
+        self.latency_hist.percentile_ms(95)
+    }
+
+    /// 99th-percentile served latency, ms (histogram-backed).
+    pub fn p99_latency_ms(&self) -> f64 {
+        self.latency_hist.percentile_ms(99)
+    }
+
+    /// Maximum served latency, ms (exact).
+    pub fn max_latency_ms(&self) -> f64 {
+        self.latency_hist.max_ms()
+    }
+
+    /// Median queue wait (arrival → batch launch), ms. Clock-neutral —
+    /// measured in virtual ps, unlike the deprecated `wait_cycles`.
+    pub fn wait_ms_p50(&self) -> f64 {
+        self.wait_hist.percentile_ms(50)
+    }
+
+    /// 95th-percentile queue wait, ms (clock-neutral).
+    pub fn wait_ms_p95(&self) -> f64 {
+        self.wait_hist.percentile_ms(95)
+    }
+
+    /// Maximum queue wait, ms (exact, clock-neutral).
+    pub fn wait_ms_max(&self) -> f64 {
+        self.wait_hist.max_ms()
     }
 
     /// Fold of the shard metrics plus the scheduler's admission counters.
@@ -202,8 +244,9 @@ impl ScheduleReport {
         agg
     }
 
-    /// JSON rendering: scheduler counters, latency stats, and per-shard
-    /// summaries converted on each shard's own device clock.
+    /// JSON rendering: scheduler counters, latency stats (histogram
+    /// percentiles), and per-shard summaries — each converted on its own
+    /// device clock and carrying `utilization` = busy_ps / wall_ps.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("arrived", self.arrived.into()),
@@ -214,12 +257,23 @@ impl ScheduleReport {
             ("blocked", self.blocked.into()),
             ("batches", self.batches.into()),
             ("wait_cycles", self.wait_cycles.into()),
+            ("wait_ms_p50", self.wait_ms_p50().into()),
+            ("wait_ms_p95", self.wait_ms_p95().into()),
+            ("wait_ms_max", self.wait_ms_max().into()),
             ("wall_ms", self.wall_ms().into()),
             ("latency_ms_mean", self.mean_latency_ms().into()),
+            ("latency_ms_p50", self.p50_latency_ms().into()),
             ("latency_ms_p95", self.p95_latency_ms().into()),
+            ("latency_ms_p99", self.p99_latency_ms().into()),
+            ("latency_ms_max", self.max_latency_ms().into()),
             (
                 "shards",
-                Json::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| s.to_json_with_span(self.wall_ps))
+                        .collect(),
+                ),
             ),
             (
                 "totals",
@@ -227,6 +281,75 @@ impl ScheduleReport {
                     .to_json_with_ms(self.total_ms(), self.wall_ms()),
             ),
         ])
+    }
+
+    /// Prometheus-style text exposition of the counter registry
+    /// (`--metrics-out`). Pass the sink used during the run to include the
+    /// per-kind trace-event totals; `None` omits them.
+    pub fn prometheus(&self, sink: Option<&TraceSink>) -> String {
+        let mut exp = Exposition::new();
+        exp.counter("lonestar_arrived_total", "Arrivals consumed by the scheduler", &[], self.arrived as f64);
+        exp.counter("lonestar_admitted_total", "Queries admitted into the bounded queue", &[], self.admitted as f64);
+        exp.counter("lonestar_dropped_total", "Queries shed by the drop overflow policy", &[], self.dropped.len() as f64);
+        exp.counter("lonestar_blocked_total", "Arrivals stalled by the block overflow policy", &[], self.blocked as f64);
+        exp.counter("lonestar_served_total", "Queries served to completion", &[], self.served() as f64);
+        exp.counter("lonestar_batches_total", "Batches launched across all shards", &[], self.batches as f64);
+        exp.gauge("lonestar_queue_peak", "Peak admission-queue depth", &[], self.queue_peak as f64);
+        exp.gauge("lonestar_wall_ms", "Virtual wall-clock of the drained stream (ms)", &[], self.wall_ms());
+        let shard_ids: Vec<String> = (0..self.shards.len()).map(|i| i.to_string()).collect();
+        for (s, id) in self.shards.iter().zip(&shard_ids) {
+            exp.gauge(
+                "lonestar_shard_utilization",
+                "Busy fraction of the stream span (busy_ps / wall_ps)",
+                &[("shard", id), ("device", s.device.name)],
+                s.utilization(self.wall_ps),
+            );
+        }
+        for (s, id) in self.shards.iter().zip(&shard_ids) {
+            exp.gauge(
+                "lonestar_shard_busy_ms",
+                "Total busy time on the shard's own clock (ms)",
+                &[("shard", id), ("device", s.device.name)],
+                s.busy_ms(),
+            );
+        }
+        for (s, id) in self.shards.iter().zip(&shard_ids) {
+            exp.counter(
+                "lonestar_shard_queries_total",
+                "Queries served per shard",
+                &[("shard", id), ("device", s.device.name)],
+                s.queries.len() as f64,
+            );
+        }
+        exp.histogram(
+            "lonestar_latency_ms",
+            "End-to-end served latency, arrival to completion (ms)",
+            &self.latency_hist,
+            1e-9,
+        );
+        exp.histogram(
+            "lonestar_wait_ms",
+            "Queue wait, arrival to batch launch (ms)",
+            &self.wait_hist,
+            1e-9,
+        );
+        if let Some(t) = sink {
+            for kind in TraceEventKind::ALL {
+                exp.counter(
+                    "lonestar_trace_events_total",
+                    "Trace events recorded, by kind (survives ring wrap-around)",
+                    &[("kind", kind.label())],
+                    t.kind_count(kind) as f64,
+                );
+            }
+            exp.counter(
+                "lonestar_trace_overwritten_total",
+                "Trace events lost to ring wrap-around",
+                &[],
+                t.overwritten() as f64,
+            );
+        }
+        exp.finish()
     }
 }
 
@@ -245,6 +368,9 @@ struct ShardState<'a> {
     start_ps: u64,
     busy_until_ps: u64,
     busy: bool,
+    /// Σ busy-interval durations (ps) — feeds the report's per-shard
+    /// `utilization` (busy_ps / wall_ps).
+    busy_ps_total: u64,
     /// Σ source degrees of pending + running queries — the load signal
     /// placement minimizes (degree 0 counts as 1 so empty-frontier
     /// queries still occupy a slot).
@@ -276,9 +402,16 @@ pub struct Scheduler<'a> {
     blocked_events: u64,
     batches: u64,
     wait_ps_total: u64,
+    wait_hist: LogHistogram,
+    latency_hist: LogHistogram,
     outcomes: Vec<QueryOutcome>,
     dropped: Vec<Query>,
     placed_order: Vec<u32>,
+    /// Optional telemetry sink ([`Scheduler::attach_trace`]): admission /
+    /// placement / batch events are recorded here, and the sink travels
+    /// into the dispatching shard's `ExecCtx` for the duration of each
+    /// batch so engine events share the timeline.
+    trace: Option<&'a mut TraceSink>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -322,6 +455,7 @@ impl<'a> Scheduler<'a> {
                 start_ps: 0,
                 busy_until_ps: 0,
                 busy: false,
+                busy_ps_total: 0,
                 outstanding_edges: 0,
                 prev_cycles: 0,
                 ps_per_cycle: dev.ps_per_cycle(),
@@ -342,10 +476,20 @@ impl<'a> Scheduler<'a> {
             blocked_events: 0,
             batches: 0,
             wait_ps_total: 0,
+            wait_hist: LogHistogram::new(),
+            latency_hist: LogHistogram::new(),
             outcomes: Vec::with_capacity(n_arrivals),
             dropped: Vec::with_capacity(n_arrivals),
             placed_order: Vec::with_capacity(n_arrivals),
+            trace: None,
         })
+    }
+
+    /// Attach a pre-allocated telemetry sink: every event from here on is
+    /// recorded (ring overwrite on overflow — never an allocation, so the
+    /// zero-alloc steady state holds with tracing live).
+    pub fn attach_trace(&mut self, sink: &'a mut TraceSink) {
+        self.trace = Some(sink);
     }
 
     /// Batches launched so far — the allocation-regression harness uses
@@ -401,14 +545,45 @@ impl<'a> Scheduler<'a> {
             }
             let (query, at_ps) = (a.query, a.at_ps);
             self.next_arrival += 1;
-            if !self.queue.try_admit(query, at_ps) {
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.record(TraceEvent {
+                    query: query.id,
+                    ..TraceEvent::new(TraceEventKind::Arrival, at_ps)
+                });
+            }
+            if self.queue.try_admit(query, at_ps) {
+                if let Some(t) = self.trace.as_deref_mut() {
+                    let depth = self.queue.len() as u64;
+                    t.record(TraceEvent {
+                        query: query.id,
+                        a: depth,
+                        ..TraceEvent::new(TraceEventKind::Admit, now)
+                    });
+                    t.record(TraceEvent {
+                        a: depth,
+                        ..TraceEvent::new(TraceEventKind::QueueDepth, now)
+                    });
+                }
+            } else {
                 match self.cfg.overflow {
                     OverflowPolicy::Drop => {
                         self.dropped.push(query);
+                        if let Some(t) = self.trace.as_deref_mut() {
+                            t.record(TraceEvent {
+                                query: query.id,
+                                ..TraceEvent::new(TraceEventKind::Drop, now)
+                            });
+                        }
                     }
                     OverflowPolicy::Block => {
                         self.blocked.push_back((query, at_ps));
                         self.blocked_events += 1;
+                        if let Some(t) = self.trace.as_deref_mut() {
+                            t.record(TraceEvent {
+                                query: query.id,
+                                ..TraceEvent::new(TraceEventKind::Block, now)
+                            });
+                        }
                     }
                 }
             }
@@ -444,6 +619,18 @@ impl<'a> Scheduler<'a> {
             };
             let entered = self.queue.try_admit(query, at_ps);
             debug_assert!(entered, "queue had room");
+            if let Some(t) = self.trace.as_deref_mut() {
+                let depth = self.queue.len() as u64;
+                t.record(TraceEvent {
+                    query: query.id,
+                    a: depth,
+                    ..TraceEvent::new(TraceEventKind::Admit, self.now_ps)
+                });
+                t.record(TraceEvent {
+                    a: depth,
+                    ..TraceEvent::new(TraceEventKind::QueueDepth, self.now_ps)
+                });
+            }
             moved += 1;
         }
         moved
@@ -454,6 +641,8 @@ impl<'a> Scheduler<'a> {
     fn complete(&mut self, i: usize) {
         let s = &mut self.shards[i];
         s.busy = false;
+        let width = s.running.len() as u64;
+        s.busy_ps_total += s.busy_until_ps - s.start_ps;
         for (k, &(query, arrival_ps)) in s.running.iter().enumerate() {
             self.outcomes.push(QueryOutcome {
                 query,
@@ -462,6 +651,7 @@ impl<'a> Scheduler<'a> {
                 start_ps: s.start_ps,
                 done_ps: s.busy_until_ps,
             });
+            self.latency_hist.record(s.busy_until_ps - arrival_ps);
             s.served.push(query);
             if self.cfg.collect_distances {
                 s.dists.push(s.engine.distances(k));
@@ -470,6 +660,21 @@ impl<'a> Scheduler<'a> {
         }
         s.running.clear();
         s.engine.retire(&mut s.ctx);
+        if let Some(t) = self.trace.as_deref_mut() {
+            // The busy interval is only known complete here, so the slice
+            // is recorded at retirement, stamped back at its start.
+            t.record(TraceEvent {
+                shard: i as u32,
+                a: s.busy_until_ps - s.start_ps,
+                b: width,
+                ..TraceEvent::new(TraceEventKind::ShardBusy, s.start_ps)
+            });
+            t.record(TraceEvent {
+                shard: i as u32,
+                a: width,
+                ..TraceEvent::new(TraceEventKind::BatchComplete, s.busy_until_ps)
+            });
+        }
     }
 
     /// Pop admitted queries FIFO and place each on the **idle** shard
@@ -507,6 +712,18 @@ impl<'a> Scheduler<'a> {
             let (query, at_ps) = self.queue.pop().expect("non-empty");
             let load = (self.graph.degree(query.source) as u64).max(1);
             self.placed_order.push(query.id);
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.record(TraceEvent {
+                    shard: i as u32,
+                    query: query.id,
+                    a: load,
+                    ..TraceEvent::new(TraceEventKind::Place, self.now_ps)
+                });
+                t.record(TraceEvent {
+                    a: self.queue.len() as u64,
+                    ..TraceEvent::new(TraceEventKind::QueueDepth, self.now_ps)
+                });
+            }
             let s = &mut self.shards[i];
             s.pending.push((query, at_ps));
             s.outstanding_edges += load;
@@ -520,7 +737,14 @@ impl<'a> Scheduler<'a> {
     fn dispatch(&mut self) -> Result<()> {
         let now = self.now_ps;
         let max_iterations = self.cfg.serve.max_iterations;
-        for s in &mut self.shards {
+        // The sink moves: scheduler → dispatching shard's ExecCtx (so the
+        // engine's kernel/decision events land on the shared timeline) →
+        // back. A move of an Option<&mut _>, not a reborrow — the loop
+        // below must restore it on every path, error included.
+        let mut trace = self.trace.take();
+        let mut failed: Option<Error> = None;
+        for i in 0..self.shards.len() {
+            let s = &mut self.shards[i];
             if s.busy || s.pending.is_empty() {
                 continue;
             }
@@ -528,9 +752,29 @@ impl<'a> Scheduler<'a> {
             for &(query, at_ps) in &s.pending {
                 s.batch_queries.push(query);
                 self.wait_ps_total += now - at_ps;
+                self.wait_hist.record(now - at_ps);
             }
-            s.engine.reset(&mut s.ctx, &s.batch_queries)?;
-            s.engine.run(&mut s.ctx, max_iterations)?;
+            if let Some(t) = trace.as_deref_mut() {
+                t.record(TraceEvent {
+                    shard: i as u32,
+                    a: s.batch_queries.len() as u64,
+                    b: self.batches,
+                    ..TraceEvent::new(TraceEventKind::BatchLaunch, now)
+                });
+            }
+            s.ctx.trace = trace.take();
+            s.ctx.trace_base_ps = now;
+            s.ctx.trace_base_cycles = s.ctx.metrics.total_cycles();
+            s.ctx.trace_shard = i as u32;
+            let launched = s
+                .engine
+                .reset(&mut s.ctx, &s.batch_queries)
+                .and_then(|()| s.engine.run(&mut s.ctx, max_iterations));
+            trace = s.ctx.trace.take();
+            if let Err(e) = launched {
+                failed = Some(e);
+                break;
+            }
             let total = s.ctx.metrics.total_cycles();
             let cycles = total - s.prev_cycles;
             s.prev_cycles = total;
@@ -540,7 +784,11 @@ impl<'a> Scheduler<'a> {
             std::mem::swap(&mut s.running, &mut s.pending);
             self.batches += 1;
         }
-        Ok(())
+        self.trace = trace;
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Drain the stream and assemble the report.
@@ -558,6 +806,7 @@ impl<'a> Scheduler<'a> {
                 queries: s.served,
                 metrics,
                 dists: s.dists,
+                busy_ps: s.busy_ps_total,
             });
         }
         ScheduleReport {
@@ -572,6 +821,8 @@ impl<'a> Scheduler<'a> {
             batches: self.batches,
             wait_cycles: self.wait_ps_total / ref_ppc,
             wall_ps: self.now_ps,
+            wait_hist: self.wait_hist,
+            latency_hist: self.latency_hist,
         }
     }
 }
@@ -584,7 +835,25 @@ pub fn serve_stream(
     cfg: &SchedulerConfig,
     cache: &GraphCache,
 ) -> Result<ScheduleReport> {
+    serve_stream_traced(graph, arrivals, cfg, cache, None)
+}
+
+/// [`serve_stream`] with an optional telemetry sink: pass a pre-allocated
+/// [`TraceSink`] to capture the full event timeline (admissions, drops,
+/// placements, per-shard busy intervals, engine kernels and decisions) for
+/// export via [`crate::telemetry::chrome_trace`]. The sink borrows for the
+/// scheduler's lifetime, so declare it before the call's other borrows.
+pub fn serve_stream_traced<'a>(
+    graph: &Arc<Csr>,
+    arrivals: Vec<Arrival>,
+    cfg: &'a SchedulerConfig,
+    cache: &GraphCache,
+    trace: Option<&'a mut TraceSink>,
+) -> Result<ScheduleReport> {
     let mut sched = Scheduler::new(graph.clone(), arrivals, cfg, cache)?;
+    if let Some(sink) = trace {
+        sched.attach_trace(sink);
+    }
     while sched.step()? {}
     Ok(sched.finish())
 }

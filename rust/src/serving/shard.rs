@@ -109,6 +109,10 @@ pub struct ShardReport {
     pub queries: Vec<Query>,
     pub metrics: RunMetrics,
     pub dists: Vec<Vec<u32>>,
+    /// Virtual time this shard spent busy (ps). On the scheduler path this
+    /// sums the actual busy intervals on the shared timeline; on the plain
+    /// batch path it is the shard's cycles converted on its own clock.
+    pub busy_ps: u64,
 }
 
 impl ShardReport {
@@ -117,17 +121,48 @@ impl ShardReport {
         self.device.cycles_to_ms(self.metrics.total_cycles())
     }
 
+    /// Busy time in ms (virtual clock).
+    pub fn busy_ms(&self) -> f64 {
+        self.busy_ps as f64 / 1e9
+    }
+
+    /// Busy fraction of `span_ps` — the per-shard utilization figure the
+    /// load-balancing analysis reads (0.0 when the span is empty).
+    pub fn utilization(&self, span_ps: u64) -> f64 {
+        if span_ps == 0 {
+            0.0
+        } else {
+            self.busy_ps as f64 / span_ps as f64
+        }
+    }
+
     /// JSON rendering (all ms figures converted with this shard's device).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        Json::Obj(self.json_fields(None))
+    }
+
+    /// [`ShardReport::to_json`] plus `utilization` against `span_ps` (the
+    /// stream wall-clock on the scheduler path, the slowest shard's busy
+    /// time on the batch path).
+    pub fn to_json_with_span(&self, span_ps: u64) -> Json {
+        Json::Obj(self.json_fields(Some(span_ps)))
+    }
+
+    fn json_fields(&self, span_ps: Option<u64>) -> std::collections::BTreeMap<String, Json> {
+        let mut fields = vec![
             ("shard", self.shard.into()),
             ("device", self.device.name.into()),
             ("queries", self.queries.len().into()),
+            ("busy_ms", self.busy_ms().into()),
             (
                 "metrics",
                 aggregate(std::iter::once(&self.metrics)).to_json(&self.device),
             ),
-        ])
+        ];
+        if let Some(span) = span_ps {
+            fields.push(("utilization", self.utilization(span).into()));
+        }
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
     }
 }
 
@@ -290,11 +325,19 @@ impl BatchReport {
     /// converted with the owning shard's device before folding, so
     /// heterogeneous pools report honest times.
     pub fn to_json(&self) -> Json {
+        // Batch span = the slowest shard's busy time: utilization compares
+        // each shard against the shard that bounded the batch.
+        let span_ps = self.shards.iter().map(|s| s.busy_ps).max().unwrap_or(0);
         Json::obj(vec![
             ("queries", self.query_count().into()),
             (
                 "shards",
-                Json::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| s.to_json_with_span(span_ps))
+                        .collect(),
+                ),
             ),
             (
                 "totals",
@@ -325,6 +368,22 @@ pub fn serve_with_cache(
     cfg: &ServeConfig,
     cache: &GraphCache,
 ) -> Result<BatchReport> {
+    serve_traced(graph, queries, cfg, cache, None, 0)
+}
+
+/// [`serve_with_cache`] with an optional telemetry sink: each shard's
+/// engine records kernel slices / decisions / frontier counters stamped
+/// from `base_ps` on its own device clock (shards of one batch run
+/// concurrently, so they share the base; the CLI advances it per batch so
+/// one trace file lays consecutive batches end to end).
+pub fn serve_traced(
+    graph: &Arc<Csr>,
+    queries: &[Query],
+    cfg: &ServeConfig,
+    cache: &GraphCache,
+    mut trace: Option<&mut crate::telemetry::TraceSink>,
+    base_ps: u64,
+) -> Result<BatchReport> {
     if cfg.devices.is_empty() {
         return Err(Error::Config("devices must list at least one shard".into()));
     }
@@ -351,10 +410,14 @@ pub fn serve_with_cache(
                 queries: Vec::new(),
                 metrics: RunMetrics::default(),
                 dists: Vec::new(),
+                busy_ps: 0,
             });
             continue;
         }
         let mut ctx = ExecCtx::new(&device, AlgoKind::Sssp, Box::new(NativeRelaxer));
+        ctx.trace = trace.as_deref_mut();
+        ctx.trace_base_ps = base_ps;
+        ctx.trace_shard = shard.id as u32;
         if cfg.enforce_budget {
             ctx = ctx.with_budget(device.memory_budget);
         }
@@ -374,13 +437,15 @@ pub fn serve_with_cache(
         batch.recycle(&mut ctx);
         ctx.finalize_metrics();
         let metrics = std::mem::take(&mut ctx.metrics);
-        drop(ctx); // ends the borrow of `device`
+        drop(ctx); // ends the borrows of `device` and the trace sink
+        let busy_ps = metrics.total_cycles() * device.ps_per_cycle();
         shards.push(ShardReport {
             shard: shard.id,
             device,
             queries: shard.queries,
             metrics,
             dists,
+            busy_ps,
         });
     }
     Ok(BatchReport { shards })

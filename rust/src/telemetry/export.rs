@@ -1,0 +1,313 @@
+//! Trace & metrics exporters: Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`) and Prometheus-style text exposition.
+//!
+//! Both formats are emitted deterministically: the JSON rides on
+//! [`crate::util::Json`] (object keys are `BTreeMap`-sorted, number
+//! formatting is stable) and the exposition is appended in a fixed order —
+//! so two runs with the same seed and config produce byte-identical files,
+//! which is what the CI trace-determinism gate checks.
+
+use super::{LogHistogram, TraceEvent, TraceEventKind, TraceSink, NO_ID};
+use crate::util::Json;
+use std::fmt::Write as _;
+
+/// Export a sink as Chrome trace-event JSON.
+///
+/// Layout: one process (pid 1); tid 0 is the admission/scheduler track;
+/// tid `i + 1` is shard `i` (named after `shard_devices[i]`). Shard busy
+/// intervals and kernel launches are complete slices (`ph:"X"`), queue
+/// depth and per-shard frontier size are counter tracks (`ph:"C"`), and
+/// the admission/decision events are thread-scoped instants (`ph:"i"`).
+/// Timestamps convert ps → µs (the trace-event unit) as `ts = at_ps/1e6`.
+pub fn chrome_trace(sink: &TraceSink, shard_devices: &[&str]) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(sink.len() + shard_devices.len() + 2);
+    events.push(meta_event(0, "process_name", "lonestar-lb (virtual ps clock)"));
+    events.push(meta_event(0, "thread_name", "admission/scheduler"));
+    for (i, name) in shard_devices.iter().enumerate() {
+        events.push(meta_event(
+            i as u64 + 1,
+            "thread_name",
+            &format!("shard {i} [{name}]"),
+        ));
+    }
+    for ev in sink.events() {
+        events.push(trace_event_json(ev));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", "ms".into()),
+        ("traceEvents", Json::Arr(events)),
+    ])
+    .to_string()
+}
+
+fn meta_event(tid: u64, name: &str, value: &str) -> Json {
+    Json::obj(vec![
+        ("ph", "M".into()),
+        ("pid", 1u64.into()),
+        ("tid", tid.into()),
+        ("name", name.into()),
+        ("args", Json::obj(vec![("name", value.into())])),
+    ])
+}
+
+fn trace_event_json(ev: &TraceEvent) -> Json {
+    let tid: u64 = if ev.shard == NO_ID { 0 } else { ev.shard as u64 + 1 };
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("pid", 1u64.into()),
+        ("tid", tid.into()),
+        ("ts", (ev.at_ps as f64 / 1e6).into()),
+        ("cat", ev.kind.label().into()),
+    ];
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    if ev.query != NO_ID {
+        args.push(("query", ev.query.into()));
+    }
+    match ev.kind {
+        TraceEventKind::ShardBusy => {
+            fields.push(("ph", "X".into()));
+            fields.push(("name", "batch".into()));
+            fields.push(("dur", (ev.a as f64 / 1e6).into()));
+            args.push(("queries", ev.b.into()));
+        }
+        TraceEventKind::Kernel => {
+            fields.push(("ph", "X".into()));
+            let name = if ev.label.is_empty() { "kernel" } else { ev.label };
+            fields.push(("name", name.into()));
+            fields.push(("dur", (ev.a as f64 / 1e6).into()));
+            args.push(("items", ev.b.into()));
+        }
+        TraceEventKind::QueueDepth => {
+            fields.push(("ph", "C".into()));
+            fields.push(("name", "queue depth".into()));
+            args.push(("depth", ev.a.into()));
+        }
+        TraceEventKind::FrontierSize => {
+            fields.push(("ph", "C".into()));
+            // Counter tracks are keyed by name: one per shard.
+            fields.push(("name", Json::Str(format!("frontier (shard {})", ev.shard))));
+            args.push(("nodes", ev.a.into()));
+            args.push(("edges", ev.b.into()));
+        }
+        TraceEventKind::StrategyDecision => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", Json::Str(format!("decide {}", ev.label))));
+            args.push(("frontier_nodes", ev.a.into()));
+            args.push(("frontier_edges", ev.b.into()));
+        }
+        TraceEventKind::Migration => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", Json::Str(format!("migrate to {}", ev.label))));
+        }
+        TraceEventKind::BatchLaunch | TraceEventKind::BatchComplete => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("queries", ev.a.into()));
+        }
+        TraceEventKind::Admit => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("depth", ev.a.into()));
+        }
+        TraceEventKind::Place => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("load_edges", ev.a.into()));
+        }
+        TraceEventKind::Arrival | TraceEventKind::Drop | TraceEventKind::Block => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+        }
+    }
+    fields.push(("args", Json::obj(args)));
+    Json::obj(fields)
+}
+
+/// Prometheus text-exposition builder (`--metrics-out`). Samples are
+/// appended in call order; `# HELP`/`# TYPE` headers are emitted once per
+/// metric name (group all samples of one name together, as the format
+/// requires).
+#[derive(Debug, Default)]
+pub struct Exposition {
+    out: String,
+    last_name: String,
+}
+
+impl Exposition {
+    /// An empty exposition.
+    pub fn new() -> Exposition {
+        Exposition::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        if self.last_name != name {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {kind}");
+            self.last_name = name.to_string();
+        }
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{v}\"");
+            }
+            self.out.push('}');
+        }
+        // Whole numbers print as integers (same rule as Json::Num) so
+        // counters read naturally and output is deterministic.
+        let _ = writeln!(self.out, " {}", Json::Num(value));
+    }
+
+    /// Append a counter sample (header emitted on first use of `name`).
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, labels, value);
+    }
+
+    /// Append a gauge sample (header emitted on first use of `name`).
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, labels, value);
+    }
+
+    /// Append a [`LogHistogram`] in Prometheus histogram form.
+    /// `unit_scale` converts the recorded integer unit into the exposed
+    /// unit (ps samples exposed as ms ⇒ `1e-9`). Buckets use cumulative
+    /// counts with `le` at each occupied bucket's upper bound plus the
+    /// mandatory `+Inf`.
+    pub fn histogram(&mut self, name: &str, help: &str, hist: &LogHistogram, unit_scale: f64) {
+        self.header(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        let mut cum = 0u64;
+        for (i, &c) in hist.buckets().iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let le = Json::Num(LogHistogram::bucket_upper(i) as f64 * unit_scale).to_string();
+            self.sample(&bucket, &[("le", &le)], cum as f64);
+        }
+        self.sample(&bucket, &[("le", "+Inf")], hist.count() as f64);
+        self.sample(&format!("{name}_sum"), &[], hist.sum() as f64 * unit_scale);
+        self.sample(&format!("{name}_count"), &[], hist.count() as f64);
+        // _bucket/_sum/_count share the one header; reset so a following
+        // metric with the same base prefix still gets its own.
+        self.last_name = name.to_string();
+    }
+
+    /// The finished exposition text.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_trace_shape_and_determinism() {
+        let mut sink = TraceSink::with_capacity(16);
+        sink.record(TraceEvent {
+            query: 3,
+            ..TraceEvent::new(TraceEventKind::Arrival, 1_000_000)
+        });
+        sink.record(TraceEvent {
+            query: 3,
+            a: 1,
+            ..TraceEvent::new(TraceEventKind::Admit, 1_000_000)
+        });
+        sink.record(TraceEvent {
+            a: 1,
+            ..TraceEvent::new(TraceEventKind::QueueDepth, 1_000_000)
+        });
+        sink.record(TraceEvent {
+            shard: 0,
+            a: 5_000_000,
+            b: 2,
+            ..TraceEvent::new(TraceEventKind::ShardBusy, 2_000_000)
+        });
+        sink.record(TraceEvent {
+            shard: 1,
+            a: 2_000_000,
+            b: 64,
+            label: "relax_bs",
+            ..TraceEvent::new(TraceEventKind::Kernel, 2_000_000)
+        });
+
+        let a = chrome_trace(&sink, &["k20c", "gtx680"]);
+        let b = chrome_trace(&sink, &["k20c", "gtx680"]);
+        assert_eq!(a, b, "export must be deterministic");
+
+        let v = Json::parse(&a).expect("valid json");
+        assert_eq!(v.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata + 5 events.
+        assert_eq!(evs.len(), 8);
+        let meta: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .filter_map(|e| e.get("args").unwrap().get("name").unwrap().as_str())
+            .collect();
+        assert!(meta.contains(&"shard 0 [k20c]"));
+        assert!(meta.contains(&"shard 1 [gtx680]"));
+        let busy = evs
+            .iter()
+            .find(|e| e.get("name").map(|n| n.as_str()) == Some(Some("batch")))
+            .expect("busy slice");
+        assert_eq!(busy.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(busy.get("ts").unwrap().as_f64(), Some(2.0), "ps → µs");
+        assert_eq!(busy.get("dur").unwrap().as_f64(), Some(5.0));
+        assert_eq!(busy.get("tid").unwrap().as_usize(), Some(1), "shard 0 = tid 1");
+        let depth = evs
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("C"))
+            .expect("counter");
+        assert_eq!(depth.get("name").unwrap().as_str(), Some("queue depth"));
+        assert_eq!(depth.get("tid").unwrap().as_usize(), Some(0), "queue on tid 0");
+        let kernel = evs
+            .iter()
+            .find(|e| e.get("name").map(|n| n.as_str()) == Some(Some("relax_bs")))
+            .expect("kernel slice");
+        assert_eq!(kernel.get("tid").unwrap().as_usize(), Some(2), "shard 1 = tid 2");
+    }
+
+    #[test]
+    fn exposition_headers_once_labels_and_histogram() {
+        let mut h = LogHistogram::new();
+        h.record(1_000_000_000); // 1 ms
+        h.record(3_000_000_000); // 3 ms
+        let mut exp = Exposition::new();
+        exp.counter("app_served_total", "Queries served", &[], 96.0);
+        exp.gauge("app_util", "Busy fraction", &[("shard", "0"), ("device", "k20c")], 0.5);
+        exp.gauge("app_util", "Busy fraction", &[("shard", "1"), ("device", "k40")], 0.25);
+        exp.histogram("app_latency_ms", "Latency (ms)", &h, 1e-9);
+        let text = exp.finish();
+
+        assert_eq!(text.matches("# TYPE app_util gauge").count(), 1);
+        assert!(text.contains("app_served_total 96\n"));
+        assert!(text.contains("app_util{shard=\"0\",device=\"k20c\"} 0.5\n"));
+        assert!(text.contains("# TYPE app_latency_ms histogram"));
+        assert!(text.contains("app_latency_ms_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("app_latency_ms_count 2\n"));
+        assert!(text.contains("app_latency_ms_sum 4\n"));
+        // Cumulative bucket counts are monotone.
+        let mut prev = 0.0;
+        for line in text.lines().filter(|l| l.starts_with("app_latency_ms_bucket")) {
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "bucket counts must be cumulative: {line}");
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Log₂-bucketed histogram: constant-size, allocation-free percentile
+//! tracking for latency/wait distributions.
+//!
+//! The previous `ScheduleReport::p95_latency_ms` collected every outcome
+//! into a fresh `Vec<u64>` and sorted it on **every call** — an allocation
+//! and an O(n log n) sort to read one number. A [`LogHistogram`] is 65
+//! fixed buckets updated with a `leading_zeros` in O(1); any percentile is
+//! a single bucket walk. The price is resolution — a percentile is only
+//! known to within its power-of-two bucket — which is the right trade for
+//! monitoring: the *ratio* between p50 and p99 is what the load-balancing
+//! analysis reads, not the fourth significant digit.
+
+/// Power-of-two bucketed histogram over `u64` samples (we record virtual
+/// picoseconds). Bucket 0 holds the value 0; bucket `i ≥ 1` holds
+/// `[2^(i-1), 2^i)`; bucket 64 holds `[2^63, u64::MAX]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    buckets: [u64; 65],
+    count: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram. No heap allocation — the buckets are inline.
+    pub const fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: [0; 65],
+            count: 0,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let idx = if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest sample seen (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Sum of all samples (exact; u128 so ps sums cannot overflow).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Mean sample, 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Raw bucket counts (index semantics per the type docs).
+    pub fn buckets(&self) -> &[u64; 65] {
+        &self.buckets
+    }
+
+    /// Inclusive upper bound of bucket `i` — the value a percentile
+    /// resolving to that bucket reports.
+    pub fn bucket_upper(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            _ if i >= 64 => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100), reported as the bucket's
+    /// inclusive upper bound, clamped to the exact tracked maximum (so
+    /// `percentile(100) == max()`). Returns 0 when empty.
+    pub fn percentile(&self, p: u8) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as u128 * p as u128).div_ceil(100) as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// [`LogHistogram::percentile`] over picosecond samples, in ms.
+    pub fn percentile_ms(&self, p: u8) -> f64 {
+        self.percentile(p) as f64 / 1e9
+    }
+
+    /// Exact maximum over picosecond samples, in ms.
+    pub fn max_ms(&self) -> f64 {
+        self.max as f64 / 1e9
+    }
+
+    /// Mean over picosecond samples, in ms.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_all_zero() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50), 0);
+        assert_eq!(h.percentile(100), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1 << 62, u64::MAX] {
+            h.record(v);
+        }
+        let b = h.buckets();
+        assert_eq!(b[0], 1, "value 0");
+        assert_eq!(b[1], 1, "value 1 = [1,2)");
+        assert_eq!(b[2], 2, "values 2,3 = [2,4)");
+        assert_eq!(b[3], 3, "values 4..8");
+        assert_eq!(b[4], 1, "value 8");
+        assert_eq!(b[63], 1, "1<<62");
+        assert_eq!(b[64], 1, "u64::MAX");
+        assert_eq!(h.count(), 9);
+        assert_eq!(h.max(), u64::MAX);
+    }
+
+    #[test]
+    fn percentiles_return_bucket_upper_clamped_to_max() {
+        let mut h = LogHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        // rank 50 → value 50 → bucket [32,64) → upper 63.
+        assert_eq!(h.percentile(50), 63);
+        // rank 95 → value 95 → bucket [64,128) → upper 127, clamped to 100.
+        assert_eq!(h.percentile(95), 100);
+        assert_eq!(h.percentile(100), 100, "p100 is the exact max");
+        assert_eq!(h.mean(), 50.5);
+        assert_eq!(h.sum(), 5050);
+    }
+
+    #[test]
+    fn percentile_is_monotone_and_bounds_exact_rank() {
+        let mut h = LogHistogram::new();
+        let samples = [3u64, 17, 17, 90, 1000, 1000, 1000, 40_000];
+        for &v in &samples {
+            h.record(v);
+        }
+        let mut prev = 0;
+        for p in [1u8, 25, 50, 75, 90, 99, 100] {
+            let got = h.percentile(p);
+            assert!(got >= prev, "p{p} dropped below p of smaller rank");
+            prev = got;
+            // Nearest-rank exact value for comparison.
+            let mut sorted = samples.to_vec();
+            sorted.sort_unstable();
+            let rank = ((sorted.len() * p as usize).div_ceil(100)).max(1);
+            let exact = sorted[rank - 1];
+            assert!(
+                got >= exact,
+                "p{p}: bucket upper {got} must bound exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn ms_views_scale_by_1e9() {
+        let mut h = LogHistogram::new();
+        h.record(2_000_000_000); // 2 ms in ps → bucket upper 2^31-1
+        assert_eq!(h.max_ms(), 2.0);
+        assert_eq!(h.mean_ms(), 2.0);
+        assert!(h.percentile_ms(50) <= 2.0 + 1e-9);
+        assert!(h.percentile_ms(50) > 1.9);
+    }
+}

@@ -1,0 +1,334 @@
+//! Virtual-clock tracing & telemetry: a fixed-size, pre-allocated event
+//! ring stamped on the simulator's picosecond clock.
+//!
+//! The paper's argument rests on *seeing* per-iteration imbalance — the
+//! kernel/overhead split of Figures 7–8 — yet aggregates alone cannot say
+//! *when* a shard sat idle or *which* iteration the adaptive policy
+//! mis-chose. This module turns the deterministic virtual clock into a
+//! first-class timeline:
+//!
+//! - [`TraceEvent`] is a fixed-width, `Copy` record (kind + ps timestamp +
+//!   shard/query ids + two kind-specific payload words). No strings are
+//!   built at record time; labels are `&'static str`.
+//! - [`TraceSink`] is a ring buffer whose storage is allocated **once** at
+//!   construction. Recording is an index write — zero allocations, so a
+//!   sink can stay attached through the scheduler's steady state without
+//!   violating the PR-3 counting-allocator invariant. When the ring wraps,
+//!   the oldest events are overwritten (and counted), never reallocated.
+//! - Because every timestamp comes from the virtual clock, a trace is a
+//!   pure function of (graph, config, seed): two runs export byte-identical
+//!   files. That determinism is what makes traces replayable — the
+//!   ROADMAP's learned serving policies train on exactly these streams.
+//!
+//! Exporters live in [`export`]: Chrome trace-event JSON (open in Perfetto
+//! or `chrome://tracing`) and a Prometheus-style text exposition.
+//! [`hist::LogHistogram`] provides the log₂-bucketed latency/wait
+//! histograms that replaced the allocating sort-based percentiles.
+
+pub mod export;
+pub mod hist;
+
+pub use export::{chrome_trace, Exposition};
+pub use hist::LogHistogram;
+
+/// Shard/query id meaning "not applicable" (e.g. a queue-depth counter has
+/// no shard; an arrival has no shard yet).
+pub const NO_ID: u32 = u32::MAX;
+
+/// Default ring capacity used by the CLI: 64 Ki events ≈ 2.5 MiB, enough
+/// for the figure-scale streams without ever wrapping.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// What happened. The payload words `a`/`b` of [`TraceEvent`] are
+/// kind-specific:
+///
+/// | kind               | `a`                    | `b`              |
+/// |--------------------|------------------------|------------------|
+/// | `Admit`            | queue depth after      | —                |
+/// | `Place`            | shard load (edges)     | —                |
+/// | `BatchLaunch`      | batch width (queries)  | batch index      |
+/// | `BatchComplete`    | batch width (queries)  | —                |
+/// | `ShardBusy`        | busy duration (ps)     | batch width      |
+/// | `StrategyDecision` | frontier nodes         | frontier edges   |
+/// | `Migration`        | frontier nodes         | frontier edges   |
+/// | `Kernel`           | kernel duration (ps)   | work items       |
+/// | `QueueDepth`       | queue depth            | —                |
+/// | `FrontierSize`     | frontier nodes         | frontier edges   |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceEventKind {
+    /// A query arrived at the admission queue.
+    Arrival,
+    /// The queue accepted a query (first try or un-blocked later).
+    Admit,
+    /// The drop overflow policy shed a query.
+    Drop,
+    /// The block overflow policy stalled a query.
+    Block,
+    /// The placement loop bound a query to a shard.
+    Place,
+    /// A shard launched a batch.
+    BatchLaunch,
+    /// A shard's batch completed (virtual time).
+    BatchComplete,
+    /// A shard's busy interval — the slice Perfetto renders per shard.
+    ShardBusy,
+    /// The adaptive engine chose a strategy for an iteration.
+    StrategyDecision,
+    /// The adaptive engine migrated worklist representations.
+    Migration,
+    /// One processing-kernel launch on a shard's device.
+    Kernel,
+    /// Admission-queue depth sample (counter track).
+    QueueDepth,
+    /// Frontier size sample (counter track, per shard).
+    FrontierSize,
+}
+
+impl TraceEventKind {
+    /// Number of kinds (size of per-kind counter arrays).
+    pub const COUNT: usize = 13;
+
+    /// Every kind, in `repr` order.
+    pub const ALL: [TraceEventKind; Self::COUNT] = [
+        TraceEventKind::Arrival,
+        TraceEventKind::Admit,
+        TraceEventKind::Drop,
+        TraceEventKind::Block,
+        TraceEventKind::Place,
+        TraceEventKind::BatchLaunch,
+        TraceEventKind::BatchComplete,
+        TraceEventKind::ShardBusy,
+        TraceEventKind::StrategyDecision,
+        TraceEventKind::Migration,
+        TraceEventKind::Kernel,
+        TraceEventKind::QueueDepth,
+        TraceEventKind::FrontierSize,
+    ];
+
+    /// Stable lowercase label (metric label values, trace categories).
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceEventKind::Arrival => "arrival",
+            TraceEventKind::Admit => "admit",
+            TraceEventKind::Drop => "drop",
+            TraceEventKind::Block => "block",
+            TraceEventKind::Place => "place",
+            TraceEventKind::BatchLaunch => "batch-launch",
+            TraceEventKind::BatchComplete => "batch-complete",
+            TraceEventKind::ShardBusy => "shard-busy",
+            TraceEventKind::StrategyDecision => "decision",
+            TraceEventKind::Migration => "migration",
+            TraceEventKind::Kernel => "kernel",
+            TraceEventKind::QueueDepth => "queue-depth",
+            TraceEventKind::FrontierSize => "frontier-size",
+        }
+    }
+}
+
+/// One fixed-width trace record. Construct with [`TraceEvent::new`] and
+/// struct-update syntax for the fields that apply:
+///
+/// ```
+/// use lonestar_lb::telemetry::{TraceEvent, TraceEventKind};
+/// let ev = TraceEvent { shard: 1, a: 42, ..TraceEvent::new(TraceEventKind::QueueDepth, 1_000) };
+/// assert_eq!(ev.at_ps, 1_000);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual timestamp, integer picoseconds.
+    pub at_ps: u64,
+    /// What happened.
+    pub kind: TraceEventKind,
+    /// Shard index, or [`NO_ID`] for scheduler-/queue-level events.
+    pub shard: u32,
+    /// Query id, or [`NO_ID`] when the event is not per-query.
+    pub query: u32,
+    /// Kind-specific payload (see [`TraceEventKind`]).
+    pub a: u64,
+    /// Kind-specific payload (see [`TraceEventKind`]).
+    pub b: u64,
+    /// Optional static label (kernel name, strategy label). Empty when the
+    /// kind's label suffices.
+    pub label: &'static str,
+}
+
+impl TraceEvent {
+    /// A `kind` event at `at_ps` with no shard, no query, zero payload.
+    pub fn new(kind: TraceEventKind, at_ps: u64) -> TraceEvent {
+        TraceEvent {
+            at_ps,
+            kind,
+            shard: NO_ID,
+            query: NO_ID,
+            a: 0,
+            b: 0,
+            label: "",
+        }
+    }
+}
+
+impl Default for TraceEvent {
+    fn default() -> TraceEvent {
+        TraceEvent::new(TraceEventKind::Arrival, 0)
+    }
+}
+
+/// Fixed-capacity event ring. All storage is allocated in
+/// [`TraceSink::with_capacity`]; [`TraceSink::record`] is an index write.
+/// On overflow the oldest events are overwritten (counted in
+/// [`TraceSink::overwritten`]) — tracing never grows the heap mid-run.
+#[derive(Debug)]
+pub struct TraceSink {
+    buf: Vec<TraceEvent>,
+    /// Next write slot.
+    head: usize,
+    /// Live events (≤ capacity).
+    len: usize,
+    /// Total events ever recorded (including overwritten ones).
+    recorded: u64,
+    /// Events lost to ring wrap-around.
+    overwritten: u64,
+    /// Per-kind totals (never lost to wrap-around).
+    kind_counts: [u64; TraceEventKind::COUNT],
+}
+
+impl TraceSink {
+    /// A sink holding up to `capacity` events (min 1). The one and only
+    /// allocation this type ever performs happens here.
+    pub fn with_capacity(capacity: usize) -> TraceSink {
+        let capacity = capacity.max(1);
+        TraceSink {
+            buf: vec![TraceEvent::default(); capacity],
+            head: 0,
+            len: 0,
+            recorded: 0,
+            overwritten: 0,
+            kind_counts: [0; TraceEventKind::COUNT],
+        }
+    }
+
+    /// Record one event: a ring-slot write plus counter bumps. Never
+    /// allocates.
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        let cap = self.buf.len();
+        self.buf[self.head] = ev;
+        self.head = (self.head + 1) % cap;
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.overwritten += 1;
+        }
+        self.recorded += 1;
+        self.kind_counts[ev.kind as usize] += 1;
+    }
+
+    /// Live events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(move |i| &self.buf[(start + i) % cap])
+    }
+
+    /// Live event count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing has been recorded (or everything was cleared).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Total events ever recorded, including those lost to wrap-around.
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events lost to wrap-around (0 means the export is complete).
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Lifetime total for one kind (survives wrap-around).
+    pub fn kind_count(&self, kind: TraceEventKind) -> u64 {
+        self.kind_counts[kind as usize]
+    }
+
+    /// Forget all events and totals; capacity (and its allocation) stays.
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
+        self.recorded = 0;
+        self.overwritten = 0;
+        self.kind_counts = [0; TraceEventKind::COUNT];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceEventKind, at_ps: u64) -> TraceEvent {
+        TraceEvent::new(kind, at_ps)
+    }
+
+    #[test]
+    fn ring_records_in_order_and_wraps() {
+        let mut sink = TraceSink::with_capacity(4);
+        for i in 0..3 {
+            sink.record(ev(TraceEventKind::Arrival, i));
+        }
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.overwritten(), 0);
+        let ts: Vec<u64> = sink.events().map(|e| e.at_ps).collect();
+        assert_eq!(ts, vec![0, 1, 2]);
+
+        for i in 3..6 {
+            sink.record(ev(TraceEventKind::Admit, i));
+        }
+        assert_eq!(sink.len(), 4, "ring holds exactly capacity");
+        assert_eq!(sink.recorded(), 6);
+        assert_eq!(sink.overwritten(), 2);
+        let ts: Vec<u64> = sink.events().map(|e| e.at_ps).collect();
+        assert_eq!(ts, vec![2, 3, 4, 5], "oldest events overwritten first");
+    }
+
+    #[test]
+    fn kind_counts_survive_wraparound() {
+        let mut sink = TraceSink::with_capacity(2);
+        for i in 0..5 {
+            sink.record(ev(TraceEventKind::Drop, i));
+        }
+        sink.record(ev(TraceEventKind::Block, 9));
+        assert_eq!(sink.kind_count(TraceEventKind::Drop), 5);
+        assert_eq!(sink.kind_count(TraceEventKind::Block), 1);
+        assert_eq!(sink.kind_count(TraceEventKind::Admit), 0);
+        sink.clear();
+        assert!(sink.is_empty());
+        assert_eq!(sink.kind_count(TraceEventKind::Drop), 0);
+        assert_eq!(sink.capacity(), 2, "clear keeps the allocation");
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut sink = TraceSink::with_capacity(0);
+        assert_eq!(sink.capacity(), 1);
+        sink.record(ev(TraceEventKind::Arrival, 7));
+        assert_eq!(sink.events().next().unwrap().at_ps, 7);
+    }
+
+    #[test]
+    fn kind_repr_matches_all_table() {
+        for (i, k) in TraceEventKind::ALL.iter().enumerate() {
+            assert_eq!(*k as usize, i, "ALL must follow repr order");
+            assert!(!k.label().is_empty());
+        }
+    }
+}

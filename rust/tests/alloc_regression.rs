@@ -170,15 +170,21 @@ fn steady_state_iterations_allocate_nothing() {
     // arrivals, admissions, blocked drains, placements, batch launches
     // (QueryBatch::reset + run on a persistent engine) and completions —
     // allocates zero bytes.
-    scheduler_steady_state_allocates_nothing(&er);
+    scheduler_steady_state_allocates_nothing(&er, false);
+    // Same loop with a TraceSink attached: recording is an index write
+    // into the pre-allocated ring, so observability must not cost the
+    // steady state its zero-alloc contract.
+    scheduler_steady_state_allocates_nothing(&er, true);
 }
 
 /// Drive the scheduler over a fixed burst-arrival stream (identical
 /// sources, so every batch is the same shape) and assert a 0-byte
 /// allocation delta for every step after the warm-up horizon. Distance
 /// collection is off: cloning a result array is inherently an allocation
-/// and belongs to result *extraction*, not the scheduling loop.
-fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>) {
+/// and belongs to result *extraction*, not the scheduling loop. With
+/// `traced`, a pre-allocated [`lonestar_lb::telemetry::TraceSink`] rides
+/// along and the same zero-delta assertions must hold.
+fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>, traced: bool) {
     const COUNT: u32 = 40;
     let arrivals: Vec<Arrival> = (0..COUNT)
         .map(|i| Arrival {
@@ -203,7 +209,13 @@ fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>) {
         collect_distances: false,
     };
     let cache = GraphCache::new();
+    // Declared before the scheduler so the sink outlives its borrow; its
+    // one allocation happens here, before any measured step.
+    let mut sink = lonestar_lb::telemetry::TraceSink::with_capacity(1 << 14);
     let mut sched = Scheduler::new(g.clone(), arrivals, &cfg, &cache).expect("scheduler");
+    if traced {
+        sched.attach_trace(&mut sink);
+    }
     let mut steps = 0usize;
     let mut measured = 0usize;
     loop {
@@ -239,4 +251,16 @@ fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>) {
     assert_eq!(report.served() as u64, COUNT as u64, "block policy serves all");
     assert!(report.dropped.is_empty());
     assert!(report.batches >= 3);
+    if traced {
+        use lonestar_lb::telemetry::TraceEventKind;
+        assert!(sink.recorded() > 0, "attached sink must capture the run");
+        assert_eq!(sink.overwritten(), 0, "ring must not wrap at this scale");
+        assert_eq!(sink.kind_count(TraceEventKind::Arrival), COUNT as u64);
+        assert_eq!(sink.kind_count(TraceEventKind::BatchLaunch), report.batches);
+        assert_eq!(
+            sink.kind_count(TraceEventKind::ShardBusy),
+            report.batches,
+            "one busy interval per completed batch"
+        );
+    }
 }

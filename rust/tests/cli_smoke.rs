@@ -175,6 +175,133 @@ fn serve_scheduler_admission_control_end_to_end() {
 }
 
 #[test]
+fn serve_trace_export_deterministic_and_shaped() {
+    // The ISSUE-6 acceptance scenario: a seeded 96-query heterogeneous
+    // stream exports a schema-valid Chrome trace with per-shard tracks and
+    // queue-depth counters, byte-identical across two runs, and the report
+    // JSON carries the histogram percentiles + per-shard utilization.
+    let trace_a = temp("trace-a.json");
+    let trace_b = temp("trace-b.json");
+    let metrics = temp("metrics.prom");
+    let serve_args = [
+        "serve", "--suite", "rmat10", "--scale", "tiny", "--queries", "96",
+        "--arrival-rate", "10000", "--queue-cap", "90", "--queue-policy", "drop",
+        "--devices", "k20c,k40", "--max-batch", "80", "--json",
+    ];
+    let out = bin()
+        .args(serve_args)
+        .args(["--trace-out", trace_a.to_str().unwrap()])
+        .args(["--metrics-out", metrics.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wrote trace"), "no trace confirmation:\n{text}");
+    assert!(text.contains("wrote metrics"), "no metrics confirmation:\n{text}");
+
+    // Report JSON: histogram-backed percentiles, monotone, plus the
+    // clock-neutral waits and per-shard utilization.
+    let json_line = text.lines().find(|l| l.starts_with('{')).expect("json object");
+    let v = lonestar_lb::util::Json::parse(json_line).expect("valid json");
+    let pick = |key: &str| -> f64 {
+        v.get(key)
+            .unwrap_or_else(|| panic!("missing {key}"))
+            .as_f64()
+            .unwrap()
+    };
+    let (p50, p95, p99, max) = (
+        pick("latency_ms_p50"),
+        pick("latency_ms_p95"),
+        pick("latency_ms_p99"),
+        pick("latency_ms_max"),
+    );
+    assert!(0.0 < p50 && p50 <= p95 && p95 <= p99 && p99 <= max, "{p50} {p95} {p99} {max}");
+    assert!(pick("wait_ms_p95") >= pick("wait_ms_p50"));
+    assert!(pick("wait_ms_max") >= pick("wait_ms_p95"));
+    for shard in v.get("shards").unwrap().as_arr().unwrap() {
+        let util = shard.get("utilization").expect("utilization").as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&util), "utilization {util}");
+    }
+
+    // Chrome trace: per-shard thread tracks, busy slices, queue-depth
+    // counter samples.
+    let trace = std::fs::read_to_string(&trace_a).unwrap();
+    let tv = lonestar_lb::util::Json::parse(&trace).expect("trace is valid json");
+    let events = tv.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+        .filter_map(|e| e.get("args").unwrap().get("name").unwrap().as_str())
+        .collect();
+    assert!(names.contains(&"shard 0 [k20c]"), "thread names: {names:?}");
+    assert!(names.contains(&"shard 1 [k40]"), "thread names: {names:?}");
+    assert!(
+        events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("C")
+            && e.get("name").unwrap().as_str() == Some("queue depth")),
+        "no queue-depth counter samples"
+    );
+    assert!(
+        events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("X")
+            && e.get("name").unwrap().as_str() == Some("batch")),
+        "no shard busy slices"
+    );
+
+    // Prometheus exposition: registry counters, per-shard gauges, latency
+    // histogram, trace-event totals.
+    let prom = std::fs::read_to_string(&metrics).unwrap();
+    assert!(prom.contains("# TYPE lonestar_latency_ms histogram"), "{prom}");
+    assert!(prom.contains("lonestar_latency_ms_bucket{le=\"+Inf\"}"), "{prom}");
+    assert!(prom.contains("lonestar_shard_utilization{shard=\"0\",device=\"k20c\"}"));
+    assert!(prom.contains("lonestar_trace_events_total{kind=\"batch-launch\"}"));
+    assert!(prom.contains("lonestar_arrived_total 96\n"), "{prom}");
+
+    // Determinism: same seed + config ⇒ byte-identical trace.
+    let out = bin()
+        .args(serve_args)
+        .args(["--trace-out", trace_b.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&trace_a).unwrap(),
+        std::fs::read(&trace_b).unwrap(),
+        "trace export must be deterministic per seed"
+    );
+    std::fs::remove_file(&trace_a).ok();
+    std::fs::remove_file(&trace_b).ok();
+    std::fs::remove_file(&metrics).ok();
+}
+
+#[test]
+fn run_trace_export_smoke() {
+    // The single-query path: kernel slices + decision instants land on the
+    // engine's own timeline seam.
+    let trace = temp("run-trace.json");
+    let out = bin()
+        .args([
+            "run", "--suite", "rmat10", "--scale", "tiny", "--algo", "bfs",
+            "--strategy", "AD", "--trace-out", trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let tv = lonestar_lb::util::Json::parse(&std::fs::read_to_string(&trace).unwrap())
+        .expect("trace is valid json");
+    let events = tv.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("X")
+            && e.get("cat").map(|c| c.as_str()) == Some(Some("kernel"))),
+        "no kernel slices in run trace"
+    );
+    assert!(
+        events.iter().any(|e| e.get("cat").map(|c| c.as_str()) == Some(Some("decision"))),
+        "no AD decision instants in run trace"
+    );
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
 fn serve_rejects_unknown_devices_and_bad_rates() {
     let out = bin()
         .args(["serve", "--suite", "rmat10", "--scale", "tiny", "--devices", "h100"])

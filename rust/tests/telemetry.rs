@@ -1,0 +1,207 @@
+//! Telemetry integration: the trace a run records is a pure function of
+//! (graph, config, seed) — byte-identical exports across runs — and the
+//! event counts agree with the schedule report's own counters.
+
+use lonestar_lb::arena::GraphCache;
+use lonestar_lb::coordinator::{run_traced, RunConfig};
+use lonestar_lb::graph::generators::erdos_renyi;
+use lonestar_lb::serving::{
+    serve_stream_traced, serve_traced, synthetic_arrivals, synthetic_queries, SchedulerConfig,
+    ScheduleReport, ServeConfig,
+};
+use lonestar_lb::sim::DeviceSpec;
+use lonestar_lb::strategies::StrategyKind;
+use lonestar_lb::telemetry::{chrome_trace, TraceEventKind, TraceSink};
+use lonestar_lb::util::Json;
+use std::sync::Arc;
+
+fn traced_stream(seed: u64) -> (ScheduleReport, TraceSink) {
+    let g = Arc::new(erdos_renyi(512, 2048, 13, 5).unwrap());
+    let arrivals = synthetic_arrivals(&g, 48, 0.5, 200_000, seed);
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            strategy: StrategyKind::BS,
+            devices: vec![DeviceSpec::k20c(), DeviceSpec::gtx680()],
+            max_batch: 16,
+            ..Default::default()
+        },
+        queue_cap: 12,
+        ..Default::default()
+    };
+    let cache = GraphCache::new();
+    let mut sink = TraceSink::with_capacity(1 << 15);
+    let report = serve_stream_traced(&g, arrivals, &cfg, &cache, Some(&mut sink)).unwrap();
+    (report, sink)
+}
+
+#[test]
+fn stream_trace_is_deterministic_per_seed() {
+    let (report_a, sink_a) = traced_stream(21);
+    let (report_b, sink_b) = traced_stream(21);
+    let trace_a = chrome_trace(&sink_a, &["k20c", "gtx680"]);
+    let trace_b = chrome_trace(&sink_b, &["k20c", "gtx680"]);
+    assert_eq!(trace_a, trace_b, "same seed+config must export byte-identical traces");
+    assert_eq!(
+        report_a.to_json().to_string(),
+        report_b.to_json().to_string(),
+        "report JSON must be deterministic too"
+    );
+    assert_eq!(
+        report_a.prometheus(Some(&sink_a)),
+        report_b.prometheus(Some(&sink_b))
+    );
+
+    // A different seed shifts arrival times, so the timeline differs.
+    let (_, sink_c) = traced_stream(22);
+    assert_ne!(
+        trace_a,
+        chrome_trace(&sink_c, &["k20c", "gtx680"]),
+        "different seeds should not collide"
+    );
+}
+
+#[test]
+fn stream_trace_counts_agree_with_report() {
+    let (report, sink) = traced_stream(7);
+    assert_eq!(sink.overwritten(), 0, "ring must not wrap at this scale");
+    assert_eq!(sink.kind_count(TraceEventKind::Arrival), report.arrived);
+    assert_eq!(sink.kind_count(TraceEventKind::Admit), report.admitted);
+    assert_eq!(
+        sink.kind_count(TraceEventKind::Drop),
+        report.dropped.len() as u64
+    );
+    assert_eq!(sink.kind_count(TraceEventKind::Place), report.admitted);
+    assert_eq!(sink.kind_count(TraceEventKind::BatchLaunch), report.batches);
+    assert_eq!(sink.kind_count(TraceEventKind::BatchComplete), report.batches);
+    assert_eq!(
+        sink.kind_count(TraceEventKind::ShardBusy),
+        report.batches,
+        "one busy slice per batch"
+    );
+    assert!(
+        sink.kind_count(TraceEventKind::Kernel) > 0,
+        "engine kernels must land in the scheduler's sink"
+    );
+    // Every timestamp sits inside the stream's span. (Events are recorded
+    // in causal order, not timestamp order — a batch's kernel slices are
+    // known at launch, before later arrivals — so only the bound holds.)
+    for ev in sink.events() {
+        assert!(
+            ev.at_ps <= report.wall_ps,
+            "{:?} at {} past wall {}",
+            ev.kind,
+            ev.at_ps,
+            report.wall_ps
+        );
+    }
+    // Busy intervals end by the drain instant.
+    for ev in sink.events() {
+        if ev.kind == TraceEventKind::ShardBusy {
+            assert!(ev.at_ps + ev.a <= report.wall_ps);
+        }
+    }
+
+    // The wait/latency histograms carry exactly the served population.
+    assert_eq!(report.latency_hist.count(), report.served() as u64);
+    assert_eq!(report.wait_hist.count(), report.served() as u64);
+    assert!(report.p95_latency_ms() <= report.max_latency_ms());
+    assert!(report.p50_latency_ms() <= report.p95_latency_ms());
+}
+
+#[test]
+fn stream_trace_json_has_tracks_and_counters() {
+    let (_, sink) = traced_stream(3);
+    let trace = chrome_trace(&sink, &["k20c", "gtx680"]);
+    let v = Json::parse(&trace).expect("valid json");
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    let metas: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+        .filter_map(|e| e.get("args").unwrap().get("name").unwrap().as_str())
+        .collect();
+    assert!(metas.contains(&"admission/scheduler"));
+    assert!(metas.contains(&"shard 0 [k20c]"));
+    assert!(metas.contains(&"shard 1 [gtx680]"));
+    assert!(events.iter().any(|e| {
+        e.get("ph").unwrap().as_str() == Some("C")
+            && e.get("name").unwrap().as_str() == Some("queue depth")
+    }));
+    // Slices carry non-negative µs durations.
+    for e in events {
+        if e.get("ph").unwrap().as_str() == Some("X") {
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn batch_serve_trace_lays_shards_on_one_timeline() {
+    let g = Arc::new(erdos_renyi(512, 2048, 13, 5).unwrap());
+    let queries = synthetic_queries(&g, 12, 0.5, 9);
+    let cfg = ServeConfig {
+        strategy: StrategyKind::BS,
+        devices: vec![DeviceSpec::k20c(), DeviceSpec::k40()],
+        max_batch: 16,
+        ..Default::default()
+    };
+    let mut sink = TraceSink::with_capacity(1 << 14);
+    let base_ps = 5_000_000;
+    let report =
+        serve_traced(&g, &queries, &cfg, &GraphCache::new(), Some(&mut sink), base_ps).unwrap();
+    assert_eq!(report.shards.len(), 2);
+    assert!(report.shards.iter().all(|s| s.busy_ps > 0));
+    assert!(sink.kind_count(TraceEventKind::Kernel) > 0);
+    assert!(sink.kind_count(TraceEventKind::FrontierSize) > 0);
+    // Both shards' events start at the shared base instant.
+    assert!(sink.events().all(|ev| ev.at_ps >= base_ps));
+    let shards_seen: std::collections::BTreeSet<u32> =
+        sink.events().map(|ev| ev.shard).collect();
+    assert!(shards_seen.contains(&0) && shards_seen.contains(&1));
+
+    // The traced run must not perturb the simulation: distances and
+    // metrics match an untraced run exactly.
+    let untraced = lonestar_lb::serving::serve(&g, &queries, &cfg).unwrap();
+    for (a, b) in report.shards.iter().zip(&untraced.shards) {
+        assert_eq!(a.dists, b.dists, "tracing changed results");
+        assert_eq!(
+            a.metrics.total_cycles(),
+            b.metrics.total_cycles(),
+            "tracing changed timing"
+        );
+    }
+}
+
+#[test]
+fn run_trace_records_kernels_and_decisions() {
+    let g = Arc::new(erdos_renyi(512, 2048, 13, 5).unwrap());
+    let rc = RunConfig {
+        strategy: StrategyKind::AD,
+        ..Default::default()
+    };
+    let mut sink = TraceSink::with_capacity(1 << 14);
+    let r = run_traced(&g, &rc, Some(&mut sink), 0).unwrap();
+    assert!(r.metrics.iterations > 0);
+    assert!(sink.kind_count(TraceEventKind::Kernel) > 0, "no kernel slices");
+    assert_eq!(
+        sink.kind_count(TraceEventKind::StrategyDecision),
+        r.metrics.iterations,
+        "one decision instant per adaptive iteration"
+    );
+    assert_eq!(
+        sink.kind_count(TraceEventKind::FrontierSize),
+        r.metrics.iterations
+    );
+    assert_eq!(
+        sink.kind_count(TraceEventKind::Migration),
+        r.metrics.strategy_switches,
+        "migration instants mirror the switch counter"
+    );
+    // Kernel slices are in-bounds of the run's own span.
+    let dev = rc.device.clone();
+    let span = r.metrics.total_cycles() * dev.ps_per_cycle();
+    for ev in sink.events() {
+        if ev.kind == TraceEventKind::Kernel {
+            assert!(ev.at_ps + ev.a <= span, "kernel slice past the run span");
+        }
+    }
+}

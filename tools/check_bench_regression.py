@@ -70,9 +70,13 @@ def main() -> int:
                 print(f"  - {f_}")
             return 1
         print(
-            "baseline is a bootstrap stub — accepting this measurement.\n"
-            f"To arm the regression gate, commit the fresh file:\n"
-            f"    cp {fresh_path} {baseline_path}"
+            "=" * 72 + "\n"
+            "WARNING: the committed bench baseline is still the BOOTSTRAP\n"
+            "placeholder — the perf regression gate is NOT armed. Every\n"
+            "measurement passes until a real baseline is promoted:\n"
+            f"    cp {fresh_path} {baseline_path}\n"
+            "(run benches on a quiet machine, then commit the result)\n"
+            + "=" * 72
         )
         return 0
 

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file exported by `--trace-out`.
+
+Usage:
+    tools/check_trace.py TRACE.json [--expect-shards N]
+
+Checks the schema contract the telemetry layer promises (and that Perfetto
+/ chrome://tracing silently depend on):
+
+  - top level: {"displayTimeUnit": "ms", "traceEvents": [...]} , non-empty
+  - every event has integer pid/tid, a ph in {M, X, C, i}, and (except
+    metadata) a numeric non-negative ts
+  - complete slices (X) carry a numeric dur >= 0
+  - counters (C) and instants (i) carry an args object; instants have a
+    scope s
+  - exactly one process_name metadata record, at least one shard thread
+    (thread_name matching "shard <i> [...]"), and the admission/scheduler
+    thread on tid 0
+  - with --expect-shards N: exactly N shard threads, numbered 0..N-1
+  - at least one queue-depth counter sample when the trace came from the
+    scheduler path (detected by the admission thread having any events)
+
+Exit 0 on a valid trace, 1 with a findings list otherwise.
+"""
+
+import json
+import re
+import sys
+
+VALID_PH = {"M", "X", "C", "i"}
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    expect_shards = None
+    if "--expect-shards" in sys.argv:
+        expect_shards = int(sys.argv[sys.argv.index("--expect-shards") + 1])
+
+    with open(path) as f:
+        doc = json.load(f)
+
+    findings = []
+    if doc.get("displayTimeUnit") != "ms":
+        findings.append("displayTimeUnit must be 'ms'")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print(f"check_trace FAILED: {path}: traceEvents missing or empty")
+        return 1
+
+    shard_threads = {}
+    process_names = 0
+    admission_tid0 = False
+    queue_depth_samples = 0
+    scheduler_events = 0
+
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            findings.append(f"{where}: bad ph {ph!r}")
+            continue
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                findings.append(f"{where}: {key} must be an integer")
+        if ph == "M":
+            name = ev.get("name")
+            value = ev.get("args", {}).get("name", "")
+            if name == "process_name":
+                process_names += 1
+            elif name == "thread_name":
+                m = re.match(r"shard (\d+) \[", value)
+                if m:
+                    shard_threads[int(m.group(1))] = ev.get("tid")
+                elif value == "admission/scheduler":
+                    admission_tid0 = ev.get("tid") == 0
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            findings.append(f"{where}: ts must be a non-negative number, got {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                findings.append(f"{where}: X slice needs dur >= 0, got {dur!r}")
+        if ph in ("C", "i") and not isinstance(ev.get("args"), dict):
+            findings.append(f"{where}: {ph} event needs an args object")
+        if ph == "i" and not ev.get("s"):
+            findings.append(f"{where}: instant needs a scope 's'")
+        if ph == "C" and ev.get("name") == "queue depth":
+            queue_depth_samples += 1
+        if ev.get("tid") == 0:
+            scheduler_events += 1
+
+    if process_names != 1:
+        findings.append(f"expected exactly one process_name record, got {process_names}")
+    if not admission_tid0:
+        findings.append("missing admission/scheduler thread_name on tid 0")
+    if not shard_threads:
+        findings.append("no shard thread tracks (thread_name 'shard <i> [...]')")
+    if expect_shards is not None:
+        want = set(range(expect_shards))
+        if set(shard_threads) != want:
+            findings.append(
+                f"expected shard threads {sorted(want)}, got {sorted(shard_threads)}"
+            )
+    if scheduler_events and not queue_depth_samples:
+        findings.append("scheduler-path trace has no queue-depth counter samples")
+
+    if findings:
+        print(f"check_trace FAILED: {path}:")
+        for f_ in findings:
+            print(f"  - {f_}")
+        return 1
+    print(
+        f"check_trace OK: {path}: {len(events)} events, "
+        f"{len(shard_threads)} shard track(s), "
+        f"{queue_depth_samples} queue-depth sample(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
