@@ -30,6 +30,7 @@
 //! queue_policy = drop                  # drop | block at a full queue
 //! trace_out  = trace.json              # write a Chrome trace-event file
 //! metrics_out = metrics.prom           # write Prometheus text exposition
+//! profile_out = profile.json           # write the load-imbalance profile
 //! ```
 
 use crate::algorithms::AlgoKind;
@@ -220,6 +221,10 @@ pub struct ExperimentConfig {
     /// Prometheus text-exposition output path (`run`/`serve`); CLI
     /// `--metrics-out` overrides.
     pub metrics_out: Option<String>,
+    /// Load-imbalance profile JSON output path (`run`/`serve`); CLI
+    /// `--profile-out` overrides. Setting it attaches a trace sink even
+    /// when `trace_out` is absent.
+    pub profile_out: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -245,6 +250,7 @@ impl Default for ExperimentConfig {
             queue_policy: crate::serving::OverflowPolicy::Drop,
             trace_out: None,
             metrics_out: None,
+            profile_out: None,
         }
     }
 }
@@ -360,6 +366,7 @@ impl ExperimentConfig {
                 }
                 "trace_out" => cfg.trace_out = Some(v),
                 "metrics_out" => cfg.metrics_out = Some(v),
+                "profile_out" => cfg.profile_out = Some(v),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
         }
@@ -551,11 +558,14 @@ mod tests {
         let cfg = ExperimentConfig::parse("").unwrap();
         assert_eq!(cfg.trace_out, None);
         assert_eq!(cfg.metrics_out, None);
+        assert_eq!(cfg.profile_out, None);
         let cfg = ExperimentConfig::parse(
-            "trace_out = out/trace.json\nmetrics_out = out/metrics.prom\n",
+            "trace_out = out/trace.json\nmetrics_out = out/metrics.prom\n\
+             profile_out = out/profile.json\n",
         )
         .unwrap();
         assert_eq!(cfg.trace_out.as_deref(), Some("out/trace.json"));
         assert_eq!(cfg.metrics_out.as_deref(), Some("out/metrics.prom"));
+        assert_eq!(cfg.profile_out.as_deref(), Some("out/profile.json"));
     }
 }

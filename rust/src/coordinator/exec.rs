@@ -334,6 +334,9 @@ impl<'d> ExecCtx<'d> {
             ksim.commit(wsim);
         }
 
+        // Snapshot the per-warp distribution before the sim is consumed;
+        // everything in it is inline stack state, so this never allocates.
+        let warp_stats = ksim.warp_stats();
         let (t, sm_a, sm_b) = ksim.finish_into();
         self.scratch.put_u64(sm_a);
         self.scratch.put_u64(sm_b);
@@ -344,20 +347,38 @@ impl<'d> ExecCtx<'d> {
         self.scratch.put_u32(lane_counts);
         self.metrics
             .charge_processing(t, self.dev.launch_overhead);
+        self.metrics.absorb_warp_profile(&warp_stats);
         if self.trace.is_some() {
             // A complete slice covering exactly the cycles this launch
-            // charged, placed so it ends at the current virtual instant.
+            // charged, placed so it ends at the current virtual instant,
+            // followed by its load-imbalance profile at the same instant.
+            // CV and occupancy are fixed-point ×1e6: the exporter has no
+            // DeviceSpec, so device-dependent ratios are resolved here.
             let dur_ps = self.metrics.total_cycles().saturating_sub(trace_start_cycles)
                 * self.dev.ps_per_cycle();
             let end_ps = self.trace_now_ps();
             let shard = self.trace_shard;
+            let cv_micro = (warp_stats.cv() * 1e6).round() as u64;
+            let occ_micro = (warp_stats.occupancy(self.dev) * 1e6).round() as u64;
             if let Some(sink) = self.trace.as_deref_mut() {
+                let start_ps = end_ps.saturating_sub(dur_ps);
                 sink.record(TraceEvent {
                     shard,
                     a: dur_ps,
                     b: total as u64,
+                    c: warp_stats.max_cycles,
+                    d: warp_stats.sum_cycles,
                     label: work.name,
-                    ..TraceEvent::new(TraceEventKind::Kernel, end_ps.saturating_sub(dur_ps))
+                    ..TraceEvent::new(TraceEventKind::Kernel, start_ps)
+                });
+                sink.record(TraceEvent {
+                    shard,
+                    a: warp_stats.warps,
+                    b: t.mem_transactions,
+                    c: cv_micro,
+                    d: occ_micro,
+                    label: work.name,
+                    ..TraceEvent::new(TraceEventKind::KernelProfile, start_ps)
                 });
             }
         }

@@ -7,7 +7,7 @@
 //!                      [--scale tiny|small|paper] [--seed N] [--source N]
 //!                      [--xla [--artifacts DIR]] [--enforce-budget]
 //!                      [--no-chunking] [--json]
-//!                      [--trace-out FILE] [--metrics-out FILE]
+//!                      [--trace-out FILE] [--metrics-out FILE] [--profile-out FILE]
 //! lonestar-lb serve    [--config F] [--suite NAME | --graph FILE | --gen SPEC]
 //!                      [--queries N] [--batch-size N] [--shards N]
 //!                      [--devices k20c,k40,...] [--max-batch N]
@@ -16,9 +16,9 @@
 //!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
 //!                      [--adaptive-policy P] [--scale S] [--seed N]
 //!                      [--enforce-budget] [--verify] [--json]
-//!                      [--trace-out FILE] [--metrics-out FILE]
+//!                      [--trace-out FILE] [--metrics-out FILE] [--profile-out FILE]
 //! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|
-//!                       figqueue|all]
+//!                       figqueue|figimbalance|all]
 //!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
 //! lonestar-lb generate NAME OUT [--scale S] [--seed N]
 //! lonestar-lb inspect  FILE
@@ -121,7 +121,7 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --adaptive-policy cost|heuristic|round-robin
                --scale tiny|small|paper --seed N
                --xla --artifacts DIR --enforce-budget --no-chunking --json
-               --trace-out FILE.json --metrics-out FILE.prom
+               --trace-out FILE.json --metrics-out FILE.prom --profile-out FILE.json
   serve        --suite NAME | --graph FILE | --gen SPEC | --config FILE
                --queries N --batch-size N --shards N
                --devices k20c,k40,gtx680 --max-batch N
@@ -129,8 +129,9 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
                --adaptive-policy P --scale S --seed N
                --enforce-budget --verify --json
-               --trace-out FILE.json --metrics-out FILE.prom
-  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|figqueue|all]
+               --trace-out FILE.json --metrics-out FILE.prom --profile-out FILE.json
+  figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|figqueue|
+                figimbalance|all]
                --scale S --seed N --out FILE.json --no-budget
   generate     NAME OUT --scale S --seed N
   inspect      FILE
@@ -165,12 +166,17 @@ fn real_main(argv: &[String]) -> Result<()> {
     }
 }
 
-/// Resolve the `--trace-out`/`--metrics-out` destinations: flags override
-/// the config file, absent everywhere means telemetry stays detached.
-fn trace_paths(args: &Args, cfg: &ExperimentConfig) -> (Option<String>, Option<String>) {
+/// Resolve the `--trace-out`/`--metrics-out`/`--profile-out` destinations:
+/// flags override the config file, absent everywhere means telemetry stays
+/// detached.
+fn trace_paths(
+    args: &Args,
+    cfg: &ExperimentConfig,
+) -> (Option<String>, Option<String>, Option<String>) {
     (
         args.get("trace-out").map(str::to_string).or_else(|| cfg.trace_out.clone()),
         args.get("metrics-out").map(str::to_string).or_else(|| cfg.metrics_out.clone()),
+        args.get("profile-out").map(str::to_string).or_else(|| cfg.profile_out.clone()),
     )
 }
 
@@ -197,13 +203,18 @@ fn trace_exposition(sink: &TraceSink) -> String {
     exp.finish()
 }
 
-/// Write the Chrome trace and/or metrics exposition files.
+/// Write the Chrome trace, metrics exposition and/or imbalance-profile
+/// files. `shard_ppc` converts straggler cycles to ps in the profile
+/// report (one ps-per-cycle entry per shard, indexed like
+/// `shard_devices`).
 fn write_trace_outputs(
     out: &mut impl Write,
     sink: &TraceSink,
     shard_devices: &[&str],
+    shard_ppc: &[u64],
     trace_out: Option<&str>,
     metrics: Option<(&str, String)>,
+    profile_out: Option<&str>,
 ) -> Result<()> {
     if let Some(path) = trace_out {
         std::fs::write(path, lonestar_lb::telemetry::chrome_trace(sink, shard_devices))?;
@@ -217,6 +228,11 @@ fn write_trace_outputs(
     if let Some((path, text)) = metrics {
         std::fs::write(path, text)?;
         writeln!(out, "wrote metrics {path}")?;
+    }
+    if let Some(path) = profile_out {
+        let report = lonestar_lb::telemetry::profile_report(sink, shard_ppc);
+        std::fs::write(path, report.to_string())?;
+        writeln!(out, "wrote profile {path}")?;
     }
     Ok(())
 }
@@ -269,13 +285,14 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
     let g = Arc::new(cfg.graph.load(cfg.scale, cfg.seed)?);
     writeln!(out, "graph: {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
 
-    let (trace_out, metrics_out) = trace_paths(args, &cfg);
-    let mut sink = (trace_out.is_some() || metrics_out.is_some())
+    let (trace_out, metrics_out, profile_out) = trace_paths(args, &cfg);
+    let mut sink = (trace_out.is_some() || metrics_out.is_some() || profile_out.is_some())
         .then(|| TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY));
     // Successive strategy runs are laid end to end on one virtual
     // timeline, so the exported trace shows them as consecutive spans.
     let mut base_ps = 0u64;
     let mut trace_device: &'static str = "k20c";
+    let mut trace_ppc: u64 = lonestar_lb::sim::DeviceSpec::k20c().ps_per_cycle();
 
     let mut json_rows = Vec::new();
     for rc in cfg.run_configs() {
@@ -284,6 +301,7 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
             Ok(r) => {
                 base_ps += r.metrics.total_cycles() * dev.ps_per_cycle();
                 trace_device = dev.name;
+                trace_ppc = dev.ps_per_cycle();
                 writeln!(
                     out,
                     "{:<5} {:<4} kernel {:>10.3} ms  overhead {:>10.3} ms  total {:>10.3} ms  \
@@ -344,7 +362,15 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
     }
     if let Some(sink) = &sink {
         let metrics = metrics_out.as_deref().map(|p| (p, trace_exposition(sink)));
-        write_trace_outputs(out, sink, &[trace_device], trace_out.as_deref(), metrics)?;
+        write_trace_outputs(
+            out,
+            sink,
+            &[trace_device],
+            &[trace_ppc],
+            trace_out.as_deref(),
+            metrics,
+            profile_out.as_deref(),
+        )?;
     }
     Ok(())
 }
@@ -450,8 +476,8 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     )?;
 
     let queries = lonestar_lb::serving::synthetic_queries(&g, total_queries, bfs_fraction, cfg.seed);
-    let (trace_out, metrics_out) = trace_paths(args, &cfg);
-    let mut sink = (trace_out.is_some() || metrics_out.is_some())
+    let (trace_out, metrics_out, profile_out) = trace_paths(args, &cfg);
+    let mut sink = (trace_out.is_some() || metrics_out.is_some() || profile_out.is_some())
         .then(|| TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY));
     // Batches run back-to-back on the trace timeline: each batch starts
     // where the previous batch's slowest shard finished.
@@ -521,8 +547,17 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     }
     if let Some(sink) = &sink {
         let names: Vec<&str> = serve_cfg.devices.iter().map(|d| d.name).collect();
+        let ppc: Vec<u64> = serve_cfg.devices.iter().map(|d| d.ps_per_cycle()).collect();
         let metrics = metrics_out.as_deref().map(|p| (p, trace_exposition(sink)));
-        write_trace_outputs(out, sink, &names, trace_out.as_deref(), metrics)?;
+        write_trace_outputs(
+            out,
+            sink,
+            &names,
+            &ppc,
+            trace_out.as_deref(),
+            metrics,
+            profile_out.as_deref(),
+        )?;
     }
     Ok(())
 }
@@ -561,6 +596,7 @@ fn cmd_serve_stream(
     let strategy = serve_cfg.strategy;
     let params = serve_cfg.params.clone();
     let shard_names: Vec<&str> = serve_cfg.devices.iter().map(|d| d.name).collect();
+    let shard_ppc: Vec<u64> = serve_cfg.devices.iter().map(|d| d.ps_per_cycle()).collect();
     let sched_cfg = lonestar_lb::serving::SchedulerConfig {
         serve: serve_cfg,
         queue_cap: cfg.queue_cap,
@@ -574,8 +610,8 @@ fn cmd_serve_stream(
         mean_gap_ps,
         cfg.seed,
     );
-    let (trace_out, metrics_out) = trace_paths(args, cfg);
-    let mut sink = (trace_out.is_some() || metrics_out.is_some())
+    let (trace_out, metrics_out, profile_out) = trace_paths(args, cfg);
+    let mut sink = (trace_out.is_some() || metrics_out.is_some() || profile_out.is_some())
         .then(|| TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY));
     let cache = lonestar_lb::arena::GraphCache::new();
     let report =
@@ -630,7 +666,15 @@ fn cmd_serve_stream(
         let metrics = metrics_out
             .as_deref()
             .map(|p| (p, report.prometheus(Some(sink))));
-        write_trace_outputs(out, sink, &shard_names, trace_out.as_deref(), metrics)?;
+        write_trace_outputs(
+            out,
+            sink,
+            &shard_names,
+            &shard_ppc,
+            trace_out.as_deref(),
+            metrics,
+            profile_out.as_deref(),
+        )?;
     }
     Ok(())
 }
@@ -711,6 +755,13 @@ fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
         let rows = figures::fig_queue(&opts, out)?;
         payload.insert(
             "figqueue".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "figimbalance" || which == "imbalance" {
+        let rows = figures::fig_imbalance(&opts, out)?;
+        payload.insert(
+            "figimbalance".into(),
             Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
         );
     }

@@ -2,7 +2,8 @@
 //! plus counters that feed the trade-off analysis (Figure 9) and
 //! EXPERIMENTS.md.
 
-use crate::sim::{DeviceSpec, KernelTime};
+use crate::sim::{DeviceSpec, KernelTime, WarpStats};
+use crate::telemetry::LogHistogram;
 
 /// One adaptive-engine decision: which strategy ran a given outer iteration
 /// and what the frontier looked like when the choice was made. Recorded by
@@ -87,6 +88,20 @@ pub struct RunMetrics {
     /// Per-iteration decision trace of the adaptive engine (empty for
     /// static strategies).
     pub decisions: Vec<DecisionRecord>,
+    /// Processing-kernel launches that committed at least one warp (the
+    /// population behind the imbalance aggregates below).
+    pub profiled_kernels: u64,
+    /// Per-warp busy-cycle distribution across all profiled kernels
+    /// (inline log₂ buckets — collecting this never allocates).
+    pub warp_cycles_hist: LogHistogram,
+    /// Per-kernel imbalance factor (max-warp ÷ mean-warp cycles),
+    /// fixed-point ×1000 so it fits the integer histogram.
+    pub imbalance_hist: LogHistogram,
+    /// Σ over profiled kernels of (max-warp − mean-warp) cycles: the time
+    /// the device spent waiting on stragglers — the paper's imbalance cost.
+    pub imbalance_overhead_cycles: u64,
+    /// Worst single-kernel imbalance factor seen, ×1000.
+    pub peak_imbalance_x1000: u64,
 }
 
 impl RunMetrics {
@@ -118,6 +133,42 @@ impl RunMetrics {
             self.strategy_switches += 1;
         }
         self.decisions.push(rec);
+    }
+
+    /// Fold one launch's per-warp distribution into the run-level imbalance
+    /// aggregates. Allocation-free (histogram merges are fixed-size array
+    /// adds); empty launches are skipped so they cannot dilute the factors.
+    pub fn absorb_warp_profile(&mut self, p: &WarpStats) {
+        if p.warps == 0 {
+            return;
+        }
+        self.profiled_kernels += 1;
+        self.warp_cycles_hist.merge(&p.hist);
+        self.imbalance_overhead_cycles += p.tail_excess_cycles();
+        let fx = (p.imbalance_factor() * 1000.0).round() as u64;
+        self.imbalance_hist.record(fx);
+        if fx > self.peak_imbalance_x1000 {
+            self.peak_imbalance_x1000 = fx;
+        }
+    }
+
+    /// Mean per-kernel imbalance factor over the profiled population
+    /// (1.0 when nothing was profiled).
+    pub fn mean_imbalance(&self) -> f64 {
+        if self.imbalance_hist.is_empty() {
+            1.0
+        } else {
+            self.imbalance_hist.mean() / 1000.0
+        }
+    }
+
+    /// Worst per-kernel imbalance factor (1.0 when nothing was profiled).
+    pub fn peak_imbalance(&self) -> f64 {
+        if self.profiled_kernels == 0 {
+            1.0
+        } else {
+            self.peak_imbalance_x1000 as f64 / 1000.0
+        }
     }
 
     fn absorb_counters(&mut self, t: &KernelTime) {
@@ -210,6 +261,41 @@ mod tests {
         assert_eq!(m.strategy_switches, 1);
         assert_eq!(m.decisions.len(), 3);
         assert_eq!(m.decisions[1].strategy, "WD");
+    }
+
+    #[test]
+    fn warp_profiles_fold_into_imbalance_aggregates() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.mean_imbalance(), 1.0, "unprofiled run is neutral");
+        assert_eq!(m.peak_imbalance(), 1.0);
+
+        let mut hist = LogHistogram::new();
+        for c in [100u64, 100, 100, 400] {
+            hist.record(c);
+        }
+        let skewed = WarpStats {
+            warps: 4,
+            max_cycles: 400,
+            sum_cycles: 700,
+            sq_sum_cycles: 3 * 100 * 100 + 400 * 400,
+            hist,
+        };
+        m.absorb_warp_profile(&skewed);
+        // Empty launches must not dilute the aggregates.
+        m.absorb_warp_profile(&WarpStats {
+            warps: 0,
+            max_cycles: 0,
+            sum_cycles: 0,
+            sq_sum_cycles: 0,
+            hist: LogHistogram::new(),
+        });
+        assert_eq!(m.profiled_kernels, 1);
+        assert_eq!(m.warp_cycles_hist.count(), 4);
+        // factor = 400 / 175 ≈ 2.286 → 2286 fixed-point.
+        assert_eq!(m.peak_imbalance_x1000, 2286);
+        assert!((m.peak_imbalance() - 2.286).abs() < 1e-9);
+        assert_eq!(m.imbalance_overhead_cycles, 400 - 700 / 4);
+        assert_eq!(m.imbalance_hist.count(), 1);
     }
 
     #[test]

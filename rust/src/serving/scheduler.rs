@@ -137,14 +137,11 @@ pub struct ScheduleReport {
     /// Batches launched across all shards.
     pub batches: u64,
     /// Σ wait (arrival → launch) over served queries, converted to
-    /// reference-device cycles (`devices[0]`).
-    ///
-    /// **Deprecated in favor of the `wait_ms_*` accessors**: a cycle count
-    /// on `devices[0]`'s clock is misleading for heterogeneous pools (a
-    /// k20c cycle is 1.42× a gtx680 cycle). Kept for JSON compatibility;
-    /// new consumers should read [`ScheduleReport::wait_ms_p95`] etc.,
-    /// which are clock-neutral ps/ms.
-    pub wait_cycles: u64,
+    /// reference-device cycles (`devices[0]`). Only the deprecated
+    /// [`ScheduleReport::wait_cycles`] accessor reads this; the JSON
+    /// report dropped the key in favor of the clock-neutral `wait_ms_*`
+    /// figures.
+    wait_cycles: u64,
     /// Virtual instant the stream drained (ps).
     pub wall_ps: u64,
     /// Queue-wait distribution (arrival → batch launch), ps samples.
@@ -218,8 +215,18 @@ impl ScheduleReport {
         self.latency_hist.max_ms()
     }
 
+    /// Σ wait over served queries in *reference-device cycles*
+    /// (`devices[0]`'s clock).
+    #[deprecated(
+        note = "cycle counts on devices[0]'s clock mislead heterogeneous \
+                pools; read the clock-neutral wait_ms_p50/p95/max instead"
+    )]
+    pub fn wait_cycles(&self) -> u64 {
+        self.wait_cycles
+    }
+
     /// Median queue wait (arrival → batch launch), ms. Clock-neutral —
-    /// measured in virtual ps, unlike the deprecated `wait_cycles`.
+    /// measured in virtual ps, unlike the deprecated `wait_cycles()`.
     pub fn wait_ms_p50(&self) -> f64 {
         self.wait_hist.percentile_ms(50)
     }
@@ -256,7 +263,6 @@ impl ScheduleReport {
             ("queue_peak", self.queue_peak.into()),
             ("blocked", self.blocked.into()),
             ("batches", self.batches.into()),
-            ("wait_cycles", self.wait_cycles.into()),
             ("wait_ms_p50", self.wait_ms_p50().into()),
             ("wait_ms_p95", self.wait_ms_p95().into()),
             ("wait_ms_max", self.wait_ms_max().into()),
@@ -332,6 +338,37 @@ impl ScheduleReport {
             "Queue wait, arrival to batch launch (ms)",
             &self.wait_hist,
             1e-9,
+        );
+        let totals = self.totals();
+        exp.counter(
+            "lonestar_profiled_kernels_total",
+            "Processing-kernel launches carrying a per-warp profile",
+            &[],
+            totals.profiled_kernels as f64,
+        );
+        exp.counter(
+            "lonestar_imbalance_overhead_cycles_total",
+            "Cycles spent waiting on straggler warps (per kernel: max-warp minus mean-warp)",
+            &[],
+            totals.imbalance_overhead_cycles as f64,
+        );
+        exp.gauge(
+            "lonestar_imbalance_peak",
+            "Worst single-kernel imbalance factor (max-warp / mean-warp cycles)",
+            &[],
+            totals.peak_imbalance(),
+        );
+        exp.histogram(
+            "lonestar_warp_cycles",
+            "Per-warp busy cycles across all profiled kernels",
+            &totals.warp_cycles_hist,
+            1.0,
+        );
+        exp.histogram(
+            "lonestar_kernel_imbalance",
+            "Per-kernel imbalance factor (recorded as factor x1000, exposed as the factor)",
+            &totals.imbalance_hist,
+            1e-3,
         );
         if let Some(t) = sink {
             for kind in TraceEventKind::ALL {
@@ -939,7 +976,7 @@ mod tests {
         assert_eq!(blocking.served() as u64, blocking.arrived);
         assert!(blocking.blocked > 0, "the stall counter must trip");
         assert!(
-            blocking.wait_cycles > dropping.wait_cycles,
+            blocking.wait_hist.sum() > dropping.wait_hist.sum(),
             "lossless admission pays with wait"
         );
     }

@@ -18,6 +18,7 @@ use crate::graph::Csr;
 use crate::metrics::RunMetrics;
 use crate::sim::DeviceSpec;
 use crate::strategies::{StrategyKind, StrategyParams};
+use crate::telemetry::LogHistogram;
 use crate::util::Json;
 use std::sync::Arc;
 
@@ -205,6 +206,16 @@ pub struct AggregateMetrics {
     /// batch launch, on the *reference* device clock (`devices[0]`) — the
     /// one cross-shard-comparable latency unit a heterogeneous pool has.
     pub wait_cycles: u64,
+    /// Σ processing-kernel launches that committed at least one warp.
+    pub profiled_kernels: u64,
+    /// Σ straggler cycles: per kernel, (max-warp − mean-warp) busy cycles.
+    pub imbalance_overhead_cycles: u64,
+    /// Max over shards of the worst single-kernel imbalance factor, ×1000.
+    pub peak_imbalance_x1000: u64,
+    /// Merged per-warp busy-cycle distribution across all shards.
+    pub warp_cycles_hist: LogHistogram,
+    /// Merged per-kernel imbalance-factor distribution (×1000 samples).
+    pub imbalance_hist: LogHistogram,
 }
 
 /// Fold per-shard (or per-run) metrics into an [`AggregateMetrics`]. Every
@@ -227,6 +238,11 @@ pub fn aggregate<'a>(metrics: impl IntoIterator<Item = &'a RunMetrics>) -> Aggre
         agg.scratch_created += m.scratch_created;
         agg.scratch_reused += m.scratch_reused;
         agg.scratch_peak_bytes = agg.scratch_peak_bytes.max(m.scratch_peak_bytes);
+        agg.profiled_kernels += m.profiled_kernels;
+        agg.imbalance_overhead_cycles += m.imbalance_overhead_cycles;
+        agg.peak_imbalance_x1000 = agg.peak_imbalance_x1000.max(m.peak_imbalance_x1000);
+        agg.warp_cycles_hist.merge(&m.warp_cycles_hist);
+        agg.imbalance_hist.merge(&m.imbalance_hist);
     }
     agg
 }
@@ -272,8 +288,31 @@ impl AggregateMetrics {
             ("admitted", self.admitted.into()),
             ("dropped", self.dropped.into()),
             ("queue_peak", self.queue_peak.into()),
-            ("wait_cycles", self.wait_cycles.into()),
+            ("profiled_kernels", self.profiled_kernels.into()),
+            ("imbalance_overhead_cycles", self.imbalance_overhead_cycles.into()),
+            ("mean_imbalance", self.mean_imbalance().into()),
+            ("peak_imbalance", self.peak_imbalance().into()),
         ])
+    }
+
+    /// Mean per-kernel imbalance factor across every profiled kernel
+    /// (1.0 when nothing was profiled).
+    pub fn mean_imbalance(&self) -> f64 {
+        if self.imbalance_hist.is_empty() {
+            1.0
+        } else {
+            self.imbalance_hist.mean() / 1000.0
+        }
+    }
+
+    /// Worst single-kernel imbalance factor (1.0 when nothing was
+    /// profiled).
+    pub fn peak_imbalance(&self) -> f64 {
+        if self.profiled_kernels == 0 {
+            1.0
+        } else {
+            self.peak_imbalance_x1000 as f64 / 1000.0
+        }
     }
 }
 

@@ -2,6 +2,7 @@
 //! round-robin over SMs, per-SM throughput limits.
 
 use super::DeviceSpec;
+use crate::telemetry::LogHistogram;
 
 /// Warp-level memory access pattern of a kernel's edge reads.
 ///
@@ -34,6 +35,81 @@ pub struct KernelTime {
     pub mem_transactions: u64,
 }
 
+/// Per-warp busy-cycle distribution of one launch — the *realized* load
+/// imbalance the paper's argument turns on, as opposed to the frontier-level
+/// estimate `FrontierInspector::imbalance` computes before the kernel runs.
+/// Everything here lives inline on the stack (the histogram is a fixed
+/// 65-bucket array), so collecting it costs no heap allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WarpStats {
+    /// Warps committed to the launch.
+    pub warps: u64,
+    /// Busiest single warp, cycles.
+    pub max_cycles: u64,
+    /// Σ warp cycles across the launch.
+    pub sum_cycles: u64,
+    /// Σ warp cycles², for the coefficient of variation.
+    pub sq_sum_cycles: u128,
+    /// Log₂ histogram of per-warp busy cycles.
+    pub hist: LogHistogram,
+}
+
+impl WarpStats {
+    /// Mean warp cycles, 0.0 for an empty launch.
+    pub fn mean_cycles(&self) -> f64 {
+        if self.warps == 0 {
+            0.0
+        } else {
+            self.sum_cycles as f64 / self.warps as f64
+        }
+    }
+
+    /// Imbalance factor: max-warp ÷ mean-warp cycles. 1.0 for an empty or
+    /// perfectly balanced launch — the paper's headline per-kernel metric.
+    pub fn imbalance_factor(&self) -> f64 {
+        let mean = self.mean_cycles();
+        if mean <= 0.0 {
+            1.0
+        } else {
+            self.max_cycles as f64 / mean
+        }
+    }
+
+    /// Coefficient of variation of warp cycles: σ ÷ mean, 0.0 when empty.
+    pub fn cv(&self) -> f64 {
+        if self.warps == 0 {
+            return 0.0;
+        }
+        let mean = self.mean_cycles();
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let ex2 = self.sq_sum_cycles as f64 / self.warps as f64;
+        let var = (ex2 - mean * mean).max(0.0);
+        var.sqrt() / mean
+    }
+
+    /// Tail-warp excess: max-warp − mean-warp cycles (integer floor) — the
+    /// cycles the whole launch waited on its single slowest warp.
+    pub fn tail_excess_cycles(&self) -> u64 {
+        if self.warps == 0 {
+            return 0;
+        }
+        self.max_cycles.saturating_sub(self.sum_cycles / self.warps)
+    }
+
+    /// Achieved occupancy on `dev`: resident threads ÷ device capacity,
+    /// clamped to 1.0.
+    pub fn occupancy(&self, dev: &DeviceSpec) -> f64 {
+        let cap = dev.max_resident_threads as u64;
+        if cap == 0 {
+            return 0.0;
+        }
+        let threads = (self.warps * dev.warp_size as u64).min(cap);
+        threads as f64 / cap as f64
+    }
+}
+
 /// Accounts one kernel launch. Create with [`KernelSim::new`], feed warps
 /// via [`KernelSim::warp`] / [`WarpSim::commit`], and finish with
 /// [`KernelSim::finish`].
@@ -51,6 +127,10 @@ pub struct KernelSim<'d> {
     sm_max: Vec<u64>,
     warp_count: u64,
     stats: KernelTime,
+    warp_max: u64,
+    warp_sum: u64,
+    warp_sq_sum: u128,
+    warp_hist: LogHistogram,
 }
 
 impl<'d> KernelSim<'d> {
@@ -75,6 +155,10 @@ impl<'d> KernelSim<'d> {
             sm_max,
             warp_count: 0,
             stats: KernelTime::default(),
+            warp_max: 0,
+            warp_sum: 0,
+            warp_sq_sum: 0,
+            warp_hist: LogHistogram::new(),
         }
     }
 
@@ -97,11 +181,28 @@ impl<'d> KernelSim<'d> {
         let sm = (block % self.dev.num_sm as u64) as usize;
         self.sm_total[sm] += w.cycles;
         self.sm_max[sm] = self.sm_max[sm].max(w.cycles);
+        self.warp_max = self.warp_max.max(w.cycles);
+        self.warp_sum += w.cycles;
+        self.warp_sq_sum += (w.cycles as u128) * (w.cycles as u128);
+        self.warp_hist.record(w.cycles);
         self.warp_count += 1;
         self.stats.edge_steps += w.edge_steps;
         self.stats.atomics += w.atomics;
         self.stats.atomic_conflicts += w.atomic_conflicts;
         self.stats.mem_transactions += w.mem_transactions;
+    }
+
+    /// Snapshot the per-warp distribution accumulated so far (call just
+    /// before [`KernelSim::finish_into`], which consumes the sim). Copies
+    /// only inline state — no heap.
+    pub fn warp_stats(&self) -> WarpStats {
+        WarpStats {
+            warps: self.warp_count,
+            max_cycles: self.warp_max,
+            sum_cycles: self.warp_sum,
+            sq_sum_cycles: self.warp_sq_sum,
+            hist: self.warp_hist.clone(),
+        }
     }
 
     /// Close the launch and return its cost.
@@ -323,6 +424,51 @@ mod tests {
         k.commit(w);
         let one = k.finish();
         assert_eq!(many.cycles, one.cycles, "78 equal warps fill the device exactly");
+    }
+
+    #[test]
+    fn warp_stats_measure_realized_imbalance() {
+        let d = dev();
+        let mut k = KernelSim::new(&d);
+        // Three light warps and one 4× straggler: max=40 steps, mean=17.5.
+        for steps in [10u64, 10, 10, 40] {
+            let mut w = k.warp();
+            for _ in 0..steps {
+                w.step(32, AccessPattern::Coalesced);
+            }
+            k.commit(w);
+        }
+        let ws = k.warp_stats();
+        assert_eq!(ws.warps, 4);
+        assert_eq!(ws.hist.count(), 4);
+        let per_step = ws.max_cycles / 40;
+        assert_eq!(ws.max_cycles, 40 * per_step);
+        assert_eq!(ws.sum_cycles, 70 * per_step);
+        let f = ws.imbalance_factor();
+        assert!((f - 40.0 / 17.5).abs() < 1e-9, "imbalance {f}");
+        assert!(ws.cv() > 0.0);
+        assert_eq!(ws.tail_excess_cycles(), 40 * per_step - 70 * per_step / 4);
+        assert!(ws.occupancy(&d) > 0.0 && ws.occupancy(&d) <= 1.0);
+
+        // A balanced launch reports factor 1.0 and CV 0.0 exactly.
+        let mut k2 = KernelSim::new(&d);
+        for _ in 0..4 {
+            let mut w = k2.warp();
+            for _ in 0..10 {
+                w.step(32, AccessPattern::Coalesced);
+            }
+            k2.commit(w);
+        }
+        let even = k2.warp_stats();
+        assert_eq!(even.imbalance_factor(), 1.0);
+        assert_eq!(even.cv(), 0.0);
+        assert_eq!(even.tail_excess_cycles(), 0);
+
+        // Empty launch: well-defined neutral values.
+        let none = KernelSim::new(&d).warp_stats();
+        assert_eq!(none.imbalance_factor(), 1.0);
+        assert_eq!(none.cv(), 0.0);
+        assert_eq!(none.tail_excess_cycles(), 0);
     }
 
     #[test]

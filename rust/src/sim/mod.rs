@@ -29,5 +29,5 @@ pub mod kernel;
 pub mod memory;
 
 pub use device::DeviceSpec;
-pub use kernel::{AccessPattern, KernelSim, KernelTime, WarpSim};
+pub use kernel::{AccessPattern, KernelSim, KernelTime, WarpSim, WarpStats};
 pub use memory::MemoryTracker;

@@ -19,6 +19,12 @@ use std::fmt::Write as _;
 /// depth and per-shard frontier size are counter tracks (`ph:"C"`), and
 /// the admission/decision events are thread-scoped instants (`ph:"i"`).
 /// Timestamps convert ps → µs (the trace-event unit) as `ts = at_ps/1e6`.
+///
+/// A `Kernel` event immediately followed by its `KernelProfile` companion
+/// (same shard and timestamp) is rendered as **one** slice whose args carry
+/// the full imbalance profile (`warps`, `imbalance`, `cv`, `occupancy`, …)
+/// so Perfetto shows the straggler cost on hover. A profile whose kernel
+/// was lost to ring wrap-around renders nothing.
 pub fn chrome_trace(sink: &TraceSink, shard_devices: &[&str]) -> String {
     let mut events: Vec<Json> = Vec::with_capacity(sink.len() + shard_devices.len() + 2);
     events.push(meta_event(0, "process_name", "lonestar-lb (virtual ps clock)"));
@@ -30,8 +36,30 @@ pub fn chrome_trace(sink: &TraceSink, shard_devices: &[&str]) -> String {
             &format!("shard {i} [{name}]"),
         ));
     }
-    for ev in sink.events() {
-        events.push(trace_event_json(ev));
+    let evs: Vec<&TraceEvent> = sink.events().collect();
+    let mut i = 0;
+    while i < evs.len() {
+        let ev = evs[i];
+        if ev.kind == TraceEventKind::KernelProfile {
+            // Orphaned profile (its kernel slice fell off the ring):
+            // nothing to attach it to.
+            i += 1;
+            continue;
+        }
+        let profile = if ev.kind == TraceEventKind::Kernel {
+            evs.get(i + 1).copied().filter(|p| {
+                p.kind == TraceEventKind::KernelProfile
+                    && p.shard == ev.shard
+                    && p.at_ps == ev.at_ps
+            })
+        } else {
+            None
+        };
+        if profile.is_some() {
+            i += 1;
+        }
+        events.push(trace_event_json(ev, profile));
+        i += 1;
     }
     Json::obj(vec![
         ("displayTimeUnit", "ms".into()),
@@ -50,7 +78,7 @@ fn meta_event(tid: u64, name: &str, value: &str) -> Json {
     ])
 }
 
-fn trace_event_json(ev: &TraceEvent) -> Json {
+fn trace_event_json(ev: &TraceEvent, profile: Option<&TraceEvent>) -> Json {
     let tid: u64 = if ev.shard == NO_ID { 0 } else { ev.shard as u64 + 1 };
     let mut fields: Vec<(&str, Json)> = vec![
         ("pid", 1u64.into()),
@@ -75,6 +103,30 @@ fn trace_event_json(ev: &TraceEvent) -> Json {
             fields.push(("name", name.into()));
             fields.push(("dur", (ev.a as f64 / 1e6).into()));
             args.push(("items", ev.b.into()));
+            if let Some(p) = profile {
+                let warps = p.a;
+                let mean = if warps > 0 { ev.d as f64 / warps as f64 } else { 0.0 };
+                let imbalance = if mean > 0.0 { ev.c as f64 / mean } else { 1.0 };
+                let tx_per_item = if ev.b > 0 { p.b as f64 / ev.b as f64 } else { 0.0 };
+                args.push(("warps", warps.into()));
+                args.push(("mem_transactions", p.b.into()));
+                args.push(("max_warp_cycles", ev.c.into()));
+                args.push(("mean_warp_cycles", mean.into()));
+                args.push(("imbalance", imbalance.into()));
+                args.push(("cv", (p.c as f64 / 1e6).into()));
+                args.push(("occupancy", (p.d as f64 / 1e6).into()));
+                args.push(("mem_tx_per_item", tx_per_item.into()));
+            }
+        }
+        TraceEventKind::KernelProfile => {
+            // Paired profiles are folded into their kernel slice by
+            // `chrome_trace`; a stray one renders as an instant so the
+            // function stays total over every kind.
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("warps", ev.a.into()));
+            args.push(("mem_transactions", ev.b.into()));
         }
         TraceEventKind::QueueDepth => {
             fields.push(("ph", "C".into()));
@@ -281,6 +333,57 @@ mod tests {
             .find(|e| e.get("name").map(|n| n.as_str()) == Some(Some("relax_bs")))
             .expect("kernel slice");
         assert_eq!(kernel.get("tid").unwrap().as_usize(), Some(2), "shard 1 = tid 2");
+    }
+
+    #[test]
+    fn kernel_profile_pairs_into_one_slice_with_imbalance_args() {
+        let mut sink = TraceSink::with_capacity(16);
+        sink.record(TraceEvent {
+            shard: 0,
+            a: 2_000_000,
+            b: 100,
+            c: 400, // max warp cycles
+            d: 700, // Σ warp cycles
+            label: "relax_bs",
+            ..TraceEvent::new(TraceEventKind::Kernel, 5_000_000)
+        });
+        sink.record(TraceEvent {
+            shard: 0,
+            a: 4,       // warps
+            b: 250,     // mem transactions
+            c: 740_000, // CV ×1e6
+            d: 62_500,  // occupancy ×1e6
+            label: "relax_bs",
+            ..TraceEvent::new(TraceEventKind::KernelProfile, 5_000_000)
+        });
+        // An orphaned profile (kernel lost to wrap-around) renders nothing.
+        sink.record(TraceEvent {
+            shard: 1,
+            a: 8,
+            ..TraceEvent::new(TraceEventKind::KernelProfile, 9_000_000)
+        });
+
+        let text = chrome_trace(&sink, &["k20c", "k20c"]);
+        let v = Json::parse(&text).expect("valid json");
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata + exactly one rendered event: the merged kernel slice.
+        assert_eq!(evs.len(), 4);
+        let kernel = evs
+            .iter()
+            .find(|e| e.get("name").map(|n| n.as_str()) == Some(Some("relax_bs")))
+            .expect("kernel slice");
+        assert_eq!(kernel.get("ph").unwrap().as_str(), Some("X"));
+        let args = kernel.get("args").unwrap();
+        assert_eq!(args.get("items").unwrap().as_usize(), Some(100));
+        assert_eq!(args.get("warps").unwrap().as_usize(), Some(4));
+        assert_eq!(args.get("mem_transactions").unwrap().as_usize(), Some(250));
+        assert_eq!(args.get("max_warp_cycles").unwrap().as_usize(), Some(400));
+        assert_eq!(args.get("mean_warp_cycles").unwrap().as_f64(), Some(175.0));
+        let imb = args.get("imbalance").unwrap().as_f64().unwrap();
+        assert!((imb - 400.0 / 175.0).abs() < 1e-9);
+        assert_eq!(args.get("cv").unwrap().as_f64(), Some(0.74));
+        assert_eq!(args.get("occupancy").unwrap().as_f64(), Some(0.0625));
+        assert_eq!(args.get("mem_tx_per_item").unwrap().as_f64(), Some(2.5));
     }
 
     #[test]

@@ -54,6 +54,20 @@ impl LogHistogram {
         }
     }
 
+    /// Fold `other` into `self`: bucket-wise sums, max of maxes. O(65),
+    /// allocation-free — how per-kernel warp histograms aggregate into
+    /// per-run and per-pool distributions.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
     /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
@@ -201,6 +215,85 @@ mod tests {
                 "p{p}: bucket upper {got} must bound exact {exact}"
             );
         }
+    }
+
+    #[test]
+    fn empty_percentiles_are_zero_at_every_rank() {
+        let h = LogHistogram::new();
+        for p in [0u8, 1, 50, 95, 99, 100] {
+            assert_eq!(h.percentile(p), 0, "empty histogram must report 0 at p{p}");
+        }
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_percentile() {
+        let mut h = LogHistogram::new();
+        h.record(12_345);
+        for p in [1u8, 50, 95, 99, 100] {
+            assert_eq!(h.percentile(p), 12_345, "one sample is every percentile");
+        }
+        assert_eq!(h.max(), 12_345);
+        assert_eq!(h.mean(), 12_345.0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn top_bucket_holds_values_at_and_above_its_bound() {
+        // Bucket 64 holds [2^63, u64::MAX]: the bound itself, one past it,
+        // and the largest representable value all land there, and the
+        // percentile reports the exact tracked max (not the 2^64-1 upper).
+        let mut h = LogHistogram::new();
+        for v in [1u64 << 63, (1u64 << 63) + 1, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.buckets()[64], 3);
+        assert_eq!(h.percentile(100), u64::MAX);
+        assert_eq!(h.percentile(1), u64::MAX, "all mass in one bucket → max clamp");
+        // Just below the bound lands in bucket 63.
+        h.record((1u64 << 63) - 1);
+        assert_eq!(h.buckets()[63], 1);
+    }
+
+    #[test]
+    fn percentiles_stay_ordered_under_random_fills() {
+        // Deterministic xorshift fill; p50 ≤ p95 ≤ p99 ≤ max must hold for
+        // any sample population.
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut h = LogHistogram::new();
+        for _ in 0..10_000 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            h.record(state >> (state % 50));
+        }
+        let (p50, p95, p99) = (h.percentile(50), h.percentile(95), h.percentile(99));
+        assert!(p50 <= p95, "p50 {p50} > p95 {p95}");
+        assert!(p95 <= p99, "p95 {p95} > p99 {p99}");
+        assert!(p99 <= h.max(), "p99 {p99} > max {}", h.max());
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn merge_matches_recording_everything_into_one() {
+        let samples_a = [0u64, 3, 17, 40_000, 1 << 40];
+        let samples_b = [1u64, 17, 90, u64::MAX];
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for &v in &samples_a {
+            a.record(v);
+            whole.record(v);
+        }
+        for &v in &samples_b {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge must equal recording the union");
+        a.merge(&LogHistogram::new());
+        assert_eq!(a, whole, "merging an empty histogram is a no-op");
     }
 
     #[test]

@@ -27,9 +27,11 @@
 
 pub mod export;
 pub mod hist;
+pub mod spans;
 
 pub use export::{chrome_trace, Exposition};
 pub use hist::LogHistogram;
+pub use spans::{kernel_records, profile_report, query_spans, KernelRecord, QuerySpan};
 
 /// Shard/query id meaning "not applicable" (e.g. a queue-depth counter has
 /// no shard; an arrival has no shard yet).
@@ -39,21 +41,29 @@ pub const NO_ID: u32 = u32::MAX;
 /// for the figure-scale streams without ever wrapping.
 pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
 
-/// What happened. The payload words `a`/`b` of [`TraceEvent`] are
-/// kind-specific:
+/// What happened. The payload words `a`/`b`/`c`/`d` of [`TraceEvent`] are
+/// kind-specific (`c`/`d` are zero for every kind that does not list them):
 ///
-/// | kind               | `a`                    | `b`              |
-/// |--------------------|------------------------|------------------|
-/// | `Admit`            | queue depth after      | —                |
-/// | `Place`            | shard load (edges)     | —                |
-/// | `BatchLaunch`      | batch width (queries)  | batch index      |
-/// | `BatchComplete`    | batch width (queries)  | —                |
-/// | `ShardBusy`        | busy duration (ps)     | batch width      |
-/// | `StrategyDecision` | frontier nodes         | frontier edges   |
-/// | `Migration`        | frontier nodes         | frontier edges   |
-/// | `Kernel`           | kernel duration (ps)   | work items       |
-/// | `QueueDepth`       | queue depth            | —                |
-/// | `FrontierSize`     | frontier nodes         | frontier edges   |
+/// | kind               | `a`                    | `b`              | `c`               | `d`               |
+/// |--------------------|------------------------|------------------|-------------------|-------------------|
+/// | `Admit`            | queue depth after      | —                | —                 | —                 |
+/// | `Place`            | shard load (edges)     | —                | —                 | —                 |
+/// | `BatchLaunch`      | batch width (queries)  | batch index      | —                 | —                 |
+/// | `BatchComplete`    | batch width (queries)  | —                | —                 | —                 |
+/// | `ShardBusy`        | busy duration (ps)     | batch width      | —                 | —                 |
+/// | `StrategyDecision` | frontier nodes         | frontier edges   | —                 | —                 |
+/// | `Migration`        | frontier nodes         | frontier edges   | —                 | —                 |
+/// | `Kernel`           | kernel duration (ps)   | work items       | max warp cycles   | Σ warp cycles     |
+/// | `QueueDepth`       | queue depth            | —                | —                 | —                 |
+/// | `FrontierSize`     | frontier nodes         | frontier edges   | —                 | —                 |
+/// | `KernelProfile`    | warps launched         | mem transactions | CV ×1e6           | occupancy ×1e6    |
+///
+/// `KernelProfile` is the load-imbalance companion of a `Kernel` event: it
+/// is recorded immediately after its kernel with the same timestamp, shard
+/// and label, and carries the distribution facts that do not fit in the
+/// kernel slice itself. Exporters pair the two records back up (see
+/// [`spans::kernel_records`]); a profile whose kernel was lost to ring
+/// wrap-around is skipped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum TraceEventKind {
@@ -83,11 +93,13 @@ pub enum TraceEventKind {
     QueueDepth,
     /// Frontier size sample (counter track, per shard).
     FrontierSize,
+    /// Per-warp load-imbalance profile of the preceding `Kernel` event.
+    KernelProfile,
 }
 
 impl TraceEventKind {
     /// Number of kinds (size of per-kind counter arrays).
-    pub const COUNT: usize = 13;
+    pub const COUNT: usize = 14;
 
     /// Every kind, in `repr` order.
     pub const ALL: [TraceEventKind; Self::COUNT] = [
@@ -104,6 +116,7 @@ impl TraceEventKind {
         TraceEventKind::Kernel,
         TraceEventKind::QueueDepth,
         TraceEventKind::FrontierSize,
+        TraceEventKind::KernelProfile,
     ];
 
     /// Stable lowercase label (metric label values, trace categories).
@@ -122,6 +135,7 @@ impl TraceEventKind {
             TraceEventKind::Kernel => "kernel",
             TraceEventKind::QueueDepth => "queue-depth",
             TraceEventKind::FrontierSize => "frontier-size",
+            TraceEventKind::KernelProfile => "kernel-profile",
         }
     }
 }
@@ -148,6 +162,10 @@ pub struct TraceEvent {
     pub a: u64,
     /// Kind-specific payload (see [`TraceEventKind`]).
     pub b: u64,
+    /// Kind-specific payload (see [`TraceEventKind`]); zero for most kinds.
+    pub c: u64,
+    /// Kind-specific payload (see [`TraceEventKind`]); zero for most kinds.
+    pub d: u64,
     /// Optional static label (kernel name, strategy label). Empty when the
     /// kind's label suffices.
     pub label: &'static str,
@@ -163,6 +181,8 @@ impl TraceEvent {
             query: NO_ID,
             a: 0,
             b: 0,
+            c: 0,
+            d: 0,
             label: "",
         }
     }

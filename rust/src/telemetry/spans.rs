@@ -1,0 +1,626 @@
+//! Span reconstruction: turn the flat [`TraceEvent`] ring back into
+//! per-kernel load-imbalance records, per-query lifecycle spans
+//! (arrival → admit → place → launch → complete) and per-batch
+//! critical-path summaries.
+//!
+//! The ring records *facts*; this module recovers *attribution*: how much
+//! of a query's latency was queue wait, how much was placement stall, how
+//! much was compute — and, within compute, how many cycles the device
+//! spent waiting on straggler warps (the paper's imbalance overhead).
+//! Everything here runs at export time on an immutable sink, so ordinary
+//! allocation is fine; the zero-alloc constraint applies only to
+//! recording.
+//!
+//! The latency decomposition is conservative **by construction**:
+//! `queue_wait + placement_stall + compute` is a telescoping sum of
+//! `(place − arrival) + (launch − place) + (done − launch)`, which equals
+//! `done − arrival` — the reported latency — exactly, in integer
+//! picoseconds. A telemetry test pins this.
+
+use super::{TraceEventKind, TraceSink};
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// One profiled kernel launch, reconstructed from a `Kernel` event and its
+/// immediately-following `KernelProfile` companion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelRecord {
+    /// Shard the kernel ran on (0 on the single-device `run` path).
+    pub shard: u32,
+    /// Slice start on the shared virtual timeline, ps.
+    pub start_ps: u64,
+    /// Slice duration, ps.
+    pub dur_ps: u64,
+    /// Work items (batch positions) the kernel processed.
+    pub items: u64,
+    /// Warps committed.
+    pub warps: u64,
+    /// Busiest warp, cycles.
+    pub max_warp_cycles: u64,
+    /// Σ warp cycles.
+    pub warp_cycles_sum: u64,
+    /// Memory transactions issued.
+    pub mem_transactions: u64,
+    /// Coefficient of variation of warp cycles (σ / mean).
+    pub cv: f64,
+    /// Achieved occupancy (resident threads / device capacity).
+    pub occupancy: f64,
+    /// Kernel name.
+    pub label: &'static str,
+}
+
+impl KernelRecord {
+    /// Mean warp cycles, 0.0 for an empty launch.
+    pub fn mean_warp_cycles(&self) -> f64 {
+        if self.warps == 0 {
+            0.0
+        } else {
+            self.warp_cycles_sum as f64 / self.warps as f64
+        }
+    }
+
+    /// Imbalance factor: max-warp ÷ mean-warp cycles (1.0 when empty or
+    /// perfectly balanced).
+    pub fn imbalance_factor(&self) -> f64 {
+        let mean = self.mean_warp_cycles();
+        if mean <= 0.0 {
+            1.0
+        } else {
+            self.max_warp_cycles as f64 / mean
+        }
+    }
+
+    /// Max-warp − mean-warp cycles (integer floor): what the launch paid
+    /// for its slowest warp.
+    pub fn tail_excess_cycles(&self) -> u64 {
+        if self.warps == 0 {
+            return 0;
+        }
+        self.max_warp_cycles
+            .saturating_sub(self.warp_cycles_sum / self.warps)
+    }
+
+    /// Memory transactions per work item (per edge for edge kernels).
+    pub fn mem_tx_per_item(&self) -> f64 {
+        if self.items == 0 {
+            0.0
+        } else {
+            self.mem_transactions as f64 / self.items as f64
+        }
+    }
+}
+
+/// Pair every `Kernel` event with its `KernelProfile` companion (recorded
+/// adjacently, same timestamp/shard/label) into [`KernelRecord`]s, in ring
+/// order. A kernel whose profile was lost to wrap-around yields a record
+/// with zeroed distribution fields; an orphaned profile (its kernel was
+/// overwritten) is skipped.
+pub fn kernel_records(sink: &TraceSink) -> Vec<KernelRecord> {
+    let events: Vec<_> = sink.events().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < events.len() {
+        let ev = events[i];
+        if ev.kind != TraceEventKind::Kernel {
+            i += 1;
+            continue;
+        }
+        let mut rec = KernelRecord {
+            shard: ev.shard,
+            start_ps: ev.at_ps,
+            dur_ps: ev.a,
+            items: ev.b,
+            warps: 0,
+            max_warp_cycles: ev.c,
+            warp_cycles_sum: ev.d,
+            mem_transactions: 0,
+            cv: 0.0,
+            occupancy: 0.0,
+            label: ev.label,
+        };
+        if let Some(p) = events.get(i + 1) {
+            if p.kind == TraceEventKind::KernelProfile
+                && p.shard == ev.shard
+                && p.at_ps == ev.at_ps
+            {
+                rec.warps = p.a;
+                rec.mem_transactions = p.b;
+                rec.cv = p.c as f64 / 1e6;
+                rec.occupancy = p.d as f64 / 1e6;
+                i += 1;
+            }
+        }
+        out.push(rec);
+        i += 1;
+    }
+    out
+}
+
+/// One served query's reconstructed lifecycle on the virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuerySpan {
+    /// Query id.
+    pub query: u32,
+    /// Shard that served it.
+    pub shard: u32,
+    /// Arrival at the admission queue, ps.
+    pub arrival_ps: u64,
+    /// Admission into the bounded queue (later than arrival only under the
+    /// block overflow policy), ps.
+    pub admit_ps: u64,
+    /// Placement onto the shard, ps.
+    pub place_ps: u64,
+    /// Batch launch, ps.
+    pub launch_ps: u64,
+    /// Batch completion, ps.
+    pub done_ps: u64,
+}
+
+impl QuerySpan {
+    /// Arrival → completion, ps.
+    pub fn latency_ps(&self) -> u64 {
+        self.done_ps - self.arrival_ps
+    }
+
+    /// Arrival → placement: time spent blocked and in the admission
+    /// queue, ps.
+    pub fn queue_wait_ps(&self) -> u64 {
+        self.place_ps - self.arrival_ps
+    }
+
+    /// Placement → batch launch: placed on a shard, waiting for the batch
+    /// to form/dispatch, ps.
+    pub fn placement_stall_ps(&self) -> u64 {
+        self.launch_ps - self.place_ps
+    }
+
+    /// Batch launch → completion, ps.
+    pub fn compute_ps(&self) -> u64 {
+        self.done_ps - self.launch_ps
+    }
+
+    /// Σ tail-excess cycles of `records` kernels inside this span's compute
+    /// window on its shard, converted to ps at `ps_per_cycle` — the slice
+    /// of this query's latency attributable to warp-level load imbalance.
+    pub fn imbalance_overhead_ps(&self, records: &[KernelRecord], ps_per_cycle: u64) -> u64 {
+        records
+            .iter()
+            .filter(|r| {
+                r.shard == self.shard
+                    && r.start_ps >= self.launch_ps
+                    && r.start_ps < self.done_ps
+            })
+            .map(|r| r.tail_excess_cycles() * ps_per_cycle)
+            .sum()
+    }
+}
+
+/// Reconstruct per-query spans from a scheduler-path sink, in completion
+/// order (ties broken by query id). Dropped queries never complete and are
+/// excluded; a run-path sink (no admission events) yields an empty vec.
+pub fn query_spans(sink: &TraceSink) -> Vec<QuerySpan> {
+    #[derive(Clone, Copy)]
+    struct Partial {
+        arrival_ps: u64,
+        admit_ps: u64,
+        place_ps: u64,
+    }
+    let mut building: BTreeMap<u32, Partial> = BTreeMap::new();
+    // Per shard: (query, launch_ps) placed-not-launched, then running.
+    let mut pending: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    let mut running: BTreeMap<u32, (u64, Vec<u32>)> = BTreeMap::new();
+    let mut done: Vec<QuerySpan> = Vec::new();
+
+    for ev in sink.events() {
+        match ev.kind {
+            TraceEventKind::Arrival => {
+                building.insert(
+                    ev.query,
+                    Partial {
+                        arrival_ps: ev.at_ps,
+                        admit_ps: ev.at_ps,
+                        place_ps: ev.at_ps,
+                    },
+                );
+            }
+            TraceEventKind::Admit => {
+                if let Some(p) = building.get_mut(&ev.query) {
+                    p.admit_ps = ev.at_ps;
+                }
+            }
+            TraceEventKind::Drop => {
+                building.remove(&ev.query);
+            }
+            TraceEventKind::Place => {
+                if let Some(p) = building.get_mut(&ev.query) {
+                    p.place_ps = ev.at_ps;
+                }
+                pending.entry(ev.shard).or_default().push(ev.query);
+            }
+            TraceEventKind::BatchLaunch => {
+                let queries = pending.entry(ev.shard).or_default();
+                let (launch_ps, run) =
+                    running.entry(ev.shard).or_insert_with(|| (0, Vec::new()));
+                *launch_ps = ev.at_ps;
+                run.append(queries);
+            }
+            TraceEventKind::BatchComplete => {
+                if let Some((launch_ps, run)) = running.get_mut(&ev.shard) {
+                    for q in run.drain(..) {
+                        let Some(p) = building.remove(&q) else { continue };
+                        done.push(QuerySpan {
+                            query: q,
+                            shard: ev.shard,
+                            arrival_ps: p.arrival_ps,
+                            admit_ps: p.admit_ps,
+                            place_ps: p.place_ps,
+                            launch_ps: *launch_ps,
+                            done_ps: ev.at_ps,
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    done.sort_by_key(|s| (s.done_ps, s.query));
+    done
+}
+
+/// One batch's critical-path summary: its compute window plus the kernels
+/// that filled it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSpan {
+    /// Shard the batch ran on.
+    pub shard: u32,
+    /// Launch instant, ps.
+    pub launch_ps: u64,
+    /// Completion instant, ps.
+    pub done_ps: u64,
+    /// Queries in the batch.
+    pub width: u64,
+    /// Kernels launched inside the window.
+    pub kernels: u64,
+    /// Σ kernel slice durations, ps.
+    pub kernel_ps: u64,
+    /// Σ tail-excess over the window's kernels, ps.
+    pub imbalance_overhead_ps: u64,
+    /// Worst single-kernel imbalance factor in the window.
+    pub peak_imbalance: f64,
+    /// Label of the longest kernel — the critical launch.
+    pub critical_kernel: &'static str,
+    /// Duration of that longest kernel, ps.
+    pub critical_kernel_ps: u64,
+}
+
+/// Summarize each batch's compute window from the spans and kernel
+/// records, in (launch, shard) order. `ps_per_cycle` maps a shard id to
+/// its device clock (see [`profile_report`]).
+pub fn batch_spans(
+    spans: &[QuerySpan],
+    records: &[KernelRecord],
+    ps_per_cycle: &dyn Fn(u32) -> u64,
+) -> Vec<BatchSpan> {
+    let mut widths: BTreeMap<(u64, u32, u64), u64> = BTreeMap::new();
+    for s in spans {
+        *widths.entry((s.launch_ps, s.shard, s.done_ps)).or_default() += 1;
+    }
+    let mut out = Vec::with_capacity(widths.len());
+    for (&(launch_ps, shard, done_ps), &width) in &widths {
+        let mut b = BatchSpan {
+            shard,
+            launch_ps,
+            done_ps,
+            width,
+            kernels: 0,
+            kernel_ps: 0,
+            imbalance_overhead_ps: 0,
+            peak_imbalance: 1.0,
+            critical_kernel: "",
+            critical_kernel_ps: 0,
+        };
+        let ppc = ps_per_cycle(shard);
+        for r in records {
+            if r.shard != shard || r.start_ps < launch_ps || r.start_ps >= done_ps {
+                continue;
+            }
+            b.kernels += 1;
+            b.kernel_ps += r.dur_ps;
+            b.imbalance_overhead_ps += r.tail_excess_cycles() * ppc;
+            let f = r.imbalance_factor();
+            if f > b.peak_imbalance {
+                b.peak_imbalance = f;
+            }
+            if r.dur_ps > b.critical_kernel_ps {
+                b.critical_kernel_ps = r.dur_ps;
+                b.critical_kernel = r.label;
+            }
+        }
+        out.push(b);
+    }
+    out
+}
+
+/// Assemble the full `--profile-out` JSON report from a sink:
+/// per-(shard, kernel) aggregates, per-query latency decompositions and
+/// per-batch critical paths. `shard_ppc[i]` is shard `i`'s
+/// `ps_per_cycle`; out-of-range shards fall back to the first entry (the
+/// single-device `run` path passes one element). Deterministic: BTreeMap
+/// key order everywhere, integer fields wherever the source is integral.
+pub fn profile_report(sink: &TraceSink, shard_ppc: &[u64]) -> Json {
+    let ppc = |shard: u32| -> u64 {
+        shard_ppc
+            .get(shard as usize)
+            .or_else(|| shard_ppc.first())
+            .copied()
+            .unwrap_or(1)
+            .max(1)
+    };
+    let records = kernel_records(sink);
+    let spans = query_spans(sink);
+    let batches = batch_spans(&spans, &records, &ppc);
+
+    // Per-(shard, kernel-label) aggregate over every profiled launch.
+    #[derive(Default)]
+    struct Agg {
+        launches: u64,
+        total_ps: u64,
+        items: u64,
+        warps: u64,
+        mem_transactions: u64,
+        tail_excess_cycles: u64,
+        imbalance_sum: f64,
+        peak_imbalance: f64,
+        cv_sum: f64,
+        occupancy_sum: f64,
+    }
+    let mut aggs: BTreeMap<(u32, &'static str), Agg> = BTreeMap::new();
+    for r in &records {
+        let a = aggs.entry((r.shard, r.label)).or_default();
+        a.launches += 1;
+        a.total_ps += r.dur_ps;
+        a.items += r.items;
+        a.warps += r.warps;
+        a.mem_transactions += r.mem_transactions;
+        a.tail_excess_cycles += r.tail_excess_cycles();
+        let f = r.imbalance_factor();
+        a.imbalance_sum += f;
+        if f > a.peak_imbalance {
+            a.peak_imbalance = f;
+        }
+        a.cv_sum += r.cv;
+        a.occupancy_sum += r.occupancy;
+    }
+
+    let kernels: Vec<Json> = aggs
+        .iter()
+        .map(|(&(shard, label), a)| {
+            let n = a.launches as f64;
+            Json::obj(vec![
+                ("shard", shard.into()),
+                ("kernel", label.into()),
+                ("launches", a.launches.into()),
+                ("total_ps", a.total_ps.into()),
+                ("items", a.items.into()),
+                ("warps", a.warps.into()),
+                ("mem_transactions", a.mem_transactions.into()),
+                (
+                    "mem_tx_per_item",
+                    if a.items == 0 {
+                        0.0.into()
+                    } else {
+                        (a.mem_transactions as f64 / a.items as f64).into()
+                    },
+                ),
+                ("tail_excess_cycles", a.tail_excess_cycles.into()),
+                (
+                    "imbalance_overhead_ps",
+                    (a.tail_excess_cycles * ppc(shard)).into(),
+                ),
+                ("mean_imbalance", (a.imbalance_sum / n).into()),
+                ("peak_imbalance", a.peak_imbalance.into()),
+                ("mean_cv", (a.cv_sum / n).into()),
+                ("mean_occupancy", (a.occupancy_sum / n).into()),
+            ])
+        })
+        .collect();
+
+    let span_rows: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("query", s.query.into()),
+                ("shard", s.shard.into()),
+                ("arrival_ps", s.arrival_ps.into()),
+                ("admit_ps", s.admit_ps.into()),
+                ("place_ps", s.place_ps.into()),
+                ("launch_ps", s.launch_ps.into()),
+                ("done_ps", s.done_ps.into()),
+                ("latency_ps", s.latency_ps().into()),
+                ("queue_wait_ps", s.queue_wait_ps().into()),
+                ("placement_stall_ps", s.placement_stall_ps().into()),
+                ("compute_ps", s.compute_ps().into()),
+                (
+                    "imbalance_overhead_ps",
+                    s.imbalance_overhead_ps(&records, ppc(s.shard)).into(),
+                ),
+            ])
+        })
+        .collect();
+
+    let batch_rows: Vec<Json> = batches
+        .iter()
+        .map(|b| {
+            Json::obj(vec![
+                ("shard", b.shard.into()),
+                ("launch_ps", b.launch_ps.into()),
+                ("done_ps", b.done_ps.into()),
+                ("width", b.width.into()),
+                ("kernels", b.kernels.into()),
+                ("kernel_ps", b.kernel_ps.into()),
+                ("imbalance_overhead_ps", b.imbalance_overhead_ps.into()),
+                ("peak_imbalance", b.peak_imbalance.into()),
+                ("critical_kernel", b.critical_kernel.into()),
+                ("critical_kernel_ps", b.critical_kernel_ps.into()),
+            ])
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("schema", "lonestar-profile-v1".into()),
+        ("kernel_count", records.len().into()),
+        ("span_count", spans.len().into()),
+        ("batch_count", batches.len().into()),
+        ("kernels", Json::Arr(kernels)),
+        ("spans", Json::Arr(span_rows)),
+        ("batches", Json::Arr(batch_rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TraceEvent, NO_ID};
+    use super::*;
+
+    fn kernel_pair(
+        sink: &mut TraceSink,
+        shard: u32,
+        at_ps: u64,
+        dur_ps: u64,
+        (max_c, sum_c, warps): (u64, u64, u64),
+        label: &'static str,
+    ) {
+        sink.record(TraceEvent {
+            shard,
+            a: dur_ps,
+            b: 100,
+            c: max_c,
+            d: sum_c,
+            label,
+            ..TraceEvent::new(TraceEventKind::Kernel, at_ps)
+        });
+        sink.record(TraceEvent {
+            shard,
+            a: warps,
+            b: 50,
+            c: 250_000,  // cv 0.25
+            d: 500_000,  // occupancy 0.5
+            label,
+            ..TraceEvent::new(TraceEventKind::KernelProfile, at_ps)
+        });
+    }
+
+    #[test]
+    fn records_pair_kernel_with_profile() {
+        let mut sink = TraceSink::with_capacity(16);
+        kernel_pair(&mut sink, 0, 1000, 500, (400, 700, 4), "relax");
+        // Unpaired kernel (e.g. profile lost): zeroed distribution.
+        sink.record(TraceEvent {
+            shard: 0,
+            a: 10,
+            b: 1,
+            ..TraceEvent::new(TraceEventKind::Kernel, 2000)
+        });
+        // Orphaned profile (its kernel overwritten): skipped.
+        sink.record(TraceEvent {
+            shard: 1,
+            a: 8,
+            ..TraceEvent::new(TraceEventKind::KernelProfile, 3000)
+        });
+        let recs = kernel_records(&sink);
+        assert_eq!(recs.len(), 2);
+        let r = &recs[0];
+        assert_eq!((r.warps, r.mem_transactions), (4, 50));
+        assert_eq!(r.max_warp_cycles, 400);
+        assert!((r.imbalance_factor() - 400.0 / 175.0).abs() < 1e-9);
+        assert_eq!(r.tail_excess_cycles(), 400 - 175);
+        assert!((r.cv - 0.25).abs() < 1e-9);
+        assert!((r.occupancy - 0.5).abs() < 1e-9);
+        assert!((r.mem_tx_per_item() - 0.5).abs() < 1e-9);
+        assert_eq!(recs[1].warps, 0, "unpaired kernel keeps zeroed profile");
+        assert_eq!(recs[1].imbalance_factor(), 1.0);
+    }
+
+    #[test]
+    fn spans_rebuild_the_query_lifecycle_and_conserve_latency() {
+        let mut sink = TraceSink::with_capacity(64);
+        let ev = |kind, at_ps, query, shard| TraceEvent {
+            query,
+            shard,
+            ..TraceEvent::new(kind, at_ps)
+        };
+        // Query 0: arrives 100, admitted 100, placed 150 on shard 0,
+        // launched 200, done 900. Query 1 shares the batch, arriving 120.
+        // Query 2 is dropped. Query 3 runs alone on shard 1.
+        sink.record(ev(TraceEventKind::Arrival, 100, 0, NO_ID));
+        sink.record(ev(TraceEventKind::Admit, 100, 0, NO_ID));
+        sink.record(ev(TraceEventKind::Arrival, 120, 1, NO_ID));
+        sink.record(ev(TraceEventKind::Admit, 120, 1, NO_ID));
+        sink.record(ev(TraceEventKind::Arrival, 130, 2, NO_ID));
+        sink.record(ev(TraceEventKind::Drop, 130, 2, NO_ID));
+        sink.record(ev(TraceEventKind::Place, 150, 0, 0));
+        sink.record(ev(TraceEventKind::Place, 150, 1, 0));
+        sink.record(ev(TraceEventKind::BatchLaunch, 200, NO_ID, 0));
+        kernel_pair(&mut sink, 0, 300, 400, (400, 700, 4), "relax");
+        sink.record(ev(TraceEventKind::Arrival, 400, 3, NO_ID));
+        sink.record(ev(TraceEventKind::Admit, 400, 3, NO_ID));
+        sink.record(ev(TraceEventKind::Place, 410, 3, 1));
+        sink.record(ev(TraceEventKind::BatchLaunch, 420, NO_ID, 1));
+        sink.record(ev(TraceEventKind::BatchComplete, 900, NO_ID, 0));
+        sink.record(ev(TraceEventKind::BatchComplete, 950, NO_ID, 1));
+
+        let spans = query_spans(&sink);
+        assert_eq!(spans.len(), 3, "dropped query must not span");
+        assert_eq!(spans[0].query, 0);
+        assert_eq!(spans[1].query, 1);
+        assert_eq!(spans[2].query, 3);
+        for s in &spans {
+            assert_eq!(
+                s.queue_wait_ps() + s.placement_stall_ps() + s.compute_ps(),
+                s.latency_ps(),
+                "decomposition must telescope exactly (query {})",
+                s.query
+            );
+        }
+        assert_eq!(spans[0].queue_wait_ps(), 50);
+        assert_eq!(spans[0].placement_stall_ps(), 50);
+        assert_eq!(spans[0].compute_ps(), 700);
+        // The kernel at 300 sits inside query 0's window on shard 0:
+        // tail excess (400-175) cycles × 2 ps/cycle.
+        let records = kernel_records(&sink);
+        assert_eq!(spans[0].imbalance_overhead_ps(&records, 2), 225 * 2);
+        assert_eq!(spans[2].imbalance_overhead_ps(&records, 2), 0);
+
+        let batches = batch_spans(&spans, &records, &|_| 2);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].width, 2);
+        assert_eq!(batches[0].kernels, 1);
+        assert_eq!(batches[0].critical_kernel, "relax");
+        assert_eq!(batches[0].imbalance_overhead_ps, 450);
+        assert_eq!(batches[1].width, 1);
+        assert_eq!(batches[1].kernels, 0);
+    }
+
+    #[test]
+    fn profile_report_shape_is_stable() {
+        let mut sink = TraceSink::with_capacity(32);
+        kernel_pair(&mut sink, 0, 1000, 500, (400, 700, 4), "relax");
+        kernel_pair(&mut sink, 0, 2000, 300, (100, 400, 4), "relax");
+        let report = profile_report(&sink, &[1416]);
+        assert_eq!(
+            report.get("schema").unwrap().as_str(),
+            Some("lonestar-profile-v1")
+        );
+        assert_eq!(report.get("kernel_count").unwrap().as_usize(), Some(2));
+        assert_eq!(report.get("span_count").unwrap().as_usize(), Some(0));
+        let kernels = report.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels.len(), 1, "same (shard, label) aggregates");
+        let k = &kernels[0];
+        assert_eq!(k.get("launches").unwrap().as_usize(), Some(2));
+        assert_eq!(k.get("total_ps").unwrap().as_usize(), Some(800));
+        // The balanced second launch (100 max vs 100 mean) adds no excess.
+        assert_eq!(k.get("tail_excess_cycles").unwrap().as_usize(), Some(400 - 175));
+        // Byte determinism: rebuilding the report reproduces the string.
+        assert_eq!(report.to_string(), profile_report(&sink, &[1416]).to_string());
+    }
+}

@@ -162,16 +162,31 @@ fn serve_scheduler_admission_control_end_to_end() {
     // 64 — which with --max-batch 70 forces a multi-word (>64-query)
     // batch at the next dispatch.
     assert!(queue_peak > 64 && queue_peak <= 90, "queue_peak {queue_peak}");
-    assert!(v.get("wait_cycles").is_some(), "missing wait_cycles");
+    assert!(
+        v.get("wait_cycles").is_none(),
+        "wait_cycles was deprecated out of the report JSON; read wait_ms_*"
+    );
     assert!(v.get("latency_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
     let shards = v.get("shards").unwrap().as_arr().unwrap();
     assert_eq!(shards.len(), 2, "one report per device");
     assert_eq!(shards[0].get("device").unwrap().as_str(), Some("k20c"));
     assert_eq!(shards[1].get("device").unwrap().as_str(), Some("gtx680"));
     let totals = v.get("totals").unwrap();
-    for key in ["admitted", "dropped", "queue_peak", "wait_cycles"] {
+    for key in [
+        "admitted",
+        "dropped",
+        "queue_peak",
+        "profiled_kernels",
+        "imbalance_overhead_cycles",
+        "mean_imbalance",
+        "peak_imbalance",
+    ] {
         assert!(totals.get(key).is_some(), "totals missing {key}");
     }
+    assert!(
+        totals.get("wait_cycles").is_none(),
+        "wait_cycles must be gone from totals too"
+    );
 }
 
 #[test]
@@ -299,6 +314,122 @@ fn run_trace_export_smoke() {
         "no AD decision instants in run trace"
     );
     std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn run_profile_export_deterministic_and_schema_valid() {
+    // --profile-out alone must attach the trace sink (no --trace-out) and
+    // the report must be byte-identical across two seeded runs.
+    let prof_a = temp("run-prof-a.json");
+    let prof_b = temp("run-prof-b.json");
+    let run_args = [
+        "run", "--suite", "rmat10", "--scale", "tiny", "--algo", "sssp",
+        "--strategy", "BS",
+    ];
+    for p in [&prof_a, &prof_b] {
+        let out = bin()
+            .args(run_args)
+            .args(["--profile-out", p.to_str().unwrap()])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        assert!(
+            String::from_utf8_lossy(&out.stdout).contains("wrote profile"),
+            "no profile confirmation"
+        );
+    }
+    assert_eq!(
+        std::fs::read(&prof_a).unwrap(),
+        std::fs::read(&prof_b).unwrap(),
+        "profile export must be deterministic per seed"
+    );
+    let v = lonestar_lb::util::Json::parse(&std::fs::read_to_string(&prof_a).unwrap())
+        .expect("profile is valid json");
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("lonestar-profile-v1"));
+    assert!(
+        v.get("kernel_count").unwrap().as_usize().unwrap() > 0,
+        "run path must profile kernels"
+    );
+    // The run path has no admission lifecycle, so no spans or batches.
+    assert_eq!(v.get("span_count").unwrap().as_usize(), Some(0));
+    for k in v.get("kernels").unwrap().as_arr().unwrap() {
+        assert!(k.get("mean_imbalance").unwrap().as_f64().unwrap() >= 0.999_999);
+        let occ = k.get("mean_occupancy").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+    }
+    std::fs::remove_file(&prof_a).ok();
+    std::fs::remove_file(&prof_b).ok();
+}
+
+#[test]
+fn serve_profile_export_spans_conserve_latency() {
+    // The scheduler path: every served query gets a span whose latency
+    // decomposition telescopes exactly, batches partition the served
+    // population, and the export is seed-deterministic.
+    let trace = temp("serve-prof-trace.json");
+    let prof_a = temp("serve-prof-a.json");
+    let prof_b = temp("serve-prof-b.json");
+    let serve_args = [
+        "serve", "--suite", "rmat10", "--scale", "tiny", "--queries", "48",
+        "--arrival-rate", "8000", "--queue-cap", "40", "--queue-policy", "drop",
+        "--devices", "k20c,k40", "--max-batch", "32", "--json",
+    ];
+    let out = bin()
+        .args(serve_args)
+        .args(["--trace-out", trace.to_str().unwrap()])
+        .args(["--profile-out", prof_a.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wrote profile"), "no profile confirmation:\n{text}");
+
+    let json_line = text.lines().find(|l| l.starts_with('{')).expect("json object");
+    let report = lonestar_lb::util::Json::parse(json_line).expect("valid json");
+    let served = report.get("served").unwrap().as_usize().unwrap();
+
+    let v = lonestar_lb::util::Json::parse(&std::fs::read_to_string(&prof_a).unwrap())
+        .expect("profile is valid json");
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("lonestar-profile-v1"));
+    let spans = v.get("spans").unwrap().as_arr().unwrap();
+    assert_eq!(spans.len(), served, "one span per served query");
+    for s in spans {
+        let get = |k: &str| s.get(k).unwrap().as_usize().unwrap();
+        assert_eq!(
+            get("queue_wait_ps") + get("placement_stall_ps") + get("compute_ps"),
+            get("latency_ps"),
+            "span decomposition must telescope exactly"
+        );
+        assert!(
+            get("imbalance_overhead_ps") <= get("compute_ps"),
+            "imbalance attribution cannot exceed the compute window"
+        );
+    }
+    let widths: usize = v
+        .get("batches")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|b| b.get("width").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(widths, served, "batch widths partition the served queries");
+
+    // Second run with --profile-out only: same bytes.
+    let out = bin()
+        .args(serve_args)
+        .args(["--profile-out", prof_b.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&prof_a).unwrap(),
+        std::fs::read(&prof_b).unwrap(),
+        "profile export must be deterministic per seed"
+    );
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_file(&prof_a).ok();
+    std::fs::remove_file(&prof_b).ok();
 }
 
 #[test]

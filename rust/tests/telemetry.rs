@@ -11,7 +11,9 @@ use lonestar_lb::serving::{
 };
 use lonestar_lb::sim::DeviceSpec;
 use lonestar_lb::strategies::StrategyKind;
-use lonestar_lb::telemetry::{chrome_trace, TraceEventKind, TraceSink};
+use lonestar_lb::telemetry::{
+    chrome_trace, kernel_records, profile_report, query_spans, TraceEventKind, TraceSink,
+};
 use lonestar_lb::util::Json;
 use std::sync::Arc;
 
@@ -169,6 +171,91 @@ fn batch_serve_trace_lays_shards_on_one_timeline() {
             "tracing changed timing"
         );
     }
+}
+
+#[test]
+fn every_kernel_event_carries_a_profile_companion() {
+    let (_, sink) = traced_stream(7);
+    assert_eq!(
+        sink.kind_count(TraceEventKind::KernelProfile),
+        sink.kind_count(TraceEventKind::Kernel),
+        "each processing launch records exactly one profile event"
+    );
+    let records = kernel_records(&sink);
+    assert_eq!(
+        records.len() as u64,
+        sink.kind_count(TraceEventKind::Kernel),
+        "pairing must reconstruct every launch"
+    );
+    for r in &records {
+        assert!(r.warps > 0, "no unpaired kernels without ring wrap");
+        assert!(r.max_warp_cycles as f64 >= r.mean_warp_cycles());
+        assert!(r.imbalance_factor() >= 1.0);
+        assert!(r.cv >= 0.0);
+        assert!((0.0..=1.0).contains(&r.occupancy), "occupancy {}", r.occupancy);
+        assert!(r.dur_ps > 0, "a profiled launch occupies the timeline");
+    }
+}
+
+#[test]
+fn spans_cover_served_queries_and_conserve_latency() {
+    let (report, sink) = traced_stream(7);
+    let spans = query_spans(&sink);
+    assert_eq!(
+        spans.len(),
+        report.served(),
+        "one span per served query, dropped queries excluded"
+    );
+    let records = kernel_records(&sink);
+    let devices = [DeviceSpec::k20c(), DeviceSpec::gtx680()];
+    for s in &spans {
+        assert_eq!(
+            s.queue_wait_ps() + s.placement_stall_ps() + s.compute_ps(),
+            s.latency_ps(),
+            "decomposition must telescope exactly (query {})",
+            s.query
+        );
+        assert!(s.arrival_ps <= s.admit_ps);
+        assert!(s.admit_ps <= s.place_ps);
+        assert!(s.place_ps <= s.launch_ps);
+        assert!(s.launch_ps <= s.done_ps);
+        // On the serving shard's own clock, imbalance attribution is a
+        // slice of compute, never more.
+        let ppc = devices[s.shard as usize].ps_per_cycle();
+        assert!(s.imbalance_overhead_ps(&records, ppc) <= s.compute_ps());
+    }
+    // The latency histogram describes the same population as the spans.
+    assert_eq!(report.latency_hist.count(), spans.len() as u64);
+}
+
+#[test]
+fn profile_report_is_deterministic_per_seed() {
+    let ppc: Vec<u64> = [DeviceSpec::k20c(), DeviceSpec::gtx680()]
+        .iter()
+        .map(|d| d.ps_per_cycle())
+        .collect();
+    let (_, sink_a) = traced_stream(21);
+    let (_, sink_b) = traced_stream(21);
+    let rep_a = profile_report(&sink_a, &ppc).to_string();
+    let rep_b = profile_report(&sink_b, &ppc).to_string();
+    assert_eq!(rep_a, rep_b, "same seed+config must export identical profiles");
+    let (_, sink_c) = traced_stream(22);
+    assert_ne!(
+        rep_a,
+        profile_report(&sink_c, &ppc).to_string(),
+        "different seeds should not collide"
+    );
+    // Schema sanity on the parsed report.
+    let v = Json::parse(&rep_a).expect("profile is valid json");
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("lonestar-profile-v1"));
+    assert_eq!(
+        v.get("span_count").unwrap().as_usize().unwrap(),
+        v.get("spans").unwrap().as_arr().unwrap().len()
+    );
+    assert_eq!(
+        v.get("batch_count").unwrap().as_usize().unwrap(),
+        v.get("batches").unwrap().as_arr().unwrap().len()
+    );
 }
 
 #[test]

@@ -1,11 +1,12 @@
 #!/usr/bin/env python3
-"""Validate a Chrome trace-event JSON file exported by `--trace-out`.
+"""Validate telemetry artifacts exported by `--trace-out` / `--profile-out`.
 
 Usage:
-    tools/check_trace.py TRACE.json [--expect-shards N]
+    tools/check_trace.py TRACE.json [--expect-shards N] [--profile PROFILE.json]
+    tools/check_trace.py --profile PROFILE.json
 
-Checks the schema contract the telemetry layer promises (and that Perfetto
-/ chrome://tracing silently depend on):
+Trace checks (the schema contract the telemetry layer promises, and that
+Perfetto / chrome://tracing silently depend on):
 
   - top level: {"displayTimeUnit": "ms", "traceEvents": [...]} , non-empty
   - every event has integer pid/tid, a ph in {M, X, C, i}, and (except
@@ -19,8 +20,20 @@ Checks the schema contract the telemetry layer promises (and that Perfetto
   - with --expect-shards N: exactly N shard threads, numbered 0..N-1
   - at least one queue-depth counter sample when the trace came from the
     scheduler path (detected by the admission thread having any events)
+  - profiled kernel slices (args carrying "warps") also carry consistent
+    imbalance args: imbalance >= 1, cv >= 0, 0 <= occupancy <= 1, and
+    max_warp_cycles >= mean_warp_cycles
 
-Exit 0 on a valid trace, 1 with a findings list otherwise.
+Profile checks (--profile, the `lonestar-profile-v1` report):
+
+  - schema tag, kernel_count/span_count/batch_count match the array lengths
+  - every kernel aggregate has launches >= 1, mean_imbalance >= 1 and
+    peak_imbalance >= mean's floor, 0 <= mean_occupancy <= 1
+  - every span decomposition is conservative:
+    queue_wait_ps + placement_stall_ps + compute_ps == latency_ps
+  - every batch window has done_ps >= launch_ps and width >= 1
+
+Exit 0 when everything passes, 1 with a findings list otherwise.
 """
 
 import json
@@ -28,17 +41,46 @@ import re
 import sys
 
 VALID_PH = {"M", "X", "C", "i"}
+EPS = 1e-9
+
+PROFILE_KERNEL_KEYS = {
+    "shard", "kernel", "launches", "total_ps", "items", "warps",
+    "mem_transactions", "mem_tx_per_item", "tail_excess_cycles",
+    "imbalance_overhead_ps", "mean_imbalance", "peak_imbalance",
+    "mean_cv", "mean_occupancy",
+}
+PROFILE_SPAN_KEYS = {
+    "query", "shard", "arrival_ps", "admit_ps", "place_ps", "launch_ps",
+    "done_ps", "latency_ps", "queue_wait_ps", "placement_stall_ps",
+    "compute_ps", "imbalance_overhead_ps",
+}
+PROFILE_BATCH_KEYS = {
+    "shard", "launch_ps", "done_ps", "width", "kernels", "kernel_ps",
+    "imbalance_overhead_ps", "peak_imbalance", "critical_kernel",
+    "critical_kernel_ps",
+}
 
 
-def main() -> int:
-    if len(sys.argv) < 2:
-        print(__doc__)
-        return 2
-    path = sys.argv[1]
-    expect_shards = None
-    if "--expect-shards" in sys.argv:
-        expect_shards = int(sys.argv[sys.argv.index("--expect-shards") + 1])
+def check_kernel_args(where, args, findings):
+    """Imbalance args on a profiled kernel slice."""
+    imb = args.get("imbalance")
+    if not isinstance(imb, (int, float)) or imb < 1 - EPS:
+        findings.append(f"{where}: imbalance must be >= 1, got {imb!r}")
+    cv = args.get("cv")
+    if not isinstance(cv, (int, float)) or cv < 0:
+        findings.append(f"{where}: cv must be >= 0, got {cv!r}")
+    occ = args.get("occupancy")
+    if not isinstance(occ, (int, float)) or not (0 <= occ <= 1 + EPS):
+        findings.append(f"{where}: occupancy must be in [0, 1], got {occ!r}")
+    max_c = args.get("max_warp_cycles", 0)
+    mean_c = args.get("mean_warp_cycles", 0)
+    if max_c + EPS < mean_c:
+        findings.append(
+            f"{where}: max_warp_cycles {max_c} < mean_warp_cycles {mean_c}"
+        )
 
+
+def check_trace(path):
     with open(path) as f:
         doc = json.load(f)
 
@@ -47,14 +89,14 @@ def main() -> int:
         findings.append("displayTimeUnit must be 'ms'")
     events = doc.get("traceEvents")
     if not isinstance(events, list) or not events:
-        print(f"check_trace FAILED: {path}: traceEvents missing or empty")
-        return 1
+        return ["traceEvents missing or empty"], ""
 
     shard_threads = {}
     process_names = 0
     admission_tid0 = False
     queue_depth_samples = 0
     scheduler_events = 0
+    profiled_kernels = 0
 
     for i, ev in enumerate(events):
         where = f"traceEvents[{i}]"
@@ -84,6 +126,10 @@ def main() -> int:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 findings.append(f"{where}: X slice needs dur >= 0, got {dur!r}")
+            args = ev.get("args", {})
+            if isinstance(args, dict) and "warps" in args:
+                profiled_kernels += 1
+                check_kernel_args(where, args, findings)
         if ph in ("C", "i") and not isinstance(ev.get("args"), dict):
             findings.append(f"{where}: {ph} event needs an args object")
         if ph == "i" and not ev.get("s"):
@@ -99,8 +145,8 @@ def main() -> int:
         findings.append("missing admission/scheduler thread_name on tid 0")
     if not shard_threads:
         findings.append("no shard thread tracks (thread_name 'shard <i> [...]')")
-    if expect_shards is not None:
-        want = set(range(expect_shards))
+    if EXPECT_SHARDS is not None:
+        want = set(range(EXPECT_SHARDS))
         if set(shard_threads) != want:
             findings.append(
                 f"expected shard threads {sorted(want)}, got {sorted(shard_threads)}"
@@ -108,17 +154,139 @@ def main() -> int:
     if scheduler_events and not queue_depth_samples:
         findings.append("scheduler-path trace has no queue-depth counter samples")
 
-    if findings:
-        print(f"check_trace FAILED: {path}:")
-        for f_ in findings:
-            print(f"  - {f_}")
-        return 1
-    print(
-        f"check_trace OK: {path}: {len(events)} events, "
-        f"{len(shard_threads)} shard track(s), "
-        f"{queue_depth_samples} queue-depth sample(s)"
+    summary = (
+        f"{len(events)} events, {len(shard_threads)} shard track(s), "
+        f"{queue_depth_samples} queue-depth sample(s), "
+        f"{profiled_kernels} profiled kernel slice(s)"
     )
-    return 0
+    return findings, summary
+
+
+def check_profile(path):
+    with open(path) as f:
+        doc = json.load(f)
+
+    findings = []
+    if doc.get("schema") != "lonestar-profile-v1":
+        findings.append(f"schema must be 'lonestar-profile-v1', got {doc.get('schema')!r}")
+    for count_key, arr_key in (
+        ("kernel_count", None),  # kernel_count counts launches, not aggregates
+        ("span_count", "spans"),
+        ("batch_count", "batches"),
+    ):
+        n = doc.get(count_key)
+        if not isinstance(n, int) or n < 0:
+            findings.append(f"{count_key} must be a non-negative integer, got {n!r}")
+        elif arr_key is not None and n != len(doc.get(arr_key, [])):
+            findings.append(
+                f"{count_key} = {n} but len({arr_key}) = {len(doc.get(arr_key, []))}"
+            )
+    for arr_key in ("kernels", "spans", "batches"):
+        if not isinstance(doc.get(arr_key), list):
+            findings.append(f"{arr_key} must be an array")
+
+    for i, k in enumerate(doc.get("kernels") or []):
+        where = f"kernels[{i}]"
+        missing = PROFILE_KERNEL_KEYS - set(k)
+        if missing:
+            findings.append(f"{where}: missing keys {sorted(missing)}")
+            continue
+        if k["launches"] < 1:
+            findings.append(f"{where}: launches must be >= 1")
+        if k["mean_imbalance"] < 1 - EPS:
+            findings.append(f"{where}: mean_imbalance {k['mean_imbalance']} < 1")
+        if k["peak_imbalance"] + EPS < k["mean_imbalance"] and k["launches"] > 1:
+            # peak is a max over the same population the mean averages
+            findings.append(
+                f"{where}: peak_imbalance {k['peak_imbalance']} < mean {k['mean_imbalance']}"
+            )
+        if not (0 <= k["mean_occupancy"] <= 1 + EPS):
+            findings.append(f"{where}: mean_occupancy {k['mean_occupancy']} not in [0, 1]")
+
+    for i, s in enumerate(doc.get("spans") or []):
+        where = f"spans[{i}]"
+        missing = PROFILE_SPAN_KEYS - set(s)
+        if missing:
+            findings.append(f"{where}: missing keys {sorted(missing)}")
+            continue
+        total = s["queue_wait_ps"] + s["placement_stall_ps"] + s["compute_ps"]
+        if total != s["latency_ps"]:
+            findings.append(
+                f"{where}: decomposition {total} != latency_ps {s['latency_ps']} "
+                "(must telescope exactly)"
+            )
+        if not (
+            s["arrival_ps"] <= s["admit_ps"] <= s["place_ps"]
+            <= s["launch_ps"] <= s["done_ps"]
+        ):
+            findings.append(f"{where}: lifecycle timestamps out of order")
+        if s["imbalance_overhead_ps"] > s["compute_ps"]:
+            findings.append(
+                f"{where}: imbalance_overhead_ps {s['imbalance_overhead_ps']} "
+                f"exceeds compute_ps {s['compute_ps']}"
+            )
+
+    for i, b in enumerate(doc.get("batches") or []):
+        where = f"batches[{i}]"
+        missing = PROFILE_BATCH_KEYS - set(b)
+        if missing:
+            findings.append(f"{where}: missing keys {sorted(missing)}")
+            continue
+        if b["done_ps"] < b["launch_ps"]:
+            findings.append(f"{where}: done_ps < launch_ps")
+        if b["width"] < 1:
+            findings.append(f"{where}: width must be >= 1")
+        if b["peak_imbalance"] < 1 - EPS:
+            findings.append(f"{where}: peak_imbalance {b['peak_imbalance']} < 1")
+
+    summary = (
+        f"{doc.get('kernel_count', 0)} kernel launch(es), "
+        f"{len(doc.get('kernels') or [])} aggregate row(s), "
+        f"{len(doc.get('spans') or [])} span(s), "
+        f"{len(doc.get('batches') or [])} batch(es)"
+    )
+    return findings, summary
+
+
+EXPECT_SHARDS = None
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    if not argv:
+        print(__doc__)
+        return 2
+    global EXPECT_SHARDS
+    if "--expect-shards" in argv:
+        i = argv.index("--expect-shards")
+        EXPECT_SHARDS = int(argv[i + 1])
+        del argv[i : i + 2]
+    profile_path = None
+    if "--profile" in argv:
+        i = argv.index("--profile")
+        profile_path = argv[i + 1]
+        del argv[i : i + 2]
+    trace_path = argv[0] if argv else None
+
+    status = 0
+    for path, checker, kind in (
+        (trace_path, check_trace, "trace"),
+        (profile_path, check_profile, "profile"),
+    ):
+        if path is None:
+            continue
+        findings, summary = checker(path)
+        if findings:
+            print(f"check_{kind} FAILED: {path}:")
+            for f_ in findings:
+                print(f"  - {f_}")
+            status = 1
+        else:
+            print(f"check_{kind} OK: {path}: {summary}")
+    if trace_path is None and profile_path is None:
+        print(__doc__)
+        return 2
+    return status
 
 
 if __name__ == "__main__":

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Promote a freshly measured bench run to the committed baseline.
+
+Usage:
+    tools/promote_bench_baseline.py FRESH [BASELINE]
+
+BASELINE defaults to BENCH_hotpath.json at the repo root (derived from
+this script's location) — the file check_bench_regression.py gates
+against. The script refuses to promote a measurement that the regression
+gate itself would reject:
+
+  - every REQUIRED_RATIOS entry (shared with check_bench_regression.py)
+    must be present, finite and > 0
+  - the fresh run must not itself be a bootstrap placeholder
+  - every case needs a positive mean_ns (a zeroed timing means the bench
+    harness was stubbed out, not measured)
+
+On success it rewrites BASELINE with the fresh document minus any
+"bootstrap" marker, normalized to sorted keys + trailing newline so the
+diff the committer reviews is minimal and stable. Run the benches on a
+quiet machine first; the promoted numbers become the bar every future PR
+is measured against.
+"""
+
+import json
+import math
+import os
+import sys
+
+# The gate's required ratios — import from the sibling script so the two
+# tools cannot drift apart.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from check_bench_regression import REQUIRED_RATIOS  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_hotpath.json",
+)
+
+
+def validate(fresh) -> list:
+    failures = []
+    if fresh.get("bootstrap"):
+        failures.append("fresh run is itself a bootstrap placeholder")
+    suites = fresh.get("suites")
+    if not isinstance(suites, dict) or not suites:
+        failures.append("fresh run has no suites")
+        return failures
+    for suite, names in sorted(REQUIRED_RATIOS.items()):
+        sdata = suites.get(suite)
+        if sdata is None:
+            failures.append(f"{suite}: suite missing from the fresh run")
+            continue
+        ratios = sdata.get("ratios", {})
+        for name in names:
+            val = ratios.get(name)
+            if not isinstance(val, (int, float)) or not math.isfinite(val) or val <= 0:
+                failures.append(
+                    f"{suite}:{name}: required ratio must be a positive finite "
+                    f"number, got {val!r}"
+                )
+        for case in sdata.get("cases", []):
+            if case.get("mean_ns", 0) <= 0:
+                failures.append(
+                    f"{suite}:{case.get('name', '?')}: mean_ns must be > 0 "
+                    "(was this actually measured?)"
+                )
+    return failures
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    fresh_path = sys.argv[1]
+    baseline_path = sys.argv[2] if len(sys.argv) > 2 else DEFAULT_BASELINE
+
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    failures = validate(fresh)
+    if failures:
+        print(f"refusing to promote {fresh_path}:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+
+    fresh.pop("bootstrap", None)
+    with open(baseline_path, "w") as f:
+        json.dump(fresh, f, indent=2, sort_keys=True)
+        f.write("\n")
+    ratio_count = sum(
+        len(s.get("ratios", {})) for s in fresh.get("suites", {}).values()
+    )
+    print(
+        f"promoted {fresh_path} -> {baseline_path} "
+        f"({len(fresh['suites'])} suite(s), {ratio_count} gated ratio(s)); "
+        "review the diff and commit it"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
