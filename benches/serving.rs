@@ -118,6 +118,10 @@ fn main() {
             ..Default::default()
         },
         queue_cap: 120,
+        // Explicitly single-worker so `scheduler_sim_qps` times the
+        // sequential coordinator path and the par case below is a true
+        // contrast (the default 0 would auto-spawn one worker per shard).
+        workers: 1,
         ..Default::default()
     };
     let cache = GraphCache::new();
@@ -163,6 +167,50 @@ fn main() {
         },
     );
 
+    // Multi-worker scheduler case: the identical stream with one worker
+    // thread per shard. Simulated output is byte-identical by the
+    // determinism contract (asserted below) — what parallelism buys is
+    // *host* wall-clock, so the headline `scheduler_par_qps` is served
+    // queries per host millisecond with the full worker pool. Host-timed
+    // ⇒ machine-dependent; the baseline gate's tolerance absorbs runner
+    // noise.
+    let n_devices = sched_cfg.serve.devices.len();
+    let mut par_cfg = sched_cfg.clone();
+    par_cfg.workers = n_devices;
+    let baseline_json = {
+        let arrivals = synthetic_arrivals(&g, 100, 0.5, 100_000, opts.seed);
+        serve_stream(&g, arrivals, &sched_cfg, &cache)
+            .expect("serve_stream baseline")
+            .to_json()
+            .to_string()
+    };
+    let mut par_qps = 0.0f64;
+    suite.case(
+        &format!("scheduler/{}q-stream-2dev-{}workers", 100, n_devices),
+        0,
+        iters.max(1),
+        || {
+            let arrivals = synthetic_arrivals(&g, 100, 0.5, 100_000, opts.seed);
+            let t0 = std::time::Instant::now();
+            let report =
+                serve_stream(&g, arrivals, &par_cfg, &cache).expect("serve_stream parallel");
+            let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(
+                report.to_json().to_string(),
+                baseline_json,
+                "worker threads must not change the simulated schedule"
+            );
+            par_qps = report.served() as f64 / host_ms.max(1e-9);
+            format!(
+                "{} served, {} batches, host {:.2} ms, {:.1} q/host-ms",
+                report.served(),
+                report.batches,
+                host_ms,
+                par_qps
+            )
+        },
+    );
+
     let results = suite.finish();
     // Fold the amortization claim into the shared bench baseline: the
     // inspection+decision work of batched-AD as a fraction of N
@@ -182,6 +230,7 @@ fn main() {
         &[
             ("inspection_amortization", amortization),
             ("scheduler_sim_qps", sched_qps),
+            ("scheduler_par_qps", par_qps),
         ],
     );
     println!(

@@ -28,6 +28,7 @@
 //!                                      #  (> 0 switches on the scheduler)
 //! queue_cap  = 64                      # serve: admission-queue bound
 //! queue_policy = drop                  # drop | block at a full queue
+//! workers    = 4                       # serve: shard worker threads (default: one per shard)
 //! trace_out  = trace.json              # write a Chrome trace-event file
 //! metrics_out = metrics.prom           # write Prometheus text exposition
 //! profile_out = profile.json           # write the load-imbalance profile
@@ -215,6 +216,10 @@ pub struct ExperimentConfig {
     pub queue_cap: usize,
     /// Overflow policy at a full admission queue.
     pub queue_policy: crate::serving::OverflowPolicy,
+    /// Worker threads running the scheduler's shard engines; `0` (the
+    /// default) means one per shard. Any value yields byte-identical
+    /// output — it only changes how many cores the pool uses.
+    pub workers: usize,
     /// Chrome trace-event JSON output path (`run`/`serve`); CLI
     /// `--trace-out` overrides.
     pub trace_out: Option<String>,
@@ -248,6 +253,7 @@ impl Default for ExperimentConfig {
             arrival_rate: 0.0,
             queue_cap: 64,
             queue_policy: crate::serving::OverflowPolicy::Drop,
+            workers: 0,
             trace_out: None,
             metrics_out: None,
             profile_out: None,
@@ -364,6 +370,7 @@ impl ExperimentConfig {
                 "queue_policy" => {
                     cfg.queue_policy = crate::serving::OverflowPolicy::parse(&v)?
                 }
+                "workers" => cfg.workers = parse_positive(&v, "workers")?,
                 "trace_out" => cfg.trace_out = Some(v),
                 "metrics_out" => cfg.metrics_out = Some(v),
                 "profile_out" => cfg.profile_out = Some(v),
@@ -530,7 +537,7 @@ mod tests {
     fn parses_scheduler_keys_and_device_pools() {
         let cfg = ExperimentConfig::parse(
             "devices = k20c, k40 ,gtx680\nmax_batch = 150\narrival_rate = 2.5\n\
-             queue_cap = 12\nqueue_policy = block\n",
+             queue_cap = 12\nqueue_policy = block\nworkers = 2\n",
         )
         .unwrap();
         assert_eq!(cfg.devices, vec!["k20c", "k40", "gtx680"]);
@@ -538,6 +545,10 @@ mod tests {
         assert_eq!(cfg.arrival_rate, 2.5);
         assert_eq!(cfg.queue_cap, 12);
         assert_eq!(cfg.queue_policy, crate::serving::OverflowPolicy::Block);
+        assert_eq!(cfg.workers, 2);
+        // Absent => 0 => one worker per shard at scheduler construction.
+        assert_eq!(ExperimentConfig::parse("").unwrap().workers, 0);
+        assert!(ExperimentConfig::parse("workers = 0").is_err());
         let pool = cfg.device_pool().unwrap();
         assert_eq!(pool.len(), 3);
         assert_eq!(pool[1].name, "k40");

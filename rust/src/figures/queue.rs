@@ -109,6 +109,10 @@ pub fn fig_queue(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<QueueRow
                 ..Default::default()
             },
             queue_cap: FIGQUEUE_CAP,
+            // One worker per shard (the default). The figure's numbers are
+            // identical for any worker count — the sweep just finishes
+            // faster on multi-core machines.
+            workers: 0,
             ..Default::default()
         };
         let report = serve_stream(&g, arrivals, &cfg, &cache)?;

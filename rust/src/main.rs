@@ -12,7 +12,7 @@
 //!                      [--queries N] [--batch-size N] [--shards N]
 //!                      [--devices k20c,k40,...] [--max-batch N]
 //!                      [--arrival-rate Q_PER_MS] [--queue-cap N]
-//!                      [--queue-policy drop|block]
+//!                      [--queue-policy drop|block] [--workers N]
 //!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
 //!                      [--adaptive-policy P] [--scale S] [--seed N]
 //!                      [--enforce-budget] [--verify] [--json]
@@ -126,6 +126,7 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --queries N --batch-size N --shards N
                --devices k20c,k40,gtx680 --max-batch N
                --arrival-rate Q_PER_MS --queue-cap N --queue-policy drop|block
+               --workers N (shard worker threads; default one per shard)
                --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
                --adaptive-policy P --scale S --seed N
                --enforce-budget --verify --json
@@ -424,6 +425,9 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     if let Some(p) = args.get("queue-policy") {
         cfg.queue_policy = lonestar_lb::serving::OverflowPolicy::parse(p)?;
     }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = lonestar_lb::config::parse_positive(w, "--workers")?;
+    }
     if let Some(p) = args.get("adaptive-policy") {
         cfg.params.adaptive_policy = lonestar_lb::config::parse_adaptive_policy(p)?;
     }
@@ -602,6 +606,7 @@ fn cmd_serve_stream(
         queue_cap: cfg.queue_cap,
         overflow: cfg.queue_policy,
         collect_distances: true,
+        workers: cfg.workers,
     };
     let arrivals = lonestar_lb::serving::synthetic_arrivals(
         g,

@@ -1,8 +1,10 @@
 //! The admission-controlled serving scheduler: a deterministic
-//! virtual-clock event loop that consumes a continuous arrival stream,
+//! virtual-clock coordinator that consumes a continuous arrival stream,
 //! admits queries through the bounded [`AdmissionQueue`], places them
-//! load-aware over heterogeneous device shards, and forms batches per
-//! shard as capacity frees.
+//! load-aware over heterogeneous device shards, and hands batches to
+//! **real worker threads** — one persistent [`QueryBatch`] engine per
+//! shard, executing concurrently while the coordinator folds results
+//! back in a fixed shard order.
 //!
 //! This replaces the batch engine's original operating assumptions — a
 //! pre-materialized query list, round-robin placement, identical devices —
@@ -11,8 +13,8 @@
 //! against *observed* load. Concretely, per virtual instant:
 //!
 //! 1. **Completions first.** Shards whose running batch finishes at `now`
-//!    retire it (results extracted, memory accounting released, the
-//!    engine's buffers kept warm for the next batch).
+//!    retire it (results folded, the engine's buffers kept warm for the
+//!    next batch).
 //! 2. **Arrivals** due at `now` enter the bounded FIFO queue; a full
 //!    queue invokes the [`OverflowPolicy`] — `drop` sheds (counted),
 //!    `block` back-pressures until space frees.
@@ -24,11 +26,49 @@
 //!    (`edges_a × tp_b < edges_b × tp_a`, exact u128 integer
 //!    cross-multiplication — deterministic on every platform, and a K40
 //!    legitimately absorbs more work than a GTX 680).
-//! 4. **Dispatch.** Every idle shard with placed queries launches them
-//!    as one batch on its own [`QueryBatch`] engine (reused via
-//!    [`QueryBatch::reset`], so the steady state allocates nothing) and
-//!    becomes busy for the batch's simulated duration, converted to the
-//!    shared picosecond timeline via its own clock.
+//! 4. **Dispatch.** Every idle shard with placed queries launches them as
+//!    one batch: the coordinator sends a `(shard, batch, base_ps)`
+//!    [`LaunchMsg`] to the shard's worker thread, the workers run their
+//!    engines **in parallel**, and the coordinator collects every
+//!    [`BatchReport`] of the round before the clock moves again.
+//!
+//! # Parallel execution, deterministic output
+//!
+//! The threading model follows gpucachesim's cluster-of-cores design:
+//! execution order across workers is whatever the OS gives, but *fold*
+//! order is a fixed `core_sim_order` analog — ascending shard id. Only
+//! batches launched at the same virtual instant ever run wall-clock
+//! concurrently (the next event on the clock needs every launched batch's
+//! duration, so each dispatch round is a natural barrier), and per round
+//! the coordinator:
+//!
+//! * records each shard's `BatchLaunch` event and replays that shard's
+//!   engine events from its private per-shard trace ring into the main
+//!   ring via [`TraceSink::absorb`], ascending shard id — reproducing the
+//!   exact byte order the sequential loop used to write;
+//! * applies cycle counts, outcomes and admission bookkeeping in the same
+//!   ascending order.
+//!
+//! The arrival stream stays authoritative on the coordinator, so
+//! `ScheduleReport`, `--trace-out` and `--profile-out` bytes are
+//! identical for any worker count — `workers = 1` runs the very same
+//! message machinery on a single thread (pinned by
+//! `tests/parallel_determinism.rs`).
+//!
+//! Worker lifecycle: threads spawn in [`Scheduler::new`], drain their
+//! mailboxes, and join in [`Scheduler::finish`] (graceful shutdown on
+//! drain) or in [`WorkerPool`]'s `Drop` (early exit / error paths). A
+//! panic inside an engine is caught on the worker, carried home in the
+//! report, and re-raised on the coordinator at the fold, so a crashing
+//! strategy fails the run instead of deadlocking it.
+//!
+//! The steady state still allocates nothing per worker: launch and report
+//! messages move pre-allocated buffers (the query slice, the distance
+//! container, the per-shard trace ring) back and forth through
+//! fixed-capacity [`Mailbox`] slots, and each worker re-assembles its
+//! `ExecCtx` from persistent parts (`MemoryTracker`, `RunMetrics`,
+//! `ScratchArena`, the distance seam) without touching the heap —
+//! enforced by the counting allocator in `tests/alloc_regression.rs`.
 //!
 //! The virtual clock runs in integer **picoseconds** because
 //! heterogeneous shards' cycle counts are incomparable: each device
@@ -38,15 +78,19 @@
 //! behavior.
 
 use crate::algorithms::{AlgoKind, NativeRelaxer};
-use crate::arena::GraphCache;
+use crate::arena::{GraphCache, ScratchArena};
 use crate::coordinator::ExecCtx;
 use crate::error::{Error, Result};
 use crate::graph::Csr;
-use crate::sim::DeviceSpec;
+use crate::metrics::RunMetrics;
+use crate::sim::{DeviceSpec, MemoryTracker};
+use crate::strategies::{StrategyKind, StrategyParams};
 use crate::telemetry::{Exposition, LogHistogram, TraceEvent, TraceEventKind, TraceSink};
 use crate::util::Json;
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use super::batch::QueryBatch;
 use super::query::{Arrival, Query};
@@ -68,6 +112,13 @@ pub struct SchedulerConfig {
     /// `--verify` / parity; the allocation-regression harness turns it
     /// off because cloning a distance array is inherently an allocation).
     pub collect_distances: bool,
+    /// Worker threads executing the per-shard batch engines. `0` (the
+    /// default) spawns one worker per shard; values above the shard
+    /// count are clamped (an engine never migrates between threads).
+    /// Every worker count produces byte-identical reports, traces and
+    /// profiles — the coordinator folds batch reports in fixed shard
+    /// order regardless of which thread finished first.
+    pub workers: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -77,6 +128,7 @@ impl Default for SchedulerConfig {
             queue_cap: 64,
             overflow: OverflowPolicy::default(),
             collect_distances: true,
+            workers: 0,
         }
     }
 }
@@ -136,12 +188,6 @@ pub struct ScheduleReport {
     pub blocked: u64,
     /// Batches launched across all shards.
     pub batches: u64,
-    /// Σ wait (arrival → launch) over served queries, converted to
-    /// reference-device cycles (`devices[0]`). Only the deprecated
-    /// [`ScheduleReport::wait_cycles`] accessor reads this; the JSON
-    /// report dropped the key in favor of the clock-neutral `wait_ms_*`
-    /// figures.
-    wait_cycles: u64,
     /// Virtual instant the stream drained (ps).
     pub wall_ps: u64,
     /// Queue-wait distribution (arrival → batch launch), ps samples.
@@ -215,18 +261,9 @@ impl ScheduleReport {
         self.latency_hist.max_ms()
     }
 
-    /// Σ wait over served queries in *reference-device cycles*
-    /// (`devices[0]`'s clock).
-    #[deprecated(
-        note = "cycle counts on devices[0]'s clock mislead heterogeneous \
-                pools; read the clock-neutral wait_ms_p50/p95/max instead"
-    )]
-    pub fn wait_cycles(&self) -> u64 {
-        self.wait_cycles
-    }
-
     /// Median queue wait (arrival → batch launch), ms. Clock-neutral —
-    /// measured in virtual ps, unlike the deprecated `wait_cycles()`.
+    /// measured in virtual ps (the deprecated `wait_cycles` accessor,
+    /// which converted on `devices[0]`'s clock, is gone).
     pub fn wait_ms_p50(&self) -> f64 {
         self.wait_hist.percentile_ms(50)
     }
@@ -247,7 +284,6 @@ impl ScheduleReport {
         agg.admitted = self.admitted;
         agg.dropped = self.dropped.len() as u64;
         agg.queue_peak = self.queue_peak;
-        agg.wait_cycles = self.wait_cycles;
         agg
     }
 
@@ -390,18 +426,374 @@ impl ScheduleReport {
     }
 }
 
-/// One device shard's live state inside the event loop.
-struct ShardState<'a> {
-    dev: &'a DeviceSpec,
-    ctx: ExecCtx<'a>,
-    /// Persistent batch engine, [`QueryBatch::reset`] per batch.
+// ---------------------------------------------------------------------------
+// Coordinator ⇄ worker messaging
+// ---------------------------------------------------------------------------
+
+/// A fixed-capacity blocking mailbox: `Mutex<VecDeque>` + `Condvar`.
+///
+/// Why not `std::sync::mpsc`: every mpsc send heap-allocates a queue node,
+/// which would break the zero-alloc steady state the scheduler guarantees
+/// per iteration. Here the deque is pre-allocated to its worst case (one
+/// launch per owned shard plus a shutdown, or one report per shard), so a
+/// send is a slot write plus a futex wake.
+struct Mailbox<T> {
+    slots: Mutex<VecDeque<T>>,
+    ready: Condvar,
+}
+
+impl<T> Mailbox<T> {
+    fn with_capacity(cap: usize) -> Mailbox<T> {
+        Mailbox {
+            slots: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Deliver a message. Never blocks and — within the pre-sized
+    /// capacity — never allocates.
+    fn send(&self, msg: T) {
+        let mut q = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(q.len() < q.capacity(), "mailbox sized below its worst case");
+        q.push_back(msg);
+        drop(q);
+        self.ready.notify_one();
+    }
+
+    /// Block until a message is available.
+    fn recv(&self) -> T {
+        let mut q = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(msg) = q.pop_front() {
+                return msg;
+            }
+            q = self.ready.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Coordinator → worker. The launch variant is deliberately unboxed:
+/// boxing it would put an allocation in every steady-state dispatch,
+/// which is exactly what the mailbox design avoids.
+#[allow(clippy::large_enum_variant)]
+enum WorkerMsg {
+    Launch(LaunchMsg),
+    Shutdown,
+}
+
+/// One batch hand-off: `(shard, batch, base_ps)` plus the recycled
+/// buffers that ride along so the worker never allocates.
+struct LaunchMsg {
+    shard: usize,
+    /// Launch instant on the shared virtual clock — the worker's trace
+    /// timeline and cycle accounting start here.
+    base_ps: u64,
+    /// The batch (round-trips home in the report, capacity intact).
+    queries: Vec<Query>,
+    /// Per-shard trace ring (`None` when tracing is off); the worker's
+    /// engine records into it and the coordinator replays it into the
+    /// main ring at the fold.
+    trace: Option<TraceSink>,
+    /// Distance container, filled by the worker when collection is on.
+    dists: Vec<Vec<u32>>,
+}
+
+/// Worker → coordinator: one per launch, collected before the virtual
+/// clock advances.
+struct BatchReport {
+    shard: usize,
+    queries: Vec<Query>,
+    trace: Option<TraceSink>,
+    dists: Vec<Vec<u32>>,
+    /// `Ok(cycles)` — the batch's simulated cost on the shard's device
+    /// clock — or the engine's error, surfaced in shard order.
+    result: Result<u64>,
+    /// Panic payload caught on the worker, re-raised at the fold.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// Everything a worker needs to build its shards' engines locally.
+/// Engines are constructed *on* the worker thread because a
+/// [`QueryBatch`]'s pluggable policy is not guaranteed `Send`; only
+/// plain-data seeds cross the spawn boundary.
+struct WorkerSeed {
+    shards: Vec<ShardSeed>,
+    graph: Arc<Csr>,
+    strategy: StrategyKind,
+    params: StrategyParams,
+    enforce_budget: bool,
+    max_iterations: u32,
+    collect_distances: bool,
+}
+
+struct ShardSeed {
+    shard: usize,
+    dev: DeviceSpec,
+    cache: GraphCache,
+}
+
+/// A worker-owned shard: the engine plus the persistent `ExecCtx` parts
+/// (the context itself is re-assembled per launch because its borrow of
+/// the trace ring lives only as long as one message).
+struct ShardExec {
+    shard: usize,
+    dev: DeviceSpec,
     engine: QueryBatch,
+    mem: MemoryTracker,
+    metrics: RunMetrics,
+    scratch: ScratchArena,
+    dist: Vec<u32>,
+    /// Cycle watermark for per-batch durations on cumulative metrics.
+    prev_cycles: u64,
+}
+
+/// A worker's slot for one shard: live, or parked with the engine's
+/// construction error (returned with the first launch — unreachable for
+/// an empty seed batch, but a clean `Err` beats a worker panic).
+struct ExecSlot {
+    shard: usize,
+    state: std::result::Result<ShardExec, Option<Error>>,
+}
+
+/// Run one batch on a worker-owned shard. Mirrors the sequential loop
+/// exactly: trace base pinned to the launch instant, reset → run, then
+/// (on success) distance extraction, the cycle delta against the
+/// watermark, and retirement. On error nothing advances — the same
+/// engine/metrics state the sequential path would have left.
+fn run_batch(
+    ex: &mut ShardExec,
+    msg: &mut LaunchMsg,
+    max_iterations: u32,
+    collect_distances: bool,
+) -> Result<u64> {
+    let mut ctx = ExecCtx::new(&ex.dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+    std::mem::swap(&mut ctx.mem, &mut ex.mem);
+    std::mem::swap(&mut ctx.metrics, &mut ex.metrics);
+    std::mem::swap(&mut ctx.scratch, &mut ex.scratch);
+    std::mem::swap(&mut ctx.dist, &mut ex.dist);
+    ctx.trace = msg.trace.as_mut();
+    ctx.trace_base_ps = msg.base_ps;
+    ctx.trace_base_cycles = ctx.metrics.total_cycles();
+    ctx.trace_shard = ex.shard as u32;
+    let run = ex
+        .engine
+        .reset(&mut ctx, &msg.queries)
+        .and_then(|()| ex.engine.run(&mut ctx, max_iterations));
+    let out = match run {
+        Ok(()) => {
+            if collect_distances {
+                for k in 0..msg.queries.len() {
+                    msg.dists.push(ex.engine.distances(k));
+                }
+            }
+            let total = ctx.metrics.total_cycles();
+            let cycles = total - ex.prev_cycles;
+            ex.prev_cycles = total;
+            // Retirement releases the batch's memory charges here; on the
+            // virtual clock it is *observed* at the completion instant,
+            // and nothing touches this shard's accounting in between, so
+            // the fold is indistinguishable from the sequential path.
+            ex.engine.retire(&mut ctx);
+            Ok(cycles)
+        }
+        Err(e) => Err(e),
+    };
+    ctx.trace = None;
+    std::mem::swap(&mut ctx.mem, &mut ex.mem);
+    std::mem::swap(&mut ctx.metrics, &mut ex.metrics);
+    std::mem::swap(&mut ctx.scratch, &mut ex.scratch);
+    std::mem::swap(&mut ctx.dist, &mut ex.dist);
+    out
+}
+
+/// A worker thread's whole life: build the owned shards' engines, answer
+/// launch messages until shutdown, then finalize and return each shard's
+/// metrics. Panics inside a batch are caught and shipped home in the
+/// report so the coordinator can re-raise them instead of deadlocking.
+fn worker_main(
+    seed: WorkerSeed,
+    inbox: &Mailbox<WorkerMsg>,
+    reports: &Mailbox<BatchReport>,
+) -> Vec<(usize, RunMetrics)> {
+    let WorkerSeed {
+        shards,
+        graph,
+        strategy,
+        params,
+        enforce_budget,
+        max_iterations,
+        collect_distances,
+    } = seed;
+    let mut execs: Vec<ExecSlot> = shards
+        .into_iter()
+        .map(|s| {
+            let state = QueryBatch::with_cache(
+                graph.clone(),
+                &[],
+                strategy,
+                params.clone(),
+                s.cache,
+            )
+            .map(|engine| ShardExec {
+                shard: s.shard,
+                mem: if enforce_budget {
+                    MemoryTracker::new(s.dev.memory_budget)
+                } else {
+                    MemoryTracker::unlimited()
+                },
+                dev: s.dev,
+                engine,
+                metrics: RunMetrics::default(),
+                scratch: ScratchArena::new(),
+                dist: Vec::new(),
+                prev_cycles: 0,
+            })
+            .map_err(Some);
+            ExecSlot { shard: s.shard, state }
+        })
+        .collect();
+
+    loop {
+        match inbox.recv() {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Launch(mut msg) => {
+                let slot = execs.iter_mut().find(|e| e.shard == msg.shard);
+                let (result, caught) = match slot {
+                    None => (
+                        Err(Error::Config(format!(
+                            "shard {} is not owned by this worker",
+                            msg.shard
+                        ))),
+                        None,
+                    ),
+                    Some(slot) => match &mut slot.state {
+                        Ok(ex) => match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            run_batch(ex, &mut msg, max_iterations, collect_distances)
+                        })) {
+                            Ok(r) => (r, None),
+                            Err(p) => (
+                                Err(Error::Config("shard worker panicked".into())),
+                                Some(p),
+                            ),
+                        },
+                        Err(parked) => (
+                            Err(parked.take().unwrap_or_else(|| {
+                                Error::Config("shard engine construction failed".into())
+                            })),
+                            None,
+                        ),
+                    },
+                };
+                reports.send(BatchReport {
+                    shard: msg.shard,
+                    queries: msg.queries,
+                    trace: msg.trace,
+                    dists: msg.dists,
+                    result,
+                    panic: caught,
+                });
+            }
+        }
+    }
+
+    execs
+        .into_iter()
+        .map(|slot| match slot.state {
+            Ok(mut ex) => {
+                // The same finalization the sequential path ran through
+                // `ExecCtx::finalize_metrics`: fold the memory peak and
+                // the arena's pool counters into the metrics.
+                let mut ctx = ExecCtx::new(&ex.dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
+                std::mem::swap(&mut ctx.mem, &mut ex.mem);
+                std::mem::swap(&mut ctx.metrics, &mut ex.metrics);
+                std::mem::swap(&mut ctx.scratch, &mut ex.scratch);
+                ctx.finalize_metrics();
+                (slot.shard, std::mem::take(&mut ctx.metrics))
+            }
+            Err(_) => (slot.shard, RunMetrics::default()),
+        })
+        .collect()
+}
+
+/// One worker thread: its mailbox plus the join handle.
+struct WorkerHandle {
+    inbox: Arc<Mailbox<WorkerMsg>>,
+    join: Option<JoinHandle<Vec<(usize, RunMetrics)>>>,
+}
+
+/// The worker threads plus the shared report mailbox. `Drop` guarantees
+/// shutdown + join on every exit path (error returns, panics during the
+/// fold, callers that never reach [`Scheduler::finish`]), so a scheduler
+/// can never leak a live thread.
+struct WorkerPool {
+    handles: Vec<WorkerHandle>,
+    reports: Arc<Mailbox<BatchReport>>,
+}
+
+impl WorkerPool {
+    /// Graceful shutdown on drain: tell every worker to exit, join them,
+    /// and hand back each shard's finalized metrics. A worker that died
+    /// to an uncaught panic surfaces as `Err` with its payload.
+    fn shutdown(
+        mut self,
+    ) -> std::result::Result<Vec<(usize, RunMetrics)>, Box<dyn std::any::Any + Send>> {
+        for h in &self.handles {
+            h.inbox.send(WorkerMsg::Shutdown);
+        }
+        let mut all = Vec::new();
+        let mut panicked = None;
+        for h in &mut self.handles {
+            if let Some(join) = h.join.take() {
+                match join.join() {
+                    Ok(mut metrics) => all.append(&mut metrics),
+                    Err(p) => panicked = Some(p),
+                }
+            }
+        }
+        match panicked {
+            Some(p) => Err(p),
+            None => Ok(all),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for h in &self.handles {
+            if h.join.is_some() {
+                h.inbox.send(WorkerMsg::Shutdown);
+            }
+        }
+        for h in &mut self.handles {
+            if let Some(join) = h.join.take() {
+                // Already unwinding or discarding: swallow a worker panic
+                // rather than aborting the process with a double panic.
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// One device shard's coordinator-side state: admission, placement and
+/// clock bookkeeping. The engine itself lives on the shard's worker
+/// thread ([`ShardExec`]).
+struct ShardSlot {
+    /// Owned device spec (the worker holds its own clone).
+    dev: DeviceSpec,
     /// Placed, waiting for the shard to go idle: `(query, arrival_ps)`.
     pending: Vec<(Query, u64)>,
-    /// The batch currently executing.
+    /// The batch currently executing (on the virtual clock).
     running: Vec<(Query, u64)>,
-    /// Reset scratch: the query slice handed to the engine.
+    /// The query buffer that rides the launch message (capacity reused
+    /// every batch; empty while a launch is in flight).
     batch_queries: Vec<Query>,
+    /// The in-flight batch's distance copies, folded at its virtual
+    /// completion; the container itself recycles through the messages.
+    batch_dists: Vec<Vec<u32>>,
     start_ps: u64,
     busy_until_ps: u64,
     busy: bool,
@@ -412,8 +804,6 @@ struct ShardState<'a> {
     /// placement minimizes (degree 0 counts as 1 so empty-frontier
     /// queries still occupy a slot).
     outstanding_edges: u64,
-    /// Cycle watermark for per-batch durations on a cumulative context.
-    prev_cycles: u64,
     /// Integer virtual-clock step of this device.
     ps_per_cycle: u64,
     /// Cached [`DeviceSpec::throughput_index`].
@@ -434,27 +824,35 @@ pub struct Scheduler<'a> {
     queue: AdmissionQueue,
     /// Arrivals stalled by [`OverflowPolicy::Block`], in arrival order.
     blocked: VecDeque<(Query, u64)>,
-    shards: Vec<ShardState<'a>>,
+    shards: Vec<ShardSlot>,
+    pool: WorkerPool,
+    /// Reports parked between the dispatch barrier and the shard-order
+    /// fold (slot `i` holds shard `i`'s report for the current round).
+    round: Vec<Option<BatchReport>>,
+    /// Per-shard worker-side trace rings, created at attach, recycled
+    /// through the launch messages (`None` when tracing is off or the
+    /// ring is in flight).
+    rings: Vec<Option<TraceSink>>,
     now_ps: u64,
     blocked_events: u64,
     batches: u64,
-    wait_ps_total: u64,
     wait_hist: LogHistogram,
     latency_hist: LogHistogram,
     outcomes: Vec<QueryOutcome>,
     dropped: Vec<Query>,
     placed_order: Vec<u32>,
     /// Optional telemetry sink ([`Scheduler::attach_trace`]): admission /
-    /// placement / batch events are recorded here, and the sink travels
-    /// into the dispatching shard's `ExecCtx` for the duration of each
-    /// batch so engine events share the timeline.
+    /// placement / batch events are recorded here directly; engine events
+    /// arrive via the per-shard rings, absorbed in shard order at the
+    /// dispatch fold so the byte order matches the sequential loop.
     trace: Option<&'a mut TraceSink>,
 }
 
 impl<'a> Scheduler<'a> {
     /// Build the event loop over `arrivals` (sorted by arrival time if
-    /// not already). Every growable buffer is pre-reserved to its
-    /// worst-case size here, so steady-state steps allocate nothing.
+    /// not already) and spawn the worker threads. Every growable buffer
+    /// is pre-reserved to its worst-case size here, so steady-state steps
+    /// allocate nothing — on the coordinator and on every worker.
     pub fn new(
         graph: Arc<Csr>,
         mut arrivals: Vec<Arrival>,
@@ -469,36 +867,70 @@ impl<'a> Scheduler<'a> {
         }
         arrivals.sort_by_key(|a| a.at_ps);
         let n_arrivals = arrivals.len();
-        let mut shards = Vec::with_capacity(cfg.serve.devices.len());
-        for (id, dev) in cfg.serve.devices.iter().enumerate() {
-            let mut ctx = ExecCtx::new(dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
-            if cfg.serve.enforce_budget {
-                ctx = ctx.with_budget(dev.memory_budget);
-            }
-            let engine = QueryBatch::with_cache(
-                graph.clone(),
-                &[],
-                cfg.serve.strategy,
-                cfg.serve.params.clone(),
-                cache.scoped(id),
-            )?;
-            shards.push(ShardState {
-                dev,
-                ctx,
-                engine,
+        let n_shards = cfg.serve.devices.len();
+        let n_workers = match cfg.workers {
+            0 => n_shards,
+            w => w.min(n_shards),
+        };
+        let mut shards = Vec::with_capacity(n_shards);
+        for dev in &cfg.serve.devices {
+            shards.push(ShardSlot {
+                dev: dev.clone(),
                 pending: Vec::with_capacity(cfg.serve.max_batch),
                 running: Vec::with_capacity(cfg.serve.max_batch),
                 batch_queries: Vec::with_capacity(cfg.serve.max_batch),
+                batch_dists: Vec::with_capacity(if cfg.collect_distances {
+                    cfg.serve.max_batch
+                } else {
+                    0
+                }),
                 start_ps: 0,
                 busy_until_ps: 0,
                 busy: false,
                 busy_ps_total: 0,
                 outstanding_edges: 0,
-                prev_cycles: 0,
                 ps_per_cycle: dev.ps_per_cycle(),
                 tp: dev.throughput_index(),
                 served: Vec::with_capacity(n_arrivals),
                 dists: Vec::with_capacity(if cfg.collect_distances { n_arrivals } else { 0 }),
+            });
+        }
+        // Shard i lives on worker i % n_workers for its whole life (an
+        // engine never migrates between threads). `workers = 1` runs the
+        // identical machinery on one thread — same messages, same fold.
+        let reports = Arc::new(Mailbox::with_capacity(n_shards));
+        let mut pool = WorkerPool {
+            handles: Vec::with_capacity(n_workers),
+            reports,
+        };
+        for w in 0..n_workers {
+            let shard_seeds: Vec<ShardSeed> = (w..n_shards)
+                .step_by(n_workers)
+                .map(|id| ShardSeed {
+                    shard: id,
+                    dev: cfg.serve.devices[id].clone(),
+                    cache: cache.scoped(id),
+                })
+                .collect();
+            let inbox = Arc::new(Mailbox::with_capacity(shard_seeds.len() + 1));
+            let seed = WorkerSeed {
+                shards: shard_seeds,
+                graph: graph.clone(),
+                strategy: cfg.serve.strategy,
+                params: cfg.serve.params.clone(),
+                enforce_budget: cfg.serve.enforce_budget,
+                max_iterations: cfg.serve.max_iterations,
+                collect_distances: cfg.collect_distances,
+            };
+            let worker_inbox = inbox.clone();
+            let worker_reports = pool.reports.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("lonestar-shard-worker-{w}"))
+                .spawn(move || worker_main(seed, &worker_inbox, &worker_reports))
+                .map_err(Error::Io)?;
+            pool.handles.push(WorkerHandle {
+                inbox,
+                join: Some(join),
             });
         }
         Ok(Scheduler {
@@ -509,10 +941,12 @@ impl<'a> Scheduler<'a> {
             queue: AdmissionQueue::new(cfg.queue_cap),
             blocked: VecDeque::with_capacity(n_arrivals),
             shards,
+            pool,
+            round: (0..n_shards).map(|_| None).collect(),
+            rings: (0..n_shards).map(|_| None).collect(),
             now_ps: 0,
             blocked_events: 0,
             batches: 0,
-            wait_ps_total: 0,
             wait_hist: LogHistogram::new(),
             latency_hist: LogHistogram::new(),
             outcomes: Vec::with_capacity(n_arrivals),
@@ -524,8 +958,15 @@ impl<'a> Scheduler<'a> {
 
     /// Attach a pre-allocated telemetry sink: every event from here on is
     /// recorded (ring overwrite on overflow — never an allocation, so the
-    /// zero-alloc steady state holds with tracing live).
+    /// zero-alloc steady state holds with tracing live). Each shard gets
+    /// a private ring of the same capacity for its engine events; with
+    /// equal capacities, [`TraceSink::absorb`] reproduces the sequential
+    /// ring byte-for-byte in every wrap-around regime.
     pub fn attach_trace(&mut self, sink: &'a mut TraceSink) {
+        let cap = sink.capacity();
+        for ring in &mut self.rings {
+            *ring = Some(TraceSink::with_capacity(cap));
+        }
         self.trace = Some(sink);
     }
 
@@ -534,6 +975,12 @@ impl<'a> Scheduler<'a> {
     /// capacity once a full-size batch has run).
     pub fn batches_launched(&self) -> u64 {
         self.batches
+    }
+
+    /// Worker threads actually spawned (`cfg.workers` clamped to the
+    /// shard count; `0` means one per shard).
+    pub fn worker_threads(&self) -> usize {
+        self.pool.handles.len()
     }
 
     /// Advance the virtual clock to the next event (a batch completion or
@@ -673,14 +1120,20 @@ impl<'a> Scheduler<'a> {
         moved
     }
 
-    /// Retire shard `i`'s finished batch: record outcomes, extract
-    /// distances, release its memory accounting, keep the engine warm.
+    /// Retire shard `i`'s finished batch on the virtual clock: record
+    /// outcomes, fold the distance copies its worker extracted, update the
+    /// load signal. (The engine itself already retired on the worker,
+    /// buffers kept warm.)
     fn complete(&mut self, i: usize) {
         let s = &mut self.shards[i];
         s.busy = false;
         let width = s.running.len() as u64;
         s.busy_ps_total += s.busy_until_ps - s.start_ps;
-        for (k, &(query, arrival_ps)) in s.running.iter().enumerate() {
+        debug_assert!(
+            !self.cfg.collect_distances || s.batch_dists.len() == s.running.len(),
+            "one distance array per running query"
+        );
+        for &(query, arrival_ps) in &s.running {
             self.outcomes.push(QueryOutcome {
                 query,
                 shard: i,
@@ -690,13 +1143,12 @@ impl<'a> Scheduler<'a> {
             });
             self.latency_hist.record(s.busy_until_ps - arrival_ps);
             s.served.push(query);
-            if self.cfg.collect_distances {
-                s.dists.push(s.engine.distances(k));
-            }
             s.outstanding_edges -= (self.graph.degree(query.source) as u64).max(1);
         }
+        // Distance copies were extracted in batch order on the worker, so
+        // appending keeps `served[k] ↔ dists[k]` aligned per shard.
+        s.dists.append(&mut s.batch_dists);
         s.running.clear();
-        s.engine.retire(&mut s.ctx);
         if let Some(t) = self.trace.as_deref_mut() {
             // The busy interval is only known complete here, so the slice
             // is recorded at retirement, stamped back at its start.
@@ -769,97 +1221,174 @@ impl<'a> Scheduler<'a> {
         placed
     }
 
-    /// Launch every idle shard's pending queries as one batch and stamp
-    /// its completion on the shared timeline via the shard's own clock.
+    /// Launch every idle shard's pending queries as one batch each, run
+    /// the batches **concurrently** on the worker threads, and fold the
+    /// reports in ascending shard order.
+    ///
+    /// The collect-everything barrier is not a simplification but the
+    /// semantics: the virtual clock's next event depends on every
+    /// launched batch's duration, so the round must complete before the
+    /// coordinator can move time forward. It also leaves workers
+    /// provably idle whenever the coordinator runs — which is what lets
+    /// the allocation harness snapshot counters at quiescent instants.
     fn dispatch(&mut self) -> Result<()> {
         let now = self.now_ps;
-        let max_iterations = self.cfg.serve.max_iterations;
-        // The sink moves: scheduler → dispatching shard's ExecCtx (so the
-        // engine's kernel/decision events land on the shared timeline) →
-        // back. A move of an Option<&mut _>, not a reborrow — the loop
-        // below must restore it on every path, error included.
-        let mut trace = self.trace.take();
-        let mut failed: Option<Error> = None;
+        let n_workers = self.pool.handles.len();
+        // Phase 1: hand every idle shard with pending work to its worker,
+        // ascending shard id.
+        let mut launched = 0usize;
         for i in 0..self.shards.len() {
             let s = &mut self.shards[i];
             if s.busy || s.pending.is_empty() {
                 continue;
             }
-            s.batch_queries.clear();
+            let mut queries = std::mem::take(&mut s.batch_queries);
+            queries.clear();
             for &(query, at_ps) in &s.pending {
-                s.batch_queries.push(query);
-                self.wait_ps_total += now - at_ps;
+                queries.push(query);
                 self.wait_hist.record(now - at_ps);
             }
-            if let Some(t) = trace.as_deref_mut() {
-                t.record(TraceEvent {
-                    shard: i as u32,
-                    a: s.batch_queries.len() as u64,
-                    b: self.batches,
-                    ..TraceEvent::new(TraceEventKind::BatchLaunch, now)
-                });
-            }
-            s.ctx.trace = trace.take();
-            s.ctx.trace_base_ps = now;
-            s.ctx.trace_base_cycles = s.ctx.metrics.total_cycles();
-            s.ctx.trace_shard = i as u32;
-            let launched = s
-                .engine
-                .reset(&mut s.ctx, &s.batch_queries)
-                .and_then(|()| s.engine.run(&mut s.ctx, max_iterations));
-            trace = s.ctx.trace.take();
-            if let Err(e) = launched {
-                failed = Some(e);
-                break;
-            }
-            let total = s.ctx.metrics.total_cycles();
-            let cycles = total - s.prev_cycles;
-            s.prev_cycles = total;
-            s.start_ps = now;
-            s.busy_until_ps = now + cycles.max(1) * s.ps_per_cycle;
-            s.busy = true;
-            std::mem::swap(&mut s.running, &mut s.pending);
-            self.batches += 1;
+            let trace = if self.trace.is_some() {
+                self.rings[i].take()
+            } else {
+                None
+            };
+            let dists = std::mem::take(&mut s.batch_dists);
+            self.pool.handles[i % n_workers].inbox.send(WorkerMsg::Launch(LaunchMsg {
+                shard: i,
+                base_ps: now,
+                queries,
+                trace,
+                dists,
+            }));
+            launched += 1;
         }
-        self.trace = trace;
+        // Phase 2: barrier — collect the whole round (arrival order is
+        // whatever the OS scheduled; the slots re-impose shard order).
+        for _ in 0..launched {
+            let report = self.pool.reports.recv();
+            debug_assert!(
+                self.round[report.shard].is_none(),
+                "one report per shard per round"
+            );
+            self.round[report.shard] = Some(report);
+        }
+        // Phase 3: fold in fixed shard order — gpucachesim's
+        // `core_sim_order`. Counters, trace bytes and error precedence
+        // all match what the sequential loop produced.
+        let mut failed: Option<Error> = None;
+        for i in 0..self.shards.len() {
+            let Some(mut report) = self.round[i].take() else {
+                continue;
+            };
+            if let Some(payload) = report.panic.take() {
+                // Re-raise the engine's panic on the coordinator; the
+                // pool's Drop shuts the (healthy, idle) workers down.
+                std::panic::resume_unwind(payload);
+            }
+            let width = report.queries.len() as u64;
+            if failed.is_none() {
+                if let Some(t) = self.trace.as_deref_mut() {
+                    t.record(TraceEvent {
+                        shard: i as u32,
+                        a: width,
+                        b: self.batches,
+                        ..TraceEvent::new(TraceEventKind::BatchLaunch, now)
+                    });
+                    if let Some(ring) = report.trace.as_ref() {
+                        t.absorb(ring);
+                    }
+                }
+            }
+            if let Some(mut ring) = report.trace.take() {
+                ring.clear();
+                self.rings[i] = Some(ring);
+            }
+            let s = &mut self.shards[i];
+            s.batch_queries = report.queries;
+            s.batch_dists = report.dists;
+            match report.result {
+                Ok(cycles) if failed.is_none() => {
+                    s.start_ps = now;
+                    s.busy_until_ps = now + cycles.max(1) * s.ps_per_cycle;
+                    s.busy = true;
+                    std::mem::swap(&mut s.running, &mut s.pending);
+                    self.batches += 1;
+                }
+                Ok(_) => {
+                    // An earlier shard's engine failed this round: the
+                    // sequential loop stopped before launching this one,
+                    // so leave it idle with its pending queries intact
+                    // (the run is aborting; its distance copies go).
+                    s.batch_dists.clear();
+                }
+                Err(e) => {
+                    s.batch_dists.clear();
+                    if failed.is_none() {
+                        failed = Some(e);
+                    }
+                }
+            }
+        }
         match failed {
             Some(e) => Err(e),
             None => Ok(()),
         }
     }
 
-    /// Drain the stream and assemble the report.
+    /// Drain the stream, shut the workers down (graceful join), and
+    /// assemble the report.
     pub fn finish(self) -> ScheduleReport {
-        let ref_ppc = self.cfg.serve.devices[0].ps_per_cycle().max(1);
-        let mut shards = Vec::with_capacity(self.shards.len());
-        for (i, mut s) in self.shards.into_iter().enumerate() {
+        let Scheduler {
+            shards,
+            pool,
+            outcomes,
+            dropped,
+            placed_order,
+            next_arrival,
+            queue,
+            blocked_events,
+            batches,
+            now_ps,
+            wait_hist,
+            latency_hist,
+            ..
+        } = self;
+        let mut metrics_by_shard: Vec<Option<RunMetrics>> =
+            (0..shards.len()).map(|_| None).collect();
+        match pool.shutdown() {
+            Ok(all) => {
+                for (shard, metrics) in all {
+                    metrics_by_shard[shard] = Some(metrics);
+                }
+            }
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+        let mut shard_reports = Vec::with_capacity(shards.len());
+        for (i, s) in shards.into_iter().enumerate() {
             debug_assert!(!s.busy && s.pending.is_empty(), "finish before drain");
-            s.ctx.finalize_metrics();
-            let metrics = std::mem::take(&mut s.ctx.metrics);
-            drop(s.ctx);
-            shards.push(ShardReport {
+            shard_reports.push(ShardReport {
                 shard: i,
-                device: s.dev.clone(),
+                device: s.dev,
                 queries: s.served,
-                metrics,
+                metrics: metrics_by_shard[i].take().unwrap_or_default(),
                 dists: s.dists,
                 busy_ps: s.busy_ps_total,
             });
         }
         ScheduleReport {
-            shards,
-            outcomes: self.outcomes,
-            dropped: self.dropped,
-            placed_order: self.placed_order,
-            arrived: self.next_arrival as u64,
-            admitted: self.queue.admitted,
-            queue_peak: self.queue.peak,
-            blocked: self.blocked_events,
-            batches: self.batches,
-            wait_cycles: self.wait_ps_total / ref_ppc,
-            wall_ps: self.now_ps,
-            wait_hist: self.wait_hist,
-            latency_hist: self.latency_hist,
+            shards: shard_reports,
+            outcomes,
+            dropped,
+            placed_order,
+            arrived: next_arrival as u64,
+            admitted: queue.admitted,
+            queue_peak: queue.peak,
+            blocked: blocked_events,
+            batches,
+            wall_ps: now_ps,
+            wait_hist,
+            latency_hist,
         }
     }
 }
@@ -1008,6 +1537,46 @@ mod tests {
         assert_eq!(a.shards[1].device.name, "gtx680");
         assert!(a.total_ms() > 0.0 && a.wall_ms() > 0.0);
         assert!(a.mean_latency_ms() <= a.p95_latency_ms());
+    }
+
+    #[test]
+    fn worker_counts_do_not_change_the_schedule() {
+        // The fold-order contract in miniature (the full byte-level pin
+        // lives in tests/parallel_determinism.rs): 1, 2 and
+        // one-per-shard workers produce the identical report.
+        let g = Arc::new(rmat(8, 2048, RmatParams::default(), 17).unwrap());
+        let mut reports = Vec::new();
+        for workers in [1usize, 2, 3] {
+            let cfg = SchedulerConfig {
+                serve: ServeConfig {
+                    devices: vec![
+                        DeviceSpec::k20c(),
+                        DeviceSpec::k40(),
+                        DeviceSpec::gtx680(),
+                    ],
+                    max_batch: 8,
+                    ..Default::default()
+                },
+                queue_cap: 16,
+                workers,
+                ..Default::default()
+            };
+            let arrivals = stream(&g, 48, 50_000, 29);
+            let sched = {
+                let mut s = Scheduler::new(g.clone(), arrivals, &cfg, &GraphCache::new()).unwrap();
+                assert_eq!(s.worker_threads(), workers.min(3));
+                while s.step().unwrap() {}
+                s.finish()
+            };
+            reports.push(sched);
+        }
+        let first = &reports[0];
+        for other in &reports[1..] {
+            assert_eq!(first.outcomes, other.outcomes);
+            assert_eq!(first.placed_order, other.placed_order);
+            assert_eq!(first.batches, other.batches);
+            assert_eq!(first.to_json().to_string(), other.to_json().to_string());
+        }
     }
 
     #[test]

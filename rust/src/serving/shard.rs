@@ -202,10 +202,6 @@ pub struct AggregateMetrics {
     pub dropped: u64,
     /// Peak depth the admission queue reached.
     pub queue_peak: u64,
-    /// Σ over served queries of the cycles spent between arrival and
-    /// batch launch, on the *reference* device clock (`devices[0]`) — the
-    /// one cross-shard-comparable latency unit a heterogeneous pool has.
-    pub wait_cycles: u64,
     /// Σ processing-kernel launches that committed at least one warp.
     pub profiled_kernels: u64,
     /// Σ straggler cycles: per kernel, (max-warp − mean-warp) busy cycles.

@@ -281,6 +281,50 @@ impl TraceSink {
         self.kind_counts[kind as usize]
     }
 
+    /// Replay another sink's surviving events into this ring and fold in
+    /// the counts of the events it already lost to wrap-around, exactly
+    /// as if every event `other` ever saw had been [`record`]ed here
+    /// directly, in order. Never allocates.
+    ///
+    /// This is the parallel scheduler's deterministic trace merge: each
+    /// shard's worker records engine events into a private ring of the
+    /// **same capacity** as the main sink, and the coordinator absorbs
+    /// the rings in fixed shard order. With equal capacities the
+    /// reproduction is byte-exact in every wrap-around regime — events
+    /// `other` dropped are ones this ring would also have dropped (they
+    /// are followed by ≥ capacity others from `other` alone), and the
+    /// counter adjustments below account for them:
+    ///
+    /// * `recorded` grows by everything `other` saw (replayed + lost);
+    /// * `overwritten` grows by `other`'s losses plus whatever the
+    ///   replay itself evicts here;
+    /// * `kind_counts` fold in `other`'s lifetime totals (the replay
+    ///   writes ring slots directly, so survivors and lost events alike
+    ///   are covered by the one fold).
+    pub fn absorb(&mut self, other: &TraceSink) {
+        debug_assert_eq!(
+            self.capacity(),
+            other.capacity(),
+            "absorb is byte-exact only for equal ring capacities"
+        );
+        let cap = self.buf.len();
+        let start = (other.head + other.buf.len() - other.len) % other.buf.len();
+        for i in 0..other.len {
+            self.buf[self.head] = other.buf[(start + i) % other.buf.len()];
+            self.head = (self.head + 1) % cap;
+            if self.len < cap {
+                self.len += 1;
+            } else {
+                self.overwritten += 1;
+            }
+        }
+        self.recorded += other.recorded;
+        self.overwritten += other.recorded - other.len as u64;
+        for k in 0..TraceEventKind::COUNT {
+            self.kind_counts[k] += other.kind_counts[k];
+        }
+    }
+
     /// Forget all events and totals; capacity (and its allocation) stays.
     pub fn clear(&mut self) {
         self.head = 0;
@@ -342,6 +386,59 @@ mod tests {
         assert_eq!(sink.capacity(), 1);
         sink.record(ev(TraceEventKind::Arrival, 7));
         assert_eq!(sink.events().next().unwrap().at_ps, 7);
+    }
+
+    /// `absorb` must be indistinguishable from having recorded the other
+    /// sink's events directly — the invariant the parallel scheduler's
+    /// trace merge rests on. Exercised in three regimes: no wrap, the
+    /// absorbed batch wrapping the target, and a pre-wrapped source.
+    #[test]
+    fn absorb_matches_direct_recording() {
+        // (target capacity, events already in target, events in source)
+        for &(cap, pre, n) in &[(8usize, 3u64, 4u64), (4, 3, 6), (3, 2, 9), (5, 7, 11)] {
+            let mut direct = TraceSink::with_capacity(cap);
+            let mut target = TraceSink::with_capacity(cap);
+            for i in 0..pre {
+                direct.record(ev(TraceEventKind::Arrival, i));
+                target.record(ev(TraceEventKind::Arrival, i));
+            }
+            let mut source = TraceSink::with_capacity(cap);
+            for i in 0..n {
+                // Alternate kinds so per-kind counters are exercised too.
+                let kind = if i % 2 == 0 {
+                    TraceEventKind::Kernel
+                } else {
+                    TraceEventKind::FrontierSize
+                };
+                direct.record(ev(kind, 100 + i));
+                source.record(ev(kind, 100 + i));
+            }
+            target.absorb(&source);
+            let d: Vec<u64> = direct.events().map(|e| e.at_ps).collect();
+            let t: Vec<u64> = target.events().map(|e| e.at_ps).collect();
+            assert_eq!(d, t, "cap={cap} pre={pre} n={n}: event order");
+            assert_eq!(direct.recorded(), target.recorded(), "cap={cap} pre={pre} n={n}");
+            assert_eq!(direct.overwritten(), target.overwritten(), "cap={cap} pre={pre} n={n}");
+            for kind in TraceEventKind::ALL {
+                assert_eq!(
+                    direct.kind_count(kind),
+                    target.kind_count(kind),
+                    "cap={cap} pre={pre} n={n}: {}",
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_empty_source_is_a_noop() {
+        let mut target = TraceSink::with_capacity(4);
+        target.record(ev(TraceEventKind::Admit, 1));
+        let source = TraceSink::with_capacity(4);
+        target.absorb(&source);
+        assert_eq!(target.len(), 1);
+        assert_eq!(target.recorded(), 1);
+        assert_eq!(target.overwritten(), 0);
     }
 
     #[test]

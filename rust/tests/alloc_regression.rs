@@ -170,11 +170,22 @@ fn steady_state_iterations_allocate_nothing() {
     // arrivals, admissions, blocked drains, placements, batch launches
     // (QueryBatch::reset + run on a persistent engine) and completions —
     // allocates zero bytes.
-    scheduler_steady_state_allocates_nothing(&er, false);
+    scheduler_steady_state_allocates_nothing(&er, false, 1, 0);
     // Same loop with a TraceSink attached: recording is an index write
     // into the pre-allocated ring, so observability must not cost the
     // steady state its zero-alloc contract.
-    scheduler_steady_state_allocates_nothing(&er, true);
+    scheduler_steady_state_allocates_nothing(&er, true, 1, 0);
+    // Worker threads: the counting allocator is process-wide (it tallies
+    // every thread), and the dispatch barrier leaves workers idle
+    // whenever `step` returns — so a zero delta across a step proves the
+    // coordinator AND every worker allocated nothing: launch/report
+    // messages ride pre-allocated mailbox slots and each worker
+    // re-assembles its ExecCtx from persistent parts by swap. Two shards
+    // on one worker, then true two-thread parallelism, with and without
+    // tracing (per-shard rings are pre-allocated at attach).
+    scheduler_steady_state_allocates_nothing(&er, false, 2, 1);
+    scheduler_steady_state_allocates_nothing(&er, false, 2, 2);
+    scheduler_steady_state_allocates_nothing(&er, true, 2, 2);
 }
 
 /// Drive the scheduler over a fixed burst-arrival stream (identical
@@ -184,9 +195,20 @@ fn steady_state_iterations_allocate_nothing() {
 /// and belongs to result *extraction*, not the scheduling loop. With
 /// `traced`, a pre-allocated [`lonestar_lb::telemetry::TraceSink`] rides
 /// along and the same zero-delta assertions must hold.
-fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>, traced: bool) {
-    const COUNT: u32 = 40;
-    let arrivals: Vec<Arrival> = (0..COUNT)
+///
+/// `shards` grows the homogeneous pool and `workers` picks the thread
+/// count (0 = one per shard). The allocation counters are process-wide,
+/// so the per-step zero delta covers every worker thread too — the
+/// dispatch barrier guarantees workers are quiescent between steps,
+/// making the snapshot pairs race-free.
+fn scheduler_steady_state_allocates_nothing(
+    g: &Arc<Csr>,
+    traced: bool,
+    shards: usize,
+    workers: usize,
+) {
+    let count: u32 = if shards > 1 { 72 } else { 40 };
+    let arrivals: Vec<Arrival> = (0..count)
         .map(|i| Arrival {
             query: Query {
                 id: i,
@@ -199,30 +221,37 @@ fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>, traced: bool) {
     let cfg = SchedulerConfig {
         serve: ServeConfig {
             strategy: StrategyKind::BS,
+            devices: vec![DeviceSpec::k20c(); shards],
             max_batch: 4,
             ..Default::default()
         },
         queue_cap: 8,
-        // Block: nothing is shed, so the stream sustains ~10 identical
+        // Block: nothing is shed, so the stream sustains many identical
         // batches — a long measured window.
         overflow: OverflowPolicy::Block,
         collect_distances: false,
+        workers,
     };
     let cache = GraphCache::new();
     // Declared before the scheduler so the sink outlives its borrow; its
     // one allocation happens here, before any measured step.
     let mut sink = lonestar_lb::telemetry::TraceSink::with_capacity(1 << 14);
     let mut sched = Scheduler::new(g.clone(), arrivals, &cfg, &cache).expect("scheduler");
+    assert_eq!(
+        sched.worker_threads(),
+        if workers == 0 { shards } else { workers.min(shards) }
+    );
     if traced {
         sched.attach_trace(&mut sink);
     }
     let mut steps = 0usize;
     let mut measured = 0usize;
     loop {
-        // Warm once two batches have launched: the first is a singleton
-        // (the burst is still arriving), the second is full-size and
-        // grows every buffer to its high-water capacity.
-        let warm = sched.batches_launched() >= 2;
+        // Warm once every shard has launched a full-size batch: the first
+        // launch per shard is narrow (the burst is still arriving), the
+        // next is full-size and grows that shard's buffers to their
+        // high-water capacity — hence 2 batches per shard.
+        let warm = sched.batches_launched() >= 2 * shards as u64;
         let (c0, b0) = snapshot();
         let more = sched.step().expect("scheduler step");
         let (c1, b1) = snapshot();
@@ -247,15 +276,15 @@ fn scheduler_steady_state_allocates_nothing(g: &Arc<Csr>, traced: bool) {
         "only {measured} steady scheduler steps measured — grow the stream"
     );
     let report = sched.finish();
-    assert_eq!(report.arrived, COUNT as u64);
-    assert_eq!(report.served() as u64, COUNT as u64, "block policy serves all");
+    assert_eq!(report.arrived, count as u64);
+    assert_eq!(report.served() as u64, count as u64, "block policy serves all");
     assert!(report.dropped.is_empty());
     assert!(report.batches >= 3);
     if traced {
         use lonestar_lb::telemetry::TraceEventKind;
         assert!(sink.recorded() > 0, "attached sink must capture the run");
         assert_eq!(sink.overwritten(), 0, "ring must not wrap at this scale");
-        assert_eq!(sink.kind_count(TraceEventKind::Arrival), COUNT as u64);
+        assert_eq!(sink.kind_count(TraceEventKind::Arrival), count as u64);
         assert_eq!(sink.kind_count(TraceEventKind::BatchLaunch), report.batches);
         assert_eq!(
             sink.kind_count(TraceEventKind::ShardBusy),

@@ -164,7 +164,7 @@ fn serve_scheduler_admission_control_end_to_end() {
     assert!(queue_peak > 64 && queue_peak <= 90, "queue_peak {queue_peak}");
     assert!(
         v.get("wait_cycles").is_none(),
-        "wait_cycles was deprecated out of the report JSON; read wait_ms_*"
+        "wait_cycles is fully removed (accessor and all); read wait_ms_*"
     );
     assert!(v.get("latency_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
     let shards = v.get("shards").unwrap().as_arr().unwrap();
@@ -185,7 +185,7 @@ fn serve_scheduler_admission_control_end_to_end() {
     }
     assert!(
         totals.get("wait_cycles").is_none(),
-        "wait_cycles must be gone from totals too"
+        "wait_cycles stays gone from totals"
     );
 }
 

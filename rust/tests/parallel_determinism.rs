@@ -1,0 +1,144 @@
+//! The parallel scheduler's determinism proof: for every seeded
+//! configuration, `workers = 1`, `workers = 2` and one-worker-per-shard
+//! produce **byte-identical** outputs — the `ScheduleReport` JSON, the
+//! Chrome trace (`--trace-out`), the profile JSON (`--profile-out`) and
+//! the Prometheus exposition (`--metrics-out`) — and repeated runs at the
+//! same worker count are self-identical (no fold-order races).
+//!
+//! Why this holds by construction: every ordering decision (admission,
+//! placement, launch, trace merge, report fold) happens on the
+//! coordinator in fixed shard order; worker threads only compute batch
+//! results, which are pure functions of their inputs. These tests are
+//! the regression net under that argument — any future change that lets
+//! thread scheduling leak into an export fails them loudly.
+
+use lonestar_lb::arena::GraphCache;
+use lonestar_lb::graph::generators::{rmat, RmatParams};
+use lonestar_lb::graph::Csr;
+use lonestar_lb::serving::{
+    serve_stream_traced, synthetic_arrivals, OverflowPolicy, SchedulerConfig, ServeConfig,
+};
+use lonestar_lb::sim::DeviceSpec;
+use lonestar_lb::telemetry::{chrome_trace, profile_report, TraceSink};
+use std::sync::Arc;
+
+const POOL_NAMES: [&str; 3] = ["k20c", "k40", "gtx680"];
+
+fn pool() -> Vec<DeviceSpec> {
+    vec![DeviceSpec::k20c(), DeviceSpec::k40(), DeviceSpec::gtx680()]
+}
+
+fn graph() -> Arc<Csr> {
+    Arc::new(rmat(9, 4096, RmatParams::default(), 42).unwrap())
+}
+
+/// Every export surface of one seeded run, as bytes.
+struct RunArtifacts {
+    report_json: String,
+    trace: String,
+    profile: String,
+    prometheus: String,
+}
+
+fn run(
+    g: &Arc<Csr>,
+    seed: u64,
+    overflow: OverflowPolicy,
+    workers: usize,
+    trace_capacity: usize,
+) -> RunArtifacts {
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            devices: pool(),
+            max_batch: 12,
+            ..Default::default()
+        },
+        queue_cap: 24,
+        overflow,
+        collect_distances: true,
+        workers,
+    };
+    // A brisk stream: bursts deep enough that every shard runs several
+    // batches and the overflow policy actually fires.
+    let arrivals = synthetic_arrivals(g, 72, 0.5, 60_000, seed);
+    let shard_ppc: Vec<u64> = cfg.serve.devices.iter().map(|d| d.ps_per_cycle()).collect();
+    let mut sink = TraceSink::with_capacity(trace_capacity);
+    let report =
+        serve_stream_traced(g, arrivals, &cfg, &GraphCache::new(), Some(&mut sink)).unwrap();
+    RunArtifacts {
+        report_json: report.to_json().to_string(),
+        trace: chrome_trace(&sink, &POOL_NAMES),
+        profile: profile_report(&sink, &shard_ppc).to_string(),
+        prometheus: report.prometheus(Some(&sink)),
+    }
+}
+
+#[test]
+fn exports_are_byte_identical_across_worker_counts() {
+    let g = graph();
+    for seed in [3u64, 1911] {
+        for overflow in [OverflowPolicy::Drop, OverflowPolicy::Block] {
+            let baseline = run(&g, seed, overflow, 1, 1 << 14);
+            // 2 (shards share a worker) and 3 (one worker per shard — also
+            // what `workers: 0` resolves to for this pool).
+            for workers in [2usize, 3] {
+                let par = run(&g, seed, overflow, workers, 1 << 14);
+                let label = format!("seed={seed} {overflow:?} workers={workers}");
+                assert_eq!(baseline.report_json, par.report_json, "{label}: report");
+                assert_eq!(baseline.trace, par.trace, "{label}: chrome trace");
+                assert_eq!(baseline.profile, par.profile, "{label}: profile");
+                assert_eq!(baseline.prometheus, par.prometheus, "{label}: prometheus");
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_self_identical() {
+    // Same worker count, many repetitions: if fold order ever depended on
+    // which thread finished first, this would flake. Run it enough times
+    // that a race has a real chance to interleave differently.
+    let g = graph();
+    let first = run(&g, 7, OverflowPolicy::Drop, 3, 1 << 14);
+    for round in 0..5 {
+        let again = run(&g, 7, OverflowPolicy::Drop, 3, 1 << 14);
+        assert_eq!(first.report_json, again.report_json, "round {round}: report");
+        assert_eq!(first.trace, again.trace, "round {round}: trace");
+        assert_eq!(first.profile, again.profile, "round {round}: profile");
+        assert_eq!(first.prometheus, again.prometheus, "round {round}: prometheus");
+    }
+}
+
+#[test]
+fn wrap_around_rings_still_merge_byte_identically() {
+    // A deliberately tiny ring: both the per-shard worker rings and the
+    // main sink wrap several times, exercising `TraceSink::absorb`'s
+    // lost-event accounting. The sequential/parallel equality must hold
+    // even when events are being discarded.
+    let g = graph();
+    let baseline = run(&g, 11, OverflowPolicy::Block, 1, 96);
+    for workers in [2usize, 3] {
+        let par = run(&g, 11, OverflowPolicy::Block, workers, 96);
+        assert_eq!(
+            baseline.trace, par.trace,
+            "workers={workers}: wrapped trace must still match"
+        );
+        assert_eq!(
+            baseline.prometheus, par.prometheus,
+            "workers={workers}: lifetime counters must survive the wrap"
+        );
+    }
+}
+
+#[test]
+fn workers_zero_matches_one_per_shard() {
+    let g = graph();
+    let auto = run(&g, 5, OverflowPolicy::Drop, 0, 1 << 14);
+    let explicit = run(&g, 5, OverflowPolicy::Drop, 3, 1 << 14);
+    assert_eq!(auto.report_json, explicit.report_json);
+    assert_eq!(auto.trace, explicit.trace);
+    // Clamping: more workers than shards behaves like one per shard.
+    let clamped = run(&g, 5, OverflowPolicy::Drop, 64, 1 << 14);
+    assert_eq!(auto.report_json, clamped.report_json);
+    assert_eq!(auto.trace, clamped.trace);
+}

@@ -1,0 +1,131 @@
+//! Coordinator/worker handshake stress tests (the no-new-deps stand-in
+//! for a loom-style interleaving exploration): hammer the launch →
+//! barrier → fold protocol with many small batches across repeated runs
+//! and assert the invariants an interleaving bug would break —
+//!
+//! * **no lost batch**: every admitted query is served exactly once
+//!   (conservation: arrived == served + dropped at drain);
+//! * **no double-retire**: no query id appears in two outcomes, and the
+//!   per-shard `served`/`dists` stay aligned;
+//! * **clean shutdown**: dropping a scheduler mid-run — queue drained or
+//!   not, workers mid-batch or idle — joins every worker thread without
+//!   hanging or panicking.
+//!
+//! The heavy variant (`--ignored`) runs the same protocol long enough to
+//! give the OS scheduler a real chance to produce novel interleavings;
+//! CI runs the modest variant on every push.
+
+use lonestar_lb::arena::GraphCache;
+use lonestar_lb::graph::generators::erdos_renyi;
+use lonestar_lb::graph::Csr;
+use lonestar_lb::serving::{
+    serve_stream, synthetic_arrivals, OverflowPolicy, Scheduler, SchedulerConfig, ServeConfig,
+};
+use lonestar_lb::sim::DeviceSpec;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+fn cfg(workers: usize, overflow: OverflowPolicy) -> SchedulerConfig {
+    SchedulerConfig {
+        serve: ServeConfig {
+            devices: vec![DeviceSpec::k20c(), DeviceSpec::k40(), DeviceSpec::gtx680()],
+            // Tiny batches => many launch/report round-trips: the
+            // handshake, not the compute, dominates.
+            max_batch: 2,
+            ..Default::default()
+        },
+        queue_cap: 6,
+        overflow,
+        collect_distances: false,
+        workers,
+    }
+}
+
+/// One full run; asserts conservation and exactly-once service.
+fn run_and_check(g: &Arc<Csr>, queries: usize, seed: u64, workers: usize, overflow: OverflowPolicy) {
+    let arrivals = synthetic_arrivals(g, queries, 0.5, 20_000, seed);
+    let report = serve_stream(g, arrivals, &cfg(workers, overflow), &GraphCache::new()).unwrap();
+    assert_eq!(report.arrived, queries as u64, "every arrival consumed");
+    assert_eq!(
+        report.arrived,
+        report.served() as u64 + report.dropped.len() as u64,
+        "no lost batch: served + dropped == arrived"
+    );
+    let mut seen = HashSet::with_capacity(report.served());
+    for o in &report.outcomes {
+        assert!(
+            seen.insert(o.query.id),
+            "query {} served twice (double retire)",
+            o.query.id
+        );
+    }
+    for q in &report.dropped {
+        assert!(!seen.contains(&q.id), "query {} both dropped and served", q.id);
+    }
+    // Shard-level bookkeeping agrees with the outcome list.
+    let per_shard: usize = report.shards.iter().map(|s| s.queries.len()).sum();
+    assert_eq!(per_shard, report.served(), "shard rosters cover every outcome");
+    if overflow == OverflowPolicy::Block {
+        assert!(report.dropped.is_empty(), "block never sheds");
+    }
+}
+
+#[test]
+fn handshake_stress_modest() {
+    let g = Arc::new(erdos_renyi(256, 1024, 7, 3).unwrap());
+    for round in 0..4u64 {
+        for workers in [1usize, 2, 3] {
+            run_and_check(&g, 60, 100 + round, workers, OverflowPolicy::Drop);
+            run_and_check(&g, 60, 200 + round, workers, OverflowPolicy::Block);
+        }
+    }
+}
+
+/// The long soak: run `cargo test -- --ignored` (or the nightly CI job)
+/// to explore far more OS-level interleavings than the modest variant.
+#[test]
+#[ignore = "long soak; exercised by the nightly thread-sanitizer job"]
+fn handshake_stress_heavy() {
+    let g = Arc::new(erdos_renyi(512, 2048, 7, 3).unwrap());
+    for round in 0..40u64 {
+        for workers in [2usize, 3] {
+            run_and_check(&g, 200, 1_000 + round, workers, OverflowPolicy::Drop);
+            run_and_check(&g, 200, 2_000 + round, workers, OverflowPolicy::Block);
+        }
+    }
+}
+
+/// Dropping the scheduler without `finish` — mid-stream, workers idle at
+/// the barrier — must shut the pool down cleanly (send shutdown, join
+/// all). A deadlock here would hang the test harness, which is the
+/// assertion.
+#[test]
+fn drop_without_finish_shuts_down_cleanly() {
+    let g = Arc::new(erdos_renyi(256, 1024, 7, 3).unwrap());
+    for steps_before_drop in [0usize, 1, 3, 7] {
+        let arrivals = synthetic_arrivals(&g, 30, 0.5, 20_000, 99);
+        let config = cfg(2, OverflowPolicy::Block);
+        let mut sched = Scheduler::new(g.clone(), arrivals, &config, &GraphCache::new()).unwrap();
+        for _ in 0..steps_before_drop {
+            if !sched.step().unwrap() {
+                break;
+            }
+        }
+        drop(sched);
+    }
+}
+
+/// The drain edge: the queue empties while workers are mid-batch (the
+/// final dispatch round), and `finish` joins everyone gracefully.
+#[test]
+fn drain_while_workers_busy_then_finish() {
+    let g = Arc::new(erdos_renyi(256, 1024, 7, 3).unwrap());
+    for workers in [1usize, 2, 3] {
+        let arrivals = synthetic_arrivals(&g, 45, 0.5, 20_000, 17);
+        let config = cfg(workers, OverflowPolicy::Block);
+        let mut sched = Scheduler::new(g.clone(), arrivals, &config, &GraphCache::new()).unwrap();
+        while sched.step().unwrap() {}
+        let report = sched.finish();
+        assert_eq!(report.served() as u64, report.arrived);
+    }
+}

@@ -34,6 +34,7 @@ REQUIRED_RATIOS = {
     "serving": [
         "inspection_amortization",
         "scheduler_sim_qps",
+        "scheduler_par_qps",
     ],
 }
 
