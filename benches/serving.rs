@@ -19,8 +19,8 @@ use lonestar_lb::figures::serving::FIGSERVE_QUERIES;
 use lonestar_lb::figures::{fig_serving, FigureOpts};
 use lonestar_lb::graph::Graph;
 use lonestar_lb::serving::{
-    replay_single, serve, serve_stream, synthetic_arrivals, synthetic_queries, SchedulerConfig,
-    ServeConfig,
+    replay_single, serve, serve_stream, synthetic_arrivals, synthetic_queries, FaultPlan,
+    SchedulerConfig, ServeConfig,
 };
 use lonestar_lb::sim::DeviceSpec;
 use lonestar_lb::strategies::StrategyKind;
@@ -211,6 +211,58 @@ fn main() {
         },
     );
 
+    // Faulted scheduler case: the identical stream through a mid-stream
+    // outage — shard 0 stalls for 0.2 ms and shard 1 runs 3x slow for
+    // 0.3 ms while the burst is still backed up. Aborted batches land in
+    // the retry buffer and re-dispatch after backoff, so every query is
+    // still served; the headline `scheduler_faulted_qps` is *simulated*
+    // q/ms through the outage (counter-derived, machine-independent) and
+    // gates the recovery path: a regression that loses requeues or
+    // inflates backoff shows up as a throughput cliff against the
+    // baseline.
+    let fault_plan = FaultPlan::parse(
+        "stall:shard=0,at=0.02,for=0.2;slow:shard=1,at=0.05,factor=3,for=0.3",
+        n_devices,
+        opts.seed,
+    )
+    .expect("bench fault spec");
+    let mut faulted_cfg = sched_cfg.clone();
+    faulted_cfg.faults = Some(fault_plan);
+    let mut faulted_qps = 0.0f64;
+    suite.case(
+        &format!("scheduler/{}q-stream-2dev-faulted", 100),
+        0,
+        iters.max(1),
+        || {
+            let arrivals = synthetic_arrivals(&g, 100, 0.5, 100_000, opts.seed);
+            let report =
+                serve_stream(&g, arrivals, &faulted_cfg, &cache).expect("serve_stream faulted");
+            assert_eq!(
+                report.arrived,
+                report.served() as u64
+                    + report.dropped.len() as u64
+                    + report.deadline_expired.len() as u64
+                    + report.failed.len() as u64,
+                "faulted conservation: arrived == served + dropped + expired + failed"
+            );
+            assert!(
+                report.failed.is_empty(),
+                "transient faults must not exhaust retries ({} failed)",
+                report.failed.len()
+            );
+            faulted_qps = report.served() as f64 / report.wall_ms().max(1e-9);
+            format!(
+                "{} served, {} requeued / {} retries, {} batches, wall {:.2} ms, {:.2} q/ms",
+                report.served(),
+                report.requeued,
+                report.retries,
+                report.batches,
+                report.wall_ms(),
+                faulted_qps
+            )
+        },
+    );
+
     let results = suite.finish();
     // Fold the amortization claim into the shared bench baseline: the
     // inspection+decision work of batched-AD as a fraction of N
@@ -231,6 +283,7 @@ fn main() {
             ("inspection_amortization", amortization),
             ("scheduler_sim_qps", sched_qps),
             ("scheduler_par_qps", par_qps),
+            ("scheduler_faulted_qps", faulted_qps),
         ],
     );
     println!(

@@ -29,10 +29,19 @@
 //! queue_cap  = 64                      # serve: admission-queue bound
 //! queue_policy = drop                  # drop | block at a full queue
 //! workers    = 4                       # serve: shard worker threads (default: one per shard)
+//! fault_spec = stall:shard=1,at=2ms,for=1ms  # serve: fault-injection plan
+//!                                      #  (see serving::FaultPlan for the grammar)
+//! deadline_ms = 20                     # serve: per-query deadline (0 = off)
+//! max_retries = 3                      # serve: attempts after the first
+//! retry_backoff_ms = 1                 # serve: base of the exponential backoff
 //! trace_out  = trace.json              # write a Chrome trace-event file
 //! metrics_out = metrics.prom           # write Prometheus text exposition
 //! profile_out = profile.json           # write the load-imbalance profile
 //! ```
+//!
+//! Unknown keys are rejected with the nearest valid key named in the
+//! error (`unknown config key "queu_cap"; did you mean "queue_cap"?`), so
+//! a typo never silently runs the default experiment.
 
 use crate::algorithms::AlgoKind;
 use crate::coordinator::engine::Backend;
@@ -220,6 +229,17 @@ pub struct ExperimentConfig {
     /// default) means one per shard. Any value yields byte-identical
     /// output — it only changes how many cores the pool uses.
     pub workers: usize,
+    /// Fault-injection spec for the scheduler path (see
+    /// [`crate::serving::FaultPlan::parse`] for the grammar); `None` runs
+    /// fault-free. CLI `--fault-spec` overrides.
+    pub fault_spec: Option<String>,
+    /// Per-query deadline in simulated ms (`0` disables): a query not
+    /// launched in time is shed with a counted outcome.
+    pub deadline_ms: f64,
+    /// Serving attempts after the first before a query is failed.
+    pub max_retries: u32,
+    /// Base of the exponential virtual-time retry backoff, ms.
+    pub retry_backoff_ms: f64,
     /// Chrome trace-event JSON output path (`run`/`serve`); CLI
     /// `--trace-out` overrides.
     pub trace_out: Option<String>,
@@ -254,11 +274,80 @@ impl Default for ExperimentConfig {
             queue_cap: 64,
             queue_policy: crate::serving::OverflowPolicy::Drop,
             workers: 0,
+            fault_spec: None,
+            deadline_ms: 0.0,
+            max_retries: 3,
+            retry_backoff_ms: 1.0,
             trace_out: None,
             metrics_out: None,
             profile_out: None,
         }
     }
+}
+
+/// Every key [`ExperimentConfig::parse`] accepts — the suggestion list for
+/// unknown-key errors. Aliases (`algo`, `strategy`) are included so a typo
+/// near either form resolves to something typeable.
+const KNOWN_KEYS: &[&str] = &[
+    "name",
+    "graph",
+    "scale",
+    "seed",
+    "algos",
+    "algo",
+    "strategies",
+    "strategy",
+    "source",
+    "push_policy",
+    "enforce_budget",
+    "backend",
+    "histogram_bins",
+    "mdt",
+    "max_threads",
+    "adaptive_policy",
+    "batch_size",
+    "shards",
+    "devices",
+    "max_batch",
+    "arrival_rate",
+    "queue_cap",
+    "queue_policy",
+    "workers",
+    "fault_spec",
+    "deadline_ms",
+    "max_retries",
+    "retry_backoff_ms",
+    "trace_out",
+    "metrics_out",
+    "profile_out",
+];
+
+/// Levenshtein distance, O(a·b) with two rows — fine for config-key-sized
+/// strings, and only ever run on the error path.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The valid config key closest to `unknown` (ties go to the first in
+/// [`KNOWN_KEYS`] order).
+fn nearest_key(unknown: &str) -> &'static str {
+    KNOWN_KEYS
+        .iter()
+        .min_by_key(|k| edit_distance(unknown, k))
+        .copied()
+        .unwrap_or("name")
 }
 
 impl ExperimentConfig {
@@ -371,10 +460,39 @@ impl ExperimentConfig {
                     cfg.queue_policy = crate::serving::OverflowPolicy::parse(&v)?
                 }
                 "workers" => cfg.workers = parse_positive(&v, "workers")?,
+                "fault_spec" => cfg.fault_spec = Some(v),
+                "deadline_ms" => {
+                    cfg.deadline_ms = v
+                        .parse()
+                        .ok()
+                        .filter(|d: &f64| d.is_finite() && *d >= 0.0)
+                        .ok_or_else(|| {
+                            Error::Config(format!("bad deadline_ms {v:?} (ms, >= 0; 0 = off)"))
+                        })?
+                }
+                "max_retries" => {
+                    cfg.max_retries = v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad max_retries {v:?}")))?
+                }
+                "retry_backoff_ms" => {
+                    cfg.retry_backoff_ms = v
+                        .parse()
+                        .ok()
+                        .filter(|d: &f64| d.is_finite() && *d >= 0.0)
+                        .ok_or_else(|| {
+                            Error::Config(format!("bad retry_backoff_ms {v:?} (ms, >= 0)"))
+                        })?
+                }
                 "trace_out" => cfg.trace_out = Some(v),
                 "metrics_out" => cfg.metrics_out = Some(v),
                 "profile_out" => cfg.profile_out = Some(v),
-                other => return Err(Error::Config(format!("unknown config key {other:?}"))),
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown config key {other:?}; did you mean {:?}?",
+                        nearest_key(other)
+                    )))
+                }
             }
         }
         Ok(cfg)
@@ -463,6 +581,47 @@ mod tests {
     #[test]
     fn rejects_unknown_keys() {
         assert!(ExperimentConfig::parse("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_name_themselves_and_the_nearest_valid_key() {
+        let err = ExperimentConfig::parse("queu_cap = 8").unwrap_err().to_string();
+        assert!(err.contains("queu_cap"), "must name the offender: {err}");
+        assert!(err.contains("queue_cap"), "must suggest the fix: {err}");
+        let err = ExperimentConfig::parse("falt_spec = kill:shard=0,at=1ms")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fault_spec"), "suggestion off: {err}");
+        let err = ExperimentConfig::parse("retry_backof_ms = 2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("retry_backoff_ms"), "suggestion off: {err}");
+    }
+
+    #[test]
+    fn parses_fault_and_recovery_keys() {
+        let cfg = ExperimentConfig::parse("").unwrap();
+        assert_eq!(cfg.fault_spec, None);
+        assert_eq!(cfg.deadline_ms, 0.0);
+        assert_eq!(cfg.max_retries, 3);
+        assert_eq!(cfg.retry_backoff_ms, 1.0);
+        let cfg = ExperimentConfig::parse(
+            "fault_spec = stall:shard=0,at=1ms,for=2ms\ndeadline_ms = 20\n\
+             max_retries = 5\nretry_backoff_ms = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.fault_spec.as_deref(),
+            Some("stall:shard=0,at=1ms,for=2ms")
+        );
+        assert_eq!(cfg.deadline_ms, 20.0);
+        assert_eq!(cfg.max_retries, 5);
+        assert_eq!(cfg.retry_backoff_ms, 0.5);
+        // max_retries = 0 is legal (fail on the first re-attempt).
+        assert_eq!(ExperimentConfig::parse("max_retries = 0").unwrap().max_retries, 0);
+        assert!(ExperimentConfig::parse("deadline_ms = -1").is_err());
+        assert!(ExperimentConfig::parse("retry_backoff_ms = nan").is_err());
+        assert!(ExperimentConfig::parse("max_retries = -2").is_err());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! integration tests share one implementation.
 
 pub mod adaptive;
+pub mod avail;
 pub mod imbalance;
 pub mod queue;
 pub mod serving;
@@ -26,6 +27,7 @@ use std::io::Write;
 use std::sync::Arc;
 
 pub use adaptive::{fig_adaptive, AdaptiveRow};
+pub use avail::{fig_avail, AvailRow};
 pub use imbalance::{fig_imbalance, ImbalanceRow};
 pub use queue::{fig_queue, QueueRow};
 pub use serving::{fig_serving, ServingRow};

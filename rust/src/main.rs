@@ -13,12 +13,14 @@
 //!                      [--devices k20c,k40,...] [--max-batch N]
 //!                      [--arrival-rate Q_PER_MS] [--queue-cap N]
 //!                      [--queue-policy drop|block] [--workers N]
+//!                      [--fault-spec SPEC] [--deadline-ms MS]
+//!                      [--max-retries N] [--retry-backoff-ms MS]
 //!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
 //!                      [--adaptive-policy P] [--scale S] [--seed N]
 //!                      [--enforce-budget] [--verify] [--json]
 //!                      [--trace-out FILE] [--metrics-out FILE] [--profile-out FILE]
 //! lonestar-lb figures  [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|
-//!                       figqueue|figimbalance|all]
+//!                       figqueue|figimbalance|figavail|all]
 //!                      [--scale S] [--seed N] [--out FILE.json] [--no-budget]
 //! lonestar-lb generate NAME OUT [--scale S] [--seed N]
 //! lonestar-lb inspect  FILE
@@ -127,12 +129,15 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --devices k20c,k40,gtx680 --max-batch N
                --arrival-rate Q_PER_MS --queue-cap N --queue-policy drop|block
                --workers N (shard worker threads; default one per shard)
+               --fault-spec 'stall:shard=S,at=T,for=D;kill:...' (see serving::faults)
+               --deadline-ms MS (per-query deadline; 0 = off)
+               --max-retries N --retry-backoff-ms MS
                --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
                --adaptive-policy P --scale S --seed N
                --enforce-budget --verify --json
                --trace-out FILE.json --metrics-out FILE.prom --profile-out FILE.json
   figures      [table2|fig1|fig7|fig8|fig9|fig10|fig11|figad|figserve|figqueue|
-                figimbalance|all]
+                figimbalance|figavail|all]
                --scale S --seed N --out FILE.json --no-budget
   generate     NAME OUT --scale S --seed N
   inspect      FILE
@@ -428,6 +433,20 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     if let Some(w) = args.get("workers") {
         cfg.workers = lonestar_lb::config::parse_positive(w, "--workers")?;
     }
+    if let Some(f) = args.get("fault-spec") {
+        cfg.fault_spec = Some(f.to_string());
+    }
+    if let Some(d) = args.get_f64("deadline-ms")? {
+        cfg.deadline_ms = d;
+    }
+    if args.get("max-retries").is_some() {
+        let v = args.get_u64("max-retries", cfg.max_retries as u64)?;
+        cfg.max_retries = u32::try_from(v)
+            .map_err(|_| Error::Config(format!("--max-retries {v} is out of range")))?;
+    }
+    if let Some(b) = args.get_f64("retry-backoff-ms")? {
+        cfg.retry_backoff_ms = b;
+    }
     if let Some(p) = args.get("adaptive-policy") {
         cfg.params.adaptive_policy = lonestar_lb::config::parse_adaptive_policy(p)?;
     }
@@ -601,12 +620,25 @@ fn cmd_serve_stream(
     let params = serve_cfg.params.clone();
     let shard_names: Vec<&str> = serve_cfg.devices.iter().map(|d| d.name).collect();
     let shard_ppc: Vec<u64> = serve_cfg.devices.iter().map(|d| d.ps_per_cycle()).collect();
+    let faults = match cfg.fault_spec.as_deref() {
+        Some(spec) => {
+            let plan =
+                lonestar_lb::serving::FaultPlan::parse(spec, serve_cfg.shards(), cfg.seed)?;
+            writeln!(out, "fault plan: {} transition(s)", plan.len())?;
+            (!plan.is_empty()).then_some(plan)
+        }
+        None => None,
+    };
     let sched_cfg = lonestar_lb::serving::SchedulerConfig {
         serve: serve_cfg,
         queue_cap: cfg.queue_cap,
         overflow: cfg.queue_policy,
         collect_distances: true,
         workers: cfg.workers,
+        faults,
+        deadline_ps: (cfg.deadline_ms * 1e9).round() as u64,
+        max_retries: cfg.max_retries,
+        retry_backoff_ps: (cfg.retry_backoff_ms * 1e9).round() as u64,
     };
     let arrivals = lonestar_lb::serving::synthetic_arrivals(
         g,
@@ -642,6 +674,14 @@ fn cmd_serve_stream(
         report.served(),
         report.queue_peak,
         report.batches,
+    )?;
+    writeln!(
+        out,
+        "deadline_expired {}  failed {}  retries {}  requeued {}",
+        report.deadline_expired.len(),
+        report.failed.len(),
+        report.retries,
+        report.requeued,
     )?;
     writeln!(
         out,
@@ -767,6 +807,13 @@ fn cmd_figures(args: &Args, out: &mut impl Write) -> Result<()> {
         let rows = figures::fig_imbalance(&opts, out)?;
         payload.insert(
             "figimbalance".into(),
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        );
+    }
+    if all || which == "figavail" || which == "avail" {
+        let rows = figures::fig_avail(&opts, out)?;
+        payload.insert(
+            "figavail".into(),
             Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
         );
     }

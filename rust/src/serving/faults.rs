@@ -1,0 +1,465 @@
+//! Deterministic fault injection for the serving scheduler.
+//!
+//! A [`FaultPlan`] is a pre-compiled list of shard-health transitions fired
+//! at exact virtual-clock instants. Faults are *simulation events*, not
+//! races: the plan is fixed before the run starts, every transition is
+//! stamped in integer picoseconds, and the scheduler applies them on the
+//! coordinator thread in deterministic order — so a faulted run produces
+//! byte-identical reports/traces/profiles for every worker count, exactly
+//! like a healthy one.
+//!
+//! ## Spec grammar (`--fault-spec` / `fault_spec` config key)
+//!
+//! Clauses separated by `;`, each `kind:key=value,...`. Times are virtual
+//! milliseconds (floats allowed); 1 ms = 10⁹ ps.
+//!
+//! | clause | keys | meaning |
+//! |---|---|---|
+//! | `stall`  | `shard`, `at`, `for`            | shard leaves service at `at`, returns at `at + for` |
+//! | `kill`   | `shard`, `at`                   | shard dies permanently at `at` |
+//! | `slow`   | `shard`, `at`, `factor`, [`for`]| ps-per-cycle multiplied by integer `factor` (≥ 1); with `for`, restored to 1 afterwards |
+//! | `shrink` | `shard`, `at`, `factor`         | device memory budget divided by integer `factor` (≥ 1); `factor=1` restores it |
+//! | `random` | `rate`, `until`                 | seeded synthetic fault stream: `rate` faults per virtual ms until `until` |
+//!
+//! Example: `stall:shard=0,at=0.5,for=2;slow:shard=1,at=1,factor=4`.
+//!
+//! The `random` clause (and [`FaultPlan::synthetic`]) draws exponential
+//! inter-fault gaps and a weighted kind mix (stalls common, kills rare;
+//! kills are capped at `n_shards − 1` so the pool never goes irrecoverably
+//! dark) from the run seed — the same inverse-CDF idiom as
+//! `synthetic_arrivals`, so the plan is a pure function of
+//! `(spec, n_shards, seed)`.
+
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Picoseconds per millisecond (the virtual clock is integer ps).
+const PS_PER_MS: f64 = 1e9;
+
+/// Seed-mixing constant for fault streams (cf. `synthetic_arrivals`).
+const FAULT_SEED_MIX: u64 = 0xfa17_0b5e_11a5_7a11;
+
+/// One primitive shard-health transition. Composite spec clauses are
+/// expanded at parse time (`stall` → `Down` + `Up`; `slow` with `for` →
+/// two absolute `Slow` events).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Shard leaves service. `permanent` means it never returns (kill).
+    Down {
+        /// True for `kill`: no later `Up` can revive the shard.
+        permanent: bool,
+    },
+    /// A transient outage lifts; the shard re-enters placement.
+    Up,
+    /// Absolute throughput degradation: effective ps-per-cycle is the
+    /// device's times `factor` (1 restores full speed).
+    Slow {
+        /// Integer multiplier on the device's ps-per-cycle (≥ 1).
+        factor: u64,
+    },
+    /// Absolute memory-budget shrink: the worker serves this shard's
+    /// batches under `device_budget / divisor` (1 restores the default).
+    Shrink {
+        /// Integer divisor of the device memory budget (≥ 1).
+        divisor: u64,
+    },
+}
+
+impl FaultKind {
+    /// Stable code for trace payloads (`FaultInject.a`).
+    pub fn code(self) -> u64 {
+        match self {
+            FaultKind::Down { permanent: false } => 0,
+            FaultKind::Down { permanent: true } => 1,
+            FaultKind::Up => 2,
+            FaultKind::Slow { .. } => 3,
+            FaultKind::Shrink { .. } => 4,
+        }
+    }
+
+    /// Kind-specific parameter for trace payloads (`FaultInject.b`).
+    pub fn param(self) -> u64 {
+        match self {
+            FaultKind::Slow { factor } => factor,
+            FaultKind::Shrink { divisor } => divisor,
+            _ => 0,
+        }
+    }
+}
+
+/// A [`FaultKind`] bound to a shard and a virtual instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Virtual instant the transition fires, integer picoseconds.
+    pub at_ps: u64,
+    /// Target shard index.
+    pub shard: usize,
+    /// What happens to the shard.
+    pub kind: FaultKind,
+}
+
+/// A compiled, time-sorted fault schedule. `Default` is the empty
+/// (fault-free) plan.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a `--fault-spec` string (grammar in the module docs) against a
+    /// pool of `n_shards` shards. `seed` feeds `random:` clauses only.
+    pub fn parse(spec: &str, n_shards: usize, seed: u64) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind, params) = clause.split_once(':').ok_or_else(|| {
+                Error::Config(format!(
+                    "fault clause {clause:?} has no kind (want kind:key=value,...)"
+                ))
+            })?;
+            let kind = kind.trim();
+            let mut shard = None;
+            let mut at_ms = None;
+            let mut for_ms = None;
+            let mut factor = None;
+            let mut rate = None;
+            let mut until_ms = None;
+            for pair in params.split(',') {
+                let pair = pair.trim();
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair.split_once('=').ok_or_else(|| {
+                    Error::Config(format!("fault parameter {pair:?} in {clause:?} is not key=value"))
+                })?;
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "shard" => shard = Some(parse_u64(v, clause, "shard")? as usize),
+                    "at" => at_ms = Some(parse_ms(v, clause, "at")?),
+                    "for" => for_ms = Some(parse_ms(v, clause, "for")?),
+                    "factor" => factor = Some(parse_u64(v, clause, "factor")?),
+                    "rate" => rate = Some(parse_ms(v, clause, "rate")?),
+                    "until" => until_ms = Some(parse_ms(v, clause, "until")?),
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown fault parameter {other:?} in {clause:?}"
+                        )))
+                    }
+                }
+            }
+            if kind == "random" {
+                let rate = rate.ok_or_else(|| missing(clause, "rate"))?;
+                let until = until_ms.ok_or_else(|| missing(clause, "until"))?;
+                synthesize_into(&mut events, n_shards, rate, until, seed)?;
+                continue;
+            }
+            let shard = shard.ok_or_else(|| missing(clause, "shard"))?;
+            if shard >= n_shards {
+                return Err(Error::Config(format!(
+                    "fault clause {clause:?} targets shard {shard} but the pool has {n_shards}"
+                )));
+            }
+            let at_ps = ms_to_ps(at_ms.ok_or_else(|| missing(clause, "at"))?);
+            match kind {
+                "stall" => {
+                    let dur = for_ms.ok_or_else(|| missing(clause, "for"))?;
+                    if dur <= 0.0 {
+                        return Err(Error::Config(format!(
+                            "fault clause {clause:?}: stall duration must be positive"
+                        )));
+                    }
+                    events.push(FaultEvent {
+                        at_ps,
+                        shard,
+                        kind: FaultKind::Down { permanent: false },
+                    });
+                    events.push(FaultEvent {
+                        at_ps: at_ps + ms_to_ps(dur).max(1),
+                        shard,
+                        kind: FaultKind::Up,
+                    });
+                }
+                "kill" => events.push(FaultEvent {
+                    at_ps,
+                    shard,
+                    kind: FaultKind::Down { permanent: true },
+                }),
+                "slow" => {
+                    let factor = factor.ok_or_else(|| missing(clause, "factor"))?.max(1);
+                    events.push(FaultEvent {
+                        at_ps,
+                        shard,
+                        kind: FaultKind::Slow { factor },
+                    });
+                    if let Some(dur) = for_ms {
+                        events.push(FaultEvent {
+                            at_ps: at_ps + ms_to_ps(dur).max(1),
+                            shard,
+                            kind: FaultKind::Slow { factor: 1 },
+                        });
+                    }
+                }
+                "shrink" => {
+                    let divisor = factor.ok_or_else(|| missing(clause, "factor"))?.max(1);
+                    events.push(FaultEvent {
+                        at_ps,
+                        shard,
+                        kind: FaultKind::Shrink { divisor },
+                    });
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown fault kind {other:?} in {clause:?} \
+                         (want stall, kill, slow, shrink or random)"
+                    )))
+                }
+            }
+        }
+        Ok(FaultPlan::from_events(events))
+    }
+
+    /// A seeded synthetic fault stream: `rate_per_ms` faults per virtual
+    /// millisecond over `[0, horizon_ms)`, exponential gaps, weighted kind
+    /// mix. Used by the `figavail` figure and `random:` spec clauses.
+    pub fn synthetic(n_shards: usize, rate_per_ms: f64, horizon_ms: f64, seed: u64) -> FaultPlan {
+        let mut events = Vec::new();
+        // Parameters are pre-validated by construction here.
+        synthesize_into(&mut events, n_shards, rate_per_ms, horizon_ms, seed)
+            .expect("synthetic fault stream parameters are valid");
+        FaultPlan::from_events(events)
+    }
+
+    /// Build a plan from raw transitions (sorted into firing order).
+    pub fn from_events(mut events: Vec<FaultEvent>) -> FaultPlan {
+        // Stable sort: equal (instant, shard) pairs keep spec order.
+        events.sort_by_key(|e| (e.at_ps, e.shard));
+        FaultPlan { events }
+    }
+
+    /// Compiled transitions in firing order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of compiled transitions.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+fn missing(clause: &str, key: &str) -> Error {
+    Error::Config(format!("fault clause {clause:?} is missing {key}="))
+}
+
+fn parse_u64(v: &str, clause: &str, key: &str) -> Result<u64> {
+    v.parse::<u64>().map_err(|_| {
+        Error::Config(format!(
+            "fault parameter {key}={v:?} in {clause:?} is not a non-negative integer"
+        ))
+    })
+}
+
+fn parse_ms(v: &str, clause: &str, key: &str) -> Result<f64> {
+    let v = v.strip_suffix("ms").unwrap_or(v).trim();
+    let x = v.parse::<f64>().map_err(|_| {
+        Error::Config(format!("fault parameter {key}={v:?} in {clause:?} is not a number"))
+    })?;
+    if !x.is_finite() || x < 0.0 {
+        return Err(Error::Config(format!(
+            "fault parameter {key}={v:?} in {clause:?} must be finite and non-negative"
+        )));
+    }
+    Ok(x)
+}
+
+fn ms_to_ps(ms: f64) -> u64 {
+    (ms * PS_PER_MS).round() as u64
+}
+
+/// The shared synthetic generator behind [`FaultPlan::synthetic`] and
+/// `random:` clauses. Exponential inter-fault gaps (inverse CDF, min 1 ps)
+/// and a weighted kind mix: 50% transient stalls, 25% slowdowns (with
+/// recovery), 17% budget shrinks, 8% kills — kills capped at
+/// `n_shards − 1` (excess kills degrade to stalls).
+fn synthesize_into(
+    events: &mut Vec<FaultEvent>,
+    n_shards: usize,
+    rate_per_ms: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> Result<()> {
+    if !(rate_per_ms.is_finite() && rate_per_ms >= 0.0) {
+        return Err(Error::Config(format!(
+            "synthetic fault rate {rate_per_ms} must be finite and non-negative"
+        )));
+    }
+    if !(horizon_ms.is_finite() && horizon_ms >= 0.0) {
+        return Err(Error::Config(format!(
+            "synthetic fault horizon {horizon_ms} ms must be finite and non-negative"
+        )));
+    }
+    if rate_per_ms == 0.0 || horizon_ms == 0.0 || n_shards == 0 {
+        return Ok(());
+    }
+    let mut rng = Rng::seed_from_u64(seed ^ FAULT_SEED_MIX);
+    let mean_gap_ps = PS_PER_MS / rate_per_ms;
+    let horizon_ps = ms_to_ps(horizon_ms);
+    let mut killed = vec![false; n_shards];
+    let mut kills = 0usize;
+    let mut at_ps = 0u64;
+    loop {
+        let u = rng.gen_f64();
+        let gap = (-(1.0 - u).ln() * mean_gap_ps).round() as u64;
+        at_ps = at_ps.saturating_add(gap.max(1));
+        if at_ps >= horizon_ps {
+            return Ok(());
+        }
+        let shard = rng.gen_index(n_shards);
+        let mut pick = rng.gen_f64();
+        // A dead shard can only be hit again by a no-op; degrade everything
+        // aimed at it to a (harmless) transient stall.
+        if killed[shard] {
+            pick = 0.0;
+        }
+        if pick < 0.50 {
+            // Transient stall, exponential duration (mean 1 ms, clamped).
+            let d = rng.gen_f64();
+            let dur_ms = (-(1.0 - d).ln()).clamp(0.05, 5.0);
+            events.push(FaultEvent {
+                at_ps,
+                shard,
+                kind: FaultKind::Down { permanent: false },
+            });
+            events.push(FaultEvent {
+                at_ps: at_ps + ms_to_ps(dur_ms).max(1),
+                shard,
+                kind: FaultKind::Up,
+            });
+        } else if pick < 0.75 {
+            // Degradation with recovery after an exponential interval
+            // (mean 2 ms).
+            let factor = 2 + rng.next_u64() % 7;
+            let d = rng.gen_f64();
+            let dur_ms = (-(1.0 - d).ln() * 2.0).clamp(0.1, 8.0);
+            events.push(FaultEvent {
+                at_ps,
+                shard,
+                kind: FaultKind::Slow { factor },
+            });
+            events.push(FaultEvent {
+                at_ps: at_ps + ms_to_ps(dur_ms).max(1),
+                shard,
+                kind: FaultKind::Slow { factor: 1 },
+            });
+        } else if pick < 0.92 {
+            let divisor = 2u64 << (rng.next_u64() % 3); // 2, 4 or 8
+            events.push(FaultEvent {
+                at_ps,
+                shard,
+                kind: FaultKind::Shrink { divisor },
+            });
+        } else if kills + 1 < n_shards {
+            killed[shard] = true;
+            kills += 1;
+            events.push(FaultEvent {
+                at_ps,
+                shard,
+                kind: FaultKind::Down { permanent: true },
+            });
+        } else {
+            // Kill budget exhausted: degrade to a short stall instead.
+            events.push(FaultEvent {
+                at_ps,
+                shard,
+                kind: FaultKind::Down { permanent: false },
+            });
+            events.push(FaultEvent {
+                at_ps: at_ps + ms_to_ps(0.5),
+                shard,
+                kind: FaultKind::Up,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_clause_kind_and_sorts() {
+        let plan = FaultPlan::parse(
+            "slow:shard=1,at=1,factor=4,for=2; stall:shard=0,at=0.5,for=2; \
+             kill:shard=2,at=3; shrink:shard=0,at=0.25,factor=8",
+            3,
+            7,
+        )
+        .expect("valid spec");
+        let ev = plan.events();
+        assert_eq!(ev.len(), 6, "stall and bounded slow expand to two events");
+        assert!(ev.windows(2).all(|w| (w[0].at_ps, w[0].shard) <= (w[1].at_ps, w[1].shard)));
+        assert_eq!(ev[0].at_ps, 250_000_000);
+        assert_eq!(ev[0].kind, FaultKind::Shrink { divisor: 8 });
+        assert_eq!(ev[1].kind, FaultKind::Down { permanent: false });
+        assert_eq!(ev[2].at_ps, 1_000_000_000);
+        assert_eq!(ev[2].kind, FaultKind::Slow { factor: 4 });
+        assert!(ev.iter().any(|e| e.kind == FaultKind::Up && e.at_ps == 2_500_000_000));
+        assert!(ev
+            .iter()
+            .any(|e| e.kind == FaultKind::Slow { factor: 1 } && e.at_ps == 3_000_000_000));
+        assert!(ev
+            .iter()
+            .any(|e| e.kind == FaultKind::Down { permanent: true } && e.shard == 2));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "stall:shard=0,at=1",          // missing for=
+            "stall:shard=9,at=1,for=1",    // shard out of range
+            "warp:shard=0,at=1",           // unknown kind
+            "slow:shard=0,at=1",           // missing factor
+            "stall:shard=0,at=x,for=1",    // non-numeric time
+            "stall:shard=0,at=1,oops=2",   // unknown key
+            "shard=0,at=1",                // no kind
+            "random:rate=1",               // missing until
+        ] {
+            assert!(FaultPlan::parse(bad, 2, 0).is_err(), "{bad:?} must be rejected");
+        }
+        assert!(FaultPlan::parse("", 2, 0).expect("empty spec").is_empty());
+    }
+
+    #[test]
+    fn synthetic_is_seed_deterministic_and_caps_kills() {
+        let a = FaultPlan::synthetic(3, 2.0, 20.0, 42);
+        let b = FaultPlan::synthetic(3, 2.0, 20.0, 42);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_ne!(a, FaultPlan::synthetic(3, 2.0, 20.0, 43), "seed matters");
+        assert!(!a.is_empty(), "2 faults/ms over 20 ms should fire");
+        let kills = a
+            .events()
+            .iter()
+            .filter(|e| e.kind == FaultKind::Down { permanent: true })
+            .count();
+        assert!(kills < 3, "kills capped below the pool size, got {kills}");
+        // Recovery events trail the horizon by at most the clamped
+        // maximum outage/degradation duration (8 ms).
+        assert!(a.events().iter().all(|e| e.at_ps <= ms_to_ps(20.0) + ms_to_ps(8.0)));
+        assert_eq!(FaultPlan::synthetic(3, 0.0, 20.0, 42).len(), 0);
+    }
+
+    #[test]
+    fn random_clause_matches_synthetic() {
+        let spec = FaultPlan::parse("random:rate=1.5,until=10", 2, 99).expect("random clause");
+        let direct = FaultPlan::synthetic(2, 1.5, 10.0, 99);
+        assert_eq!(spec, direct);
+    }
+}

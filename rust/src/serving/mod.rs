@@ -50,6 +50,7 @@
 //! passes and policy decisions.
 
 pub mod batch;
+pub mod faults;
 pub mod merged;
 pub mod query;
 pub mod queue;
@@ -57,12 +58,13 @@ pub mod scheduler;
 pub mod shard;
 
 pub use batch::{replay_single, QueryBatch};
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use merged::{
     mask_words_for, MergedBuilder, MergedEdgeFrontier, MergedWorklist, MAX_QUERIES_PER_SHARD,
     MAX_SUPPORTED_QUERIES_PER_SHARD,
 };
 pub use query::{synthetic_arrivals, synthetic_queries, Arrival, Query};
-pub use queue::{AdmissionQueue, OverflowPolicy};
+pub use queue::{AdmissionQueue, OverflowPolicy, QueueEntry};
 pub use scheduler::{
     serve_stream, serve_stream_traced, QueryOutcome, ScheduleReport, Scheduler, SchedulerConfig,
 };

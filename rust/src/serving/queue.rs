@@ -47,19 +47,41 @@ impl OverflowPolicy {
     }
 }
 
+/// One queued query: the query itself, its original arrival instant
+/// (virtual-clock ps — wait time is measured from arrival, not admission
+/// or requeue), and how many serving attempts have already failed (0 for
+/// a fresh arrival; recovery requeues carry their retry count through).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueEntry {
+    /// The queued query.
+    pub query: Query,
+    /// Original arrival instant (ps).
+    pub arrived_ps: u64,
+    /// Failed serving attempts so far (0 = never launched).
+    pub attempts: u32,
+}
+
 /// Bounded FIFO of admitted-but-unplaced queries, with the admission
-/// counters the scheduler reports. Each entry remembers its arrival
-/// instant (virtual-clock ps) so wait time is measured from arrival, not
-/// from admission. Shed queries are NOT counted here — the scheduler
-/// keeps the dropped queries themselves (its `dropped` vec is the single
-/// source of truth), so there is no second counter to drift out of sync.
+/// counters the scheduler reports. Shed queries are NOT counted here —
+/// the scheduler keeps the dropped queries themselves (its `dropped` vec
+/// is the single source of truth), so there is no second counter to drift
+/// out of sync.
+///
+/// Recovery requeues ([`AdmissionQueue::requeue`]) enter at the *front*:
+/// a retried query arrived before anything currently queued, so it keeps
+/// its FIFO seniority over fresh arrivals. They bump `requeued`, never
+/// `admitted` — `admitted` stays first-admissions-only so the fault-free
+/// conservation law `arrived == admitted + dropped` is undisturbed.
 #[derive(Debug)]
 pub struct AdmissionQueue {
-    items: VecDeque<(Query, u64)>,
+    items: VecDeque<QueueEntry>,
     cap: usize,
-    /// Queries that entered the queue (admission events).
+    /// Queries that entered the queue for the first time (admission
+    /// events).
     pub admitted: u64,
-    /// Deepest the queue ever got.
+    /// Re-entries of previously admitted queries after a failed attempt.
+    pub requeued: u64,
+    /// Deepest the queue ever got (requeues count toward depth too).
     pub peak: u64,
 }
 
@@ -72,6 +94,7 @@ impl AdmissionQueue {
             items: VecDeque::with_capacity(cap),
             cap,
             admitted: 0,
+            requeued: 0,
             peak: 0,
         }
     }
@@ -104,15 +127,43 @@ impl AdmissionQueue {
         if self.is_full() {
             return false;
         }
-        self.items.push_back((query, at_ps));
+        self.items.push_back(QueueEntry {
+            query,
+            arrived_ps: at_ps,
+            attempts: 0,
+        });
         self.admitted += 1;
         self.peak = self.peak.max(self.items.len() as u64);
         true
     }
 
+    /// Return a previously admitted query to the *front* of the queue for
+    /// another serving attempt (it predates everything queued, so it keeps
+    /// FIFO seniority). Counted in `requeued`, not `admitted`; still
+    /// bounded by `cap`. Returns whether it entered.
+    pub fn requeue(&mut self, query: Query, arrived_ps: u64, attempts: u32) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        self.items.push_front(QueueEntry {
+            query,
+            arrived_ps,
+            attempts,
+        });
+        self.requeued += 1;
+        self.peak = self.peak.max(self.items.len() as u64);
+        true
+    }
+
+    /// Look at the oldest queued entry without removing it (the scheduler
+    /// uses this to shed deadline-expired queries before placement).
+    pub fn peek(&self) -> Option<&QueueEntry> {
+        self.items.front()
+    }
+
     /// Pop the oldest admitted query (FIFO — admission order is placement
     /// order, a property `strategy_properties.rs` pins).
-    pub fn pop(&mut self) -> Option<(Query, u64)> {
+    pub fn pop(&mut self) -> Option<QueueEntry> {
         self.items.pop_front()
     }
 }
@@ -138,10 +189,10 @@ mod tests {
         assert!(aq.is_full());
         assert!(!aq.try_admit(q(2), 30), "over-cap admission must fail");
         assert_eq!((aq.admitted, aq.peak), (2, 2));
-        assert_eq!(aq.pop().unwrap().0.id, 0, "FIFO");
+        assert_eq!(aq.pop().unwrap().query.id, 0, "FIFO");
         assert!(aq.try_admit(q(3), 40), "space frees after a pop");
-        assert_eq!(aq.pop().unwrap().0.id, 1);
-        assert_eq!(aq.pop().unwrap().0.id, 3);
+        assert_eq!(aq.pop().unwrap().query.id, 1);
+        assert_eq!(aq.pop().unwrap().query.id, 3);
         assert!(aq.pop().is_none());
         assert_eq!(aq.peak, 2, "peak is sticky");
     }
@@ -152,6 +203,64 @@ mod tests {
         assert_eq!(aq.cap(), 1);
         assert!(aq.try_admit(q(0), 0));
         assert!(!aq.try_admit(q(1), 0));
+        assert!(!aq.requeue(q(1), 0, 1), "requeue respects the cap too");
+        assert_eq!(aq.pop().unwrap().query.id, 0);
+        assert!(aq.requeue(q(0), 0, 1), "requeue fits once space frees");
+        assert_eq!((aq.admitted, aq.requeued), (1, 1));
+    }
+
+    /// Cap 1 is the degenerate Block regime: exactly one query fits, so
+    /// every further arrival must be refused for the caller's overflow
+    /// policy to hold back — admission strictly alternates with pops.
+    #[test]
+    fn cap_one_alternates_admit_and_pop() {
+        let mut aq = AdmissionQueue::new(1);
+        for round in 0u32..3 {
+            assert!(aq.try_admit(q(round), u64::from(round)));
+            assert!(aq.is_full());
+            assert!(!aq.try_admit(q(100 + round), u64::from(round)));
+            assert_eq!(aq.pop().unwrap().query.id, round);
+            assert!(aq.is_empty());
+        }
+        assert_eq!((aq.admitted, aq.peak), (3, 1));
+    }
+
+    /// A requeued query re-enters at the *front*: it arrived before
+    /// anything currently queued, so it beats fresh arrivals admitted at
+    /// the same instant — and its original arrival stamp and attempt
+    /// count ride along.
+    #[test]
+    fn requeue_enters_at_front_ahead_of_same_instant_arrivals() {
+        let mut aq = AdmissionQueue::new(4);
+        assert!(aq.try_admit(q(7), 50));
+        assert!(aq.requeue(q(3), 10, 2), "old query back after a failure");
+        assert!(aq.try_admit(q(8), 50), "fresh arrival at the same instant");
+        let first = aq.pop().unwrap();
+        assert_eq!(
+            (first.query.id, first.arrived_ps, first.attempts),
+            (3, 10, 2),
+            "requeued query keeps seniority, stamp and attempt count"
+        );
+        assert_eq!(aq.pop().unwrap().query.id, 7);
+        assert_eq!(aq.pop().unwrap().query.id, 8);
+        assert_eq!((aq.admitted, aq.requeued), (2, 1));
+    }
+
+    /// `peak` tracks true depth: requeues deepen the queue exactly like
+    /// admissions do.
+    #[test]
+    fn queue_peak_counts_requeued_depth() {
+        let mut aq = AdmissionQueue::new(4);
+        assert!(aq.try_admit(q(0), 0));
+        assert!(aq.try_admit(q(1), 1));
+        assert_eq!(aq.peak, 2);
+        assert!(aq.requeue(q(9), 0, 1));
+        assert_eq!(aq.peak, 3, "requeue pushed depth past the admit-only peak");
+        aq.pop();
+        aq.pop();
+        assert!(aq.requeue(q(10), 0, 1));
+        assert_eq!(aq.peak, 3, "peak is sticky across drains");
+        assert_eq!(aq.len(), 2);
     }
 
     #[test]

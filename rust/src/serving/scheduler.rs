@@ -76,6 +76,39 @@
 //! measured from *arrival* (including any blocked stall), so the
 //! latency-vs-arrival-rate curve (`figqueue`) shows the real queueing
 //! behavior.
+//!
+//! # Fault injection & recovery
+//!
+//! An optional [`FaultPlan`] injects shard faults at exact virtual
+//! instants: transient stalls, permanent death, throughput degradation
+//! (a ps-per-cycle multiplier) and memory-budget shrinks. Faults are
+//! coordinator-side *simulation events*, never races — the recovery
+//! paths are:
+//!
+//! * a down transition quarantines the shard (placement skips it until a
+//!   matching up transition re-admits it) and **aborts** its in-flight
+//!   batch: the queries go to a pre-allocated retry buffer and re-enter
+//!   the queue *at the front* after an exponential virtual-time backoff
+//!   (`retry_backoff_ps << attempt`), up to `max_retries` attempts —
+//!   beyond that the query lands in the `failed` outcome;
+//! * a batch whose engine errors at the fold (e.g. out-of-memory under a
+//!   shrunken budget) requeues the same way instead of aborting the run;
+//! * a shrink rides the next [`LaunchMsg`] to the worker, which clamps
+//!   the shard's persistent [`MemoryTracker`] budget — under the AD
+//!   strategy the policy then picks memory-feasible strategies instead
+//!   of erroring;
+//! * per-query deadlines (`deadline_ps`) shed hopeless work at placement
+//!   and retry time with a counted `deadline_expired` outcome;
+//! * a no-progress detector fails the remainder cleanly when capacity
+//!   can never return (every shard dead with a non-empty queue), instead
+//!   of spinning at one instant forever.
+//!
+//! The retry/quarantine state is pre-allocated, so the zero-alloc steady
+//! state holds with an active fault plan, and the conservation identity
+//! `arrived == served + dropped + deadline_expired + failed` replaces
+//! `arrived == served + dropped` under faults. Determinism is unchanged:
+//! same seed + same plan ⇒ byte-identical report/trace/profile for every
+//! worker count.
 
 use crate::algorithms::{AlgoKind, NativeRelaxer};
 use crate::arena::{GraphCache, ScratchArena};
@@ -93,8 +126,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::batch::QueryBatch;
+use super::faults::{FaultEvent, FaultKind, FaultPlan};
 use super::query::{Arrival, Query};
-use super::queue::{AdmissionQueue, OverflowPolicy};
+use super::queue::{AdmissionQueue, OverflowPolicy, QueueEntry};
 use super::shard::{aggregate, AggregateMetrics, ServeConfig, ShardReport};
 
 /// Scheduler configuration: the batch-engine config plus admission
@@ -119,6 +153,22 @@ pub struct SchedulerConfig {
     /// profiles — the coordinator folds batch reports in fixed shard
     /// order regardless of which thread finished first.
     pub workers: usize,
+    /// Deterministic shard-fault schedule (`None` = fault-free). See
+    /// [`FaultPlan`] for the spec grammar and [`Scheduler`] for the
+    /// recovery semantics.
+    pub faults: Option<FaultPlan>,
+    /// Per-query deadline measured from arrival, ps (`0` disables): a
+    /// query not launched by `arrival + deadline_ps` is shed with a
+    /// counted `deadline_expired` outcome instead of retried forever.
+    pub deadline_ps: u64,
+    /// Bound on serving attempts after the first (a query failed by its
+    /// batch is retried at most this many times before it lands in the
+    /// `failed` outcome).
+    pub max_retries: u32,
+    /// Base of the exponential virtual-time retry backoff, ps: attempt
+    /// `n` becomes eligible `retry_backoff_ps << (n-1)` after its
+    /// failure (minimum 1 ps so the clock always advances).
+    pub retry_backoff_ps: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -129,6 +179,10 @@ impl Default for SchedulerConfig {
             overflow: OverflowPolicy::default(),
             collect_distances: true,
             workers: 0,
+            faults: None,
+            deadline_ps: 0,
+            max_retries: 3,
+            retry_backoff_ps: 1_000_000_000, // 1 ms
         }
     }
 }
@@ -175,6 +229,19 @@ pub struct ScheduleReport {
     pub outcomes: Vec<QueryOutcome>,
     /// Queries shed by the drop policy (excluded from results, counted).
     pub dropped: Vec<Query>,
+    /// Queries shed past their deadline (admitted, never launched in
+    /// time). Part of the faulted conservation identity
+    /// `arrived == served + dropped + deadline_expired + failed`.
+    pub deadline_expired: Vec<Query>,
+    /// Queries that exhausted `max_retries` or were stranded when every
+    /// shard died (the no-progress detector fails them cleanly).
+    pub failed: Vec<Query>,
+    /// Query-attempts returned to the retry buffer after a failed or
+    /// aborted batch.
+    pub requeued: u64,
+    /// Retry re-admissions into the queue (≤ `requeued`; entries still
+    /// buffered when the run strands count only as `failed`).
+    pub retries: u64,
     /// Query ids in the order they left the admission queue — FIFO
     /// admission order, pinned by `strategy_properties.rs`.
     pub placed_order: Vec<u32>,
@@ -296,6 +363,10 @@ impl ScheduleReport {
             ("admitted", self.admitted.into()),
             ("dropped", self.dropped.len().into()),
             ("served", self.served().into()),
+            ("deadline_expired", self.deadline_expired.len().into()),
+            ("failed", self.failed.len().into()),
+            ("requeued", self.requeued.into()),
+            ("retries", self.retries.into()),
             ("queue_peak", self.queue_peak.into()),
             ("blocked", self.blocked.into()),
             ("batches", self.batches.into()),
@@ -336,6 +407,10 @@ impl ScheduleReport {
         exp.counter("lonestar_blocked_total", "Arrivals stalled by the block overflow policy", &[], self.blocked as f64);
         exp.counter("lonestar_served_total", "Queries served to completion", &[], self.served() as f64);
         exp.counter("lonestar_batches_total", "Batches launched across all shards", &[], self.batches as f64);
+        exp.counter("lonestar_requeued_total", "Query-attempts returned to the retry buffer by failed/aborted batches", &[], self.requeued as f64);
+        exp.counter("lonestar_retries_total", "Retry re-admissions into the queue", &[], self.retries as f64);
+        exp.counter("lonestar_deadline_expired_total", "Queries shed past their per-query deadline", &[], self.deadline_expired.len() as f64);
+        exp.counter("lonestar_failed_total", "Queries failed after exhausting retries (or stranded by dead shards)", &[], self.failed.len() as f64);
         exp.gauge("lonestar_queue_peak", "Peak admission-queue depth", &[], self.queue_peak as f64);
         exp.gauge("lonestar_wall_ms", "Virtual wall-clock of the drained stream (ms)", &[], self.wall_ms());
         let shard_ids: Vec<String> = (0..self.shards.len()).map(|i| i.to_string()).collect();
@@ -361,6 +436,22 @@ impl ScheduleReport {
                 "Queries served per shard",
                 &[("shard", id), ("device", s.device.name)],
                 s.queries.len() as f64,
+            );
+        }
+        for (s, id) in self.shards.iter().zip(&shard_ids) {
+            exp.gauge(
+                "lonestar_shard_downtime_ms",
+                "Time the shard spent quarantined or dead (ms)",
+                &[("shard", id), ("device", s.device.name)],
+                s.downtime_ms(),
+            );
+        }
+        for (s, id) in self.shards.iter().zip(&shard_ids) {
+            exp.gauge(
+                "lonestar_shard_availability",
+                "In-service fraction of the stream span (1 - downtime_ps / wall_ps)",
+                &[("shard", id), ("device", s.device.name)],
+                s.availability(self.wall_ps),
             );
         }
         exp.histogram(
@@ -496,6 +587,13 @@ struct LaunchMsg {
     trace: Option<TraceSink>,
     /// Distance container, filled by the worker when collection is on.
     dists: Vec<Vec<u32>>,
+    /// Memory budget override for this batch (bytes): `Some` once a
+    /// shrink fault has ever touched the shard (including the restored
+    /// value after `factor=1`), `None` while the device default applies.
+    /// The worker clamps its persistent tracker before running, so a
+    /// shrunken device forces the AD policy onto memory-feasible
+    /// strategies — or errors a static strategy into the retry path.
+    budget: Option<u64>,
 }
 
 /// Worker → coordinator: one per launch, collected before the virtual
@@ -566,6 +664,12 @@ fn run_batch(
     max_iterations: u32,
     collect_distances: bool,
 ) -> Result<u64> {
+    if let Some(budget) = msg.budget {
+        // A shrink fault (or its later restoration) rides the launch
+        // message; the persistent tracker keeps its charges, only the
+        // ceiling moves.
+        ex.mem.set_budget(budget);
+    }
     let mut ctx = ExecCtx::new(&ex.dev, AlgoKind::Sssp, Box::new(NativeRelaxer));
     std::mem::swap(&mut ctx.mem, &mut ex.mem);
     std::mem::swap(&mut ctx.metrics, &mut ex.metrics);
@@ -778,16 +882,28 @@ impl Drop for WorkerPool {
 // Coordinator
 // ---------------------------------------------------------------------------
 
+/// One failed query waiting out its retry backoff in virtual time.
+#[derive(Debug, Clone, Copy)]
+struct RetryEntry {
+    /// Instant the entry may re-enter the queue (`failure + backoff`).
+    eligible_ps: u64,
+    /// Original arrival instant (deadlines and waits measure from here).
+    arrived_ps: u64,
+    /// Failed serving attempts so far (≥ 1 in this buffer).
+    attempts: u32,
+    query: Query,
+}
+
 /// One device shard's coordinator-side state: admission, placement and
 /// clock bookkeeping. The engine itself lives on the shard's worker
 /// thread ([`ShardExec`]).
 struct ShardSlot {
     /// Owned device spec (the worker holds its own clone).
     dev: DeviceSpec,
-    /// Placed, waiting for the shard to go idle: `(query, arrival_ps)`.
-    pending: Vec<(Query, u64)>,
+    /// Placed, waiting for the shard to go idle.
+    pending: Vec<QueueEntry>,
     /// The batch currently executing (on the virtual clock).
-    running: Vec<(Query, u64)>,
+    running: Vec<QueueEntry>,
     /// The query buffer that rides the launch message (capacity reused
     /// every batch; empty while a launch is in flight).
     batch_queries: Vec<Query>,
@@ -811,6 +927,26 @@ struct ShardSlot {
     /// Served queries / distances accumulated across every batch.
     served: Vec<Query>,
     dists: Vec<Vec<u32>>,
+    /// In service: placement only targets up shards. Starts true; a
+    /// down-fault clears it, an up-fault restores it (unless dead).
+    up: bool,
+    /// Permanently killed — no up-fault revives it.
+    dead: bool,
+    /// Instant the current outage began (valid while `!up`).
+    down_since_ps: u64,
+    /// Σ completed outage durations (ps); open outages are closed out at
+    /// drain. Feeds the report's per-shard `availability`.
+    downtime_ps: u64,
+    /// Throughput-degradation multiplier on `ps_per_cycle` (1 = full
+    /// speed). Applies to batches launched while degraded; an in-flight
+    /// batch keeps the duration computed at its launch.
+    slow_factor: u64,
+    /// Memory-budget divisor from the latest shrink fault (1 = default).
+    budget_divisor: u64,
+    /// A shrink has touched this shard at some point: every later launch
+    /// carries an explicit budget so a restoration also reaches the
+    /// worker's persistent tracker.
+    budget_dirty: bool,
 }
 
 /// The stepwise scheduler. [`serve_stream`] wraps construct → drain →
@@ -841,6 +977,19 @@ pub struct Scheduler<'a> {
     outcomes: Vec<QueryOutcome>,
     dropped: Vec<Query>,
     placed_order: Vec<u32>,
+    /// Compiled fault schedule (empty when `cfg.faults` is `None`) and
+    /// the cursor of the next un-fired transition.
+    faults: Vec<FaultEvent>,
+    next_fault: usize,
+    /// Failed queries waiting out their retry backoff, sorted by
+    /// `(eligible_ps, arrived_ps, id)`; pre-allocated to the arrival
+    /// count so steady-state requeues never touch the heap.
+    retry: VecDeque<RetryEntry>,
+    /// Queries shed past their deadline / failed terminally.
+    deadline_expired: Vec<Query>,
+    failed: Vec<Query>,
+    /// Query-attempts pushed into the retry buffer.
+    requeued: u64,
     /// Optional telemetry sink ([`Scheduler::attach_trace`]): admission /
     /// placement / batch events are recorded here directly; engine events
     /// arrive via the per-shard rings, absorbed in shard order at the
@@ -893,8 +1042,29 @@ impl<'a> Scheduler<'a> {
                 tp: dev.throughput_index(),
                 served: Vec::with_capacity(n_arrivals),
                 dists: Vec::with_capacity(if cfg.collect_distances { n_arrivals } else { 0 }),
+                up: true,
+                dead: false,
+                down_since_ps: 0,
+                downtime_ps: 0,
+                slow_factor: 1,
+                budget_divisor: 1,
+                budget_dirty: false,
             });
         }
+        let faults: Vec<FaultEvent> = match &cfg.faults {
+            Some(plan) => {
+                for f in plan.events() {
+                    if f.shard >= n_shards {
+                        return Err(Error::Config(format!(
+                            "fault plan targets shard {} but the pool has {n_shards}",
+                            f.shard
+                        )));
+                    }
+                }
+                plan.events().to_vec()
+            }
+            None => Vec::new(),
+        };
         // Shard i lives on worker i % n_workers for its whole life (an
         // engine never migrates between threads). `workers = 1` runs the
         // identical machinery on one thread — same messages, same fold.
@@ -952,6 +1122,12 @@ impl<'a> Scheduler<'a> {
             outcomes: Vec::with_capacity(n_arrivals),
             dropped: Vec::with_capacity(n_arrivals),
             placed_order: Vec::with_capacity(n_arrivals),
+            faults,
+            next_fault: 0,
+            retry: VecDeque::with_capacity(n_arrivals),
+            deadline_expired: Vec::with_capacity(n_arrivals),
+            failed: Vec::with_capacity(n_arrivals),
+            requeued: 0,
             trace: None,
         })
     }
@@ -983,10 +1159,11 @@ impl<'a> Scheduler<'a> {
         self.pool.handles.len()
     }
 
-    /// Advance the virtual clock to the next event (a batch completion or
-    /// an arrival) and process everything due. Returns `false` once the
-    /// stream has drained: no future arrivals, every shard idle, nothing
-    /// queued.
+    /// Advance the virtual clock to the next event (a batch completion,
+    /// an arrival, a retry becoming eligible, or a fault transition) and
+    /// process everything due. Returns `false` once the stream has
+    /// drained: no future arrivals, every shard idle, nothing queued —
+    /// or once the no-progress detector has failed a stranded remainder.
     pub fn step(&mut self) -> Result<bool> {
         let next_arrival = self.arrivals.get(self.next_arrival).map(|a| a.at_ps);
         let next_done = self
@@ -995,24 +1172,50 @@ impl<'a> Scheduler<'a> {
             .filter(|s| s.busy)
             .map(|s| s.busy_until_ps)
             .min();
-        let now = match (next_arrival, next_done) {
-            (Some(a), Some(d)) => a.min(d),
-            (Some(a), None) => a,
-            (None, Some(d)) => d,
-            // No future event: dispatch runs at the end of every step, so
-            // anything queued or pending would have made a shard busy.
-            (None, None) => return Ok(false),
+        // The buffer is sorted by eligibility, so the front is the min.
+        let next_retry = self.retry.front().map(|e| e.eligible_ps);
+        let next_fault = self.faults.get(self.next_fault).map(|f| f.at_ps);
+        let backlog =
+            !self.queue.is_empty() || !self.blocked.is_empty() || !self.retry.is_empty();
+        let mut now = [next_arrival, next_done, next_retry]
+            .into_iter()
+            .flatten()
+            .min();
+        if let Some(f) = next_fault {
+            // A fault instant only matters while the run is live: once
+            // nothing is owed (no arrivals, completions, retries, or
+            // backlog), the remaining transitions are no-ops and the
+            // stream is drained.
+            if now.is_some() || backlog {
+                now = Some(now.map_or(f, |t| t.min(f)));
+            }
+        }
+        let Some(now) = now else {
+            if backlog {
+                // Satellite fix: nothing busy, no arrivals, no retries
+                // pending, no faults left — yet queries remain (every
+                // shard is dead with a full queue under Block). No future
+                // event can free capacity, so the old loop would spin
+                // here forever. Fail the remainder cleanly instead.
+                self.fail_stranded();
+            }
+            return Ok(false);
         };
         debug_assert!(now >= self.now_ps, "the virtual clock is monotonic");
         self.now_ps = now;
 
         // 1. Completions first — capacity freed at `now` serves arrivals
-        //    and placements of the same instant.
+        //    and placements of the same instant (and a batch finishing at
+        //    the very instant its shard faults still counts as served).
         for i in 0..self.shards.len() {
             if self.shards[i].busy && self.shards[i].busy_until_ps <= now {
                 self.complete(i);
             }
         }
+        // 1b. Fault transitions due now: quarantine/revive/degrade/shrink
+        //     shards, aborting any batch in flight on a shard that goes
+        //     down (its queries enter the retry path).
+        self.apply_faults(now);
         // 2. Settle the backlog against the freed capacity BEFORE looking
         //    at new arrivals: earlier (blocked) arrivals re-enter first
         //    and queued queries move onto the freed shards, so an arrival
@@ -1078,18 +1281,267 @@ impl<'a> Scheduler<'a> {
         self.settle();
         // 5. Idle shards with pending work launch a batch.
         self.dispatch()?;
+        // 6. No-progress detector, same-instant flavor: queries remain
+        //    but every shard is quarantined for good (no up shard, no
+        //    arrivals, no fault transitions left — so no event will ever
+        //    free capacity, and eligible retries would re-run this very
+        //    instant forever). Fail the remainder cleanly.
+        let backlog =
+            !self.queue.is_empty() || !self.blocked.is_empty() || !self.retry.is_empty();
+        if backlog
+            && self.arrivals.get(self.next_arrival).is_none()
+            && self.next_fault >= self.faults.len()
+            && self.shards.iter().all(|s| !s.up)
+        {
+            self.fail_stranded();
+            return Ok(false);
+        }
         Ok(true)
     }
 
-    /// Fixpoint of placement + backlog drain at one instant: popping the
-    /// queue onto idle shards frees slots the blocked backlog can take
-    /// right now. Both preserve FIFO, so the fixpoint does too.
+    /// Fixpoint of retry drain + placement + backlog drain at one
+    /// instant: popping the queue onto idle shards frees slots that
+    /// eligible retries (front, with seniority) and the blocked backlog
+    /// take right now. All three preserve FIFO-by-arrival, so the
+    /// fixpoint does too.
     fn settle(&mut self) {
         loop {
-            let moved = self.drain_blocked() + self.place();
+            let moved = self.drain_retries() + self.drain_blocked() + self.place();
             if moved == 0 {
                 break;
             }
+        }
+    }
+
+    /// Fire every fault transition due at `now`, in plan order.
+    fn apply_faults(&mut self, now: u64) {
+        while let Some(f) = self.faults.get(self.next_fault).copied() {
+            if f.at_ps > now {
+                break;
+            }
+            self.next_fault += 1;
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.record(TraceEvent {
+                    shard: f.shard as u32,
+                    a: f.kind.code(),
+                    b: f.kind.param(),
+                    ..TraceEvent::new(TraceEventKind::FaultInject, now)
+                });
+            }
+            match f.kind {
+                FaultKind::Down { permanent } => {
+                    if self.shards[f.shard].dead {
+                        continue; // already gone for good
+                    }
+                    if self.shards[f.shard].busy {
+                        self.abort_running(f.shard);
+                    }
+                    let s = &mut self.shards[f.shard];
+                    debug_assert!(s.pending.is_empty(), "pending is drained between steps");
+                    if s.up {
+                        s.up = false;
+                        s.down_since_ps = now;
+                    }
+                    s.dead |= permanent;
+                    if let Some(t) = self.trace.as_deref_mut() {
+                        t.record(TraceEvent {
+                            shard: f.shard as u32,
+                            a: permanent as u64,
+                            ..TraceEvent::new(TraceEventKind::ShardDown, now)
+                        });
+                    }
+                }
+                FaultKind::Up => {
+                    let s = &mut self.shards[f.shard];
+                    if s.dead || s.up {
+                        continue; // kills are final; a double-up is a no-op
+                    }
+                    let outage = now - s.down_since_ps;
+                    s.downtime_ps += outage;
+                    s.up = true;
+                    if let Some(t) = self.trace.as_deref_mut() {
+                        t.record(TraceEvent {
+                            shard: f.shard as u32,
+                            a: outage,
+                            ..TraceEvent::new(TraceEventKind::ShardUp, now)
+                        });
+                    }
+                }
+                FaultKind::Slow { factor } => {
+                    // Takes effect at the next launch; a batch in flight
+                    // keeps the duration computed when it launched.
+                    self.shards[f.shard].slow_factor = factor.max(1);
+                }
+                FaultKind::Shrink { divisor } => {
+                    let s = &mut self.shards[f.shard];
+                    s.budget_divisor = divisor.max(1);
+                    s.budget_dirty = true;
+                }
+            }
+        }
+    }
+
+    /// Abort shard `i`'s in-flight batch at the current instant (the
+    /// shard went down mid-batch): the partial busy interval is real
+    /// wasted work (counted and traced), the batch outcome is discarded,
+    /// and every running query enters the retry path. The worker-side
+    /// engine already ran the batch to completion — identically for
+    /// every worker count — so a retry re-derives identical distances.
+    fn abort_running(&mut self, i: usize) {
+        let now = self.now_ps;
+        let s = &mut self.shards[i];
+        debug_assert!(s.busy, "abort targets a busy shard");
+        s.busy = false;
+        let width = s.running.len() as u64;
+        let busy = now.saturating_sub(s.start_ps);
+        s.busy_ps_total += busy;
+        // Discard the extracted distances; a successful retry re-extracts
+        // them (bit-identical — the engine is deterministic).
+        s.batch_dists.clear();
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record(TraceEvent {
+                shard: i as u32,
+                a: busy,
+                b: width,
+                ..TraceEvent::new(TraceEventKind::ShardBusy, s.start_ps)
+            });
+        }
+        while let Some(e) = self.shards[i].running.pop() {
+            let load = (self.graph.degree(e.query.source) as u64).max(1);
+            self.shards[i].outstanding_edges -= load;
+            self.requeue_failed(i, e.query, e.arrived_ps, e.attempts);
+        }
+    }
+
+    /// Route one query whose serving attempt just failed: into the retry
+    /// buffer (sorted by eligibility) with exponential virtual-time
+    /// backoff, or — once `max_retries` is exhausted — into the `failed`
+    /// outcome. The `Requeue` trace event doubles as the span-builder's
+    /// cleanup signal (`b = u64::MAX` marks exhaustion).
+    fn requeue_failed(&mut self, shard: usize, query: Query, arrived_ps: u64, attempts: u32) {
+        let attempts = attempts + 1;
+        let exhausted = attempts > self.cfg.max_retries;
+        let eligible_ps = if exhausted {
+            u64::MAX
+        } else {
+            // Left-shift backoff with a floor of 1 ps: a failed engine
+            // consumes no virtual time, so a zero backoff would retry at
+            // the same instant forever. The shift is capped well below
+            // overflow (attempts are bounded by max_retries anyway).
+            let backoff = self
+                .cfg
+                .retry_backoff_ps
+                .max(1)
+                .saturating_mul(1u64 << (attempts - 1).min(20));
+            self.now_ps.saturating_add(backoff)
+        };
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record(TraceEvent {
+                shard: shard as u32,
+                query: query.id,
+                a: attempts as u64,
+                b: eligible_ps,
+                ..TraceEvent::new(TraceEventKind::Requeue, self.now_ps)
+            });
+        }
+        if exhausted {
+            self.failed.push(query);
+            return;
+        }
+        self.requeued += 1;
+        let key = (eligible_ps, arrived_ps, query.id);
+        let pos = self
+            .retry
+            .iter()
+            .position(|e| (e.eligible_ps, e.arrived_ps, e.query.id) > key)
+            .unwrap_or(self.retry.len());
+        // VecDeque::insert shifts within capacity — the buffer was
+        // pre-reserved to the arrival count, so this never allocates.
+        self.retry.insert(
+            pos,
+            RetryEntry {
+                eligible_ps,
+                arrived_ps,
+                attempts,
+                query,
+            },
+        );
+    }
+
+    /// Move eligible retry entries back into the queue (at the *front* —
+    /// they predate everything queued) while there is room, shedding
+    /// entries whose deadline has passed; returns how many entries left
+    /// the buffer.
+    fn drain_retries(&mut self) -> usize {
+        let now = self.now_ps;
+        let deadline = self.cfg.deadline_ps;
+        let mut moved = 0;
+        // Shed expired entries first — they never take a queue slot.
+        if deadline > 0 {
+            let mut k = 0;
+            while k < self.retry.len() {
+                let e = self.retry[k];
+                if e.eligible_ps <= now && now > e.arrived_ps.saturating_add(deadline) {
+                    self.retry.remove(k);
+                    self.expire_deadline(e.query, e.arrived_ps.saturating_add(deadline));
+                    moved += 1;
+                } else {
+                    k += 1;
+                }
+            }
+        }
+        // Count the eligible prefix that fits, then requeue it in
+        // *reverse* so push_front lands the most senior entry foremost.
+        let room = self.queue.cap().saturating_sub(self.queue.len());
+        let mut take = 0;
+        while take < self.retry.len().min(room) && self.retry[take].eligible_ps <= now {
+            take += 1;
+        }
+        for idx in (0..take).rev() {
+            let e = self.retry.remove(idx).expect("index within bounds");
+            let entered = self.queue.requeue(e.query, e.arrived_ps, e.attempts);
+            debug_assert!(entered, "queue had room");
+            if let Some(t) = self.trace.as_deref_mut() {
+                let depth = self.queue.len() as u64;
+                t.record(TraceEvent {
+                    query: e.query.id,
+                    a: e.attempts as u64,
+                    ..TraceEvent::new(TraceEventKind::Retry, now)
+                });
+                t.record(TraceEvent {
+                    a: depth,
+                    ..TraceEvent::new(TraceEventKind::QueueDepth, now)
+                });
+            }
+            moved += 1;
+        }
+        moved
+    }
+
+    /// Count one query out with a `deadline_expired` outcome.
+    fn expire_deadline(&mut self, query: Query, deadline_at_ps: u64) {
+        self.deadline_expired.push(query);
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record(TraceEvent {
+                query: query.id,
+                a: deadline_at_ps,
+                ..TraceEvent::new(TraceEventKind::DeadlineExpired, self.now_ps)
+            });
+        }
+    }
+
+    /// Terminal no-progress path: every query still queued, blocked or
+    /// waiting on a retry is failed (capacity can never return). The
+    /// conservation identity stays exact — each lands in `failed` once.
+    fn fail_stranded(&mut self) {
+        while let Some(e) = self.queue.pop() {
+            self.failed.push(e.query);
+        }
+        while let Some((query, _at_ps)) = self.blocked.pop_front() {
+            self.failed.push(query);
+        }
+        while let Some(e) = self.retry.pop_front() {
+            self.failed.push(e.query);
         }
     }
 
@@ -1133,17 +1585,17 @@ impl<'a> Scheduler<'a> {
             !self.cfg.collect_distances || s.batch_dists.len() == s.running.len(),
             "one distance array per running query"
         );
-        for &(query, arrival_ps) in &s.running {
+        for &e in &s.running {
             self.outcomes.push(QueryOutcome {
-                query,
+                query: e.query,
                 shard: i,
-                arrival_ps,
+                arrival_ps: e.arrived_ps,
                 start_ps: s.start_ps,
                 done_ps: s.busy_until_ps,
             });
-            self.latency_hist.record(s.busy_until_ps - arrival_ps);
-            s.served.push(query);
-            s.outstanding_edges -= (self.graph.degree(query.source) as u64).max(1);
+            self.latency_hist.record(s.busy_until_ps - e.arrived_ps);
+            s.served.push(e.query);
+            s.outstanding_edges -= (self.graph.degree(e.query.source) as u64).max(1);
         }
         // Distance copies were extracted in batch order on the worker, so
         // appending keeps `served[k] ↔ dists[k]` aligned per shard.
@@ -1166,29 +1618,64 @@ impl<'a> Scheduler<'a> {
         }
     }
 
-    /// Pop admitted queries FIFO and place each on the **idle** shard
-    /// minimizing outstanding edges per unit throughput (exact integer
-    /// cross-multiplication; ties go to the lower shard id). Busy shards
-    /// take nothing — their next batch forms from whatever the queue
-    /// holds when they free, so the admission queue is the only buffer
-    /// under load and its cap is a real bound. Stops when the queue
-    /// empties or every idle shard is at `max_batch`; returns how many
-    /// queries were placed.
+    /// Pop admitted queries FIFO and place each on the **idle, in-service**
+    /// shard minimizing outstanding edges per unit *effective* throughput
+    /// (exact integer cross-multiplication with the degradation factor
+    /// folded in; ties go to the lower shard id). Busy shards take
+    /// nothing — their next batch forms from whatever the queue holds
+    /// when they free, so the admission queue is the only buffer under
+    /// load and its cap is a real bound; quarantined/dead shards take
+    /// nothing until a fault lifts. Queries past their deadline are shed
+    /// at the head with a counted outcome — hopeless work frees its
+    /// queue slot even when no shard can take anything. Stops when the
+    /// queue empties or every eligible shard is at `max_batch`; returns
+    /// how many queries were placed or shed.
     fn place(&mut self) -> usize {
         let max_batch = self.cfg.serve.max_batch;
+        let deadline = self.cfg.deadline_ps;
         let mut placed = 0;
-        while !self.queue.is_empty() {
+        loop {
+            // Deadline shedding first: the queue is FIFO-by-arrival, so
+            // expired queries surface at the head.
+            if deadline > 0 {
+                while let Some(e) = self.queue.peek().copied() {
+                    if self.now_ps <= e.arrived_ps.saturating_add(deadline) {
+                        break;
+                    }
+                    self.queue.pop();
+                    self.expire_deadline(e.query, e.arrived_ps.saturating_add(deadline));
+                    if let Some(t) = self.trace.as_deref_mut() {
+                        t.record(TraceEvent {
+                            a: self.queue.len() as u64,
+                            ..TraceEvent::new(TraceEventKind::QueueDepth, self.now_ps)
+                        });
+                    }
+                    placed += 1;
+                }
+            }
+            if self.queue.is_empty() {
+                break;
+            }
             let mut best: Option<usize> = None;
             for i in 0..self.shards.len() {
-                if self.shards[i].busy || self.shards[i].pending.len() >= max_batch {
+                if self.shards[i].busy
+                    || !self.shards[i].up
+                    || self.shards[i].pending.len() >= max_batch
+                {
                     continue;
                 }
                 best = Some(match best {
                     None => i,
                     Some(j) => {
                         let (a, b) = (&self.shards[i], &self.shards[j]);
-                        let lhs = a.outstanding_edges as u128 * b.tp as u128;
-                        let rhs = b.outstanding_edges as u128 * a.tp as u128;
+                        // A shard slowed k× serves like a device with
+                        // tp/k: compare edges × slow per unit tp.
+                        let lhs = a.outstanding_edges as u128
+                            * a.slow_factor as u128
+                            * b.tp as u128;
+                        let rhs = b.outstanding_edges as u128
+                            * b.slow_factor as u128
+                            * a.tp as u128;
                         if lhs < rhs {
                             i
                         } else {
@@ -1198,13 +1685,13 @@ impl<'a> Scheduler<'a> {
                 });
             }
             let Some(i) = best else { break };
-            let (query, at_ps) = self.queue.pop().expect("non-empty");
-            let load = (self.graph.degree(query.source) as u64).max(1);
-            self.placed_order.push(query.id);
+            let entry = self.queue.pop().expect("non-empty");
+            let load = (self.graph.degree(entry.query.source) as u64).max(1);
+            self.placed_order.push(entry.query.id);
             if let Some(t) = self.trace.as_deref_mut() {
                 t.record(TraceEvent {
                     shard: i as u32,
-                    query: query.id,
+                    query: entry.query.id,
                     a: load,
                     ..TraceEvent::new(TraceEventKind::Place, self.now_ps)
                 });
@@ -1214,7 +1701,7 @@ impl<'a> Scheduler<'a> {
                 });
             }
             let s = &mut self.shards[i];
-            s.pending.push((query, at_ps));
+            s.pending.push(entry);
             s.outstanding_edges += load;
             placed += 1;
         }
@@ -1244,9 +1731,9 @@ impl<'a> Scheduler<'a> {
             }
             let mut queries = std::mem::take(&mut s.batch_queries);
             queries.clear();
-            for &(query, at_ps) in &s.pending {
-                queries.push(query);
-                self.wait_hist.record(now - at_ps);
+            for &e in &s.pending {
+                queries.push(e.query);
+                self.wait_hist.record(now - e.arrived_ps);
             }
             let trace = if self.trace.is_some() {
                 self.rings[i].take()
@@ -1254,12 +1741,27 @@ impl<'a> Scheduler<'a> {
                 None
             };
             let dists = std::mem::take(&mut s.batch_dists);
+            // Once a shrink fault has ever touched this shard, every
+            // launch carries the effective ceiling (restores included) so
+            // the worker-side tracker follows the coordinator's view.
+            let budget = if s.budget_dirty {
+                Some(if s.budget_divisor > 1 {
+                    (s.dev.memory_budget / s.budget_divisor).max(1)
+                } else if self.cfg.serve.enforce_budget {
+                    s.dev.memory_budget
+                } else {
+                    u64::MAX
+                })
+            } else {
+                None
+            };
             self.pool.handles[i % n_workers].inbox.send(WorkerMsg::Launch(LaunchMsg {
                 shard: i,
                 base_ps: now,
                 queries,
                 trace,
                 dists,
+                budget,
             }));
             launched += 1;
         }
@@ -1274,9 +1776,10 @@ impl<'a> Scheduler<'a> {
             self.round[report.shard] = Some(report);
         }
         // Phase 3: fold in fixed shard order — gpucachesim's
-        // `core_sim_order`. Counters, trace bytes and error precedence
-        // all match what the sequential loop produced.
-        let mut failed: Option<Error> = None;
+        // `core_sim_order`. Counters and trace bytes depend only on this
+        // order, never on which worker finished first. An engine error is
+        // a *recoverable* fault here: the batch's queries re-enter the
+        // retry path instead of aborting the run (panics still re-raise).
         for i in 0..self.shards.len() {
             let Some(mut report) = self.round[i].take() else {
                 continue;
@@ -1287,7 +1790,8 @@ impl<'a> Scheduler<'a> {
                 std::panic::resume_unwind(payload);
             }
             let width = report.queries.len() as u64;
-            if failed.is_none() {
+            let ok = report.result.is_ok();
+            if ok {
                 if let Some(t) = self.trace.as_deref_mut() {
                     t.record(TraceEvent {
                         shard: i as u32,
@@ -1300,6 +1804,10 @@ impl<'a> Scheduler<'a> {
                     }
                 }
             }
+            // A failed batch's ring is discarded *without* absorbing: its
+            // partial kernel events belong to work that never happened on
+            // the virtual clock, and orphan spans would corrupt the
+            // profiler's imbalance attribution.
             if let Some(mut ring) = report.trace.take() {
                 ring.clear();
                 self.rings[i] = Some(ring);
@@ -1308,47 +1816,49 @@ impl<'a> Scheduler<'a> {
             s.batch_queries = report.queries;
             s.batch_dists = report.dists;
             match report.result {
-                Ok(cycles) if failed.is_none() => {
+                Ok(cycles) => {
                     s.start_ps = now;
-                    s.busy_until_ps = now + cycles.max(1) * s.ps_per_cycle;
+                    s.busy_until_ps =
+                        now + cycles.max(1) * s.ps_per_cycle * s.slow_factor;
                     s.busy = true;
                     std::mem::swap(&mut s.running, &mut s.pending);
                     self.batches += 1;
                 }
-                Ok(_) => {
-                    // An earlier shard's engine failed this round: the
-                    // sequential loop stopped before launching this one,
-                    // so leave it idle with its pending queries intact
-                    // (the run is aborting; its distance copies go).
+                Err(_e) => {
+                    // The attempt consumed no virtual time (the engine
+                    // refused before running); every query goes back
+                    // through the bounded retry path with backoff.
                     s.batch_dists.clear();
-                }
-                Err(e) => {
-                    s.batch_dists.clear();
-                    if failed.is_none() {
-                        failed = Some(e);
+                    while let Some(e) = self.shards[i].pending.pop() {
+                        let load =
+                            (self.graph.degree(e.query.source) as u64).max(1);
+                        self.shards[i].outstanding_edges -= load;
+                        self.requeue_failed(i, e.query, e.arrived_ps, e.attempts);
                     }
                 }
             }
         }
-        match failed {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
+        Ok(())
     }
 
     /// Drain the stream, shut the workers down (graceful join), and
-    /// assemble the report.
+    /// assemble the report. Shards still down at drain get their open
+    /// outage closed against the final clock so reported downtime and
+    /// availability cover the whole run.
     pub fn finish(self) -> ScheduleReport {
         let Scheduler {
             shards,
             pool,
             outcomes,
             dropped,
+            deadline_expired,
+            failed,
             placed_order,
             next_arrival,
             queue,
             blocked_events,
             batches,
+            requeued,
             now_ps,
             wait_hist,
             latency_hist,
@@ -1367,6 +1877,10 @@ impl<'a> Scheduler<'a> {
         let mut shard_reports = Vec::with_capacity(shards.len());
         for (i, s) in shards.into_iter().enumerate() {
             debug_assert!(!s.busy && s.pending.is_empty(), "finish before drain");
+            let mut downtime_ps = s.downtime_ps;
+            if !s.up {
+                downtime_ps += now_ps - s.down_since_ps;
+            }
             shard_reports.push(ShardReport {
                 shard: i,
                 device: s.dev,
@@ -1374,18 +1888,23 @@ impl<'a> Scheduler<'a> {
                 metrics: metrics_by_shard[i].take().unwrap_or_default(),
                 dists: s.dists,
                 busy_ps: s.busy_ps_total,
+                downtime_ps,
             });
         }
         ScheduleReport {
             shards: shard_reports,
             outcomes,
             dropped,
+            deadline_expired,
+            failed,
             placed_order,
             arrived: next_arrival as u64,
             admitted: queue.admitted,
             queue_peak: queue.peak,
             blocked: blocked_events,
             batches,
+            requeued,
+            retries: queue.requeued,
             wall_ps: now_ps,
             wait_hist,
             latency_hist,

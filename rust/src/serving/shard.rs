@@ -114,6 +114,10 @@ pub struct ShardReport {
     /// sums the actual busy intervals on the shared timeline; on the plain
     /// batch path it is the shard's cycles converted on its own clock.
     pub busy_ps: u64,
+    /// Virtual time this shard spent quarantined or dead (ps). Only the
+    /// fault-injecting scheduler path ever makes it non-zero; the plain
+    /// batch path has no fault model.
+    pub downtime_ps: u64,
 }
 
 impl ShardReport {
@@ -137,6 +141,22 @@ impl ShardReport {
         }
     }
 
+    /// Downtime in ms (virtual clock).
+    pub fn downtime_ms(&self) -> f64 {
+        self.downtime_ps as f64 / 1e9
+    }
+
+    /// In-service fraction of `span_ps`: `1 − downtime_ps / span_ps`
+    /// (1.0 when the span is empty — a shard that never saw traffic was
+    /// never observed down).
+    pub fn availability(&self, span_ps: u64) -> f64 {
+        if span_ps == 0 {
+            1.0
+        } else {
+            1.0 - (self.downtime_ps.min(span_ps) as f64 / span_ps as f64)
+        }
+    }
+
     /// JSON rendering (all ms figures converted with this shard's device).
     pub fn to_json(&self) -> Json {
         Json::Obj(self.json_fields(None))
@@ -155,6 +175,7 @@ impl ShardReport {
             ("device", self.device.name.into()),
             ("queries", self.queries.len().into()),
             ("busy_ms", self.busy_ms().into()),
+            ("downtime_ms", self.downtime_ms().into()),
             (
                 "metrics",
                 aggregate(std::iter::once(&self.metrics)).to_json(&self.device),
@@ -162,6 +183,7 @@ impl ShardReport {
         ];
         if let Some(span) = span_ps {
             fields.push(("utilization", self.utilization(span).into()));
+            fields.push(("availability", self.availability(span).into()));
         }
         fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
     }
@@ -446,6 +468,7 @@ pub fn serve_traced(
                 metrics: RunMetrics::default(),
                 dists: Vec::new(),
                 busy_ps: 0,
+                downtime_ps: 0,
             });
             continue;
         }
@@ -481,6 +504,7 @@ pub fn serve_traced(
             metrics,
             dists,
             busy_ps,
+            downtime_ps: 0,
         });
     }
     Ok(BatchReport { shards })

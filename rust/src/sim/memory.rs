@@ -84,6 +84,15 @@ impl MemoryTracker {
         self.budget
     }
 
+    /// Move the budget ceiling without disturbing the charges (the
+    /// fault-injecting scheduler shrinks/restores a live device's budget
+    /// between batches). Existing usage above a lowered ceiling is kept —
+    /// the *next* charge fails, mirroring a device that lost headroom
+    /// rather than one that evicted allocations.
+    pub fn set_budget(&mut self, budget: u64) {
+        self.budget = budget;
+    }
+
     /// Cumulative bytes charged per label (diagnostics / Figure 9 memory
     /// axis).
     pub fn by_label(&self) -> &BTreeMap<&'static str, u64> {
@@ -123,6 +132,18 @@ mod tests {
         t.resize("wl", 700, 50).unwrap();
         assert_eq!(t.peak(), 700);
         assert_eq!(t.current(), 50);
+    }
+
+    #[test]
+    fn set_budget_moves_the_ceiling_only() {
+        let mut t = MemoryTracker::new(100);
+        t.charge("graph", 80).unwrap();
+        t.set_budget(50);
+        assert_eq!(t.current(), 80, "charges survive a shrink");
+        assert!(t.charge("wl", 1).is_err(), "no headroom under the new cap");
+        t.set_budget(200);
+        t.charge("wl", 100).unwrap();
+        assert_eq!(t.peak(), 180);
     }
 
     #[test]

@@ -175,6 +175,49 @@ fn trace_event_json(ev: &TraceEvent, profile: Option<&TraceEvent>) -> Json {
             fields.push(("s", "t".into()));
             fields.push(("name", ev.kind.label().into()));
         }
+        TraceEventKind::FaultInject => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("code", ev.a.into()));
+            args.push(("param", ev.b.into()));
+        }
+        TraceEventKind::ShardDown => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("permanent", ev.a.into()));
+        }
+        TraceEventKind::ShardUp => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("outage_ms", (ev.a as f64 / 1e9).into()));
+        }
+        TraceEventKind::Retry => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("attempt", ev.a.into()));
+        }
+        TraceEventKind::Requeue => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("attempts", ev.a.into()));
+            // b = u64::MAX marks retry exhaustion (no eligibility instant).
+            if ev.b != u64::MAX {
+                args.push(("eligible_ms", (ev.b as f64 / 1e9).into()));
+            } else {
+                args.push(("exhausted", 1u64.into()));
+            }
+        }
+        TraceEventKind::DeadlineExpired => {
+            fields.push(("ph", "i".into()));
+            fields.push(("s", "t".into()));
+            fields.push(("name", ev.kind.label().into()));
+            args.push(("deadline_ms", (ev.a as f64 / 1e9).into()));
+        }
     }
     fields.push(("args", Json::obj(args)));
     Json::obj(fields)

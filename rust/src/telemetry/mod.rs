@@ -57,6 +57,17 @@ pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
 /// | `QueueDepth`       | queue depth            | —                | —                 | —                 |
 /// | `FrontierSize`     | frontier nodes         | frontier edges   | —                 | —                 |
 /// | `KernelProfile`    | warps launched         | mem transactions | CV ×1e6           | occupancy ×1e6    |
+/// | `FaultInject`      | fault code (see below) | fault parameter  | —                 | —                 |
+/// | `ShardDown`        | 1 = permanent (kill)   | —                | —                 | —                 |
+/// | `ShardUp`          | outage duration (ps)   | —                | —                 | —                 |
+/// | `Retry`            | attempt number         | —                | —                 | —                 |
+/// | `Requeue`          | attempts so far        | eligible instant (ps); `u64::MAX` = retries exhausted | — | — |
+/// | `DeadlineExpired`  | deadline instant (ps)  | —                | —                 | —                 |
+///
+/// `FaultInject` codes in `a`: 0 = transient stall (down), 1 = permanent
+/// death (kill), 2 = recovery (up), 3 = throughput degradation (slow,
+/// `b` = ps_per_cycle multiplier), 4 = memory-budget shrink (`b` =
+/// divisor of the device budget).
 ///
 /// `KernelProfile` is the load-imbalance companion of a `Kernel` event: it
 /// is recorded immediately after its kernel with the same timestamp, shard
@@ -95,11 +106,24 @@ pub enum TraceEventKind {
     FrontierSize,
     /// Per-warp load-imbalance profile of the preceding `Kernel` event.
     KernelProfile,
+    /// A fault-plan event fired on the virtual clock.
+    FaultInject,
+    /// A shard left service (transient stall or permanent death).
+    ShardDown,
+    /// A quarantined shard re-entered service (transient fault lifted).
+    ShardUp,
+    /// A requeued query re-entered the admission queue for another attempt.
+    Retry,
+    /// A failed/aborted batch returned a query to the retry buffer (or, on
+    /// exhausted attempts, to the `failed` outcome).
+    Requeue,
+    /// A query exceeded its per-query deadline and was shed.
+    DeadlineExpired,
 }
 
 impl TraceEventKind {
     /// Number of kinds (size of per-kind counter arrays).
-    pub const COUNT: usize = 14;
+    pub const COUNT: usize = 20;
 
     /// Every kind, in `repr` order.
     pub const ALL: [TraceEventKind; Self::COUNT] = [
@@ -117,6 +141,12 @@ impl TraceEventKind {
         TraceEventKind::QueueDepth,
         TraceEventKind::FrontierSize,
         TraceEventKind::KernelProfile,
+        TraceEventKind::FaultInject,
+        TraceEventKind::ShardDown,
+        TraceEventKind::ShardUp,
+        TraceEventKind::Retry,
+        TraceEventKind::Requeue,
+        TraceEventKind::DeadlineExpired,
     ];
 
     /// Stable lowercase label (metric label values, trace categories).
@@ -136,6 +166,12 @@ impl TraceEventKind {
             TraceEventKind::QueueDepth => "queue-depth",
             TraceEventKind::FrontierSize => "frontier-size",
             TraceEventKind::KernelProfile => "kernel-profile",
+            TraceEventKind::FaultInject => "fault-inject",
+            TraceEventKind::ShardDown => "shard-down",
+            TraceEventKind::ShardUp => "shard-up",
+            TraceEventKind::Retry => "retry",
+            TraceEventKind::Requeue => "requeue",
+            TraceEventKind::DeadlineExpired => "deadline-expired",
         }
     }
 }

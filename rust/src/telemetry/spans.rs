@@ -260,6 +260,27 @@ pub fn query_spans(sink: &TraceSink) -> Vec<QuerySpan> {
                     }
                 }
             }
+            TraceEventKind::Requeue => {
+                // A failed attempt: the query leaves its shard (it was
+                // either placed-not-launched — engine error at the fold —
+                // or mid-batch when the shard went down). Its partial
+                // span survives unless retries are exhausted
+                // (`b == u64::MAX`); a later Place re-stamps `place_ps`.
+                if let Some(v) = pending.get_mut(&ev.shard) {
+                    v.retain(|&q| q != ev.query);
+                }
+                if let Some((_, v)) = running.get_mut(&ev.shard) {
+                    v.retain(|&q| q != ev.query);
+                }
+                if ev.b == u64::MAX {
+                    building.remove(&ev.query);
+                }
+            }
+            TraceEventKind::DeadlineExpired => {
+                // Shed from the queue or the retry buffer: never launched,
+                // so it only exists in `building`.
+                building.remove(&ev.query);
+            }
             _ => {}
         }
     }

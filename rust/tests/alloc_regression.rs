@@ -22,7 +22,8 @@ use lonestar_lb::coordinator::ExecCtx;
 use lonestar_lb::graph::generators::{erdos_renyi, road_grid};
 use lonestar_lb::graph::Csr;
 use lonestar_lb::serving::{
-    Arrival, OverflowPolicy, Query, Scheduler, SchedulerConfig, ServeConfig,
+    Arrival, FaultEvent, FaultKind, FaultPlan, OverflowPolicy, Query, Scheduler,
+    SchedulerConfig, ServeConfig,
 };
 use lonestar_lb::sim::DeviceSpec;
 use lonestar_lb::strategies::{build_strategy, StrategyKind, StrategyParams};
@@ -186,6 +187,139 @@ fn steady_state_iterations_allocate_nothing() {
     scheduler_steady_state_allocates_nothing(&er, false, 2, 1);
     scheduler_steady_state_allocates_nothing(&er, false, 2, 2);
     scheduler_steady_state_allocates_nothing(&er, true, 2, 2);
+    // Fault injection in flight: aborts, requeues, retry-backoff drains,
+    // quarantine/re-admit transitions and budget shrinks all ride the
+    // same pre-allocated machinery, so an *active* fault plan must not
+    // cost the steady state its zero-alloc contract either.
+    scheduler_faulted_steady_state_allocates_nothing(&er);
+}
+
+/// The faulted twin of [`scheduler_steady_state_allocates_nothing`]: two
+/// shards, two workers, a traced run, and a fault plan that stalls shard 0
+/// on a geometric ladder (so outages land throughout the stream whatever
+/// its virtual span), degrades shard 1's throughput for a stretch and
+/// shrinks its memory budget. Every post-warm-up step — including the
+/// steps that fire faults, abort running batches, requeue victims and
+/// re-admit retries — must allocate zero bytes: the retry buffer, the
+/// failed/expired vectors and the trace rings are all pre-sized at
+/// construction.
+fn scheduler_faulted_steady_state_allocates_nothing(g: &Arc<Csr>) {
+    let count: u32 = 72;
+    let arrivals: Vec<Arrival> = (0..count)
+        .map(|i| Arrival {
+            query: Query {
+                id: i,
+                algo: AlgoKind::Bfs,
+                source: 0,
+            },
+            at_ps: (i as u64 + 1) * 10,
+        })
+        .collect();
+    // Stalls at 1e5 << 2k ps, lifted at twice that: the windows tile
+    // five decades of virtual time, so wherever the stream's span falls,
+    // several outages interrupt running batches.
+    let mut events = Vec::new();
+    for k in 0..12u32 {
+        let base = 100_000u64 << (2 * k);
+        events.push(FaultEvent {
+            at_ps: base,
+            shard: 0,
+            kind: FaultKind::Down { permanent: false },
+        });
+        events.push(FaultEvent {
+            at_ps: 2 * base,
+            shard: 0,
+            kind: FaultKind::Up,
+        });
+    }
+    events.push(FaultEvent {
+        at_ps: 300_000,
+        shard: 1,
+        kind: FaultKind::Slow { factor: 3 },
+    });
+    events.push(FaultEvent {
+        at_ps: 2_000_000_000,
+        shard: 1,
+        kind: FaultKind::Slow { factor: 1 },
+    });
+    events.push(FaultEvent {
+        at_ps: 500_000,
+        shard: 1,
+        kind: FaultKind::Shrink { divisor: 2 },
+    });
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            strategy: StrategyKind::BS,
+            devices: vec![DeviceSpec::k20c(); 2],
+            max_batch: 4,
+            ..Default::default()
+        },
+        queue_cap: 8,
+        overflow: OverflowPolicy::Block,
+        collect_distances: false,
+        workers: 2,
+        faults: Some(FaultPlan::from_events(events)),
+        // Generous retry budget: the ladder can abort the same query more
+        // than once, and this test is about allocations, not shedding.
+        max_retries: 16,
+        retry_backoff_ps: 1_000_000, // 1 µs: retries land inside the stream
+        ..Default::default()
+    };
+    let cache = GraphCache::new();
+    let mut sink = lonestar_lb::telemetry::TraceSink::with_capacity(1 << 14);
+    let mut sched = Scheduler::new(g.clone(), arrivals, &cfg, &cache).expect("scheduler");
+    sched.attach_trace(&mut sink);
+    let mut steps = 0usize;
+    let mut measured = 0usize;
+    loop {
+        let warm = sched.batches_launched() >= 4;
+        let (c0, b0) = snapshot();
+        let more = sched.step().expect("scheduler step");
+        let (c1, b1) = snapshot();
+        if warm && more {
+            measured += 1;
+            assert_eq!(
+                (c1 - c0, b1 - b0),
+                (0, 0),
+                "faulted scheduler step {steps} allocated {} times / {} bytes after warm-up",
+                c1 - c0,
+                b1 - b0,
+            );
+        }
+        steps += 1;
+        assert!(steps < 20_000, "faulted scheduler failed to drain");
+        if !more {
+            break;
+        }
+    }
+    assert!(
+        measured >= 8,
+        "only {measured} steady faulted steps measured — grow the stream"
+    );
+    let report = sched.finish();
+    use lonestar_lb::telemetry::TraceEventKind;
+    assert_eq!(report.arrived, count as u64);
+    // Conservation still holds under Block + faults: nothing is dropped,
+    // but retry exhaustion may fail a query.
+    assert_eq!(
+        report.arrived,
+        report.served() as u64
+            + report.dropped.len() as u64
+            + report.deadline_expired.len() as u64
+            + report.failed.len() as u64,
+    );
+    assert!(report.dropped.is_empty(), "block policy sheds nothing");
+    assert!(
+        report.requeued > 0,
+        "the stall ladder must abort at least one running batch"
+    );
+    assert!(sink.kind_count(TraceEventKind::FaultInject) > 0);
+    assert!(sink.kind_count(TraceEventKind::ShardDown) > 0);
+    assert!(sink.kind_count(TraceEventKind::Requeue) >= report.requeued);
+    assert!(
+        report.shards[0].downtime_ps > 0,
+        "quarantine windows must be attributed to shard 0"
+    );
 }
 
 /// Drive the scheduler over a fixed burst-arrival stream (identical
@@ -231,6 +365,7 @@ fn scheduler_steady_state_allocates_nothing(
         overflow: OverflowPolicy::Block,
         collect_distances: false,
         workers,
+        ..Default::default()
     };
     let cache = GraphCache::new();
     // Declared before the scheduler so the sink outlives its borrow; its

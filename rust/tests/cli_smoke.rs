@@ -448,6 +448,87 @@ fn serve_rejects_unknown_devices_and_bad_rates() {
 }
 
 #[test]
+fn config_unknown_key_names_itself_and_the_nearest_valid_key() {
+    let cpath = temp("typo.conf");
+    std::fs::write(&cpath, "name = smoke\nqueu_cap = 8\n").unwrap();
+    let out = bin()
+        .args(["serve", "--config", cpath.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("queu_cap"), "error must name the unknown key:\n{err}");
+    assert!(
+        err.contains("did you mean") && err.contains("queue_cap"),
+        "error must suggest the nearest valid key:\n{err}"
+    );
+    std::fs::remove_file(&cpath).ok();
+}
+
+#[test]
+fn serve_fault_injection_end_to_end() {
+    // A transient stall on shard 0 early in a saturated block-policy
+    // stream: the CLI parses the spec, the scheduler aborts/requeues
+    // around the outage, the conservation identity holds in the JSON
+    // report, and the survivors still pass differential replay.
+    let out = bin()
+        .args([
+            "serve", "--suite", "rmat10", "--scale", "tiny", "--queries", "32",
+            "--arrival-rate", "8000", "--queue-cap", "40", "--queue-policy", "block",
+            "--devices", "k20c,k40", "--max-batch", "8",
+            "--fault-spec", "stall:shard=0,at=0.001,for=0.05",
+            "--deadline-ms", "100", "--max-retries", "4", "--retry-backoff-ms", "0.5",
+            "--verify", "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("fault plan: 2 transition(s)"),
+        "stall expands to Down+Up:\n{text}"
+    );
+    assert!(text.contains("differential replay OK"), "no replay verdict:\n{text}");
+    let json_line = text.lines().find(|l| l.starts_with('{')).expect("json object");
+    let v = lonestar_lb::util::Json::parse(json_line).expect("valid json");
+    let field = |k: &str| v.get(k).unwrap_or_else(|| panic!("missing {k}")).as_usize().unwrap();
+    assert_eq!(field("arrived"), 32);
+    assert_eq!(
+        field("arrived"),
+        field("served") + field("dropped") + field("deadline_expired") + field("failed"),
+        "conservation identity in the JSON report"
+    );
+    assert!(
+        field("requeued") >= 1,
+        "the mid-batch stall must requeue at least one attempt"
+    );
+    assert!(field("retries") <= field("requeued"));
+}
+
+#[test]
+fn serve_rejects_bad_fault_specs() {
+    for (spec, needle) in [
+        ("stall:shard=0,at=1", "for"),              // missing duration
+        ("stall:shard=9,at=1,for=1", "shard"),      // out of range for 2 shards
+        ("frobnicate:shard=0,at=1", "frobnicate"),  // unknown clause
+    ] {
+        let out = bin()
+            .args([
+                "serve", "--suite", "rmat10", "--scale", "tiny",
+                "--arrival-rate", "100", "--devices", "k20c,k40",
+                "--fault-spec", spec,
+            ])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "spec {spec:?} must be rejected");
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains(needle),
+            "error for {spec:?} should mention {needle:?}"
+        );
+    }
+}
+
+#[test]
 fn figures_tiny_table2() {
     let out = bin()
         .args(["figures", "table2", "--scale", "tiny"])

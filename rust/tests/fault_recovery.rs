@@ -1,0 +1,408 @@
+//! Fault-injection & recovery suite for the serving scheduler.
+//!
+//! Faults are simulation events on the virtual clock, so every guarantee
+//! the healthy scheduler makes must survive them:
+//!
+//! * **Conservation** — every arrival is accounted for exactly once:
+//!   `arrived == served + dropped + deadline_expired + failed`, and no
+//!   query id appears in two ledgers. Checked per fault kind (stall,
+//!   kill, slow, shrink) and for the seeded synthetic stream.
+//! * **Correctness of survivors** — queries served *through* outages,
+//!   aborts and retries replay bit-identically through the single-query
+//!   engine (the same differential oracle as `serving_parity.rs`).
+//! * **Determinism** — same seed + same fault plan ⇒ byte-identical
+//!   report JSON, Chrome trace, profile JSON and Prometheus exposition
+//!   for `workers ∈ {1, 2, one-per-shard}`.
+//! * **Termination** — killing every shard under `OverflowPolicy::Block`
+//!   must not spin the event loop: the no-progress detector fails the
+//!   stranded remainder cleanly and the run returns.
+
+use lonestar_lb::arena::GraphCache;
+use lonestar_lb::graph::generators::{rmat, RmatParams};
+use lonestar_lb::graph::Csr;
+use lonestar_lb::serving::{
+    serve_stream, serve_stream_traced, synthetic_arrivals, FaultEvent, FaultKind, FaultPlan,
+    OverflowPolicy, SchedulerConfig, ScheduleReport, ServeConfig,
+};
+use lonestar_lb::sim::DeviceSpec;
+use lonestar_lb::strategies::{StrategyKind, StrategyParams};
+use lonestar_lb::telemetry::{chrome_trace, profile_report, TraceEventKind, TraceSink};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+const MS: u64 = 1_000_000_000; // ps per virtual millisecond
+
+fn graph() -> Arc<Csr> {
+    Arc::new(rmat(9, 4096, RmatParams::default(), 42).unwrap())
+}
+
+fn pool() -> Vec<DeviceSpec> {
+    vec![DeviceSpec::k20c(), DeviceSpec::k40(), DeviceSpec::gtx680()]
+}
+
+fn base_cfg(faults: Option<FaultPlan>) -> SchedulerConfig {
+    SchedulerConfig {
+        serve: ServeConfig {
+            devices: pool(),
+            max_batch: 8,
+            ..Default::default()
+        },
+        queue_cap: 24,
+        overflow: OverflowPolicy::Block,
+        faults,
+        ..Default::default()
+    }
+}
+
+/// Every arrival lands in exactly one ledger, and the ledgers are
+/// disjoint by query id.
+fn assert_conservation(report: &ScheduleReport, label: &str) {
+    assert_eq!(
+        report.arrived,
+        report.served() as u64
+            + report.dropped.len() as u64
+            + report.deadline_expired.len() as u64
+            + report.failed.len() as u64,
+        "{label}: conservation identity violated"
+    );
+    let mut seen = HashSet::new();
+    for o in &report.outcomes {
+        assert!(seen.insert(o.query.id), "{label}: served twice: {}", o.query.id);
+    }
+    for q in report
+        .dropped
+        .iter()
+        .chain(&report.deadline_expired)
+        .chain(&report.failed)
+    {
+        assert!(seen.insert(q.id), "{label}: double-ledgered id {}", q.id);
+    }
+}
+
+/// Run one faulted stream and conservation-check it.
+fn run_conserved(
+    g: &Arc<Csr>,
+    cfg: &SchedulerConfig,
+    queries: usize,
+    gap_ps: u64,
+    seed: u64,
+    label: &str,
+) -> ScheduleReport {
+    let arrivals = synthetic_arrivals(g, queries, 0.5, gap_ps, seed);
+    let report = serve_stream(g, arrivals, cfg, &GraphCache::new()).unwrap();
+    assert_eq!(report.arrived, queries as u64, "{label}: arrivals consumed");
+    assert_conservation(&report, label);
+    report
+}
+
+#[test]
+fn conservation_holds_under_every_fault_kind() {
+    let g = graph();
+
+    // Transient stall mid-stream: aborted batches requeue and are
+    // eventually served — Block sheds nothing and the deadline is off,
+    // so everything must come back.
+    let stall = FaultPlan::from_events(vec![
+        FaultEvent { at_ps: MS / 2, shard: 0, kind: FaultKind::Down { permanent: false } },
+        FaultEvent { at_ps: 3 * MS, shard: 0, kind: FaultKind::Up },
+    ]);
+    let r = run_conserved(&g, &base_cfg(Some(stall)), 48, 60_000, 7, "stall");
+    assert_eq!(r.served() as u64, r.arrived, "stall: transient outage loses nothing");
+    assert!(r.shards[0].downtime_ps > 0, "stall: downtime attributed");
+
+    // Permanent kill: the survivors carry the load; nothing is lost as
+    // long as one shard lives.
+    let kill = FaultPlan::from_events(vec![FaultEvent {
+        at_ps: MS / 2,
+        shard: 1,
+        kind: FaultKind::Down { permanent: true },
+    }]);
+    let r = run_conserved(&g, &base_cfg(Some(kill)), 48, 60_000, 7, "kill");
+    assert_eq!(r.served() as u64, r.arrived, "kill: two survivors absorb the pool");
+    assert!(r.shards[1].downtime_ps > 0, "kill: downtime runs to the wall");
+    assert!(
+        r.shards[1].availability(r.wall_ps) < 1.0,
+        "kill: availability reflects the outage"
+    );
+
+    // Throughput degradation: no capacity is lost, only time — served
+    // must stay complete.
+    let slow = FaultPlan::from_events(vec![FaultEvent {
+        at_ps: MS / 4,
+        shard: 2,
+        kind: FaultKind::Slow { factor: 5 },
+    }]);
+    let r = run_conserved(&g, &base_cfg(Some(slow)), 48, 60_000, 7, "slow");
+    assert_eq!(r.served() as u64, r.arrived, "slow: degraded shard still serves");
+
+    // Budget shrink to nothing with no restore and a tight retry budget:
+    // batches on the starved shard OOM, requeue, exhaust and fail — but
+    // the ledgers still balance and the run terminates.
+    let shrink = FaultPlan::from_events(vec![FaultEvent {
+        at_ps: 0,
+        shard: 0,
+        kind: FaultKind::Shrink { divisor: u64::MAX },
+    }]);
+    let mut cfg = base_cfg(Some(shrink));
+    cfg.max_retries = 2;
+    cfg.retry_backoff_ps = MS / 10;
+    let r = run_conserved(&g, &cfg, 48, 60_000, 7, "shrink");
+    assert_eq!(
+        r.served() + r.failed.len(),
+        r.arrived as usize,
+        "shrink: every query either served elsewhere or failed after retries"
+    );
+
+    // The seeded synthetic stream (the `random:` spec clause): whatever
+    // mix it draws, the identity holds and the run drains.
+    for seed in [3u64, 1911] {
+        let plan = FaultPlan::synthetic(3, 0.5, 30.0, seed);
+        assert!(!plan.is_empty(), "synthetic plan at this rate is non-trivial");
+        let mut cfg = base_cfg(Some(plan));
+        cfg.deadline_ps = 50 * MS;
+        run_conserved(&g, &cfg, 64, 60_000, seed, "synthetic");
+    }
+}
+
+#[test]
+fn survivors_replay_bit_identically_through_the_single_query_engine() {
+    let g = graph();
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { at_ps: MS / 2, shard: 0, kind: FaultKind::Down { permanent: false } },
+        FaultEvent { at_ps: 2 * MS, shard: 0, kind: FaultKind::Up },
+        FaultEvent { at_ps: MS, shard: 1, kind: FaultKind::Slow { factor: 3 } },
+        FaultEvent { at_ps: 3 * MS / 2, shard: 2, kind: FaultKind::Down { permanent: true } },
+    ]);
+    let mut cfg = base_cfg(Some(plan));
+    cfg.collect_distances = true;
+    let report = run_conserved(&g, &cfg, 48, 60_000, 11, "replay");
+    assert!(report.served() > 0, "replay: something must survive to check");
+    // The same oracle as `--verify`: per shard, re-run every served query
+    // through the single-query engine and compare distance arrays.
+    let params = StrategyParams::default();
+    for shard in &report.shards {
+        lonestar_lb::serving::replay_single(
+            &g,
+            &shard.queries,
+            StrategyKind::AD,
+            &params,
+            &shard.dists,
+        )
+        .expect("faulted survivors must replay bit-identically");
+    }
+}
+
+/// Every export surface of one faulted seeded run, as bytes.
+struct RunArtifacts {
+    report_json: String,
+    trace: String,
+    profile: String,
+    prometheus: String,
+}
+
+fn run_artifacts(g: &Arc<Csr>, seed: u64, workers: usize) -> RunArtifacts {
+    let plan = FaultPlan::synthetic(3, 0.15, 30.0, seed);
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            devices: pool(),
+            max_batch: 12,
+            ..Default::default()
+        },
+        queue_cap: 24,
+        overflow: OverflowPolicy::Block,
+        collect_distances: true,
+        workers,
+        faults: Some(plan),
+        deadline_ps: 40 * MS,
+        max_retries: 3,
+        retry_backoff_ps: MS / 2,
+    };
+    let arrivals = synthetic_arrivals(g, 72, 0.5, 60_000, seed);
+    let shard_ppc: Vec<u64> = cfg.serve.devices.iter().map(|d| d.ps_per_cycle()).collect();
+    let mut sink = TraceSink::with_capacity(1 << 14);
+    let report =
+        serve_stream_traced(g, arrivals, &cfg, &GraphCache::new(), Some(&mut sink)).unwrap();
+    assert_conservation(&report, &format!("artifacts seed={seed} workers={workers}"));
+    RunArtifacts {
+        report_json: report.to_json().to_string(),
+        trace: chrome_trace(&sink, &["k20c", "k40", "gtx680"]),
+        profile: profile_report(&sink, &shard_ppc).to_string(),
+        prometheus: report.prometheus(Some(&sink)),
+    }
+}
+
+#[test]
+fn faulted_exports_are_byte_identical_across_worker_counts() {
+    let g = graph();
+    for seed in [3u64, 1911] {
+        let baseline = run_artifacts(&g, seed, 1);
+        for workers in [2usize, 3] {
+            let par = run_artifacts(&g, seed, workers);
+            let label = format!("seed={seed} workers={workers}");
+            assert_eq!(baseline.report_json, par.report_json, "{label}: report");
+            assert_eq!(baseline.trace, par.trace, "{label}: chrome trace");
+            assert_eq!(baseline.profile, par.profile, "{label}: profile");
+            assert_eq!(baseline.prometheus, par.prometheus, "{label}: prometheus");
+        }
+    }
+}
+
+#[test]
+fn killing_every_shard_under_block_fails_the_remainder_instead_of_spinning() {
+    // The regression this pins: before the no-progress detector, a Block
+    // queue with zero live shards had no future event to advance the
+    // clock — `serve_stream` span forever. Now the stranded remainder is
+    // failed cleanly and the call returns.
+    let g = graph();
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { at_ps: MS / 4, shard: 0, kind: FaultKind::Down { permanent: true } },
+        FaultEvent { at_ps: MS / 4, shard: 1, kind: FaultKind::Down { permanent: true } },
+        FaultEvent { at_ps: MS / 4, shard: 2, kind: FaultKind::Down { permanent: true } },
+    ]);
+    let report = run_conserved(&g, &base_cfg(Some(plan)), 48, 60_000, 5, "pool-death");
+    assert!(
+        !report.failed.is_empty(),
+        "pool-death: the stranded remainder must be failed, not spun on"
+    );
+    assert!(
+        report.served() < 48,
+        "pool-death: a quarter-millisecond pool cannot serve the whole stream"
+    );
+    for s in &report.shards {
+        assert!(s.downtime_ps > 0, "pool-death: every shard logs downtime");
+        assert!(s.availability(report.wall_ps) < 1.0);
+    }
+}
+
+#[test]
+fn deadlines_shed_queries_stranded_by_an_outage() {
+    let g = graph();
+    // One shard, one long outage: whatever is waiting when the shard
+    // goes dark ages past the deadline and must be shed as
+    // `deadline_expired` — not served late, not spun on.
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { at_ps: MS / 2, shard: 0, kind: FaultKind::Down { permanent: false } },
+        FaultEvent { at_ps: 60 * MS, shard: 0, kind: FaultKind::Up },
+    ]);
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            devices: vec![DeviceSpec::k20c()],
+            max_batch: 4,
+            ..Default::default()
+        },
+        queue_cap: 64,
+        overflow: OverflowPolicy::Block,
+        faults: Some(plan),
+        deadline_ps: 5 * MS,
+        ..Default::default()
+    };
+    let report = run_conserved(&g, &cfg, 32, 60_000, 13, "deadline");
+    assert!(
+        !report.deadline_expired.is_empty(),
+        "deadline: a 60 ms outage against a 5 ms deadline must shed"
+    );
+    // Everything shed was genuinely late: the deadline ledger is only
+    // reachable past `deadline_ps`, so the wall covers the outage.
+    assert!(report.wall_ps >= 5 * MS);
+}
+
+#[test]
+fn shrunken_budget_recovers_once_restored() {
+    let g = graph();
+    // Single shard: shrink the budget to one byte early, restore it at
+    // 8 ms. Batches launched in between OOM and requeue; exponential
+    // backoff walks the retries past the restore point, after which they
+    // succeed — so the stream still serves *everything*, at a latency
+    // cost visible in `retries`.
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { at_ps: MS / 4, shard: 0, kind: FaultKind::Shrink { divisor: u64::MAX } },
+        FaultEvent { at_ps: 8 * MS, shard: 0, kind: FaultKind::Shrink { divisor: 1 } },
+    ]);
+    let cfg = SchedulerConfig {
+        serve: ServeConfig {
+            devices: vec![DeviceSpec::k20c()],
+            max_batch: 4,
+            ..Default::default()
+        },
+        queue_cap: 64,
+        overflow: OverflowPolicy::Block,
+        faults: Some(plan),
+        max_retries: 12,
+        retry_backoff_ps: MS,
+        ..Default::default()
+    };
+    let report = run_conserved(&g, &cfg, 24, 60_000, 17, "shrink-restore");
+    assert_eq!(
+        report.served() as u64,
+        report.arrived,
+        "shrink-restore: every query must eventually be served"
+    );
+    assert!(
+        report.requeued > 0 && report.retries > 0,
+        "shrink-restore: the starved window must actually requeue work \
+         (requeued {}, retries {})",
+        report.requeued,
+        report.retries,
+    );
+}
+
+#[test]
+fn adaptive_strategy_survives_a_shrunken_budget() {
+    let g = graph();
+    // AD under a quartered budget on every shard: the adaptive engine
+    // keeps picking strategies that fit, so a *moderate* shrink costs
+    // nothing — served stays complete and the ledgers balance. (The
+    // starvation extreme is covered by `shrunken_budget_recovers_...`.)
+    let plan = FaultPlan::from_events(
+        (0..3)
+            .map(|shard| FaultEvent {
+                at_ps: MS / 4,
+                shard,
+                kind: FaultKind::Shrink { divisor: 4 },
+            })
+            .collect(),
+    );
+    let mut cfg = base_cfg(Some(plan));
+    cfg.serve.strategy = StrategyKind::AD;
+    cfg.serve.enforce_budget = true;
+    let report = run_conserved(&g, &cfg, 48, 60_000, 19, "ad-shrink");
+    assert_eq!(
+        report.served() as u64,
+        report.arrived,
+        "ad-shrink: AD must keep serving under the shrunken budget"
+    );
+}
+
+#[test]
+fn fault_events_land_in_the_trace_with_their_payloads() {
+    let g = graph();
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { at_ps: MS / 2, shard: 0, kind: FaultKind::Down { permanent: false } },
+        FaultEvent { at_ps: 2 * MS, shard: 0, kind: FaultKind::Up },
+        FaultEvent { at_ps: MS, shard: 1, kind: FaultKind::Slow { factor: 3 } },
+    ]);
+    let mut cfg = base_cfg(Some(plan));
+    cfg.workers = 1;
+    let arrivals = synthetic_arrivals(&g, 48, 0.5, 60_000, 23);
+    let mut sink = TraceSink::with_capacity(1 << 14);
+    let report =
+        serve_stream_traced(&g, arrivals, &cfg, &GraphCache::new(), Some(&mut sink)).unwrap();
+    assert_conservation(&report, "trace");
+    assert_eq!(sink.kind_count(TraceEventKind::FaultInject), 3);
+    assert_eq!(sink.kind_count(TraceEventKind::ShardDown), 1);
+    assert_eq!(sink.kind_count(TraceEventKind::ShardUp), 1);
+    assert_eq!(
+        sink.kind_count(TraceEventKind::Retry),
+        report.retries,
+        "one Retry event per re-admission"
+    );
+    assert!(
+        sink.kind_count(TraceEventKind::Requeue) >= report.requeued,
+        "a Requeue event per buffered attempt (exhaustions add more)"
+    );
+    // The rendered Chrome trace names the new kinds.
+    let trace = chrome_trace(&sink, &["k20c", "k40", "gtx680"]);
+    for label in ["fault-inject", "shard-down", "shard-up"] {
+        assert!(trace.contains(label), "chrome trace must carry {label:?} events");
+    }
+}

@@ -57,6 +57,7 @@ fn run(
         overflow,
         collect_distances: true,
         workers,
+        ..Default::default()
     };
     // A brisk stream: bursts deep enough that every shard runs several
     // batches and the overflow policy actually fires.

@@ -38,6 +38,7 @@ fn cfg(workers: usize, overflow: OverflowPolicy) -> SchedulerConfig {
         overflow,
         collect_distances: false,
         workers,
+        ..Default::default()
     }
 }
 

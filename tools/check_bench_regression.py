@@ -35,6 +35,7 @@ REQUIRED_RATIOS = {
         "inspection_amortization",
         "scheduler_sim_qps",
         "scheduler_par_qps",
+        "scheduler_faulted_qps",
     ],
 }
 

@@ -1,9 +1,12 @@
 #!/usr/bin/env python3
-"""Validate telemetry artifacts exported by `--trace-out` / `--profile-out`.
+"""Validate telemetry artifacts exported by `--trace-out` / `--profile-out`,
+and the `--json` schedule report.
 
 Usage:
     tools/check_trace.py TRACE.json [--expect-shards N] [--profile PROFILE.json]
+                                    [--report REPORT.json]
     tools/check_trace.py --profile PROFILE.json
+    tools/check_trace.py --report REPORT.json
 
 Trace checks (the schema contract the telemetry layer promises, and that
 Perfetto / chrome://tracing silently depend on):
@@ -23,6 +26,17 @@ Perfetto / chrome://tracing silently depend on):
   - profiled kernel slices (args carrying "warps") also carry consistent
     imbalance args: imbalance >= 1, cv >= 0, 0 <= occupancy <= 1, and
     max_warp_cycles >= mean_warp_cycles
+  - fault-injection instants ("fault-inject" / "shard-down" / "shard-up" /
+    "retry" / "requeue" / "deadline-expired") carry their payload args,
+    and every shard-up follows at least one shard-down
+
+Report checks (--report, the `--json` ScheduleReport):
+
+  - the conservation identity holds exactly:
+    arrived == served + dropped + deadline_expired + failed
+  - arrived == admitted + dropped (admission-side ledger)
+  - retries <= requeued (a retry is a re-admission of a requeued attempt)
+  - every shard has downtime_ms >= 0 and availability in [0, 1]
 
 Profile checks (--profile, the `lonestar-profile-v1` report):
 
@@ -42,6 +56,17 @@ import sys
 
 VALID_PH = {"M", "X", "C", "i"}
 EPS = 1e-9
+
+# Fault-injection instants and the payload args each must carry (a subset
+# match: exporters may add args, never drop these).
+FAULT_INSTANT_ARGS = {
+    "fault-inject": {"code", "param"},
+    "shard-down": {"permanent"},
+    "shard-up": {"outage_ms"},
+    "retry": {"attempt"},
+    "requeue": {"attempts"},
+    "deadline-expired": {"deadline_ms"},
+}
 
 PROFILE_KERNEL_KEYS = {
     "shard", "kernel", "launches", "total_ps", "items", "warps",
@@ -97,6 +122,7 @@ def check_trace(path):
     queue_depth_samples = 0
     scheduler_events = 0
     profiled_kernels = 0
+    fault_instants = {name: 0 for name in FAULT_INSTANT_ARGS}
 
     for i, ev in enumerate(events):
         where = f"traceEvents[{i}]"
@@ -134,6 +160,15 @@ def check_trace(path):
             findings.append(f"{where}: {ph} event needs an args object")
         if ph == "i" and not ev.get("s"):
             findings.append(f"{where}: instant needs a scope 's'")
+        if ph == "i" and ev.get("name") in FAULT_INSTANT_ARGS:
+            name = ev["name"]
+            fault_instants[name] += 1
+            want = FAULT_INSTANT_ARGS[name]
+            have = set(ev.get("args") or {})
+            if not want <= have:
+                findings.append(
+                    f"{where}: {name} instant missing args {sorted(want - have)}"
+                )
         if ph == "C" and ev.get("name") == "queue depth":
             queue_depth_samples += 1
         if ev.get("tid") == 0:
@@ -153,11 +188,15 @@ def check_trace(path):
             )
     if scheduler_events and not queue_depth_samples:
         findings.append("scheduler-path trace has no queue-depth counter samples")
+    if fault_instants["shard-up"] and not fault_instants["shard-down"]:
+        findings.append("shard-up instant(s) without any preceding shard-down")
 
+    n_fault = sum(fault_instants.values())
     summary = (
         f"{len(events)} events, {len(shard_threads)} shard track(s), "
         f"{queue_depth_samples} queue-depth sample(s), "
-        f"{profiled_kernels} profiled kernel slice(s)"
+        f"{profiled_kernels} profiled kernel slice(s), "
+        f"{n_fault} fault/recovery instant(s)"
     )
     return findings, summary
 
@@ -248,6 +287,75 @@ def check_profile(path):
     return findings, summary
 
 
+def load_report(path):
+    """The report is `--json` stdout: either a bare JSON object or the one
+    `{...}` line embedded in the human-readable serve transcript."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        return json.loads(text)
+    except ValueError:
+        for line in reversed(text.splitlines()):
+            line = line.strip()
+            if line.startswith("{"):
+                return json.loads(line)
+        raise
+
+
+def check_report(path):
+    doc = load_report(path)
+
+    findings = []
+    counts = {}
+    for key in ("arrived", "admitted", "dropped", "served", "deadline_expired",
+                "failed", "requeued", "retries"):
+        v = doc.get(key)
+        if not isinstance(v, int) or v < 0:
+            findings.append(f"{key} must be a non-negative integer, got {v!r}")
+            v = 0
+        counts[key] = v
+    if findings:
+        return findings, ""
+
+    accounted = (
+        counts["served"] + counts["dropped"]
+        + counts["deadline_expired"] + counts["failed"]
+    )
+    if counts["arrived"] != accounted:
+        findings.append(
+            f"conservation violated: arrived {counts['arrived']} != "
+            f"served {counts['served']} + dropped {counts['dropped']} + "
+            f"deadline_expired {counts['deadline_expired']} + "
+            f"failed {counts['failed']} (= {accounted})"
+        )
+    if counts["arrived"] != counts["admitted"] + counts["dropped"]:
+        findings.append(
+            f"admission ledger violated: arrived {counts['arrived']} != "
+            f"admitted {counts['admitted']} + dropped {counts['dropped']}"
+        )
+    if counts["retries"] > counts["requeued"]:
+        findings.append(
+            f"retries {counts['retries']} exceeds requeued {counts['requeued']} "
+            "(every retry re-admits a previously requeued attempt)"
+        )
+    for i, s in enumerate(doc.get("shards") or []):
+        where = f"shards[{i}]"
+        down = s.get("downtime_ms")
+        if not isinstance(down, (int, float)) or down < 0:
+            findings.append(f"{where}: downtime_ms must be >= 0, got {down!r}")
+        avail = s.get("availability")
+        if avail is not None and not (0 - EPS <= avail <= 1 + EPS):
+            findings.append(f"{where}: availability {avail!r} not in [0, 1]")
+
+    summary = (
+        f"arrived {counts['arrived']} == served {counts['served']} + "
+        f"dropped {counts['dropped']} + expired {counts['deadline_expired']} + "
+        f"failed {counts['failed']}; {counts['requeued']} requeue(s), "
+        f"{counts['retries']} retrie(s)"
+    )
+    return findings, summary
+
+
 EXPECT_SHARDS = None
 
 
@@ -266,12 +374,18 @@ def main() -> int:
         i = argv.index("--profile")
         profile_path = argv[i + 1]
         del argv[i : i + 2]
+    report_path = None
+    if "--report" in argv:
+        i = argv.index("--report")
+        report_path = argv[i + 1]
+        del argv[i : i + 2]
     trace_path = argv[0] if argv else None
 
     status = 0
     for path, checker, kind in (
         (trace_path, check_trace, "trace"),
         (profile_path, check_profile, "profile"),
+        (report_path, check_report, "report"),
     ):
         if path is None:
             continue
@@ -283,7 +397,7 @@ def main() -> int:
             status = 1
         else:
             print(f"check_{kind} OK: {path}: {summary}")
-    if trace_path is None and profile_path is None:
+    if trace_path is None and profile_path is None and report_path is None:
         print(__doc__)
         return 2
     return status
