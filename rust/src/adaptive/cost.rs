@@ -10,6 +10,8 @@
 //! alone cannot see.
 
 use crate::sim::{AccessPattern, DeviceSpec, KernelSim};
+use crate::strategies::partition;
+use crate::strategies::schedule::{Granularity, Order};
 use crate::strategies::StrategyKind;
 
 use super::policy::{requires_migration, PolicyInput};
@@ -32,6 +34,11 @@ pub struct CostScratch {
     /// HP's shrinking residual-degree list (distinct from `lanes`, which
     /// its inner WD fallback clobbers).
     residual: Vec<u32>,
+    /// Histogram-binned prediction: the 33-entry bin histogram and the
+    /// binned permutation (the same pair the execution path takes from the
+    /// arena).
+    bins: Vec<u32>,
+    order: Vec<u32>,
     sm_a: Vec<u64>,
     sm_b: Vec<u64>,
 }
@@ -211,6 +218,67 @@ fn hp_cycles(
     cycles.max(dev.launch_overhead)
 }
 
+/// Composed merge-path (warp or block granularity): equal edge spans per
+/// `width`-lane group, coalesced, dense-epilogue — mirrors
+/// [`crate::strategies::schedule`]'s `merge_path_step` charge for charge
+/// (prefix sum, diagonal searches, the relax kernel, the compaction pass).
+fn composed_mp_cycles(
+    dev: &DeviceSpec,
+    total_edges: u64,
+    wl_len: u64,
+    width: u32,
+    s: &mut CostScratch,
+) -> u64 {
+    let total = total_edges as usize;
+    let mut cycles = aux_kernel_cycles(dev, wl_len, 1);
+    if total == 0 {
+        return cycles + dev.launch_overhead;
+    }
+    let chunks = partition::merge_path_chunks(total, width);
+    let search_steps = (usize::BITS - total.leading_zeros()) as u64;
+    cycles += aux_kernel_cycles(dev, chunks as u64 + 1, search_steps);
+    let (base, rem) = (total / chunks as usize, total % chunks as usize);
+    let w = width.max(1) as usize;
+    s.lanes.clear();
+    for c in 0..chunks as usize {
+        let span = base + usize::from(c < rem);
+        for r in 0..w {
+            s.lanes
+                .push(if r < span { ((span - r - 1) / w + 1) as u32 } else { 0 });
+        }
+    }
+    cycles += sim_lanes(
+        dev,
+        &s.lanes,
+        AccessPattern::Coalesced,
+        0,
+        &mut s.sm_a,
+        &mut s.sm_b,
+    );
+    cycles + aux_kernel_cycles(dev, total as u64, 1)
+}
+
+/// Composed histogram-binned: two binning passes, then one lane per node
+/// in binned order (the exact permutation `histogram_step` launches with).
+fn composed_hist_cycles(dev: &DeviceSpec, degrees: &[u32], s: &mut CostScratch) -> u64 {
+    let wl_len = degrees.len() as u64;
+    let mut cycles = 2 * aux_kernel_cycles(dev, wl_len, 1);
+    partition::histogram_bin_order_into(degrees, &mut s.bins, &mut s.order);
+    s.lanes.clear();
+    for &i in &s.order {
+        s.lanes.push(degrees[i as usize]);
+    }
+    cycles += sim_lanes(
+        dev,
+        &s.lanes,
+        AccessPattern::Scattered,
+        0,
+        &mut s.sm_a,
+        &mut s.sm_b,
+    );
+    cycles.max(dev.launch_overhead)
+}
+
 /// Predicted cycles for one iteration of `kind` over the frontier in
 /// `input`, including one-time setup the choice would trigger (COO
 /// materialization for EP, the split rebuild for NS). Allocating wrapper
@@ -257,6 +325,27 @@ pub fn predict_with(kind: StrategyKind, input: &PolicyInput<'_>, s: &mut CostScr
         StrategyKind::HP => hp_cycles(dev, degs, input.mdt, max_threads, s),
         // AD never predicts itself.
         StrategyKind::AD => u64::MAX,
+        StrategyKind::Composed(sch) => {
+            if let Some(alias) = sch.alias() {
+                // An alias costs exactly what the monolithic strategy
+                // costs — the composition *is* that strategy.
+                return predict_with(alias, input, s);
+            }
+            match sch.order {
+                Order::MergePath => {
+                    let width = match sch.granularity {
+                        Granularity::Warp => dev.warp_size,
+                        _ => dev.block_size,
+                    };
+                    composed_mp_cycles(dev, w, wl_len, width, s)
+                }
+                Order::HistogramBinned => composed_hist_cycles(dev, degs, s),
+                // Every sorted point is an alias; nothing reaches here (the
+                // parser rejects unlowered compositions), but the model
+                // must never *recommend* one either.
+                Order::Sorted => u64::MAX,
+            }
+        }
     }
 }
 
@@ -360,6 +449,7 @@ mod tests {
                 ns: true,
                 coo_resident: false,
                 split_built: false,
+                composed: true,
             },
             dev: &d,
             params: &params,
@@ -368,10 +458,11 @@ mod tests {
             graph_nodes: 1 << 12,
         };
         let mut warm = CostScratch::default();
-        for kind in StrategyKind::ALL {
+        let composed = crate::strategies::Schedule::NEW.map(StrategyKind::Composed);
+        for kind in StrategyKind::ALL.into_iter().chain(composed) {
             let _ = predict_with(kind, &input, &mut warm); // warm the pool
         }
-        for kind in StrategyKind::ALL {
+        for kind in StrategyKind::ALL.into_iter().chain(composed) {
             assert_eq!(
                 predict(kind, &input),
                 predict_with(kind, &input, &mut warm),
@@ -396,6 +487,7 @@ mod tests {
                 ns: true,
                 coo_resident: false,
                 split_built: false,
+                composed: true,
             },
             dev: &d,
             params: &params,
@@ -409,5 +501,66 @@ mod tests {
             assert!(c < u64::MAX);
         }
         assert_eq!(predict(StrategyKind::AD, &input), u64::MAX);
+        for s in crate::strategies::Schedule::NEW {
+            let c = predict(StrategyKind::Composed(s), &input);
+            assert!(c > 0 && c < u64::MAX, "{s} prediction out of range");
+        }
+    }
+
+    #[test]
+    fn alias_predictions_equal_the_monolithic_strategy() {
+        let d = dev();
+        let params = StrategyParams::default();
+        let mut degs = vec![3u32; 1024];
+        degs.push(4_000);
+        let snap = FrontierInspector::inspect(&degs, &d);
+        let input = PolicyInput {
+            snapshot: &snap,
+            degrees: &degs,
+            current: StrategyKind::BS,
+            feasibility: Feasibility {
+                ep: true,
+                wd: true,
+                ns: true,
+                coo_resident: false,
+                split_built: false,
+                composed: true,
+            },
+            dev: &d,
+            params: &params,
+            mdt: 8,
+            graph_edges: 1 << 14,
+            graph_nodes: 1 << 11,
+        };
+        for (text, kind) in [
+            ("thread/sorted", StrategyKind::BS),
+            ("cta/sorted", StrategyKind::EP),
+            ("thread/merge-path", StrategyKind::WD),
+            ("block/sorted", StrategyKind::NS),
+            ("warp/sorted", StrategyKind::HP),
+        ] {
+            let sched: crate::strategies::Schedule = text.parse().unwrap();
+            assert_eq!(
+                predict(StrategyKind::Composed(sched), &input),
+                predict(kind, &input),
+                "{text} must predict exactly like {kind}"
+            );
+        }
+    }
+
+    #[test]
+    fn composed_merge_path_beats_bs_on_a_hub_frontier() {
+        // The whole point of the warp merge-path lowering: equal spans
+        // flatten the straggler lane BS serializes on.
+        let d = dev();
+        let mut s = CostScratch::default();
+        let mut degs = vec![1u32; 2048];
+        degs.push(100_000);
+        let total: u64 = degs.iter().map(|&x| x as u64).sum();
+        let bs = bs_cycles(&d, &degs, &mut s);
+        let wmp = composed_mp_cycles(&d, total, degs.len() as u64, d.warp_size, &mut s);
+        let bmp = composed_mp_cycles(&d, total, degs.len() as u64, d.block_size, &mut s);
+        assert!(wmp < bs, "warp merge-path {wmp} must beat BS {bs}");
+        assert!(bmp < bs, "block merge-path {bmp} must beat BS {bs}");
     }
 }

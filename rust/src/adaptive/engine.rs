@@ -27,8 +27,9 @@ use crate::sim::AccessPattern;
 use crate::strategies::common::{charge_graph_and_dist, init_dist, NodeFrontier};
 use crate::strategies::mdt::{auto_mdt, MdtDecision};
 use crate::strategies::node_split::{split_graph, SplitGraph};
+use crate::strategies::schedule::{composed_step, step_scratch_bytes, Realm};
 use crate::strategies::workload_decomp::block_offsets_into;
-use crate::strategies::{Strategy, StrategyKind, StrategyParams};
+use crate::strategies::{Schedule, Strategy, StrategyKind, StrategyParams};
 use crate::telemetry::TraceEventKind;
 use crate::worklist::hierarchy::SubList;
 use crate::worklist::{EdgeWorklist, NodeWorklist};
@@ -189,12 +190,18 @@ impl Adaptive {
             self.graph.memory_bytes() + 8 * n + 4 * (e / mdt + 1) + 4 * w
         };
         let ns = ns_extra <= headroom;
+        // Composed schedules keep the 4 B node frontier BS already holds;
+        // their extra cost is the per-step transient scratch, bounded by
+        // the merge-path orders (prefix sums + dense candidate slots).
+        let composed =
+            step_scratch_bytes(Schedule::WARP_MERGE_PATH, snap.nodes, w) <= headroom;
         Feasibility {
             ep,
             wd,
             ns,
             coo_resident,
             split_built,
+            composed,
         }
     }
 
@@ -517,6 +524,28 @@ impl Adaptive {
         Ok(())
     }
 
+    /// One composed-schedule iteration (mirrors
+    /// [`crate::strategies::ComposedStrategy`]): the shared
+    /// [`composed_step`] lowering over the node frontier, with adaptive
+    /// kernel labels.
+    fn step_composed(&mut self, ctx: &mut ExecCtx, schedule: Schedule) -> Result<()> {
+        let g = self.graph.clone();
+        let result = {
+            let frontier = match self.repr.as_ref() {
+                Some(Repr::Nodes(f)) => f,
+                _ => unreachable!("composed modes run on the node representation"),
+            };
+            composed_step(ctx, &g, frontier.worklist(), schedule, Realm::Adaptive)?
+        };
+        let frontier = match self.repr.as_mut() {
+            Some(Repr::Nodes(f)) => f,
+            _ => unreachable!("composed modes run on the node representation"),
+        };
+        frontier.advance(ctx, &g, &result.updated)?;
+        ctx.recycle(result);
+        Ok(())
+    }
+
     /// One HP-style iteration (mirrors [`crate::strategies::Hierarchical`]).
     fn step_hp(&mut self, ctx: &mut ExecCtx) -> Result<()> {
         let g = self.graph.clone();
@@ -739,6 +768,12 @@ impl Strategy for Adaptive {
         } else {
             StrategyKind::BS
         };
+        // Alias compositions execute (and report) as the monolithic
+        // strategy they name — migration entry-byte bookkeeping included.
+        let choice = match choice {
+            StrategyKind::Composed(s) => s.alias().unwrap_or(choice),
+            _ => choice,
+        };
 
         // 3. Migrate if the mode changed. The telemetry instants land
         // here — before the iteration's kernels — so in a trace the
@@ -760,6 +795,7 @@ impl Strategy for Adaptive {
             StrategyKind::NS => self.step_ns(ctx)?,
             StrategyKind::HP => self.step_hp(ctx)?,
             StrategyKind::AD => unreachable!("AD never selects itself"),
+            StrategyKind::Composed(s) => self.step_composed(ctx, s)?,
         }
 
         // 5. Record the decision.
@@ -893,6 +929,57 @@ mod tests {
             );
         }
         assert!(ctx.mem.peak() <= budget, "exceeded the device budget");
+    }
+
+    #[test]
+    fn composed_candidates_stay_correct_and_feasible() {
+        // The cost model with the three new composed balancers in its
+        // candidate set must still match Dijkstra exactly, keep one
+        // decision per iteration, and respect the memory budget.
+        let g = Arc::new(rmat(9, 4096, RmatParams::default(), 31).unwrap());
+        let oracle = traversal::dijkstra(&g, 0);
+        let mut p = params(AdaptivePolicyKind::CostModel);
+        p.composed_candidates = Schedule::NEW.to_vec();
+        let r = run(
+            &g,
+            &RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: StrategyKind::AD,
+                params: p,
+                ..Default::default()
+            },
+        )
+        .expect("adaptive run with composed candidates");
+        assert_eq!(r.dist, oracle);
+        assert_eq!(r.metrics.decisions.len() as u32, r.metrics.iterations);
+    }
+
+    #[test]
+    fn alias_candidates_normalize_to_the_monolithic_strategy() {
+        // An alias composition in the candidate set must never appear in
+        // the decision trace under its composed spelling — the engine
+        // executes (and labels) it as the strategy it names.
+        let g = Arc::new(erdos_renyi(300, 1500, 15, 4).unwrap());
+        let mut p = params(AdaptivePolicyKind::CostModel);
+        p.composed_candidates = vec!["thread/merge-path".parse().unwrap()];
+        let r = run(
+            &g,
+            &RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: StrategyKind::AD,
+                params: p,
+                ..Default::default()
+            },
+        )
+        .expect("adaptive run with an alias candidate");
+        assert_eq!(r.dist, traversal::dijkstra(&g, 0));
+        for d in &r.metrics.decisions {
+            assert!(
+                !d.strategy.contains('/'),
+                "alias leaked into the trace as {}",
+                d.strategy
+            );
+        }
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub fn space_of(kind: StrategyKind) -> Space {
         StrategyKind::NS => Space::Split,
         // AD is the selector itself; its canonical view is node space.
         StrategyKind::BS | StrategyKind::WD | StrategyKind::HP | StrategyKind::AD => Space::Node,
+        // Every lowered composition consumes a plain node frontier — the
+        // merge-path / histogram reordering happens inside the kernel step,
+        // not in the worklist representation ([`crate::strategies::schedule`]).
+        StrategyKind::Composed(_) => Space::Node,
     }
 }
 
@@ -240,6 +244,9 @@ mod tests {
         assert_eq!(space_of(StrategyKind::NS), Space::Split);
         for k in [StrategyKind::BS, StrategyKind::WD, StrategyKind::HP] {
             assert_eq!(space_of(k), Space::Node);
+        }
+        for s in crate::strategies::Schedule::NEW {
+            assert_eq!(space_of(StrategyKind::Composed(s)), Space::Node);
         }
     }
 }

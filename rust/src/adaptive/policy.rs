@@ -53,6 +53,10 @@ pub struct Feasibility {
     pub coo_resident: bool,
     /// The split graph has already been built (NS was used before).
     pub split_built: bool,
+    /// A composed schedule's transient step scratch (dense frontier +
+    /// prefix/bin arrays, [`crate::strategies::schedule::step_scratch_bytes`])
+    /// fits in the remaining budget.
+    pub composed: bool,
 }
 
 impl Feasibility {
@@ -65,6 +69,11 @@ impl Feasibility {
             StrategyKind::NS => self.ns,
             StrategyKind::BS | StrategyKind::HP => true,
             StrategyKind::AD => false,
+            StrategyKind::Composed(s) => match s.alias() {
+                // Aliases cost exactly what the monolithic strategy costs.
+                Some(k) => self.allows(k),
+                None => self.composed,
+            },
         }
     }
 }
@@ -90,7 +99,7 @@ pub struct PolicyInput<'a> {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Decision {
     /// The strategy to run this iteration with (one of the five static
-    /// kinds).
+    /// kinds, or a composed schedule when the candidate set includes one).
     pub choice: StrategyKind,
     /// Predicted cycles for the choice (0 when the policy does not
     /// predict).
@@ -180,7 +189,16 @@ impl Policy for CostModelPolicy {
     fn decide(&mut self, input: &PolicyInput<'_>) -> Decision {
         let mut best: Option<(StrategyKind, u64)> = None;
         let mut current_cost: Option<u64> = None;
-        for kind in StrategyKind::ALL {
+        // The five monolithic strategies plus any composed schedules the
+        // run was configured with (`--adaptive-schedules`); with an empty
+        // candidate list the loop — and hence every decision trace — is
+        // identical to the pre-algebra model.
+        let composed = input
+            .params
+            .composed_candidates
+            .iter()
+            .map(|&s| StrategyKind::Composed(s));
+        for kind in StrategyKind::ALL.into_iter().chain(composed) {
             if !input.feasibility.allows(kind) {
                 continue;
             }
@@ -290,6 +308,7 @@ mod tests {
             ns: true,
             coo_resident: false,
             split_built: false,
+            composed: true,
         }
     }
 
@@ -328,6 +347,7 @@ mod tests {
             ns: false,
             coo_resident: false,
             split_built: false,
+            composed: false,
         };
         let mut p = HeuristicPolicy;
         let d = p.decide(&input(&snap, &degs, &dev, &params, feas));
@@ -346,6 +366,7 @@ mod tests {
             ns: false,
             coo_resident: false,
             split_built: false,
+            composed: false,
         };
         let mut p = CostModelPolicy::default();
         let d = p.decide(&input(&snap, &degs, &dev, &params, feas));
@@ -383,6 +404,7 @@ mod tests {
             ns: false,
             coo_resident: false,
             split_built: false,
+            composed: false,
         };
         let mut p = RoundRobinPolicy::default();
         let mut seen = Vec::new();
@@ -404,5 +426,69 @@ mod tests {
         assert!(requires_migration(StrategyKind::BS, StrategyKind::WD));
         assert!(!requires_migration(StrategyKind::BS, StrategyKind::HP));
         assert!(!requires_migration(StrategyKind::WD, StrategyKind::WD));
+        // Lowered compositions consume a plain 4 B node frontier, so BS/HP
+        // switch over for free while WD reshapes and EP/NS change spaces.
+        let wmp = StrategyKind::Composed(crate::strategies::Schedule::WARP_MERGE_PATH);
+        assert!(!requires_migration(StrategyKind::BS, wmp));
+        assert!(!requires_migration(wmp, StrategyKind::HP));
+        assert!(requires_migration(StrategyKind::WD, wmp));
+        assert!(requires_migration(wmp, StrategyKind::EP));
+    }
+
+    #[test]
+    fn cost_model_considers_feasible_composed_candidates_only() {
+        use crate::strategies::Schedule;
+        let dev = DeviceSpec::k20c();
+        let params = StrategyParams {
+            composed_candidates: Schedule::NEW.to_vec(),
+            ..Default::default()
+        };
+        let mut degs = vec![1u32; 2048];
+        degs.push(100_000); // heavy hub: composed merge-path should shine
+        let snap = FrontierInspector::inspect(&degs, &dev);
+
+        // Scratch-infeasible: the model must never emit a composed choice.
+        let mut feas = all_feasible();
+        feas.composed = false;
+        let mut p = CostModelPolicy::default();
+        let d = p.decide(&PolicyInput {
+            snapshot: &snap,
+            degrees: &degs,
+            current: StrategyKind::BS,
+            feasibility: feas,
+            dev: &dev,
+            params: &params,
+            mdt: 4,
+            graph_edges: 110_000,
+            graph_nodes: 4_096,
+        });
+        assert!(!d.choice.is_composed(), "picked {}", d.choice);
+
+        // Feasible: decisions stay deterministic and predict real cycles.
+        let mut p = CostModelPolicy::default();
+        let d1 = p.decide(&PolicyInput {
+            snapshot: &snap,
+            degrees: &degs,
+            current: StrategyKind::BS,
+            feasibility: all_feasible(),
+            dev: &dev,
+            params: &params,
+            mdt: 4,
+            graph_edges: 110_000,
+            graph_nodes: 4_096,
+        });
+        let d2 = p.decide(&PolicyInput {
+            snapshot: &snap,
+            degrees: &degs,
+            current: StrategyKind::BS,
+            feasibility: all_feasible(),
+            dev: &dev,
+            params: &params,
+            mdt: 4,
+            graph_edges: 110_000,
+            graph_nodes: 4_096,
+        });
+        assert_eq!(d1, d2);
+        assert!(d1.predicted_cycles > 0);
     }
 }

@@ -11,7 +11,14 @@
 //! scale      = small                   # tiny | small | paper (suite graphs)
 //! seed       = 20170101
 //! algos      = sssp,bfs
-//! strategies = BS,EP,WD,NS,HP,AD      # or "all"
+//! strategies = BS,EP,WD,NS,HP,AD      # or "all"; composed schedules
+//!                                      #  (warp/merge-path, ...) mix in
+//! schedule   = warp/merge-path         # shorthand: run exactly this
+//!                                      #  composed schedule (overrides
+//!                                      #  `strategies`)
+//! adaptive_schedules = warp/merge-path,block/histogram-binned
+//!                                      # composed candidates the AD policy
+//!                                      #  weighs alongside the five
 //! source     = 0
 //! push_policy = chunked                # chunked | per-edge
 //! enforce_budget = false
@@ -297,6 +304,8 @@ const KNOWN_KEYS: &[&str] = &[
     "algo",
     "strategies",
     "strategy",
+    "schedule",
+    "adaptive_schedules",
     "source",
     "push_policy",
     "enforce_budget",
@@ -366,6 +375,9 @@ impl ExperimentConfig {
         }
 
         let mut cfg = ExperimentConfig::default();
+        // Applied after the loop: `schedule` must override `strategies`
+        // regardless of the BTreeMap's key order.
+        let mut schedule_override: Option<crate::strategies::Schedule> = None;
         for (k, v) in kv {
             match k.as_str() {
                 "name" => cfg.name = v,
@@ -390,6 +402,18 @@ impl ExperimentConfig {
                             .map(|s| s.trim().parse())
                             .collect::<Result<_>>()?
                     }
+                }
+                "schedule" => {
+                    // Shorthand for running exactly one composed schedule
+                    // (the `--schedule` grammar); parses through the same
+                    // `granularity/order` path as a `strategies` entry.
+                    schedule_override = Some(v.parse()?);
+                }
+                "adaptive_schedules" => {
+                    cfg.params.composed_candidates = v
+                        .split(',')
+                        .map(|s| s.trim().parse())
+                        .collect::<Result<_>>()?
                 }
                 "source" => {
                     cfg.source = v
@@ -494,6 +518,9 @@ impl ExperimentConfig {
                     )))
                 }
             }
+        }
+        if let Some(sched) = schedule_override {
+            cfg.strategies = vec![StrategyKind::Composed(sched)];
         }
         Ok(cfg)
     }
@@ -674,6 +701,45 @@ mod tests {
         let all = ExperimentConfig::parse("strategies = all").unwrap();
         assert!(all.strategies.contains(&StrategyKind::AD));
         assert_eq!(all.strategies.len(), 6);
+    }
+
+    #[test]
+    fn parses_composed_schedule_keys() {
+        use crate::strategies::Schedule;
+        // `schedule` pins exactly one composed strategy, overriding
+        // `strategies` no matter where it appears in the file.
+        let cfg = ExperimentConfig::parse(
+            "strategies = BS,EP\nschedule = warp/merge-path\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.strategies,
+            vec![StrategyKind::Composed(Schedule::WARP_MERGE_PATH)]
+        );
+        // Composed spellings also mix into a plain strategies list.
+        let cfg = ExperimentConfig::parse("strategies = BS,block/histogram-binned\n").unwrap();
+        assert_eq!(
+            cfg.strategies,
+            vec![
+                StrategyKind::BS,
+                StrategyKind::Composed(Schedule::BLOCK_HISTOGRAM)
+            ]
+        );
+        // Adaptive candidate set.
+        let cfg = ExperimentConfig::parse(
+            "strategies = AD\nadaptive_schedules = warp/merge-path, block/merge-path\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.params.composed_candidates,
+            vec![Schedule::WARP_MERGE_PATH, Schedule::BLOCK_MERGE_PATH]
+        );
+        // Default: empty candidate set, decision traces unchanged.
+        assert!(ExperimentConfig::parse("").unwrap().params.composed_candidates.is_empty());
+        // Unlowered / malformed compositions are rejected.
+        assert!(ExperimentConfig::parse("schedule = cta/merge-path").is_err());
+        assert!(ExperimentConfig::parse("schedule = warp").is_err());
+        assert!(ExperimentConfig::parse("adaptive_schedules = warp/zigzag").is_err());
     }
 
     #[test]

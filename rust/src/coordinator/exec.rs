@@ -28,6 +28,15 @@ pub enum Assignment {
     /// `l, l + T, l + 2T, …` (EP's round-robin, which coalesces accesses —
     /// §II-B).
     Strided { num_threads: u32 },
+    /// Chunked-strided hybrid for the composed merge-path schedules
+    /// ([`crate::strategies::schedule`]): the batch is cut into contiguous
+    /// spans (`offsets`, one span per `width`-lane group — a warp, or the
+    /// warps of one block). Within its span, the lane with local rank
+    /// `r = l % width` processes `offsets[c] + r, offsets[c] + r + width, …`
+    /// so at every step a group's active lanes read consecutive positions
+    /// — coalesced like [`Assignment::Strided`], but with merge-path's
+    /// equal-span balance instead of a single global stride.
+    WarpStrided { offsets: Vec<u32>, width: u32 },
 }
 
 impl Assignment {
@@ -36,6 +45,9 @@ impl Assignment {
         match self {
             Assignment::Blocked(offsets) => offsets.len().saturating_sub(1),
             Assignment::Strided { num_threads } => *num_threads as usize,
+            Assignment::WarpStrided { offsets, width } => {
+                offsets.len().saturating_sub(1) * *width as usize
+            }
         }
     }
 
@@ -52,6 +64,16 @@ impl Assignment {
                     0
                 }
             }
+            Assignment::WarpStrided { offsets, width } => {
+                let w = *width as usize;
+                let (chunk, rank) = (lane / w, (lane % w) as u32);
+                let span = offsets[chunk + 1] - offsets[chunk];
+                if rank < span {
+                    (span - rank - 1) / width + 1
+                } else {
+                    0
+                }
+            }
         }
     }
 
@@ -61,6 +83,10 @@ impl Assignment {
         match self {
             Assignment::Blocked(offsets) => offsets[lane] as usize + step as usize,
             Assignment::Strided { num_threads } => lane + step as usize * *num_threads as usize,
+            Assignment::WarpStrided { offsets, width } => {
+                let w = *width as usize;
+                offsets[lane / w] as usize + lane % w + step as usize * w
+            }
         }
     }
 }
@@ -73,6 +99,14 @@ pub enum PushTarget {
     Node,
     /// EP pushes all outgoing edges of the updated node.
     Edges,
+    /// The composed merge-path kernels write a dense per-edge candidate
+    /// slot instead of appending: no in-kernel worklist atomics at all —
+    /// a separate compaction kernel (charged by the strategy as an aux
+    /// launch) folds the slots into the next frontier. This is the
+    /// classic advance/filter two-phase formulation (Gunrock, merge-path
+    /// SpMV); it trades a fixed per-iteration aux cost for structurally
+    /// uniform per-warp cycles.
+    Dense,
 }
 
 /// One kernel launch, fully described.
@@ -296,14 +330,23 @@ impl<'d> ExecCtx<'d> {
                     let c = cand[pos];
                     if c < self.dist[dst as usize] {
                         self.dist[dst as usize] = c;
-                        dsts_buf.push(dst);
                         result.updated.push(dst);
                         self.metrics.updates += 1;
-                        let elements = match work.push {
-                            PushTarget::Node => 1,
-                            PushTarget::Edges => graph.degree(dst) as u64,
-                        };
-                        append_atomics += self.push_policy.append_atomics(elements);
+                        match work.push {
+                            PushTarget::Node => {
+                                dsts_buf.push(dst);
+                                append_atomics += self.push_policy.append_atomics(1);
+                            }
+                            PushTarget::Edges => {
+                                dsts_buf.push(dst);
+                                append_atomics += self
+                                    .push_policy
+                                    .append_atomics(graph.degree(dst) as u64);
+                            }
+                            // Dense: the candidate lands in its own slot —
+                            // no contended dst write, no append atomic.
+                            PushTarget::Dense => {}
+                        }
                         if let Some(m) = mirror {
                             for child in m.children(dst) {
                                 // Mirror the parent's attribute onto the
@@ -402,8 +445,11 @@ impl<'d> ExecCtx<'d> {
         } = work;
         self.scratch.put_u32(src);
         self.scratch.put_u32(eid);
-        if let Assignment::Blocked(offsets) = assignment {
-            self.scratch.put_u32(offsets);
+        match assignment {
+            Assignment::Blocked(offsets) | Assignment::WarpStrided { offsets, .. } => {
+                self.scratch.put_u32(offsets)
+            }
+            Assignment::Strided { .. } => {}
         }
     }
 
@@ -548,6 +594,88 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn warp_strided_assignment_positions() {
+        // Two 4-lane chunks over 10 positions: spans [0,6) and [6,10).
+        let a = Assignment::WarpStrided {
+            offsets: vec![0, 6, 10],
+            width: 4,
+        };
+        assert_eq!(a.lanes(), 8);
+        // Chunk 0, rank 0: positions 0, 4 (2 items).
+        assert_eq!(a.lane_count(0, 10), 2);
+        assert_eq!(a.position(0, 1), 4);
+        // Chunk 0, rank 2: positions 2 only (span 6 → ranks 2,3 get 1).
+        assert_eq!(a.lane_count(2, 10), 1);
+        // Chunk 1, rank 3: span 4 → 1 item at position 6 + 3.
+        assert_eq!(a.lane_count(7, 10), 1);
+        assert_eq!(a.position(7, 0), 9);
+    }
+
+    #[test]
+    fn warp_strided_covers_all_positions_once() {
+        let total = 23;
+        let mut offsets = Vec::new();
+        crate::strategies::partition::merge_path_offsets_into(total, 3, &mut offsets);
+        let a = Assignment::WarpStrided { offsets, width: 4 };
+        let mut seen = vec![false; total];
+        for lane in 0..a.lanes() {
+            for s in 0..a.lane_count(lane, total) {
+                let p = a.position(lane, s);
+                assert!(!seen[p], "position {p} hit twice");
+                seen[p] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn warp_strided_empty_spans_idle_their_lanes() {
+        let a = Assignment::WarpStrided {
+            offsets: vec![0, 0, 3, 3],
+            width: 2,
+        };
+        assert_eq!(a.lanes(), 6);
+        assert_eq!(a.lane_count(0, 3), 0);
+        assert_eq!(a.lane_count(1, 3), 0);
+        assert_eq!(a.lane_count(2, 3), 2); // span [0,3) rank 0 → 0, 2
+        assert_eq!(a.lane_count(3, 3), 1);
+        assert_eq!(a.lane_count(4, 3), 0);
+    }
+
+    #[test]
+    fn dense_push_skips_worklist_atomics_but_still_updates() {
+        let g = diamond();
+        let dev = DeviceSpec::k20c();
+        let mut ex = ctx(&dev);
+        ex.dist = vec![INF; 4];
+        ex.dist[0] = 0;
+        let (src, eid) = flatten_frontier(&g, &[0]);
+        let n = src.len();
+        let mut offsets = Vec::new();
+        crate::strategies::partition::merge_path_offsets_into(n, 1, &mut offsets);
+        let work = KernelWork {
+            name: "test",
+            src,
+            eid,
+            assignment: Assignment::WarpStrided {
+                offsets,
+                width: dev.warp_size,
+            },
+            access: AccessPattern::Coalesced,
+            extra_cycles_per_edge: 0,
+            push: PushTarget::Dense,
+        };
+        let r = ex.launch(&g, &work, None).unwrap();
+        assert_eq!(ex.dist, vec![0, 1, 4, INF]);
+        assert_eq!(r.updated, vec![1, 2]);
+        assert_eq!(ex.metrics.updates, 2);
+        assert_eq!(
+            ex.metrics.atomics, 0,
+            "dense relax performs no worklist atomics in-kernel"
+        );
     }
 
     #[test]

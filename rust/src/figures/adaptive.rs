@@ -9,7 +9,7 @@ use crate::coordinator::{run, RunConfig};
 use crate::error::Result;
 use crate::graph::generators::paper_suite;
 use crate::graph::Graph;
-use crate::strategies::StrategyKind;
+use crate::strategies::{Schedule, StrategyKind, StrategyParams};
 use crate::util::Json;
 use std::io::Write;
 use std::sync::Arc;
@@ -22,7 +22,8 @@ pub struct AdaptiveRow {
     pub graph: String,
     pub nodes: usize,
     pub edges: usize,
-    /// The five static outcomes, paper order.
+    /// The five static outcomes in paper order, followed by the composed
+    /// schedules the algebra adds beyond the paper's five.
     pub outcomes: Vec<(StrategyKind, Outcome)>,
     /// The adaptive run's outcome.
     pub adaptive: Outcome,
@@ -123,7 +124,10 @@ pub fn fig_adaptive(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Adapt
         let source = crate::graph::traversal::hub_source(&g);
 
         let mut outcomes = Vec::new();
-        for k in StrategyKind::ALL {
+        let candidates = StrategyKind::ALL
+            .into_iter()
+            .chain(Schedule::NEW.into_iter().map(StrategyKind::Composed));
+        for k in candidates {
             let cfg = RunConfig {
                 algo: AlgoKind::Sssp,
                 strategy: k,
@@ -135,12 +139,18 @@ pub fn fig_adaptive(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Adapt
             outcomes.push((k, Outcome::from_run(run(&g, &cfg), &dev)?));
         }
 
+        // AD's candidate set gains the same composed schedules the static
+        // table measures, so the figure compares like against like.
         let ad_cfg = RunConfig {
             algo: AlgoKind::Sssp,
             strategy: StrategyKind::AD,
             source,
             device: dev.clone(),
             enforce_budget: opts.enforce_budget,
+            params: StrategyParams {
+                composed_candidates: Schedule::NEW.to_vec(),
+                ..Default::default()
+            },
             ..Default::default()
         };
         let ad_run = run(&g, &ad_cfg);
@@ -200,4 +210,50 @@ pub fn fig_adaptive(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Adapt
          vs-worst: reduction against the worst)"
     )?;
     Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::SuiteScale;
+
+    #[test]
+    fn candidate_table_carries_the_composed_balancers() {
+        let opts = FigureOpts {
+            scale: SuiteScale::Tiny,
+            // Budget off so every candidate (including EP's COO expansion)
+            // completes and the table is fully populated.
+            enforce_budget: false,
+            ..Default::default()
+        };
+        let mut out = Vec::new();
+        let rows = fig_adaptive(&opts, &mut out).unwrap();
+        assert!(!rows.is_empty());
+        for row in &rows {
+            assert_eq!(
+                row.outcomes.len(),
+                StrategyKind::ALL.len() + Schedule::NEW.len(),
+                "{}: five monolithic + the composed schedules",
+                row.graph
+            );
+            for s in Schedule::NEW {
+                let (_, o) = row
+                    .outcomes
+                    .iter()
+                    .find(|(k, _)| *k == StrategyKind::Composed(s))
+                    .unwrap_or_else(|| panic!("{}: missing {}", row.graph, s));
+                assert!(
+                    o.total_ms().is_some(),
+                    "{}: composed {} must complete without the budget",
+                    row.graph,
+                    s
+                );
+            }
+            // The adaptive run decides every outer iteration even with the
+            // widened candidate set.
+            assert!(row.decisions > 0, "{}: AD recorded decisions", row.graph);
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Adaptive (AD) vs. static strategies"));
+    }
 }

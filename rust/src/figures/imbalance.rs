@@ -13,7 +13,7 @@ use crate::algorithms::AlgoKind;
 use crate::coordinator::{run_traced, RunConfig};
 use crate::error::Result;
 use crate::graph::generators::paper_suite;
-use crate::strategies::StrategyKind;
+use crate::strategies::{Schedule, StrategyKind};
 use crate::telemetry::{kernel_records, TraceSink, DEFAULT_TRACE_CAPACITY};
 use crate::util::Json;
 use std::io::Write;
@@ -65,8 +65,9 @@ impl ImbalanceRow {
     }
 }
 
-/// Run the imbalance figure: the five static strategies plus AD on the
-/// suite's first skewed graph, each under a fresh trace ring.
+/// Run the imbalance figure: the five static strategies plus AD plus the
+/// new composed schedules on the suite's first skewed graph, each under a
+/// fresh trace ring.
 pub fn fig_imbalance(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<ImbalanceRow>> {
     let entry = paper_suite(opts.scale)
         .into_iter()
@@ -83,12 +84,18 @@ pub fn fig_imbalance(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Imba
     )?;
     writeln!(
         out,
-        "{:<10} {:>8} {:>8} {:>8} {:>16} {:>14}",
+        "{:<22} {:>8} {:>8} {:>8} {:>16} {:>14}",
         "strategy", "kernels", "mean", "peak", "straggler-cyc", "warp-cyc-p95"
     )?;
 
     let mut rows = Vec::new();
-    for k in StrategyKind::ALL_WITH_ADAPTIVE {
+    // The five monolithic strategies + AD, then the composed schedules the
+    // algebra adds beyond the paper's five (their aliases are already in
+    // the first group — re-measuring them would duplicate rows).
+    let kinds = StrategyKind::ALL_WITH_ADAPTIVE
+        .into_iter()
+        .chain(Schedule::NEW.into_iter().map(StrategyKind::Composed));
+    for k in kinds {
         let cfg = RunConfig {
             algo: AlgoKind::Sssp,
             strategy: k,
@@ -131,7 +138,7 @@ pub fn fig_imbalance(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Imba
         if row.completed {
             writeln!(
                 out,
-                "{:<10} {:>8} {:>8.3} {:>8.3} {:>16} {:>14}",
+                "{:<22} {:>8} {:>8.3} {:>8.3} {:>16} {:>14}",
                 row.strategy,
                 row.profiled_kernels,
                 row.mean_imbalance,
@@ -140,7 +147,7 @@ pub fn fig_imbalance(opts: &FigureOpts, out: &mut impl Write) -> Result<Vec<Imba
                 row.warp_cycles_p95
             )?;
         } else {
-            writeln!(out, "{:<10} {:>8}", row.strategy, "OOM")?;
+            writeln!(out, "{:<22} {:>8}", row.strategy, "OOM")?;
         }
         rows.push(row);
     }
@@ -168,7 +175,11 @@ mod tests {
         };
         let mut out = Vec::new();
         let rows = fig_imbalance(&opts, &mut out).unwrap();
-        assert_eq!(rows.len(), StrategyKind::ALL.len() + 1, "5 static + AD");
+        assert_eq!(
+            rows.len(),
+            StrategyKind::ALL.len() + 1 + Schedule::NEW.len(),
+            "5 static + AD + the composed schedules"
+        );
 
         let get = |label: &str| rows.iter().find(|r| r.strategy == label).unwrap();
         let bs = get("BS");
@@ -191,5 +202,44 @@ mod tests {
         );
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("Load imbalance"));
+    }
+
+    #[test]
+    fn composed_merge_path_flattens_peak_imbalance_below_every_monolithic() {
+        let opts = FigureOpts {
+            scale: SuiteScale::Tiny,
+            // Same reasoning as above: the comparison needs every strategy
+            // to finish, so the memory budget stays off.
+            enforce_budget: false,
+            ..Default::default()
+        };
+        let mut out = Vec::new();
+        let rows = fig_imbalance(&opts, &mut out).unwrap();
+        let get = |label: &str| rows.iter().find(|r| r.strategy == label).unwrap();
+
+        // warp/merge-path runs its relaxation phase dense (no in-kernel
+        // worklist appends) over even merge-path chunks, so every committed
+        // warp costs the same flat coalesced step — the peak per-kernel
+        // imbalance factor must undercut all five monolithic strategies,
+        // whose warps diverge on degree skew and per-warp atomic traffic.
+        let wmp = get(Schedule::WARP_MERGE_PATH.label());
+        assert!(wmp.completed, "warp/merge-path must fit without the budget");
+        assert!(wmp.profiled_kernels > 0, "profiler saw composed kernels");
+        assert_eq!(
+            wmp.series.len() as u64,
+            wmp.profiled_kernels,
+            "trace series covers every composed launch"
+        );
+        for k in StrategyKind::ALL {
+            let m = get(k.label());
+            assert!(m.completed, "{} must complete for the comparison", k.label());
+            assert!(
+                wmp.peak_imbalance < m.peak_imbalance,
+                "warp/merge-path peak ({}) must undercut {} ({})",
+                wmp.peak_imbalance,
+                k.label(),
+                m.peak_imbalance
+            );
+        }
     }
 }

@@ -39,6 +39,13 @@ pub fn impl_complexity_rank(k: StrategyKind) -> usize {
         StrategyKind::WD => 4,
         StrategyKind::NS => 5,
         StrategyKind::AD => 6,
+        // A composed alias *is* its monolithic strategy; a genuinely new
+        // composition layers the partitioner on the shared kernel
+        // machinery, so it sits beyond NS but below the full selector.
+        StrategyKind::Composed(s) => match s.alias() {
+            Some(k) => impl_complexity_rank(k),
+            None => 6,
+        },
     }
 }
 

@@ -3,6 +3,7 @@
 //! ```text
 //! lonestar-lb run      [--config F] [--suite NAME | --graph FILE | --gen SPEC]
 //!                      [--algo bfs|sssp] [--strategy BS|EP|WD|NS|HP|AD|all]
+//!                      [--schedule GRAN/ORDER] [--adaptive-schedules LIST]
 //!                      [--adaptive-policy cost|heuristic|round-robin]
 //!                      [--scale tiny|small|paper] [--seed N] [--source N]
 //!                      [--xla [--artifacts DIR]] [--enforce-budget]
@@ -16,6 +17,7 @@
 //!                      [--fault-spec SPEC] [--deadline-ms MS]
 //!                      [--max-retries N] [--retry-backoff-ms MS]
 //!                      [--algo bfs|sssp|mixed] [--strategy BS|..|AD]
+//!                      [--schedule GRAN/ORDER] [--adaptive-schedules LIST]
 //!                      [--adaptive-policy P] [--scale S] [--seed N]
 //!                      [--enforce-budget] [--verify] [--json]
 //!                      [--trace-out FILE] [--metrics-out FILE] [--profile-out FILE]
@@ -120,6 +122,9 @@ impl Args {
 const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runtime-info> [options]
   run          --suite NAME | --graph FILE | --gen SPEC | --config FILE
                --algo bfs|sssp --strategy BS|EP|WD|NS|HP|AD|all --source N
+               --schedule GRAN/ORDER (composed schedule, e.g. warp/merge-path;
+                 overrides --strategy)
+               --adaptive-schedules LIST (comma-separated composed AD candidates)
                --adaptive-policy cost|heuristic|round-robin
                --scale tiny|small|paper --seed N
                --xla --artifacts DIR --enforce-budget --no-chunking --json
@@ -133,6 +138,7 @@ const USAGE: &str = "usage: lonestar-lb <run|serve|figures|generate|inspect|runt
                --deadline-ms MS (per-query deadline; 0 = off)
                --max-retries N --retry-backoff-ms MS
                --algo bfs|sssp|mixed --strategy BS|EP|WD|NS|HP|AD
+               --schedule GRAN/ORDER --adaptive-schedules LIST
                --adaptive-policy P --scale S --seed N
                --enforce-budget --verify --json
                --trace-out FILE.json --metrics-out FILE.prom --profile-out FILE.json
@@ -244,7 +250,7 @@ fn write_trace_outputs(
 }
 
 fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
-    let cfg = if let Some(path) = args.get("config") {
+    let mut cfg = if let Some(path) = args.get("config") {
         ExperimentConfig::from_file(path)?
     } else {
         let mut cfg = ExperimentConfig {
@@ -287,6 +293,18 @@ fn cmd_run(args: &Args, out: &mut impl Write) -> Result<()> {
         };
         cfg
     };
+    // Composed-schedule flags layer on top of either source (config file or
+    // flag-built config), mirroring the `schedule`/`adaptive_schedules` keys.
+    if let Some(list) = args.get("adaptive-schedules") {
+        cfg.params.composed_candidates = list
+            .split(',')
+            .map(|s| s.trim().parse())
+            .collect::<Result<_>>()?;
+    }
+    if let Some(spec) = args.get("schedule") {
+        let sched: lonestar_lb::strategies::Schedule = spec.parse()?;
+        cfg.strategies = vec![StrategyKind::Composed(sched)];
+    }
 
     let g = Arc::new(cfg.graph.load(cfg.scale, cfg.seed)?);
     writeln!(out, "graph: {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
@@ -450,9 +468,21 @@ fn cmd_serve(args: &Args, out: &mut impl Write) -> Result<()> {
     if let Some(p) = args.get("adaptive-policy") {
         cfg.params.adaptive_policy = lonestar_lb::config::parse_adaptive_policy(p)?;
     }
-    let strategy: StrategyKind = match args.get("strategy") {
-        Some(s) => s.parse()?,
-        None => StrategyKind::AD,
+    if let Some(list) = args.get("adaptive-schedules") {
+        cfg.params.composed_candidates = list
+            .split(',')
+            .map(|s| s.trim().parse())
+            .collect::<Result<_>>()?;
+    }
+    let strategy: StrategyKind = match (args.get("schedule"), args.get("strategy")) {
+        // `--schedule warp/merge-path` pins every batch on one composed
+        // kernel; it overrides `--strategy` the same way the config
+        // `schedule` key overrides `strategies`.
+        (Some(spec), _) => {
+            StrategyKind::Composed(spec.parse::<lonestar_lb::strategies::Schedule>()?)
+        }
+        (None, Some(s)) => s.parse()?,
+        (None, None) => StrategyKind::AD,
     };
     // `mixed` (the default) draws a 50/50 BFS/SSSP stream.
     let bfs_fraction = match args.get("algo").unwrap_or("mixed") {

@@ -32,8 +32,9 @@ use crate::metrics::DecisionRecord;
 use crate::sim::AccessPattern;
 use crate::strategies::mdt::{auto_mdt, MdtDecision};
 use crate::strategies::node_split::split_graph;
+use crate::strategies::schedule::{composed_step, step_scratch_bytes, Realm};
 use crate::strategies::workload_decomp::block_offsets_into;
-use crate::strategies::{StrategyKind, StrategyParams};
+use crate::strategies::{Schedule, StrategyKind, StrategyParams};
 use crate::telemetry::TraceEventKind;
 use crate::worklist::hierarchy::SubList;
 use crate::worklist::NodeWorklist;
@@ -149,6 +150,12 @@ impl QueryBatch {
         cache: GraphCache,
     ) -> Result<Self> {
         Self::validate(&graph, queries)?;
+        // Alias compositions serve as the monolithic strategy they name
+        // (same normalization as `build_strategy`).
+        let strategy = match strategy {
+            StrategyKind::Composed(s) => s.alias().unwrap_or(strategy),
+            _ => strategy,
+        };
         let policy = if strategy == StrategyKind::AD {
             Some(build_policy(params.adaptive_policy))
         } else {
@@ -433,6 +440,12 @@ impl QueryBatch {
             } else {
                 StrategyKind::BS
             };
+            // Alias candidates execute (and report) as the monolithic
+            // strategy they name, exactly like the single-query engine.
+            let choice = match choice {
+                StrategyKind::Composed(s) => s.alias().unwrap_or(choice),
+                _ => choice,
+            };
             let migrated = choice != self.mode;
             if requires_migration(self.mode, choice) {
                 // One conversion kernel over the merged frontier — the
@@ -544,12 +557,18 @@ impl QueryBatch {
             self.graph.memory_bytes() + 8 * n + q * 4 * (e / mdt + 1) + 4 * w
         };
         let ns = ns_extra <= headroom;
+        // Composed schedules run on the per-query node views the batch
+        // already holds; the bound is the merge-path orders' per-step
+        // transient scratch, like the single-query engine.
+        let composed =
+            step_scratch_bytes(Schedule::WARP_MERGE_PATH, snap.nodes, w) <= headroom;
         Feasibility {
             ep,
             wd,
             ns,
             coo_resident: self.coo_charged,
             split_built: self.split.is_some(),
+            composed,
         }
     }
 
@@ -605,6 +624,7 @@ impl QueryBatch {
             StrategyKind::NS => self.step_ns(ctx, slot, view),
             StrategyKind::HP => self.step_hp(ctx, slot, view),
             StrategyKind::AD => unreachable!("the batch decision is a static kind"),
+            StrategyKind::Composed(s) => self.step_composed(ctx, slot, s, view),
         };
         std::mem::swap(&mut ctx.dist, &mut self.states[slot].dist);
         ctx.algo = saved_algo;
@@ -647,6 +667,23 @@ impl QueryBatch {
         let keep = 8 * st.spare.len() as u64;
         ctx.mem.release(SRV_WL, old + 8 * raw - keep);
         std::mem::swap(&mut st.frontier, &mut st.spare);
+        Ok(())
+    }
+
+    /// Composed style: the shared schedule-algebra lowering
+    /// ([`composed_step`]) over the query's node view, with serving kernel
+    /// labels (mirrors the single-query `cs_*_relax` kernels).
+    fn step_composed(
+        &mut self,
+        ctx: &mut ExecCtx,
+        slot: usize,
+        schedule: Schedule,
+        view: &NodeWorklist,
+    ) -> Result<()> {
+        let g = self.graph.clone();
+        let result = composed_step(ctx, &g, view, schedule, Realm::Serving)?;
+        self.advance(ctx, slot, &result.updated)?;
+        ctx.recycle(result);
         Ok(())
     }
 
@@ -1036,6 +1073,28 @@ mod tests {
                     q.id
                 );
             }
+        }
+    }
+
+    #[test]
+    fn composed_schedules_match_oracles_in_batches() {
+        let g = Arc::new(erdos_renyi(200, 900, 12, 3).unwrap());
+        let qs = queries(&[0, 5, 50], AlgoKind::Bfs);
+        for s in Schedule::NEW {
+            let (dists, _) = batch_run(&g, &qs, StrategyKind::Composed(s));
+            for (q, d) in qs.iter().zip(&dists) {
+                assert_eq!(
+                    d,
+                    &traversal::bfs_levels(&g, q.source),
+                    "{s} query {}",
+                    q.id
+                );
+            }
+        }
+        // An alias composition serves exactly as the strategy it names.
+        let (dists, _) = batch_run(&g, &qs, "thread/sorted".parse().unwrap());
+        for (q, d) in qs.iter().zip(&dists) {
+            assert_eq!(d, &traversal::bfs_levels(&g, q.source), "alias query {}", q.id);
         }
     }
 

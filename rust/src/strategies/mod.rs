@@ -21,12 +21,15 @@ pub mod hierarchical;
 pub mod mdt;
 pub mod node_based;
 pub mod node_split;
+pub mod partition;
+pub mod schedule;
 pub mod workload_decomp;
 
 pub use edge_based::EdgeParallel;
 pub use hierarchical::Hierarchical;
 pub use node_based::NodeBaseline;
 pub use node_split::NodeSplitting;
+pub use schedule::{ComposedStrategy, Granularity, Order, Schedule};
 pub use workload_decomp::WorkloadDecomposition;
 
 use crate::coordinator::ExecCtx;
@@ -50,6 +53,11 @@ pub enum StrategyKind {
     /// Adaptive per-iteration selection over the five static strategies
     /// ([`crate::adaptive`]).
     AD,
+    /// A point in the composable schedule algebra ([`schedule`]):
+    /// granularity × order. Compositions aliasing a paper strategy build
+    /// the monolithic implementation; the rest lower through
+    /// [`schedule::ComposedStrategy`].
+    Composed(Schedule),
 }
 
 impl StrategyKind {
@@ -83,6 +91,7 @@ impl StrategyKind {
             StrategyKind::NS => "NS",
             StrategyKind::HP => "HP",
             StrategyKind::AD => "AD",
+            StrategyKind::Composed(s) => s.label(),
         }
     }
 
@@ -97,11 +106,22 @@ impl StrategyKind {
     pub fn is_adaptive(&self) -> bool {
         matches!(self, StrategyKind::AD)
     }
+
+    /// Whether this is a composed schedule rather than a named strategy.
+    pub fn is_composed(&self) -> bool {
+        matches!(self, StrategyKind::Composed(_))
+    }
 }
 
 impl std::str::FromStr for StrategyKind {
     type Err = crate::Error;
     fn from_str(s: &str) -> Result<Self> {
+        // Compositions spell themselves `granularity/order` (the
+        // `--schedule` grammar); the named strategies keep their
+        // case-insensitive two-letter codes.
+        if s.contains('/') {
+            return Ok(StrategyKind::Composed(s.parse()?));
+        }
         match s.to_ascii_uppercase().as_str() {
             "BS" => Ok(StrategyKind::BS),
             "EP" => Ok(StrategyKind::EP),
@@ -132,6 +152,11 @@ pub struct StrategyParams {
     pub mdt_override: Option<u32>,
     /// Which decision policy the adaptive (`AD`) engine uses.
     pub adaptive_policy: crate::adaptive::AdaptivePolicyKind,
+    /// Composed schedules the adaptive policy considers alongside the five
+    /// monolithic strategies (`--adaptive-schedules` / the
+    /// `adaptive_schedules` config key). Empty by default so existing
+    /// decision traces are byte-identical to pre-algebra runs.
+    pub composed_candidates: Vec<Schedule>,
 }
 
 impl Default for StrategyParams {
@@ -141,6 +166,7 @@ impl Default for StrategyParams {
             max_threads: None,
             mdt_override: None,
             adaptive_policy: crate::adaptive::AdaptivePolicyKind::default(),
+            composed_candidates: Vec::new(),
         }
     }
 }
@@ -179,6 +205,14 @@ pub fn build_strategy(
         StrategyKind::NS => Box::new(NodeSplitting::new(graph, params)),
         StrategyKind::HP => Box::new(Hierarchical::new(graph, params)),
         StrategyKind::AD => Box::new(crate::adaptive::Adaptive::new(graph, params)),
+        StrategyKind::Composed(s) => match s.alias() {
+            // Thin alias: the composition *is* the monolithic strategy, so
+            // build the original implementation — distances and metrics are
+            // identical by construction (pinned in
+            // `rust/tests/schedule_algebra.rs`).
+            Some(k) => build_strategy(k, graph, params),
+            None => Box::new(ComposedStrategy::new(graph, s)),
+        },
     }
 }
 
@@ -192,7 +226,21 @@ mod tests {
             let parsed: StrategyKind = k.label().parse().unwrap();
             assert_eq!(parsed, k);
         }
+        for s in Schedule::NEW {
+            let k = StrategyKind::Composed(s);
+            let parsed: StrategyKind = k.label().parse().unwrap();
+            assert_eq!(parsed, k);
+            assert!(k.is_composed() && !k.is_adaptive() && !k.is_proposed());
+        }
+        // Alias compositions parse to Composed; build_strategy resolves
+        // them to the monolithic strategy.
+        let parsed: StrategyKind = "thread/sorted".parse().unwrap();
+        assert!(matches!(
+            parsed,
+            StrategyKind::Composed(s) if s.alias() == Some(StrategyKind::BS)
+        ));
         assert!("XX".parse::<StrategyKind>().is_err());
+        assert!("cta/merge-path".parse::<StrategyKind>().is_err());
     }
 
     #[test]

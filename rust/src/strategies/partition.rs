@@ -1,0 +1,137 @@
+//! Partitioners backing the composed schedules ([`super::schedule`]):
+//! merge-path equal-span chunking and histogram-binned degree ordering.
+//!
+//! Both are `_into` functions writing caller-provided scratch (the
+//! [`crate::arena`] zero-alloc convention, like
+//! [`super::workload_decomp::block_offsets_into`]), and both are pinned by
+//! property tests in `rust/tests/strategy_properties.rs`: coverage of every
+//! position exactly once, disjoint monotone chunk boundaries, and per-chunk
+//! work within the algebra's balance bound.
+
+/// Cap on lanes a composed kernel launches at once (a grid-dimension
+/// limit). Below it, merge-path chunks are one `width`-sized span per
+/// group; past it, spans grow while staying within ±1 of each other.
+pub const MAX_GRID_LANES: usize = 1 << 20;
+
+/// Number of chunks the merge-path partitioner cuts `total` positions
+/// into, for `width`-lane groups: one span per group until the grid cap,
+/// then the cap. Always at least 1.
+pub fn merge_path_chunks(total: usize, width: u32) -> u32 {
+    let width = width.max(1) as usize;
+    let max_chunks = (MAX_GRID_LANES / width).max(1);
+    total.div_ceil(width).clamp(1, max_chunks) as u32
+}
+
+/// Equal split of `total` contiguous positions into `chunks` spans whose
+/// sizes differ by at most one — the merge-path balance bound. Writes
+/// `chunks + 1` monotone boundaries into `out` (`out[0] == 0`,
+/// `out[chunks] == total`).
+pub fn merge_path_offsets_into(total: usize, chunks: u32, out: &mut Vec<u32>) {
+    out.clear();
+    let chunks = chunks.max(1) as usize;
+    let base = total / chunks;
+    let rem = total % chunks;
+    out.push(0);
+    let mut acc = 0usize;
+    for i in 0..chunks {
+        acc += base + usize::from(i < rem);
+        out.push(acc as u32);
+    }
+}
+
+/// Log₂ bin of a degree: 0 only for isolated nodes, else the bit length.
+/// Within one bin the heaviest node carries less than 2× the lightest —
+/// the histogram-binned balance bound.
+#[inline]
+pub fn degree_bin(degree: u32) -> u32 {
+    u32::BITS - degree.leading_zeros()
+}
+
+/// Stable counting sort of worklist slots by [`degree_bin`]: writes into
+/// `out` a permutation of `0..degrees.len()` ordered bin-ascending, equal
+/// bins keeping their original (frontier) order — so a binned kernel walks
+/// near-uniform-work groups without perturbing determinism. `counts` is
+/// scratch for the 33-entry histogram.
+pub fn histogram_bin_order_into(degrees: &[u32], counts: &mut Vec<u32>, out: &mut Vec<u32>) {
+    counts.clear();
+    counts.resize(u32::BITS as usize + 1, 0);
+    for &d in degrees {
+        counts[degree_bin(d) as usize] += 1;
+    }
+    let mut acc = 0u32;
+    for c in counts.iter_mut() {
+        let v = *c;
+        *c = acc;
+        acc += v;
+    }
+    out.clear();
+    out.resize(degrees.len(), 0);
+    for (i, &d) in degrees.iter().enumerate() {
+        let b = degree_bin(d) as usize;
+        out[counts[b] as usize] = i as u32;
+        counts[b] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_path_covers_and_balances() {
+        for (total, chunks) in [(0usize, 1u32), (1, 1), (10, 3), (100, 7), (32, 32)] {
+            let mut out = Vec::new();
+            merge_path_offsets_into(total, chunks, &mut out);
+            assert_eq!(out.len(), chunks as usize + 1);
+            assert_eq!(out[0], 0);
+            assert_eq!(*out.last().unwrap() as usize, total);
+            let spans: Vec<u32> = out.windows(2).map(|w| w[1] - w[0]).collect();
+            let (min, max) = (
+                spans.iter().min().copied().unwrap(),
+                spans.iter().max().copied().unwrap(),
+            );
+            assert!(max - min <= 1, "spans must differ by at most one");
+        }
+    }
+
+    #[test]
+    fn chunk_count_tracks_width_until_grid_cap() {
+        assert_eq!(merge_path_chunks(0, 32), 1);
+        assert_eq!(merge_path_chunks(1, 32), 1);
+        assert_eq!(merge_path_chunks(33, 32), 2);
+        assert_eq!(merge_path_chunks(4096, 1024), 4);
+        // Past the cap the count saturates (spans grow instead).
+        let huge = MAX_GRID_LANES * 3;
+        assert_eq!(merge_path_chunks(huge, 32) as usize, MAX_GRID_LANES / 32);
+    }
+
+    #[test]
+    fn degree_bins_bound_skew_by_two() {
+        assert_eq!(degree_bin(0), 0);
+        assert_eq!(degree_bin(1), 1);
+        assert_eq!(degree_bin(2), 2);
+        assert_eq!(degree_bin(3), 2);
+        assert_eq!(degree_bin(4), 3);
+        for d in 1u32..1000 {
+            let b = degree_bin(d);
+            assert!(d >= 1 << (b - 1) && d < (1u64 << b) as u32);
+        }
+    }
+
+    #[test]
+    fn histogram_order_is_stable_bin_ascending_permutation() {
+        let degrees = [5u32, 1, 9, 1, 0, 3, 8, 2];
+        let (mut counts, mut order) = (Vec::new(), Vec::new());
+        histogram_bin_order_into(&degrees, &mut counts, &mut order);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..degrees.len() as u32).collect::<Vec<_>>());
+        // Bin-ascending, stable within bins.
+        for w in order.windows(2) {
+            let (a, b) = (degrees[w[0] as usize], degrees[w[1] as usize]);
+            assert!(
+                degree_bin(a) < degree_bin(b) || (degree_bin(a) == degree_bin(b) && w[0] < w[1])
+            );
+        }
+    }
+}

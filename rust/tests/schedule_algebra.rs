@@ -1,0 +1,294 @@
+//! Differential oracle for the composable schedule algebra
+//! (`rust/src/strategies/schedule.rs`).
+//!
+//! The algebra's contract has two halves, and each gets pinned here:
+//!
+//! * **Aliases are the originals.** Every `granularity/order` point that
+//!   claims equivalence to one of the paper's five monolithic strategies
+//!   must be *bit-identical* to it — same distances, same cycle and
+//!   counter metrics, same inspection/decision work — across the
+//!   generator suite (grid/ER/RMAT/road) for both BFS and SSSP.
+//! * **The new points earn their keep.** The genuinely new compositions
+//!   (warp/block merge-path, block histogram-binned) must produce
+//!   oracle-correct distances everywhere, and on the skewed suite graph
+//!   the merge-path balancers must eliminate the straggler cycles all
+//!   five monolithic strategies pay.
+//!
+//! Plus the AD-facing invariant mirrored from `paper_claims.rs`: an
+//! adaptive run whose candidate set includes composed schedules never
+//! *picks* one whose transient scratch cannot fit the device budget.
+
+use lonestar_lb::algorithms::AlgoKind;
+use lonestar_lb::coordinator::{run, RunConfig};
+use lonestar_lb::graph::generators::{erdos_renyi, paper_suite, rmat, road_grid, RmatParams, SuiteScale};
+use lonestar_lb::graph::traversal::{bfs_levels, dijkstra, hub_source};
+use lonestar_lb::graph::Csr;
+use lonestar_lb::metrics::RunMetrics;
+use lonestar_lb::strategies::{Schedule, StrategyKind, StrategyParams};
+use std::sync::Arc;
+
+/// The generator families named by the algebra's differential contract.
+fn generator_suite() -> Vec<(&'static str, Arc<Csr>)> {
+    vec![
+        ("grid", Arc::new(road_grid(8, 12, 1, 11).unwrap())),
+        ("er", Arc::new(erdos_renyi(192, 768, 10, 3).unwrap())),
+        ("rmat", Arc::new(rmat(8, 2048, RmatParams::default(), 31).unwrap())),
+        ("road", Arc::new(road_grid(18, 18, 100, 13).unwrap())),
+    ]
+}
+
+/// The five lowered points that alias the paper's strategies, with the
+/// monolithic original each must be indistinguishable from.
+const ALIASES: [(&str, StrategyKind); 5] = [
+    ("thread/sorted", StrategyKind::BS),
+    ("cta/sorted", StrategyKind::EP),
+    ("thread/merge-path", StrategyKind::WD),
+    ("block/sorted", StrategyKind::NS),
+    ("warp/sorted", StrategyKind::HP),
+];
+
+/// Field-by-field metrics equality (`RunMetrics` has no `PartialEq`; the
+/// host wall-clock `host_ns` is the one legitimately nondeterministic
+/// field and is excluded).
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, ctx: &str) {
+    assert_eq!(a.kernel_cycles, b.kernel_cycles, "{ctx}: kernel_cycles");
+    assert_eq!(a.overhead_cycles, b.overhead_cycles, "{ctx}: overhead_cycles");
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(a.kernel_launches, b.kernel_launches, "{ctx}: kernel_launches");
+    assert_eq!(a.edge_relaxations, b.edge_relaxations, "{ctx}: edge_relaxations");
+    assert_eq!(a.updates, b.updates, "{ctx}: updates");
+    assert_eq!(a.atomics, b.atomics, "{ctx}: atomics");
+    assert_eq!(a.atomic_conflicts, b.atomic_conflicts, "{ctx}: atomic_conflicts");
+    assert_eq!(a.mem_transactions, b.mem_transactions, "{ctx}: mem_transactions");
+    assert_eq!(
+        a.peak_worklist_entries, b.peak_worklist_entries,
+        "{ctx}: peak_worklist_entries"
+    );
+    assert_eq!(a.condensed_away, b.condensed_away, "{ctx}: condensed_away");
+    assert_eq!(a.peak_memory_bytes, b.peak_memory_bytes, "{ctx}: peak_memory_bytes");
+    assert_eq!(a.strategy_switches, b.strategy_switches, "{ctx}: strategy_switches");
+    assert_eq!(a.inspector_passes, b.inspector_passes, "{ctx}: inspector_passes");
+    assert_eq!(a.policy_decisions, b.policy_decisions, "{ctx}: policy_decisions");
+    assert_eq!(a.decisions, b.decisions, "{ctx}: decision trace");
+    assert_eq!(a.profiled_kernels, b.profiled_kernels, "{ctx}: profiled_kernels");
+    assert_eq!(a.warp_cycles_hist, b.warp_cycles_hist, "{ctx}: warp_cycles_hist");
+    assert_eq!(a.imbalance_hist, b.imbalance_hist, "{ctx}: imbalance_hist");
+    assert_eq!(
+        a.imbalance_overhead_cycles, b.imbalance_overhead_cycles,
+        "{ctx}: imbalance_overhead_cycles"
+    );
+    assert_eq!(
+        a.peak_imbalance_x1000, b.peak_imbalance_x1000,
+        "{ctx}: peak_imbalance_x1000"
+    );
+    assert_eq!(a.scratch_created, b.scratch_created, "{ctx}: scratch_created");
+    assert_eq!(a.scratch_reused, b.scratch_reused, "{ctx}: scratch_reused");
+    assert_eq!(a.scratch_peak_bytes, b.scratch_peak_bytes, "{ctx}: scratch_peak_bytes");
+}
+
+#[test]
+fn alias_compositions_are_bit_identical_to_their_monolithic_originals() {
+    for (gname, g) in generator_suite() {
+        for algo in [AlgoKind::Bfs, AlgoKind::Sssp] {
+            for (spec, original) in ALIASES {
+                let composed: StrategyKind = spec.parse().unwrap();
+                assert!(
+                    matches!(composed, StrategyKind::Composed(s) if s.alias() == Some(original)),
+                    "{spec} must parse to the alias of {original}"
+                );
+                let cfg = |strategy| RunConfig {
+                    algo,
+                    strategy,
+                    ..Default::default()
+                };
+                let a = run(&g, &cfg(composed)).unwrap();
+                let b = run(&g, &cfg(original)).unwrap();
+                let ctx = format!("{gname}/{algo:?}/{spec} vs {original}");
+                assert_eq!(a.dist, b.dist, "{ctx}: distances");
+                assert_metrics_identical(&a.metrics, &b.metrics, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn new_compositions_match_the_reference_oracle_across_the_generator_suite() {
+    for (gname, g) in generator_suite() {
+        for algo in [AlgoKind::Bfs, AlgoKind::Sssp] {
+            let oracle = match algo {
+                AlgoKind::Bfs => bfs_levels(&g, 0),
+                AlgoKind::Sssp => dijkstra(&g, 0),
+            };
+            for s in Schedule::NEW {
+                let r = run(
+                    &g,
+                    &RunConfig {
+                        algo,
+                        strategy: StrategyKind::Composed(s),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                assert_eq!(r.dist, oracle, "{gname}/{algo:?}/{s}: distances vs oracle");
+                assert!(r.metrics.iterations > 0, "{gname}/{algo:?}/{s}: ran iterations");
+                assert!(
+                    r.metrics.edge_relaxations > 0,
+                    "{gname}/{algo:?}/{s}: relaxed edges"
+                );
+            }
+        }
+    }
+}
+
+/// The CLI-visible grammar: `granularity/order` spellings parse into
+/// `StrategyKind::Composed` and round-trip through their labels; points
+/// with no lowering are rejected with the supported set in the message.
+#[test]
+fn composed_grammar_round_trips_and_rejects_unlowered_points() {
+    for s in Schedule::NEW {
+        let k: StrategyKind = s.label().parse().unwrap();
+        assert_eq!(k, StrategyKind::Composed(s));
+        assert_eq!(k.label(), s.label());
+    }
+    for (spec, original) in ALIASES {
+        let k: StrategyKind = spec.parse().unwrap();
+        assert_eq!(k.label(), spec);
+        assert!(matches!(k, StrategyKind::Composed(s) if s.alias() == Some(original)));
+    }
+    for bad in ["cta/merge-path", "warp/histogram-binned", "warp", "warp/zigzag", "x/y"] {
+        assert!(
+            bad.parse::<StrategyKind>().is_err(),
+            "{bad:?} must be rejected"
+        );
+    }
+}
+
+/// The payoff claim, in simulated cycles: on the skewed suite graph the
+/// merge-path balancers run their relaxation phase dense over evenly split
+/// chunks, so every committed warp costs the same flat coalesced step and
+/// the device never idles behind a straggler warp. All five monolithic
+/// strategies pay a nonzero straggler bill there (that is the paper's
+/// core imbalance observation), so the new balancers must strictly
+/// undercut every one of them — on straggler cycles *and* on the peak
+/// per-kernel imbalance factor.
+#[test]
+fn merge_path_balancers_eliminate_straggler_cycles_on_the_skewed_suite_graph() {
+    let entry = paper_suite(SuiteScale::Tiny)
+        .into_iter()
+        .find(|e| e.spec.skew_class() == "skewed")
+        .expect("the paper suite always carries a skewed graph");
+    let g = Arc::new(entry.spec.generate(lonestar_lb::graph::generators::suite::DEFAULT_SEED).unwrap());
+    let source = hub_source(&g);
+    let measure = |strategy| {
+        run(
+            &g,
+            &RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy,
+                source,
+                // Budget off so EP/NS complete — the comparison needs all
+                // five monolithic runs to finish.
+                enforce_budget: false,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .metrics
+    };
+
+    let monolithic: Vec<(StrategyKind, RunMetrics)> =
+        StrategyKind::ALL.into_iter().map(|k| (k, measure(k))).collect();
+    for s in [Schedule::WARP_MERGE_PATH, Schedule::BLOCK_MERGE_PATH] {
+        let m = measure(StrategyKind::Composed(s));
+        assert!(m.profiled_kernels > 0, "{s}: profiler saw composed kernels");
+        assert_eq!(
+            m.imbalance_overhead_cycles, 0,
+            "{s}: dense merge-path warps are flat — zero straggler cycles"
+        );
+        for (k, base) in &monolithic {
+            assert!(
+                m.imbalance_overhead_cycles < base.imbalance_overhead_cycles,
+                "{s} straggler cycles ({}) must undercut {} ({})",
+                m.imbalance_overhead_cycles,
+                k.label(),
+                base.imbalance_overhead_cycles
+            );
+            assert!(
+                m.peak_imbalance() < base.peak_imbalance(),
+                "{s} peak imbalance ({}) must undercut {} ({})",
+                m.peak_imbalance(),
+                k.label(),
+                base.peak_imbalance()
+            );
+        }
+    }
+}
+
+/// Mirror of the `paper_claims.rs` AD invariant, widened to the composed
+/// candidate set: the adaptive engine's decision trace never contains a
+/// schedule whose standalone run hits the memory wall, and the run stays
+/// oracle-correct with composed candidates in play.
+#[test]
+fn ad_with_composed_candidates_never_picks_a_memory_infeasible_schedule() {
+    for entry in paper_suite(SuiteScale::Tiny) {
+        if entry.spec.skew_class() != "skewed" {
+            continue; // the paper's memory-caveat graphs
+        }
+        let seed = lonestar_lb::graph::generators::suite::DEFAULT_SEED;
+        let g = Arc::new(entry.spec.generate(seed).unwrap());
+        let source = hub_source(&g);
+        let params = StrategyParams {
+            composed_candidates: Schedule::NEW.to_vec(),
+            ..Default::default()
+        };
+
+        // Which composed schedules actually hit the wall standalone.
+        let mut infeasible = Vec::new();
+        for s in Schedule::NEW {
+            let r = run(
+                &g,
+                &RunConfig {
+                    algo: AlgoKind::Sssp,
+                    strategy: StrategyKind::Composed(s),
+                    source,
+                    enforce_budget: true,
+                    ..Default::default()
+                },
+            );
+            match r {
+                Err(e) if e.is_oom() => infeasible.push(s.label()),
+                Err(e) => panic!("{}/{s}: {e}", entry.name),
+                Ok(_) => {}
+            }
+        }
+
+        let ad = run(
+            &g,
+            &RunConfig {
+                algo: AlgoKind::Sssp,
+                strategy: StrategyKind::AD,
+                source,
+                enforce_budget: true,
+                params: params.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap_or_else(|e| panic!("{}: AD must fit the budget: {e}", entry.name));
+        assert_eq!(
+            ad.dist,
+            dijkstra(&g, source),
+            "{}: AD with composed candidates stays oracle-correct",
+            entry.name
+        );
+        assert!(!ad.metrics.decisions.is_empty());
+        for d in &ad.metrics.decisions {
+            assert!(
+                !infeasible.contains(&d.strategy),
+                "{}: AD chose {} despite its scratch not fitting (infeasible: {:?})",
+                entry.name,
+                d.strategy,
+                infeasible
+            );
+        }
+    }
+}

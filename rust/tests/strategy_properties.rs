@@ -15,7 +15,11 @@ use lonestar_lb::serving::{
 };
 use lonestar_lb::strategies::mdt::auto_mdt;
 use lonestar_lb::strategies::node_split::split_graph;
-use lonestar_lb::strategies::{StrategyKind, StrategyParams};
+use lonestar_lb::strategies::partition::{
+    degree_bin, histogram_bin_order_into, merge_path_chunks, merge_path_offsets_into,
+    MAX_GRID_LANES,
+};
+use lonestar_lb::strategies::{Schedule, StrategyKind, StrategyParams};
 use lonestar_lb::util::proptest::forall;
 use lonestar_lb::util::Rng;
 use lonestar_lb::worklist::NodeWorklist;
@@ -481,6 +485,113 @@ fn adaptive_decision_trace_is_deterministic() {
     assert_eq!(a.metrics.total_cycles(), b.metrics.total_cycles());
     assert_eq!(a.metrics.decisions, b.metrics.decisions);
     assert_eq!(a.metrics.strategy_switches, b.metrics.strategy_switches);
+}
+
+#[test]
+fn merge_path_partition_covers_every_position_exactly_once() {
+    // The merge-path balance bound over arbitrary (total, width) shapes:
+    // boundaries are monotone, chunks are disjoint and cover 0..total with
+    // no gap or overlap, and per-chunk work differs by at most one.
+    forall("merge-path-partition", 60, |rng| {
+        let total = rng.gen_range_u32(0, 5_000) as usize;
+        let width = [1u32, 32, 128, 1024][rng.gen_index(4)];
+        let chunks = merge_path_chunks(total, width);
+        assert!(chunks >= 1, "always at least one chunk");
+        let mut out = Vec::new();
+        merge_path_offsets_into(total, chunks, &mut out);
+        assert_eq!(out.len(), chunks as usize + 1);
+        assert_eq!(out[0], 0);
+        assert_eq!(*out.last().unwrap() as usize, total);
+
+        // Exactly-once coverage: every position lands in one chunk.
+        let mut seen = vec![0u8; total];
+        let mut spans = Vec::with_capacity(chunks as usize);
+        for w in out.windows(2) {
+            assert!(w[0] <= w[1], "boundaries must be monotone");
+            for p in w[0]..w[1] {
+                seen[p as usize] += 1;
+            }
+            spans.push(w[1] - w[0]);
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each position covered once");
+
+        // Balance bound: spans within ±1; below the grid cap each group
+        // fits its width (one lockstep step per lane).
+        let (min, max) = (
+            spans.iter().min().copied().unwrap(),
+            spans.iter().max().copied().unwrap(),
+        );
+        assert!(max - min <= 1, "spans must differ by at most one");
+        if total > 0 && total <= MAX_GRID_LANES {
+            assert!(max <= width, "below the cap a chunk never outgrows its lanes");
+        }
+    });
+}
+
+#[test]
+fn histogram_order_is_a_balanced_stable_permutation_of_random_frontiers() {
+    // The histogram partitioner over real frontier degree vectors: the
+    // output is a permutation (every slot exactly once), bins ascend,
+    // original order survives within a bin, and within one bin the
+    // heaviest slot carries less than 2x the lightest — the binned
+    // balance bound.
+    forall("histogram-bin-order", 60, |rng| {
+        let g = random_graph(rng);
+        let wl = random_frontier(rng, &g);
+        let degrees: Vec<u32> = wl.nodes().iter().map(|&u| g.degree(u)).collect();
+        let (mut counts, mut order) = (Vec::new(), Vec::new());
+        histogram_bin_order_into(&degrees, &mut counts, &mut order);
+
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(
+            sorted,
+            (0..degrees.len() as u32).collect::<Vec<_>>(),
+            "output must be a permutation of the slots"
+        );
+        for w in order.windows(2) {
+            let (a, b) = (degrees[w[0] as usize], degrees[w[1] as usize]);
+            let (ba, bb) = (degree_bin(a), degree_bin(b));
+            assert!(ba <= bb, "bins must ascend");
+            if ba == bb {
+                assert!(w[0] < w[1], "equal bins keep frontier order");
+                // Balance bound inside a bin: max < 2 * min (isolated
+                // nodes share bin 0 at zero work).
+                let (lo, hi) = (a.min(b), a.max(b));
+                assert!(hi < 2 * lo.max(1), "within-bin skew must stay under 2x");
+            }
+        }
+    });
+}
+
+#[test]
+fn composed_schedules_match_oracle_on_random_graphs() {
+    // The new composed balancers through the same edge-soup gauntlet the
+    // monolithic strategies pass: self loops, parallel edges, isolated
+    // nodes, zero-degree frontiers.
+    forall("composed-vs-oracle", 40, |rng| {
+        let g = Arc::new(random_graph(rng));
+        let source = rng.gen_range_u32(0, g.num_nodes() as u32);
+        let algo = if rng.gen_f64() < 0.5 {
+            AlgoKind::Bfs
+        } else {
+            AlgoKind::Sssp
+        };
+        let oracle = algo.reference(&g, source);
+        for s in Schedule::NEW {
+            let r = run(
+                &g,
+                &RunConfig {
+                    algo,
+                    strategy: StrategyKind::Composed(s),
+                    source,
+                    ..Default::default()
+                },
+            )
+            .unwrap_or_else(|e| panic!("{s} failed: {e}"));
+            assert_eq!(r.dist, oracle, "{s}/{algo:?} diverged from oracle");
+        }
+    });
 }
 
 #[test]
